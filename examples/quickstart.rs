@@ -1,0 +1,52 @@
+//! Quickstart: build LeNet from its prototxt, run one forward/backward in
+//! both domains, and compare the results — the 60-second tour of the
+//! public API.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use phast_caffe::net::Net;
+use phast_caffe::phast::{BoundaryOptions, Placement, PortedNet};
+use phast_caffe::proto::{presets, NetConfig};
+use phast_caffe::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Parse the net description (Caffe prototxt subset).
+    let config = NetConfig::from_text(presets::LENET_MNIST)?;
+    println!("net '{}' with {} layers", config.name, config.layers.len());
+
+    // 2. Build + run the native baseline ("original Caffe").
+    let mut native = Net::from_config(config.clone(), /*seed=*/ 1)?;
+    let loss = native.forward()?.unwrap();
+    native.backward()?;
+    println!("native   forward loss = {loss:.4}");
+
+    // 3. Same net, every layer executed from the single-source AOT
+    //    artifacts through PJRT ("the PHAST port").
+    let engine = Engine::open_default()?;
+    let mut ported = PortedNet::new(
+        Net::from_config(config, 1)?, // same seed -> same weights, same batch
+        &engine,
+        Placement::phast_all(),
+        BoundaryOptions::default(),
+    )?;
+    let loss_p = ported.forward()?.unwrap();
+    ported.backward()?;
+    println!("ported   forward loss = {loss_p:.4}");
+
+    // 4. The paper's validation: intermediate tensors agree across domains.
+    for blob in ["conv1", "pool1", "conv2", "pool2", "ip1", "ip2"] {
+        let d = native
+            .blob(blob)
+            .unwrap()
+            .data()
+            .max_abs_diff(ported.net.blob(blob).unwrap().data());
+        println!("  intermediate {blob:6} max|diff| = {d:.2e}");
+    }
+    println!(
+        "boundary crossings in the fully-ported run: {} (entry/exit only)",
+        ported.stats.crossings
+    );
+    Ok(())
+}

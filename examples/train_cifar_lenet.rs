@@ -1,0 +1,48 @@
+//! The paper's second workload: cifar10-quick (3 conv, 3 pool, 2 ip) on the
+//! synthetic CIFAR-10 analog, trained natively with periodic evaluation.
+//!
+//! ```sh
+//! cargo run --release --example train_cifar_lenet
+//! ```
+
+use std::time::Instant;
+
+use phast_caffe::experiments::preset_net;
+use phast_caffe::proto::{presets, SolverConfig};
+use phast_caffe::solver::Solver;
+
+const ITERS: usize = 120;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = SolverConfig::from_text(presets::CIFAR_SOLVER)?;
+    cfg.display = 0;
+    cfg.max_iter = ITERS;
+    let mut solver = Solver::new(cfg, preset_net("cifar", 7)?);
+    println!("== cifar10-quick / synthetic-CIFAR10, {ITERS} iters, batch 64 ==");
+    println!(
+        "net: {} params across {} layers",
+        solver.net.num_params(),
+        solver.net.num_layers()
+    );
+    let t0 = Instant::now();
+    for i in 0..ITERS {
+        let loss = solver.step()?;
+        if (i + 1) % 20 == 0 {
+            let (tl, ta) = solver.test(2)?;
+            println!(
+                "iter {:>4}  train-loss {:.4}  test-loss {:.4}  test-acc {:.3}",
+                i + 1,
+                loss,
+                tl,
+                ta
+            );
+        }
+    }
+    let (floss, facc) = solver.test(6)?;
+    println!(
+        "done in {:.1}s: final test-loss {floss:.4}, test-acc {facc:.3}",
+        t0.elapsed().as_secs_f64()
+    );
+    anyhow::ensure!(facc > 0.5, "cifar run failed to learn ({facc})");
+    Ok(())
+}

@@ -1,0 +1,243 @@
+"""AOT compiler: lower the artifact catalog to HLO text + manifest.
+
+This is the only place Python touches the build: ``make artifacts`` runs
+``python -m compile.aot --out-dir ../artifacts`` once; the Rust coordinator
+then loads ``artifacts/*.hlo.txt`` through the PJRT C API and Python never
+appears on the train/serve path again.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+The catalog has two halves, mirroring the paper's two worlds:
+
+* **per-layer artifacts** (``mnist.conv1.fwd``, ...) — one executable per
+  layer direction, used by the *partially ported* configuration where the
+  Rust coordinator hops between the native domain and the PHAST domain
+  layer by layer (paper §4.3's transfer analysis);
+* **fused artifacts** (``mnist.step`` / ``grads`` / ``eval`` / ``infer``) —
+  the whole net in a single executable, the paper's predicted end state
+  ("once we have ported the entire set of layers").
+
+Manifest format (``artifacts/manifest.txt``), parsed by
+``rust/src/runtime/manifest.rs``::
+
+    artifact mnist.conv1.fwd
+    file mnist.conv1.fwd.hlo.txt
+    in f32 64,1,28,28
+    in f32 20,1,5,5
+    in f32 20
+    out f32 64,20,24,24
+    end
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import kernels as K
+
+BATCH = 64
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    """jit-lower ``fn`` at ``arg_specs`` and convert to XLA HLO text.
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big literals as ``constant({...})``, which the text parser then
+    reads back as *zeros* — the AVE-pooling divisor table silently became 0
+    and zeroed everything downstream before this flag was set.
+    """
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+# ---------------------------------------------------------------------------
+# Catalog construction
+# ---------------------------------------------------------------------------
+
+def _tupled(fn):
+    """Wrap an op so its output is always a tuple (uniform Rust unwrap)."""
+
+    def wrapped(*a):
+        out = fn(*a)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+def per_layer_entries(net: M.NetDef, tag: str):
+    """(name, fn, arg_specs) for every layer instance of ``net``."""
+    entries = []
+    b = BATCH
+    c, h, w = net.in_shape
+    ncls = net.num_classes
+    for st in net.stages:
+        if isinstance(st, M.ConvSpec):
+            s, p = (st.stride, st.stride), (st.pad, st.pad)
+            gh = K.common.conv_geom(h, st.kernel, st.stride, st.pad)
+            gw = K.common.conv_geom(w, st.kernel, st.stride, st.pad)
+            xs = spec((b, c, h, w))
+            ws = spec((st.out_channels, c, st.kernel, st.kernel))
+            bs = spec((st.out_channels,))
+            ys = spec((b, st.out_channels, gh.out, gw.out))
+            entries.append((f"{tag}.{st.name}.fwd",
+                            _tupled(lambda x, wt, bi, _s=s, _p=p: M.conv2d_fwd(x, wt, bi, _s, _p)),
+                            [xs, ws, bs]))
+            entries.append((f"{tag}.{st.name}.bwd",
+                            _tupled(lambda x, wt, dy, _s=s, _p=p: M.conv2d_bwd(x, wt, dy, _s, _p)),
+                            [xs, ws, ys]))
+            c, h, w = st.out_channels, gh.out, gw.out
+        elif isinstance(st, M.PoolSpec):
+            k, s, p = (st.kernel, st.kernel), (st.stride, st.stride), (st.pad, st.pad)
+            gh = K.common.pool_geom(h, st.kernel, st.stride, st.pad)
+            gw = K.common.pool_geom(w, st.kernel, st.stride, st.pad)
+            xs = spec((b, c, h, w))
+            ys = spec((b, c, gh.out, gw.out))
+            args_ = spec((b, c, gh.out, gw.out), I32)
+            size = (h, w)
+            if st.method == "max":
+                entries.append((f"{tag}.{st.name}.fwd",
+                                _tupled(lambda x, _k=k, _s=s, _p=p: M.maxpool_fwd(x, _k, _s, _p)),
+                                [xs]))
+                entries.append((f"{tag}.{st.name}.bwd",
+                                _tupled(lambda dy, arg, _sz=size, _k=k, _s=s, _p=p:
+                                        M.maxpool_bwd(dy, arg, _sz, _k, _s, _p)),
+                                [ys, args_]))
+            else:
+                entries.append((f"{tag}.{st.name}.fwd",
+                                _tupled(lambda x, _k=k, _s=s, _p=p: M.avepool_fwd(x, _k, _s, _p)),
+                                [xs]))
+                entries.append((f"{tag}.{st.name}.bwd",
+                                _tupled(lambda dy, _sz=size, _k=k, _s=s, _p=p:
+                                        M.avepool_bwd(dy, _sz, _k, _s, _p)),
+                                [ys]))
+            h, w = gh.out, gw.out
+        elif isinstance(st, M.IpSpec):
+            kdim = c * h * w
+            xs = spec((b, kdim))
+            ws = spec((st.num_output, kdim))
+            bs = spec((st.num_output,))
+            ys = spec((b, st.num_output))
+            entries.append((f"{tag}.{st.name}.fwd", _tupled(M.ip_fwd), [xs, ws, bs]))
+            entries.append((f"{tag}.{st.name}.bwd", _tupled(M.ip_bwd), [xs, ws, ys]))
+            c, h, w = st.num_output, 1, 1
+        elif isinstance(st, M.ReluSpec):
+            shape = (b, c) if h == 1 and w == 1 else (b, c, h, w)
+            xs = spec(shape)
+            entries.append((f"{tag}.{st.name}.fwd",
+                            _tupled(lambda x, _a=st.alpha: K.leaky_relu(x, _a)), [xs]))
+            entries.append((f"{tag}.{st.name}.bwd",
+                            _tupled(lambda x, dy, _a=st.alpha: K.leaky_relu_bwd(x, dy, _a)),
+                            [xs, xs]))
+    logit = spec((b, ncls))
+    lbl = spec((b,), I32)
+    entries.append((f"{tag}.loss.fwd", _tupled(K.softmax_xent), [logit, lbl]))
+    entries.append((f"{tag}.loss.bwd", _tupled(K.softmax_xent_bwd), [logit, lbl]))
+    entries.append((f"{tag}.softmax.fwd", _tupled(K.softmax), [logit]))
+    entries.append((f"{tag}.accuracy.fwd", _tupled(K.accuracy), [logit, lbl]))
+    return entries
+
+
+def fused_entries(net: M.NetDef, tag: str):
+    b = BATCH
+    c, h, w = net.in_shape
+    xs = spec((b, c, h, w))
+    lbl = spec((b,), I32)
+    ps = [spec(s) for _, s in M.param_shapes(net)]
+    lr = spec(())
+    return [
+        (f"{tag}.step", M.make_step_fn(net), [xs, lbl, lr] + ps + ps),
+        (f"{tag}.grads", M.make_grads_fn(net), [xs, lbl] + ps),
+        (f"{tag}.eval", M.make_eval_fn(net), [xs, lbl] + ps),
+        (f"{tag}.infer", M.make_infer_fn(net), [xs] + ps),
+    ]
+
+
+def catalog():
+    entries = []
+    for net, tag in ((M.LENET_MNIST, "mnist"), (M.CIFAR10_QUICK, "cifar")):
+        entries.extend(per_layer_entries(net, tag))
+        entries.extend(fused_entries(net, tag))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def _dtype_tag(dt) -> str:
+    if dt == jnp.float32:
+        return "f32"
+    if dt == jnp.int32:
+        return "i32"
+    raise ValueError(f"unsupported artifact dtype {dt}")
+
+
+def _abstract_outputs(fn, arg_specs):
+    out = jax.eval_shape(fn, *arg_specs)
+    return list(out) if isinstance(out, (tuple, list)) else [out]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name substrings to rebuild")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = [f"# generated by compile.aot; batch={BATCH}"]
+    entries = catalog()
+    only = args.only.split(",") if args.only else None
+    t_start = time.time()
+    for i, (name, fn, arg_specs) in enumerate(entries):
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        skip = only is not None and not any(s in name for s in only)
+        if not skip:
+            t0 = time.time()
+            text = to_hlo_text(fn, arg_specs)
+            with open(path, "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+            print(f"[{i + 1:2}/{len(entries)}] {name:28} {len(text) / 1e3:9.1f} kB "
+                  f"{time.time() - t0:5.1f}s {digest}", flush=True)
+        manifest_lines.append(f"artifact {name}")
+        manifest_lines.append(f"file {name}.hlo.txt")
+        for s in arg_specs:
+            dims = ",".join(str(d) for d in s.shape) or "scalar"
+            manifest_lines.append(f"in {_dtype_tag(s.dtype)} {dims}")
+        for o in _abstract_outputs(fn, arg_specs):
+            dims = ",".join(str(d) for d in o.shape) or "scalar"
+            manifest_lines.append(f"out {_dtype_tag(o.dtype)} {dims}")
+        manifest_lines.append("end")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(entries)} artifacts + manifest in {time.time() - t_start:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,142 @@
+"""Elementwise / row-wise Pallas kernels: leaky ReLU, SoftMax, SoftMax-with-
+loss, and the Accuracy reduction.
+
+In the paper these are the *cheap* layers whose un-ported status causes the
+domain-crossing traffic analysed in §4.3 — porting them is what removes the
+unnecessary transfers.  Each is a trivially-parallel functor in PHAST terms;
+here each is a single VPU-friendly Pallas program over the whole (padded)
+block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+# ---------------------------------------------------------------------------
+# Leaky ReLU (Caffe ReLULayer with negative_slope)
+# ---------------------------------------------------------------------------
+
+def _relu_kernel(x_ref, o_ref, *, alpha):
+    x = x_ref[...]
+    o_ref[...] = jnp.where(x > 0, x, alpha * x)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha",))
+def leaky_relu(x: jnp.ndarray, alpha: float = 0.0) -> jnp.ndarray:
+    return pl.pallas_call(
+        functools.partial(_relu_kernel, alpha=alpha),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=common.INTERPRET,
+    )(x)
+
+
+def _relu_bwd_kernel(x_ref, dy_ref, o_ref, *, alpha):
+    x = x_ref[...]
+    dy = dy_ref[...]
+    o_ref[...] = jnp.where(x > 0, dy, alpha * dy)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha",))
+def leaky_relu_bwd(x: jnp.ndarray, dy: jnp.ndarray, alpha: float = 0.0) -> jnp.ndarray:
+    return pl.pallas_call(
+        functools.partial(_relu_bwd_kernel, alpha=alpha),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=common.INTERPRET,
+    )(x, dy)
+
+
+# ---------------------------------------------------------------------------
+# SoftMax over rows of (N, C)
+# ---------------------------------------------------------------------------
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@jax.jit
+def softmax(x: jnp.ndarray) -> jnp.ndarray:
+    return pl.pallas_call(
+        _softmax_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=common.INTERPRET,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# SoftMax with loss (fwd: loss + probs; bwd: (p - onehot)/N)
+# ---------------------------------------------------------------------------
+
+def _softmax_xent_kernel(x_ref, lbl_ref, loss_ref, p_ref):
+    x = x_ref[...]
+    n, c = x.shape
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    p_ref[...] = p
+    onehot = (lbl_ref[...][:, None] == jax.lax.iota(jnp.int32, c)[None, :])
+    picked = jnp.sum(jnp.where(onehot, p, 0.0), axis=-1)
+    tiny = jnp.finfo(x.dtype).tiny
+    loss_ref[0] = -jnp.mean(jnp.log(jnp.maximum(picked, tiny)))
+
+
+@jax.jit
+def softmax_xent(x: jnp.ndarray, labels: jnp.ndarray):
+    """(loss (1,), probs (N, C)) — Caffe SoftmaxWithLossLayer forward."""
+    n, c = x.shape
+    loss, p = pl.pallas_call(
+        _softmax_xent_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), x.dtype),
+            jax.ShapeDtypeStruct((n, c), x.dtype),
+        ),
+        interpret=common.INTERPRET,
+    )(x, labels)
+    return loss, p
+
+
+def _softmax_xent_bwd_kernel(p_ref, lbl_ref, o_ref):
+    p = p_ref[...]
+    n, c = p.shape
+    onehot = (lbl_ref[...][:, None] == jax.lax.iota(jnp.int32, c)[None, :])
+    o_ref[...] = (p - onehot.astype(p.dtype)) / n
+
+
+@jax.jit
+def softmax_xent_bwd(probs: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return pl.pallas_call(
+        _softmax_xent_bwd_kernel,
+        out_shape=jax.ShapeDtypeStruct(probs.shape, probs.dtype),
+        interpret=common.INTERPRET,
+    )(probs, labels)
+
+
+# ---------------------------------------------------------------------------
+# Accuracy (top-1 only — the paper's port left top-k unimplemented, which is
+# exactly why 3 of Caffe's 12 Accuracy tests fail in Table 1)
+# ---------------------------------------------------------------------------
+
+def _accuracy_kernel(x_ref, lbl_ref, o_ref):
+    x = x_ref[...]
+    pred = jnp.argmax(x, axis=-1).astype(jnp.int32)
+    hit = (pred == lbl_ref[...]).astype(x.dtype)
+    o_ref[0] = jnp.mean(hit)
+
+
+@jax.jit
+def accuracy(x: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Top-1 accuracy over rows of (N, C); returns shape (1,)."""
+    return pl.pallas_call(
+        _accuracy_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=common.INTERPRET,
+    )(x, labels)

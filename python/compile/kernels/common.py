@@ -1,0 +1,155 @@
+"""Shared helpers for the Pallas kernel suite.
+
+All kernels in this package are written once, in Pallas, and lowered by the
+L2 model code (``compile.model``) into HLO artifacts consumed by the Rust
+coordinator.  This mirrors the paper's PHAST premise: a single high-level
+source, retargeted by changing the compilation process (CPU ``interpret=True``
+today, real TPU by flipping ``INTERPRET`` to False and compiling with a TPU
+PJRT plugin).
+
+The helpers here deal with the two recurring chores:
+
+* rounding shapes up to MXU/VPU-friendly tile multiples (and padding /
+  cropping around ``pallas_call``), and
+* computing Caffe's sliding-window output geometry (Caffe uses *ceil* mode
+  for pooling and *floor* mode for convolution).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+# Single switch for the whole kernel suite.  interpret=True lowers every
+# pallas_call to plain HLO ops so the CPU PJRT client (and the Rust `xla`
+# crate) can execute the artifacts.  On a real TPU deployment this becomes
+# False and the same sources emit Mosaic kernels.
+INTERPRET = True
+
+# MXU systolic array is 128x128; VPU lanes are 8x128.  We tile matmuls to
+# multiples of these so the same BlockSpecs are valid on hardware.
+MXU_TILE = 128
+SUBLANE = 8
+
+
+def round_up(x: int, m: int) -> int:
+    """Round ``x`` up to the next multiple of ``m``."""
+    return ((x + m - 1) // m) * m
+
+
+def pick_block(dim: int, target: int = MXU_TILE, mult: int = SUBLANE) -> int:
+    """Pick a block size for a dimension: the full (sublane-rounded) dim for
+    small sizes, otherwise the MXU tile."""
+    if dim >= target:
+        return target
+    return round_up(max(dim, 1), mult)
+
+
+# GeMM tile caps.  LeNet-scale panels are small, so we let a tile cover the
+# whole dimension up to these caps (multiples of the MXU tile); the VMEM
+# working set stays well under budget (see vmem_bytes) while the grid-step
+# count — the dominant dispatch overhead both in interpret mode and on
+# hardware — drops to a handful.  Measured on the fused MNIST step:
+# 128/128/128 tiles -> 1.67 s, 256/512/512 caps -> see EXPERIMENTS.md §Perf.
+GEMM_BM_CAP = 256
+GEMM_BN_CAP = 512
+GEMM_BK_CAP = 512
+
+
+def gemm_blocks(m: int, n: int, k: int) -> tuple[int, int, int]:
+    """(bm, bn, bk) for a tiled matmul: cover small dims whole (rounded to
+    sublane/MXU alignment), cap large dims."""
+    bm = min(round_up(m, SUBLANE), GEMM_BM_CAP)
+    bn = min(round_up(n, MXU_TILE), GEMM_BN_CAP)
+    bk = min(round_up(k, SUBLANE), GEMM_BK_CAP)
+    return bm, bn, bk
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Per-step VMEM working set of a (bm, bk) x (bk, bn) -> (bm, bn) tile."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def pad2d(x: jnp.ndarray, pad_h: int, pad_w: int, value: float = 0.0) -> jnp.ndarray:
+    """Symmetrically zero/value-pad the trailing two axes of ``x``."""
+    if pad_h == 0 and pad_w == 0:
+        return x
+    cfg = [(0, 0)] * (x.ndim - 2) + [(pad_h, pad_h), (pad_w, pad_w)]
+    return jnp.pad(x, cfg, constant_values=value)
+
+
+def pad_to(x: jnp.ndarray, shape: tuple[int, ...], value: float = 0.0) -> jnp.ndarray:
+    """Pad ``x`` (at the end of every axis) out to ``shape``."""
+    if tuple(x.shape) == tuple(shape):
+        return x
+    cfg = [(0, t - s) for s, t in zip(x.shape, shape)]
+    return jnp.pad(x, cfg, constant_values=value)
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowGeom:
+    """Sliding-window geometry for one spatial axis."""
+
+    size: int        # input extent (pre-padding)
+    pad: int         # symmetric padding
+    kernel: int      # window extent
+    stride: int
+    out: int         # number of window positions
+    padded: int      # extent after symmetric padding
+    slab: int        # extent required so every strided slab fits: k-1 + out*stride
+    extra: int       # extra one-sided padding to reach ``slab``
+
+    @property
+    def total(self) -> int:
+        return self.padded + self.extra
+
+
+def conv_geom(size: int, kernel: int, stride: int, pad: int) -> WindowGeom:
+    """Caffe convolution geometry (floor mode)."""
+    out = (size + 2 * pad - kernel) // stride + 1
+    if out <= 0:
+        raise ValueError(f"convolution output collapsed: size={size} k={kernel} s={stride} p={pad}")
+    padded = size + 2 * pad
+    slab = kernel - 1 + out * stride
+    return WindowGeom(size, pad, kernel, stride, out, padded, slab, max(0, slab - padded))
+
+
+def pool_geom(size: int, kernel: int, stride: int, pad: int) -> WindowGeom:
+    """Caffe pooling geometry (*ceil* mode, with the Caffe border clip: the
+    last window must start inside the padded input)."""
+    out = int(math.ceil((size + 2 * pad - kernel) / stride)) + 1
+    if pad > 0 and (out - 1) * stride >= size + pad:
+        out -= 1
+    padded = size + 2 * pad
+    slab = kernel - 1 + out * stride
+    return WindowGeom(size, pad, kernel, stride, out, padded, slab, max(0, slab - padded))
+
+
+def place_strided(plane: jnp.ndarray, i: int, j: int, sh: int, sw: int,
+                  canvas_shape: tuple[int, ...]) -> jnp.ndarray:
+    """Inverse of two nested :func:`strided_view`s: embed ``plane``
+    (N, C, OH, OW) at offset (i, j) with strides (sh, sw) into a zero canvas
+    of ``canvas_shape`` — built from pads/reshapes only (no scatter, which
+    Pallas kernels cannot capture constants for)."""
+    n, c, oh, ow = plane.shape
+    _, _, ht, wt = canvas_shape
+    blk = plane[:, :, :, None, :, None]
+    blk = jnp.pad(blk, ((0, 0), (0, 0), (0, 0), (0, sh - 1), (0, 0), (0, sw - 1)))
+    blk = blk.reshape(n, c, oh * sh, ow * sw)
+    return jnp.pad(blk, ((0, 0), (0, 0), (i, ht - i - oh * sh),
+                         (j, wt - j - ow * sw)))
+
+
+def strided_view(slab: jnp.ndarray, out: int, stride: int, axis: int) -> jnp.ndarray:
+    """Subsample ``slab`` with ``stride`` along ``axis`` without strided
+    indexing (which Pallas refs do not support): reshape to (out, stride) and
+    take phase 0.  ``slab`` must have extent ``out * stride`` along ``axis``."""
+    shape = list(slab.shape)
+    assert shape[axis] == out * stride, (shape, axis, out, stride)
+    shape[axis : axis + 1] = [out, stride]
+    v = slab.reshape(shape)
+    idx = [slice(None)] * v.ndim
+    idx[axis + 1] = 0
+    return v[tuple(idx)]

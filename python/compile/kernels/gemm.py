@@ -1,0 +1,250 @@
+"""Tiled GeMM Pallas kernels — the hot spot of both Convolution and
+InnerProduct (the paper maps *everything* onto GeMM, following Caffe).
+
+TPU mapping of the paper's GPU reasoning (DESIGN.md §Hardware-Adaptation):
+Caffe's GPU path tiles the GeMM over threadblocks with shared-memory
+staging; here the BlockSpec grid stages operand panels through VMEM and
+feeds the MXU.  Contraction grid axes (K, and the batch axis of the
+reducing variant) are innermost/sequential so the f32 accumulator tile
+stays resident across the whole reduction — the classic Pallas matmul
+schedule.
+
+Tile-size policy (EXPERIMENTS.md §Perf has the measurements):
+
+* **Minimal padding.**  A dimension is split into the fewest blocks that
+  respect the cap, each rounded to the 8-wide sublane; padding a 25-row
+  panel to 128 quintuples the carried bytes, and in interpret mode (and in
+  any loop-carried XLA while) every grid step pays for the whole padded
+  buffer.
+* **Whole-batch staging.**  The batched variants stage as many samples per
+  grid step as fit the VMEM budget (``bb``), computing a small batched
+  ``einsum`` per step.  LeNet-scale panels usually fit entirely, collapsing
+  the grid to a handful of steps.
+
+Three entry points, one kernel body:
+
+* :func:`gemm`         — C = op(A) @ op(B), 2-D.
+* :func:`bgemm`        — batched: either operand may be 2-D (broadcast) or
+                         3-D (per-sample panel); out is (B, M, N).
+* :func:`bgemm_reduce` — sum_b op(A_b) @ op(B_b) -> (M, N); the conv weight
+                         gradient in one pass, no (B, M, N) intermediate.
+
+``ta``/``tb`` transpose *tiles inside the kernel* (the BlockSpec fetches the
+transposed panel), so backward passes never materialize a transposed copy —
+the optimization the paper postponed ("reducing the number of copies made
+at each operation", §5).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+# Per-step working-set budget (bytes).  On a real TPU this must fit the
+# 16 MiB per-core VMEM (8 MiB leaves double-buffering headroom); under the
+# CPU interpret path larger staged batches amortize the XLA grid loop, and
+# 32 MiB measured fastest (1016 -> 911 ms on the CIFAR fused step; see
+# EXPERIMENTS.md section Perf).  Flip to 8 MiB when INTERPRET is False.
+VMEM_BUDGET = (32 if common.INTERPRET else 8) * 1024 * 1024
+
+M_CAP, N_CAP, K_CAP = 256, 1024, 1024
+
+
+def _split(dim: int, cap: int) -> int:
+    """Smallest sublane-rounded block covering ``dim`` in ceil(dim/cap)
+    pieces — minimal padding under the cap."""
+    t = math.ceil(dim / cap)
+    return common.round_up(math.ceil(dim / t), common.SUBLANE)
+
+
+def _dims(shape, trans):
+    """(rows, cols) of op(X) given the stored shape of X's last two axes."""
+    r, c = shape[-2], shape[-1]
+    return (c, r) if trans else (r, c)
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, *, ta, tb, k_axes, reduce_batch):
+    """One output tile; accumulates over the grid axes in ``k_axes``."""
+    first = jnp.bool_(True)
+    for ax in k_axes:
+        first = first & (pl.program_id(ax) == 0)
+
+    @pl.when(first)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if ta:
+        a = jnp.swapaxes(a, -1, -2)
+    if tb:
+        b = jnp.swapaxes(b, -1, -2)
+    if a.ndim == 2 and b.ndim == 2:
+        o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+        return
+    # Batched step: a and/or b carry a leading batch-block axis.
+    spec_a = "zmk" if a.ndim == 3 else "mk"
+    spec_b = "zkn" if b.ndim == 3 else "kn"
+    spec_o = "mn" if reduce_batch else "zmn"
+    prod = jnp.einsum(f"{spec_a},{spec_b}->{spec_o}", a, b,
+                      preferred_element_type=jnp.float32)
+    o_ref[...] += prod
+
+
+def _pad_mat(x, trans, br, bc):
+    """Zero-pad the trailing two axes so op(x) tiles evenly by (br, bc)."""
+    rows = common.round_up(x.shape[-2], bc if trans else br)
+    cols = common.round_up(x.shape[-1], br if trans else bc)
+    return common.pad_to(x, (*x.shape[:-2], rows, cols))
+
+
+@functools.partial(jax.jit, static_argnames=("ta", "tb"))
+def gemm(a: jnp.ndarray, b: jnp.ndarray, *, ta: bool = False,
+         tb: bool = False) -> jnp.ndarray:
+    """C = op(A) @ op(B) for 2-D operands."""
+    m, k = _dims(a.shape, ta)
+    k2, n = _dims(b.shape, tb)
+    assert k == k2, (a.shape, b.shape, ta, tb)
+    bm, bn, bk = _split(m, M_CAP), _split(n, N_CAP), _split(k, K_CAP)
+    assert common.vmem_bytes(bm, bn, bk) < 2 * VMEM_BUDGET, (bm, bn, bk)
+    ap = _pad_mat(a, ta, bm, bk)
+    bp = _pad_mat(b, tb, bk, bn)
+    mp, np_, kp = common.round_up(m, bm), common.round_up(n, bn), common.round_up(k, bk)
+
+    a_spec = (pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i)) if ta
+              else pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)))
+    b_spec = (pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)) if tb
+              else pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)))
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, ta=ta, tb=tb, k_axes=(2,), reduce_batch=False),
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[a_spec, b_spec],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=common.INTERPRET,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _batch_block(bsz, per_sample_bytes, fixed_bytes):
+    """Samples per grid step under the VMEM budget."""
+    room = max(VMEM_BUDGET - fixed_bytes, per_sample_bytes)
+    return max(1, min(bsz, room // max(per_sample_bytes, 1)))
+
+
+def _prep_batched(a, b, ta, tb, reduce_batch):
+    """Shared shape/tiling logic for bgemm / bgemm_reduce."""
+    a_batched = a.ndim == 3
+    b_batched = b.ndim == 3
+    bsz = a.shape[0] if a_batched else b.shape[0]
+    m, k = _dims(a.shape, ta)
+    k2, n = _dims(b.shape, tb)
+    assert k == k2, (a.shape, b.shape, ta, tb)
+    bm, bn, bk = _split(m, M_CAP), _split(n, N_CAP), _split(k, K_CAP)
+    per_sample = 4 * ((bm * bk if a_batched else 0) + (bk * bn if b_batched else 0)
+                      + (0 if reduce_batch else bm * bn))
+    fixed = 4 * ((0 if a_batched else bm * bk) + (0 if b_batched else bk * bn)
+                 + (bm * bn if reduce_batch else 0))
+    bb = _batch_block(bsz, per_sample, fixed)
+    bt = math.ceil(bsz / bb)
+    ap = _pad_mat(a, ta, bm, bk)
+    bp = _pad_mat(b, tb, bk, bn)
+    if a_batched:
+        ap = common.pad_to(ap, (bb * bt, *ap.shape[1:]))
+    if b_batched:
+        bp = common.pad_to(bp, (bb * bt, *bp.shape[1:]))
+    mp = common.round_up(m, bm)
+    np_ = common.round_up(n, bn)
+    kp = common.round_up(k, bk)
+    return (a_batched, b_batched, bsz, m, n, k, bm, bn, bk, bb, bt,
+            ap, bp, mp, np_, kp)
+
+
+@functools.partial(jax.jit, static_argnames=("ta", "tb"))
+def bgemm(a: jnp.ndarray, b: jnp.ndarray, *, ta: bool = False,
+          tb: bool = False) -> jnp.ndarray:
+    """Batched matmul: out[n] = op(A[n] or A) @ op(B[n] or B).
+
+    A 2-D operand is broadcast across the batch (e.g. the conv weight
+    panel); a 3-D operand supplies one panel per sample.  Grid layout
+    (Bt, Mt, Nt, Kt) with ``bb`` samples staged per step."""
+    (a_b, b_b, bsz, m, n, k, bm, bn, bk, bb, bt,
+     ap, bp, mp, np_, kp) = _prep_batched(a, b, ta, tb, False)
+
+    if a_b:
+        a_spec = (pl.BlockSpec((bb, bk, bm), lambda z, i, j, kk: (z, kk, i)) if ta
+                  else pl.BlockSpec((bb, bm, bk), lambda z, i, j, kk: (z, i, kk)))
+    else:
+        a_spec = (pl.BlockSpec((bk, bm), lambda z, i, j, kk: (kk, i)) if ta
+                  else pl.BlockSpec((bm, bk), lambda z, i, j, kk: (i, kk)))
+    if b_b:
+        b_spec = (pl.BlockSpec((bb, bn, bk), lambda z, i, j, kk: (z, j, kk)) if tb
+                  else pl.BlockSpec((bb, bk, bn), lambda z, i, j, kk: (z, kk, j)))
+    else:
+        b_spec = (pl.BlockSpec((bn, bk), lambda z, i, j, kk: (j, kk)) if tb
+                  else pl.BlockSpec((bk, bn), lambda z, i, j, kk: (kk, j)))
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, ta=ta, tb=tb, k_axes=(3,), reduce_batch=False),
+        grid=(bt, mp // bm, np_ // bn, kp // bk),
+        in_specs=[a_spec, b_spec],
+        out_specs=pl.BlockSpec((bb, bm, bn), lambda z, i, j, kk: (z, i, j)),
+        out_shape=jax.ShapeDtypeStruct((bb * bt, mp, np_), jnp.float32),
+        interpret=common.INTERPRET,
+    )(ap, bp)
+    return out[:bsz, :m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("ta", "tb"))
+def bgemm_reduce(a: jnp.ndarray, b: jnp.ndarray, *, ta: bool = False,
+                 tb: bool = False) -> jnp.ndarray:
+    """sum_n op(A[n]) @ op(B[n]) -> (M, N).
+
+    The batch axis is a *contraction* grid axis (innermost together with K),
+    so the output tile accumulates in place — this computes conv dW without
+    a (B, M, N) intermediate.  Grid layout (Mt, Nt, Bt, Kt)."""
+    assert a.ndim == 3 and b.ndim == 3 and a.shape[0] == b.shape[0]
+    (_, _, bsz, m, n, k, bm, bn, bk, bb, bt,
+     ap, bp, mp, np_, kp) = _prep_batched(a, b, ta, tb, True)
+
+    a_spec = (pl.BlockSpec((bb, bk, bm), lambda i, j, z, kk: (z, kk, i)) if ta
+              else pl.BlockSpec((bb, bm, bk), lambda i, j, z, kk: (z, i, kk)))
+    b_spec = (pl.BlockSpec((bb, bn, bk), lambda i, j, z, kk: (z, j, kk)) if tb
+              else pl.BlockSpec((bb, bk, bn), lambda i, j, z, kk: (z, kk, j)))
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, ta=ta, tb=tb, k_axes=(2, 3), reduce_batch=True),
+        grid=(mp // bm, np_ // bn, bt, kp // bk),
+        in_specs=[a_spec, b_spec],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, z, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=common.INTERPRET,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _bias_rows_kernel(m_ref, v_ref, o_ref):
+    # The paper's matrixPlusVectorRows functor, lst. 1.2: one vector add per
+    # matrix row; rows are the parallel axis.
+    o_ref[...] = m_ref[...] + v_ref[...][None, :]
+
+
+def bias_rows(m: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Add ``v`` to every row of ``m`` — Pallas functor analog."""
+    return pl.pallas_call(
+        _bias_rows_kernel,
+        out_shape=jax.ShapeDtypeStruct(m.shape, m.dtype),
+        interpret=common.INTERPRET,
+    )(m, v)
+
+
+def inner_product(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Caffe InnerProduct forward (lst. 1.2): x (M,K) @ w(N,K)^T + bias."""
+    y = gemm(x, w, tb=True)
+    return bias_rows(y, b)

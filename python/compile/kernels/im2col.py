@@ -1,0 +1,96 @@
+"""im2col / col2im as Pallas kernels (batch-aware, phase-unrolled).
+
+The paper (§3.1) observes that Caffe's im2col is a penta-loop with
+loop-carried index arithmetic, and that the PHAST port *merged the loops and
+parameterized by a single index* so every element is independent.  The
+Pallas formulation takes the same idea to its limit: **all** loops are
+merged into a single program — the kh*kw window phases are statically
+unrolled in the kernel body, and each phase moves the slab for every sample
+and channel at once as one strided view.
+
+Two earlier schedules are kept in the §Perf log (EXPERIMENTS.md):
+ * grid (C, kh, kw) + vmap over batch  — the naive port, ~20x slower;
+ * grid (kh, kw) with batched slabs    — faster, but the grid becomes an
+   XLA while-loop whose carried buffers are copied every step on CPU.
+The unrolled single-program version eliminates the loop entirely; on a real
+TPU it is a single VMEM-resident program doing kh*kw vector moves.
+
+Layout matches Caffe exactly: cols[n, (c*kh + i)*kw + j, oh*OW + ow].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _im2col_kernel(x_ref, o_ref, *, kh, kw, sh, sw, oh, ow):
+    x = x_ref[...]                     # (N, C, Hp, Wp), VMEM-resident
+    n, c = x.shape[0], x.shape[1]
+    parts = []
+    for i in range(kh):                # static unroll: kh*kw strided views
+        for j in range(kw):
+            slab = x[:, :, i : i + oh * sh, j : j + ow * sw]
+            plane = common.strided_view(common.strided_view(slab, oh, sh, 2), ow, sw, 3)
+            parts.append(plane.reshape(n, c, 1, oh * ow))
+    o_ref[...] = jnp.concatenate(parts, axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "stride", "pad"))
+def im2col(x: jnp.ndarray, kernel: tuple[int, int], stride: tuple[int, int],
+           pad: tuple[int, int]) -> jnp.ndarray:
+    """x: (N, C, H, W) -> (N, C*kh*kw, OH*OW), Caffe column layout."""
+    n, c, h, w = x.shape
+    kh, kw = kernel
+    sh, sw = stride
+    gh = common.conv_geom(h, kh, sh, pad[0])
+    gw = common.conv_geom(w, kw, sw, pad[1])
+    # Pad symmetrically for the convolution, then a touch more on the
+    # bottom/right so every (i, j) slab of extent (OH*sh, OW*sw) is in-bounds.
+    xp = jnp.pad(x, ((0, 0), (0, 0), (gh.pad, gh.pad + gh.extra),
+                     (gw.pad, gw.pad + gw.extra)))
+    kern = functools.partial(_im2col_kernel, kh=kh, kw=kw, sh=sh, sw=sw,
+                             oh=gh.out, ow=gw.out)
+    cols = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((n, c, kh * kw, gh.out * gw.out), x.dtype),
+        interpret=common.INTERPRET,
+    )(xp)
+    return cols.reshape(n, c * kh * kw, gh.out * gw.out)
+
+
+def _col2im_kernel(c_ref, o_ref, *, kh, kw, sh, sw, oh, ow):
+    cc = c_ref[...]                    # (N, C, KK, OHW)
+    n, c = cc.shape[0], cc.shape[1]
+    out = jnp.zeros(o_ref.shape, cc.dtype)
+    for i in range(kh):                # static unroll: pad-placed adds
+        for j in range(kw):
+            plane = cc[:, :, i * kw + j, :].reshape(n, c, oh, ow)
+            out = out + common.place_strided(plane, i, j, sh, sw, out.shape)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("channels", "size", "kernel", "stride", "pad"))
+def col2im(cols: jnp.ndarray, channels: int, size: tuple[int, int],
+           kernel: tuple[int, int], stride: tuple[int, int],
+           pad: tuple[int, int]) -> jnp.ndarray:
+    """Adjoint of :func:`im2col`: (N, C*kh*kw, OH*OW) -> (N, C, H, W)."""
+    n = cols.shape[0]
+    h, w = size
+    kh, kw = kernel
+    sh, sw = stride
+    gh = common.conv_geom(h, kh, sh, pad[0])
+    gw = common.conv_geom(w, kw, sw, pad[1])
+    kern = functools.partial(_col2im_kernel, kh=kh, kw=kw, sh=sh, sw=sw,
+                             oh=gh.out, ow=gw.out)
+    canvas = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((n, channels, gh.total, gw.total), cols.dtype),
+        interpret=common.INTERPRET,
+    )(cols.reshape(n, channels, kh * kw, gh.out * gw.out))
+    return canvas[:, :, gh.pad : gh.pad + h, gw.pad : gw.pad + w]

@@ -1,0 +1,166 @@
+"""Max / average pooling as Pallas kernels (Caffe ceil-mode geometry,
+batch-aware, phase-unrolled).
+
+Same "merge all the loops" structure as im2col (§3.1/§3.3 of the paper):
+each kernel is a single program whose kh*kw window phases are statically
+unrolled over (N, C, OH, OW) strided views.  Caffe's MAX pooling records the
+winning element for the backward scatter — we record the *window phase*
+i*kw + j, which routes identically and keeps the argmax tensor the same
+shape as the output.
+
+The paper's §3.3 notes that their Pooling port parallelized only the outer
+loop because merging all loops was not verified to be safe; the Pallas
+formulation is the merged version, and the property tests
+(python/tests/test_kernels.py, rust propcheck pooling suite) supply the
+verification the paper deferred.
+
+All scaling (the AVE divisor) happens *outside* the kernels: pure
+accumulation bodies survive the HLO-text interchange, and the divisor table
+is a trace-time constant (printed in full — see aot.to_hlo_text).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common, ref
+
+
+def _phase_view(x, i, j, sh, sw, oh, ow):
+    slab = x[:, :, i : i + oh * sh, j : j + ow * sw]
+    return common.strided_view(common.strided_view(slab, oh, sh, 2), ow, sw, 3)
+
+
+def _maxpool_kernel(x_ref, v_ref, a_ref, *, kh, kw, sh, sw, oh, ow):
+    x = x_ref[...]
+    best = _phase_view(x, 0, 0, sh, sw, oh, ow)
+    arg = jnp.zeros(best.shape, jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            if i == 0 and j == 0:
+                continue
+            plane = _phase_view(x, i, j, sh, sw, oh, ow)
+            take = plane > best
+            best = jnp.where(take, plane, best)
+            arg = jnp.where(take, i * kw + j, arg)
+    v_ref[...] = best
+    a_ref[...] = arg
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "stride", "pad"))
+def maxpool(x: jnp.ndarray, kernel, stride, pad):
+    """x: (N,C,H,W) -> (vals (N,C,OH,OW), argmax phase (N,C,OH,OW) i32)."""
+    n, c, h, w = x.shape
+    kh, kw = kernel
+    gh = common.pool_geom(h, kh, stride[0], pad[0])
+    gw = common.pool_geom(w, kw, stride[1], pad[1])
+    neg = jnp.asarray(-jnp.inf, x.dtype)
+    xp = jnp.full((n, c, gh.total, gw.total), neg, x.dtype)
+    xp = xp.at[:, :, gh.pad : gh.pad + h, gw.pad : gw.pad + w].set(x)
+    kern = functools.partial(_maxpool_kernel, kh=kh, kw=kw, sh=gh.stride,
+                             sw=gw.stride, oh=gh.out, ow=gw.out)
+    return pl.pallas_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct((n, c, gh.out, gw.out), x.dtype),
+            jax.ShapeDtypeStruct((n, c, gh.out, gw.out), jnp.int32),
+        ),
+        interpret=common.INTERPRET,
+    )(xp)
+
+
+def _scatter_phases_kernel(contribs, o_ref, kh, kw, sh, sw, oh, ow):
+    """Sum per-phase contributions into the strided canvas positions
+    (pad-placement, no scatter — see common.place_strided)."""
+    out = jnp.zeros(o_ref.shape, o_ref.dtype)
+    for i in range(kh):
+        for j in range(kw):
+            out = out + common.place_strided(contribs(i, j), i, j, sh, sw, out.shape)
+    o_ref[...] = out
+
+
+def _maxpool_bwd_kernel(dy_ref, a_ref, o_ref, *, kh, kw, sh, sw, oh, ow):
+    dy = dy_ref[...]
+    arg = a_ref[...]
+    _scatter_phases_kernel(
+        lambda i, j: jnp.where(arg == i * kw + j, dy, 0.0),
+        o_ref, kh, kw, sh, sw, oh, ow,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("size", "kernel", "stride", "pad"))
+def maxpool_bwd(dy: jnp.ndarray, arg: jnp.ndarray, size, kernel, stride, pad):
+    """Scatter pooled gradients back to (N,C,H,W) through the argmax phases."""
+    h, w = size
+    n, c = dy.shape[0], dy.shape[1]
+    kh, kw = kernel
+    gh = common.pool_geom(h, kh, stride[0], pad[0])
+    gw = common.pool_geom(w, kw, stride[1], pad[1])
+    kern = functools.partial(_maxpool_bwd_kernel, kh=kh, kw=kw, sh=gh.stride,
+                             sw=gw.stride, oh=gh.out, ow=gw.out)
+    canvas = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((n, c, gh.total, gw.total), dy.dtype),
+        interpret=common.INTERPRET,
+    )(dy, arg)
+    return canvas[:, :, gh.pad : gh.pad + h, gw.pad : gw.pad + w]
+
+
+def _sumpool_kernel(x_ref, v_ref, *, kh, kw, sh, sw, oh, ow):
+    x = x_ref[...]
+    acc = _phase_view(x, 0, 0, sh, sw, oh, ow)
+    for i in range(kh):
+        for j in range(kw):
+            if i == 0 and j == 0:
+                continue
+            acc = acc + _phase_view(x, i, j, sh, sw, oh, ow)
+    v_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "stride", "pad"))
+def avepool(x: jnp.ndarray, kernel, stride, pad):
+    """Caffe AVE pooling: windowed sum / clipped window area (the divisor is
+    a trace-time constant — geometry only)."""
+    n, c, h, w = x.shape
+    kh, kw = kernel
+    gh = common.pool_geom(h, kh, stride[0], pad[0])
+    gw = common.pool_geom(w, kw, stride[1], pad[1])
+    xp = jnp.zeros((n, c, gh.total, gw.total), x.dtype)
+    xp = xp.at[:, :, gh.pad : gh.pad + h, gw.pad : gw.pad + w].set(x)
+    inv_div = jnp.asarray(1.0 / ref.ave_divisor(h, w, kernel, stride, pad))
+    kern = functools.partial(_sumpool_kernel, kh=kh, kw=kw, sh=gh.stride,
+                             sw=gw.stride, oh=gh.out, ow=gw.out)
+    sums = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((n, c, gh.out, gw.out), x.dtype),
+        interpret=common.INTERPRET,
+    )(xp)
+    return sums * inv_div[None, None, :, :]
+
+
+def _avepool_bwd_kernel(dy_ref, o_ref, *, kh, kw, sh, sw, oh, ow):
+    dy = dy_ref[...]  # pre-scaled by the inverse divisor
+    _scatter_phases_kernel(lambda _i, _j: dy, o_ref, kh, kw, sh, sw, oh, ow)
+
+
+@functools.partial(jax.jit, static_argnames=("size", "kernel", "stride", "pad"))
+def avepool_bwd(dy: jnp.ndarray, size, kernel, stride, pad):
+    h, w = size
+    n, c = dy.shape[0], dy.shape[1]
+    kh, kw = kernel
+    gh = common.pool_geom(h, kh, stride[0], pad[0])
+    gw = common.pool_geom(w, kw, stride[1], pad[1])
+    inv_div = jnp.asarray(1.0 / ref.ave_divisor(h, w, kernel, stride, pad))
+    scaled = dy * inv_div[None, None, :, :]
+    kern = functools.partial(_avepool_bwd_kernel, kh=kh, kw=kw, sh=gh.stride,
+                             sw=gw.stride, oh=gh.out, ow=gw.out)
+    canvas = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((n, c, gh.total, gw.total), dy.dtype),
+        interpret=common.INTERPRET,
+    )(scaled)
+    return canvas[:, :, gh.pad : gh.pad + h, gw.pad : gw.pad + w]

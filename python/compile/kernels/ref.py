@@ -1,0 +1,236 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+These are deliberately written with plain ``jax.numpy`` (no Pallas, no
+clever tiling) in Caffe semantics so that ``pytest python/tests`` can assert
+``kernels.<op>(...) == ref.<op>(...)`` over hypothesis-generated shapes.
+The Rust native baseline (``rust/src/ops``) implements the same semantics a
+third time; the integration tests close the triangle.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import common
+
+
+# ---------------------------------------------------------------------------
+# GeMM / InnerProduct
+# ---------------------------------------------------------------------------
+
+def gemm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B, f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def inner_product(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Caffe InnerProduct forward: y[m, n] = sum_k x[m, k] w[n, k] + b[n].
+
+    ``w`` is stored Caffe-style as (num_output, K)."""
+    return jnp.matmul(x, w.T, preferred_element_type=jnp.float32) + b[None, :]
+
+
+def bias_rows(m: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """The paper's ``matrixPlusVectorRows`` functor: add ``v`` to every row."""
+    return m + v[None, :]
+
+
+# ---------------------------------------------------------------------------
+# im2col / col2im (Caffe layout: row = c*kh*kw + i*kw + j, col = oh*OW + ow)
+# ---------------------------------------------------------------------------
+
+def im2col(x: jnp.ndarray, kernel: tuple[int, int], stride: tuple[int, int],
+           pad: tuple[int, int]) -> jnp.ndarray:
+    """x: (N, C, H, W) -> cols: (N, C*kh*kw, OH*OW)."""
+    n, c, h, w = x.shape
+    kh, kw = kernel
+    sh, sw = stride
+    ph, pw = pad
+    gh = common.conv_geom(h, kh, sh, ph)
+    gw = common.conv_geom(w, kw, sw, pw)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    rows = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = xp[:, :, i : i + (gh.out - 1) * sh + 1 : sh,
+                    j : j + (gw.out - 1) * sw + 1 : sw]
+            rows.append(sl.reshape(n, c, gh.out * gw.out))
+    # rows is kh*kw entries of (N, C, OHW); want (N, C*kh*kw, OHW) with
+    # row-major (c, i, j) ordering.
+    stacked = jnp.stack(rows, axis=2)  # (N, C, kh*kw, OHW)
+    return stacked.reshape(n, c * kh * kw, gh.out * gw.out)
+
+
+def col2im(cols: jnp.ndarray, channels: int, size: tuple[int, int],
+           kernel: tuple[int, int], stride: tuple[int, int],
+           pad: tuple[int, int]) -> jnp.ndarray:
+    """Adjoint of :func:`im2col` — scatter-add columns back to (N, C, H, W)."""
+    h, w = size
+    kh, kw = kernel
+    sh, sw = stride
+    ph, pw = pad
+    gh = common.conv_geom(h, kh, sh, ph)
+    gw = common.conv_geom(w, kw, sw, pw)
+    n = cols.shape[0]
+    out = jnp.zeros((n, channels, h + 2 * ph, w + 2 * pw), dtype=cols.dtype)
+    cc = cols.reshape(n, channels, kh * kw, gh.out, gw.out)
+    for i in range(kh):
+        for j in range(kw):
+            out = out.at[:, :, i : i + (gh.out - 1) * sh + 1 : sh,
+                         j : j + (gw.out - 1) * sw + 1 : sw].add(cc[:, :, i * kw + j])
+    return out[:, :, ph : ph + h, pw : pw + w]
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+           stride: tuple[int, int], pad: tuple[int, int]) -> jnp.ndarray:
+    """Caffe Convolution forward.
+
+    x: (N, C, H, W); w: (Cout, C, kh, kw); b: (Cout,) -> (N, Cout, OH, OW)."""
+    n = x.shape[0]
+    cout, cin, kh, kw = w.shape
+    gh = common.conv_geom(x.shape[2], kh, stride[0], pad[0])
+    gw = common.conv_geom(x.shape[3], kw, stride[1], pad[1])
+    cols = im2col(x, (kh, kw), stride, pad)
+    wmat = w.reshape(cout, cin * kh * kw)
+    y = jnp.einsum("ok,nkp->nop", wmat, cols) + b[None, :, None]
+    return y.reshape(n, cout, gh.out, gw.out)
+
+
+# ---------------------------------------------------------------------------
+# Pooling (Caffe ceil mode with border clip)
+# ---------------------------------------------------------------------------
+
+def _pool_windows(h, w, kernel, stride, pad):
+    kh, kw = kernel
+    sh, sw = stride
+    ph, pw = pad
+    gh = common.pool_geom(h, kh, sh, ph)
+    gw = common.pool_geom(w, kw, sw, pw)
+    return gh, gw
+
+
+def maxpool(x: jnp.ndarray, kernel, stride, pad):
+    """x: (N, C, H, W) -> (vals, argmax i32), both (N, C, OH, OW).
+
+    argmax is the *window phase* index i*kw + j of the winning element, ties
+    resolved in scan order (first wins), matching Caffe's h-then-w scan."""
+    n, c, h, w = x.shape
+    kh, kw = kernel
+    gh, gw = _pool_windows(h, w, kernel, stride, pad)
+    neg = jnp.asarray(-jnp.inf, x.dtype)
+    xp = jnp.full((n, c, gh.total, gw.total), neg, x.dtype)
+    xp = xp.at[:, :, gh.pad : gh.pad + h, gw.pad : gw.pad + w].set(x)
+    best = jnp.full((n, c, gh.out, gw.out), neg, x.dtype)
+    arg = jnp.zeros((n, c, gh.out, gw.out), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            sl = xp[:, :, i : i + (gh.out - 1) * gh.stride + 1 : gh.stride,
+                    j : j + (gw.out - 1) * gw.stride + 1 : gw.stride]
+            take = sl > best
+            arg = jnp.where(take, i * kw + j, arg)
+            best = jnp.where(take, sl, best)
+    return best, arg
+
+
+def maxpool_bwd(dy: jnp.ndarray, arg: jnp.ndarray, size, kernel, stride, pad):
+    """Route pooled gradients back through the recorded argmax phases."""
+    h, w = size
+    n, c = dy.shape[0], dy.shape[1]
+    kh, kw = kernel
+    gh, gw = _pool_windows(h, w, kernel, stride, pad)
+    out = jnp.zeros((n, c, gh.total, gw.total), dy.dtype)
+    for i in range(kh):
+        for j in range(kw):
+            contrib = jnp.where(arg == i * kw + j, dy, 0.0)
+            out = out.at[:, :, i : i + (gh.out - 1) * gh.stride + 1 : gh.stride,
+                         j : j + (gw.out - 1) * gw.stride + 1 : gw.stride].add(contrib)
+    return out[:, :, gh.pad : gh.pad + h, gw.pad : gw.pad + w]
+
+
+def ave_divisor(h, w, kernel, stride, pad) -> np.ndarray:
+    """Caffe AVE pooling divisor: window area clipped to the padded canvas
+    (padding cells count, overhang beyond pad does not)."""
+    kh, kw = kernel
+    gh, gw = _pool_windows(h, w, kernel, stride, pad)
+    div = np.zeros((gh.out, gw.out), np.float32)
+    for a in range(gh.out):
+        hs = a * gh.stride - gh.pad
+        he = min(hs + kh, h + gh.pad)
+        hs = max(hs, -gh.pad)
+        for b in range(gw.out):
+            ws = b * gw.stride - gw.pad
+            we = min(ws + kw, w + gw.pad)
+            ws = max(ws, -gw.pad)
+            div[a, b] = (he - hs) * (we - ws)
+    return div
+
+
+def avepool(x: jnp.ndarray, kernel, stride, pad):
+    """Caffe AVE pooling: sum of real elements / clipped window area."""
+    n, c, h, w = x.shape
+    kh, kw = kernel
+    gh, gw = _pool_windows(h, w, kernel, stride, pad)
+    xp = jnp.zeros((n, c, gh.total, gw.total), x.dtype)
+    xp = xp.at[:, :, gh.pad : gh.pad + h, gw.pad : gw.pad + w].set(x)
+    acc = jnp.zeros((n, c, gh.out, gw.out), x.dtype)
+    for i in range(kh):
+        for j in range(kw):
+            acc = acc + xp[:, :, i : i + (gh.out - 1) * gh.stride + 1 : gh.stride,
+                           j : j + (gw.out - 1) * gw.stride + 1 : gw.stride]
+    return acc / jnp.asarray(ave_divisor(h, w, kernel, stride, pad))
+
+
+def avepool_bwd(dy: jnp.ndarray, size, kernel, stride, pad):
+    h, w = size
+    n, c = dy.shape[0], dy.shape[1]
+    kh, kw = kernel
+    gh, gw = _pool_windows(h, w, kernel, stride, pad)
+    scaled = dy / jnp.asarray(ave_divisor(h, w, kernel, stride, pad))
+    out = jnp.zeros((n, c, gh.total, gw.total), dy.dtype)
+    for i in range(kh):
+        for j in range(kw):
+            out = out.at[:, :, i : i + (gh.out - 1) * gh.stride + 1 : gh.stride,
+                         j : j + (gw.out - 1) * gw.stride + 1 : gw.stride].add(scaled)
+    return out[:, :, gh.pad : gh.pad + h, gw.pad : gw.pad + w]
+
+
+# ---------------------------------------------------------------------------
+# Activations / classification heads
+# ---------------------------------------------------------------------------
+
+def leaky_relu(x: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    return jnp.where(x > 0, x, alpha * x)
+
+
+def leaky_relu_bwd(x: jnp.ndarray, dy: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    return jnp.where(x > 0, dy, alpha * dy)
+
+
+def softmax(x: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise softmax over the class axis of (N, C)."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_xent(x: jnp.ndarray, labels: jnp.ndarray):
+    """(loss scalar, probs) — mean cross-entropy, Caffe SoftmaxWithLoss."""
+    p = softmax(x)
+    n = x.shape[0]
+    picked = p[jnp.arange(n), labels]
+    loss = -jnp.mean(jnp.log(jnp.maximum(picked, jnp.finfo(x.dtype).tiny)))
+    return loss, p
+
+
+def softmax_xent_bwd(probs: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    n, c = probs.shape
+    onehot = jnp.zeros_like(probs).at[jnp.arange(n), labels].set(1.0)
+    return (probs - onehot) / n
+
+
+def accuracy(x: jnp.ndarray, labels: jnp.ndarray, top_k: int = 1) -> jnp.ndarray:
+    """Fraction of rows whose label is within the top-k scores."""
+    idx = jnp.argsort(-x, axis=-1)[:, :top_k]
+    hit = jnp.any(idx == labels[:, None], axis=-1)
+    return jnp.mean(hit.astype(jnp.float32))

@@ -1,0 +1,419 @@
+"""L2 — the JAX compute graphs of the two paper networks, built *only* from
+the L1 Pallas kernels in ``compile.kernels``.
+
+The paper trains two LeNet-style nets with Caffe:
+
+* ``lenet-mnist`` — 2x Convolution, 2x MAX Pooling, 2x InnerProduct + ReLU,
+  SoftmaxWithLoss / Accuracy, on 28x28x1 inputs (Caffe's examples/mnist).
+* ``cifar10-quick`` — 3x Convolution, 1x MAX + 2x AVE Pooling, ReLUs,
+  2x InnerProduct, SoftmaxWithLoss / Accuracy, on 32x32x3 inputs.
+
+Backward passes are composed *manually* from the backward kernels (exactly
+like Caffe's handwritten ``Backward_cpu``), not with jax autodiff — every
+gradient that flows is the product of the same single-source kernels the
+forward pass uses.  ``python/tests/test_model.py`` checks them against
+``jax.grad`` of the pure-jnp reference model.
+
+Everything here is traced once by ``compile.aot`` and shipped to the Rust
+coordinator as HLO text; nothing in this file runs at serving/training time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+
+
+# ---------------------------------------------------------------------------
+# Batched layer ops (vmap over the per-sample Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def conv2d_fwd(x, w, b, stride, pad, *, with_cols: bool = False):
+    """x (N,C,H,W), w (Cout,C,kh,kw), b (Cout,) -> y (N,Cout,OH,OW).
+
+    Caffe schedule: im2col + GeMM; the weight panel (Cout, C*kh*kw) is
+    broadcast across the batch inside the batched GeMM kernel.  With
+    ``with_cols=True`` also returns the column tensor so the backward pass
+    can reuse it (Caffe shares ``col_buffer_`` the same way)."""
+    K.check_conv_supported()
+    n = x.shape[0]
+    cout, cin, kh, kw = w.shape
+    wmat = w.reshape(cout, cin * kh * kw)
+    gh = K.common.conv_geom(x.shape[2], kh, stride[0], pad[0])
+    gw = K.common.conv_geom(x.shape[3], kw, stride[1], pad[1])
+    cols = K.im2col(x, (kh, kw), stride, pad)      # (N, CKK, OHW)
+    y = K.bgemm(wmat, cols)                        # (N, Cout, OHW)
+    y = (y + b[None, :, None]).reshape(n, cout, gh.out, gw.out)
+    if with_cols:
+        return y, cols
+    return y
+
+
+def conv2d_bwd(x, w, dy, stride, pad, cols=None):
+    """Backward of :func:`conv2d_fwd` -> (dx, dw, db).
+
+    All three products are batched GeMMs over the stashed column tensor:
+        dW    = sum_n dY_n · cols_n^T      (bgemm_reduce, tb)
+        dcols =        W^T · dY_n          (bgemm, ta)
+        dX    = col2im(dcols)
+    """
+    K.check_conv_supported()
+    n = x.shape[0]
+    cout, cin, kh, kw = w.shape
+    wmat = w.reshape(cout, cin * kh * kw)
+    h, w_sz = x.shape[2], x.shape[3]
+    if cols is None:
+        cols = K.im2col(x, (kh, kw), stride, pad)
+    dymat = dy.reshape(n, cout, -1)                          # (N, Cout, OHW)
+    dw = K.bgemm_reduce(dymat, cols, tb=True)                # (Cout, CKK)
+    dcols = K.bgemm(wmat, dymat, ta=True)                    # (N, CKK, OHW)
+    dx = K.col2im(dcols, cin, (h, w_sz), (kh, kw), stride, pad)
+    db = dy.sum(axis=(0, 2, 3))
+    return dx, dw.reshape(w.shape), db
+
+
+def maxpool_fwd(x, kernel, stride, pad):
+    return K.maxpool(x, kernel, stride, pad)
+
+
+def maxpool_bwd(dy, arg, size, kernel, stride, pad):
+    return K.maxpool_bwd(dy, arg, size, kernel, stride, pad)
+
+
+def avepool_fwd(x, kernel, stride, pad):
+    return K.avepool(x, kernel, stride, pad)
+
+
+def avepool_bwd(dy, size, kernel, stride, pad):
+    return K.avepool_bwd(dy, size, kernel, stride, pad)
+
+
+def ip_fwd(x, w, b):
+    """x (N,K) @ w (Nout,K)^T + b."""
+    return K.inner_product(x, w, b)
+
+
+def ip_bwd(x, w, dy):
+    """-> (dx, dw, db).  All three are GeMMs — the Caffe trick the paper
+    quotes: 'its creators have mapped all possible operations to matrix
+    multiplications'.  Transposes happen inside the kernel BlockSpecs, no
+    copies."""
+    dw = K.gemm(dy, x, ta=True)   # (Nout, K)
+    dx = K.gemm(dy, w)            # (N, K)
+    db = dy.sum(axis=0)
+    return dx, dw, db
+
+
+# ---------------------------------------------------------------------------
+# Net definitions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    out_channels: int
+    kernel: int
+    stride: int = 1
+    pad: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    name: str
+    method: str       # "max" | "ave"
+    kernel: int
+    stride: int
+    pad: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class IpSpec:
+    name: str
+    num_output: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ReluSpec:
+    name: str
+    alpha: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class NetDef:
+    name: str
+    in_shape: tuple[int, int, int]   # (C, H, W)
+    num_classes: int
+    stages: tuple
+
+
+LENET_MNIST = NetDef(
+    name="lenet-mnist",
+    in_shape=(1, 28, 28),
+    num_classes=10,
+    stages=(
+        ConvSpec("conv1", 20, 5),
+        PoolSpec("pool1", "max", 2, 2),
+        ConvSpec("conv2", 50, 5),
+        PoolSpec("pool2", "max", 2, 2),
+        IpSpec("ip1", 500),
+        ReluSpec("relu1"),
+        IpSpec("ip2", 10),
+    ),
+)
+
+CIFAR10_QUICK = NetDef(
+    name="cifar10-quick",
+    in_shape=(3, 32, 32),
+    num_classes=10,
+    stages=(
+        ConvSpec("conv1", 32, 5, 1, 2),
+        PoolSpec("pool1", "max", 3, 2),
+        ReluSpec("relu1"),
+        ConvSpec("conv2", 32, 5, 1, 2),
+        ReluSpec("relu2"),
+        PoolSpec("pool2", "ave", 3, 2),
+        ConvSpec("conv3", 64, 5, 1, 2),
+        ReluSpec("relu3"),
+        PoolSpec("pool3", "ave", 3, 2),
+        IpSpec("ip1", 64),
+        IpSpec("ip2", 10),
+    ),
+)
+
+NETS = {n.name: n for n in (LENET_MNIST, CIFAR10_QUICK)}
+
+
+def stage_shapes(net: NetDef) -> list[tuple[str, tuple[int, ...]]]:
+    """Per-stage (C, H, W) (or flat (K,)) activation shapes, pre-batch."""
+    c, h, w = net.in_shape
+    flat = None
+    out = [("data", (c, h, w))]
+    for st in net.stages:
+        if isinstance(st, ConvSpec):
+            gh = K.common.conv_geom(h, st.kernel, st.stride, st.pad)
+            gw = K.common.conv_geom(w, st.kernel, st.stride, st.pad)
+            c, h, w = st.out_channels, gh.out, gw.out
+            out.append((st.name, (c, h, w)))
+        elif isinstance(st, PoolSpec):
+            gh = K.common.pool_geom(h, st.kernel, st.stride, st.pad)
+            gw = K.common.pool_geom(w, st.kernel, st.stride, st.pad)
+            h, w = gh.out, gw.out
+            out.append((st.name, (c, h, w)))
+        elif isinstance(st, IpSpec):
+            flat = st.num_output
+            out.append((st.name, (flat,)))
+            c, h, w = flat, 1, 1
+        elif isinstance(st, ReluSpec):
+            out.append((st.name, out[-1][1]))
+    return out
+
+
+def param_shapes(net: NetDef) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) of every learnable blob, Caffe order
+    (weight then bias per layer)."""
+    c, h, w = net.in_shape
+    shapes = []
+    for st in net.stages:
+        if isinstance(st, ConvSpec):
+            shapes.append((f"{st.name}.w", (st.out_channels, c, st.kernel, st.kernel)))
+            shapes.append((f"{st.name}.b", (st.out_channels,)))
+            gh = K.common.conv_geom(h, st.kernel, st.stride, st.pad)
+            gw = K.common.conv_geom(w, st.kernel, st.stride, st.pad)
+            c, h, w = st.out_channels, gh.out, gw.out
+        elif isinstance(st, PoolSpec):
+            gh = K.common.pool_geom(h, st.kernel, st.stride, st.pad)
+            gw = K.common.pool_geom(w, st.kernel, st.stride, st.pad)
+            h, w = gh.out, gw.out
+        elif isinstance(st, IpSpec):
+            k = c * h * w
+            shapes.append((f"{st.name}.w", (st.num_output, k)))
+            shapes.append((f"{st.name}.b", (st.num_output,)))
+            c, h, w = st.num_output, 1, 1
+    return shapes
+
+
+def init_params(net: NetDef, seed: int = 0) -> list[jnp.ndarray]:
+    """Xavier(weight)/zero(bias) init — mirrors the Caffe prototxts; used by
+    the python tests (the Rust coordinator owns the real initialization)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_shapes(net):
+        if name.endswith(".b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[1:]:
+                fan_in *= d
+            scale = (3.0 / fan_in) ** 0.5
+            key, sub = jax.random.split(key)
+            params.append(jax.random.uniform(sub, shape, jnp.float32, -scale, scale))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward / backward composition
+# ---------------------------------------------------------------------------
+
+def net_forward(net: NetDef, x, params, *, stash: bool = False):
+    """Run the net body to logits.  With ``stash=True`` also return the
+    per-stage tensors the manual backward needs."""
+    saved = []
+    p = iter(params)
+    cur = x
+    c, h, w = net.in_shape
+    for st in net.stages:
+        if isinstance(st, ConvSpec):
+            wgt, b = next(p), next(p)
+            x_in = cur
+            cur, cols = conv2d_fwd(cur, wgt, b, (st.stride, st.stride),
+                                   (st.pad, st.pad), with_cols=True)
+            saved.append(("conv", st, (x_in, cols), wgt))
+            c, h, w = cur.shape[1], cur.shape[2], cur.shape[3]
+        elif isinstance(st, PoolSpec):
+            if st.method == "max":
+                cur, arg = maxpool_fwd(cur, (st.kernel, st.kernel),
+                                       (st.stride, st.stride), (st.pad, st.pad))
+                saved.append(("maxpool", st, (h, w), arg))
+            else:
+                saved.append(("avepool", st, (h, w), None))
+                cur = avepool_fwd(cur, (st.kernel, st.kernel),
+                                  (st.stride, st.stride), (st.pad, st.pad))
+            h, w = cur.shape[2], cur.shape[3]
+        elif isinstance(st, IpSpec):
+            wgt, b = next(p), next(p)
+            flat = cur.reshape(cur.shape[0], -1)
+            saved.append(("ip", st, (flat, cur.shape), wgt))
+            cur = ip_fwd(flat, wgt, b)
+            c, h, w = st.num_output, 1, 1
+        elif isinstance(st, ReluSpec):
+            saved.append(("relu", st, cur, None))
+            if cur.ndim == 2:
+                cur = K.leaky_relu(cur, st.alpha)
+            else:
+                n = cur.shape[0]
+                cur = K.leaky_relu(cur.reshape(n, -1), st.alpha).reshape(cur.shape)
+    if stash:
+        return cur, saved
+    return cur
+
+
+def net_backward(net: NetDef, saved, dlogits):
+    """Manual reverse sweep; returns grads in ``param_shapes`` order."""
+    grads: list = []
+    cur = dlogits
+    for kind, st, aux, extra in reversed(saved):
+        if kind == "ip":
+            flat, orig_shape = aux
+            dx, dw, db = ip_bwd(flat, extra, cur)
+            grads.append(db)
+            grads.append(dw)
+            cur = dx.reshape(orig_shape)
+        elif kind == "relu":
+            x = aux
+            if cur.ndim == 2:
+                cur = K.leaky_relu_bwd(x, cur, st.alpha)
+            else:
+                n = cur.shape[0]
+                cur = K.leaky_relu_bwd(
+                    x.reshape(n, -1), cur.reshape(n, -1), st.alpha
+                ).reshape(cur.shape)
+        elif kind == "maxpool":
+            size = aux
+            cur = maxpool_bwd(cur, extra, size, (st.kernel, st.kernel),
+                              (st.stride, st.stride), (st.pad, st.pad))
+        elif kind == "avepool":
+            size = aux
+            cur = avepool_bwd(cur, size, (st.kernel, st.kernel),
+                              (st.stride, st.stride), (st.pad, st.pad))
+        elif kind == "conv":
+            (x, cols), wgt = aux, extra
+            dx, dw, db = conv2d_bwd(x, wgt, cur, (st.stride, st.stride),
+                                    (st.pad, st.pad), cols=cols)
+            grads.append(db)
+            grads.append(dw)
+            cur = dx
+    grads.reverse()
+    return grads, cur
+
+
+def net_loss_grads(net: NetDef, x, labels, params):
+    """Forward + SoftmaxWithLoss + full manual backward.
+
+    Returns (loss (1,), probs, grads list in param order)."""
+    logits, saved = net_forward(net, x, params, stash=True)
+    loss, probs = K.softmax_xent(logits, labels)
+    dlogits = K.softmax_xent_bwd(probs, labels)
+    grads, _ = net_backward(net, saved, dlogits)
+    return loss, probs, grads
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+def make_infer_fn(net: NetDef) -> Callable:
+    """x, *params -> (probs,)"""
+
+    def infer(x, *params):
+        logits = net_forward(net, x, list(params))
+        return (K.softmax(logits),)
+
+    return infer
+
+
+def make_eval_fn(net: NetDef) -> Callable:
+    """x, labels, *params -> (loss, accuracy, probs)"""
+
+    def evaluate(x, labels, *params):
+        logits = net_forward(net, x, list(params))
+        loss, probs = K.softmax_xent(logits, labels)
+        acc = K.accuracy(logits, labels)
+        return (loss, acc, probs)
+
+    return evaluate
+
+
+def make_grads_fn(net: NetDef) -> Callable:
+    """x, labels, *params -> (loss, *grads) — solver stays outside."""
+
+    def grads_fn(x, labels, *params):
+        loss, _probs, grads = net_loss_grads(net, x, labels, list(params))
+        return (loss,) + tuple(grads)
+
+    return grads_fn
+
+
+def make_step_fn(net: NetDef) -> Callable:
+    """The fully-fused train step — the paper's end state where every layer
+    lives in one domain and no boundary is crossed:
+
+        x, labels, lr, *(params + velocities)
+            -> (loss, *(new_params + new_velocities))
+
+    SGD with momentum/weight-decay exactly as Caffe's SGDSolver:
+        v = momentum * v + lr * (grad + weight_decay * w);  w = w - v
+    Momentum and weight decay are baked at trace time (solver constants);
+    lr is a runtime scalar so the Rust solver can apply its lr policy.
+    """
+    momentum = 0.9
+    weight_decay = 0.0005
+    n_params = len(param_shapes(net))
+
+    def step(x, labels, lr, *pv):
+        params = list(pv[:n_params])
+        vels = list(pv[n_params:])
+        loss, _probs, grads = net_loss_grads(net, x, labels, params)
+        new_p, new_v = [], []
+        for w, v, g in zip(params, vels, grads):
+            v2 = momentum * v + lr * (g + weight_decay * w)
+            new_p.append(w - v2)
+            new_v.append(v2)
+        return (loss,) + tuple(new_p) + tuple(new_v)
+
+    return step

@@ -1,0 +1,301 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes/strides/pads; interpret-mode Pallas is slow, so
+example counts are kept moderate and deadlines disabled.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from compile import kernels as K
+from compile.kernels import ref, common
+
+SET = settings(max_examples=12, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow])
+
+
+def f32(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# GeMM family
+# ---------------------------------------------------------------------------
+
+@SET
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(1, 40),
+       st.booleans(), st.booleans(), st.integers(0, 2**31 - 1))
+def test_gemm_vs_ref(m, k, n, ta, tb, seed):
+    rng = np.random.default_rng(seed)
+    a = f32(rng, *( (k, m) if ta else (m, k) ))
+    b = f32(rng, *( (n, k) if tb else (k, n) ))
+    want = (a.T if ta else a) @ (b.T if tb else b)
+    got = K.gemm(a, b, ta=ta, tb=tb)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(st.integers(1, 6), st.integers(1, 24), st.integers(1, 24),
+       st.integers(1, 24), st.integers(0, 2**31 - 1))
+def test_bgemm_broadcast_lhs(bsz, m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = f32(rng, m, k)
+    b = f32(rng, bsz, k, n)
+    np.testing.assert_allclose(K.bgemm(a, b), np.einsum("mk,bkn->bmn", a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(st.integers(1, 6), st.integers(1, 24), st.integers(1, 24),
+       st.integers(1, 24), st.integers(0, 2**31 - 1))
+def test_bgemm_batched_lhs_trans(bsz, m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = f32(rng, m, k)          # broadcast, transposed in-kernel
+    dy = f32(rng, bsz, m, n)
+    np.testing.assert_allclose(K.bgemm(a, dy, ta=True),
+                               np.einsum("mk,bmn->bkn", a, dy),
+                               rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(st.integers(1, 6), st.integers(1, 24), st.integers(1, 24),
+       st.integers(1, 24), st.integers(0, 2**31 - 1))
+def test_bgemm_reduce(bsz, m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    dy = f32(rng, bsz, m, n)
+    cols = f32(rng, bsz, k, n)
+    np.testing.assert_allclose(K.bgemm_reduce(dy, cols, tb=True),
+                               np.einsum("bmn,bkn->mk", dy, cols),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_identity():
+    eye = jnp.eye(17, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    a = f32(rng, 17, 17)
+    np.testing.assert_allclose(K.gemm(a, eye), a, atol=1e-6)
+
+
+def test_inner_product_bias():
+    rng = np.random.default_rng(1)
+    x, w, b = f32(rng, 9, 13), f32(rng, 5, 13), f32(rng, 5)
+    np.testing.assert_allclose(K.inner_product(x, w, b),
+                               ref.inner_product(x, w, b), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# im2col / col2im
+# ---------------------------------------------------------------------------
+
+window = st.tuples(st.integers(1, 4), st.integers(1, 3), st.integers(0, 2))
+
+
+@SET
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(5, 14),
+       st.integers(5, 14), window, window, st.integers(0, 2**31 - 1))
+def test_im2col_vs_ref(n, c, h, w, wh, ww, seed):
+    (kh, sh, ph), (kw, sw, pw) = wh, ww
+    if h + 2 * ph < kh or w + 2 * pw < kw:
+        return
+    rng = np.random.default_rng(seed)
+    x = f32(rng, n, c, h, w)
+    got = K.im2col(x, (kh, kw), (sh, sw), (ph, pw))
+    want = ref.im2col(x, (kh, kw), (sh, sw), (ph, pw))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@SET
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(5, 14),
+       st.integers(5, 14), window, window, st.integers(0, 2**31 - 1))
+def test_col2im_vs_ref(n, c, h, w, wh, ww, seed):
+    (kh, sh, ph), (kw, sw, pw) = wh, ww
+    if h + 2 * ph < kh or w + 2 * pw < kw:
+        return
+    rng = np.random.default_rng(seed)
+    gh = common.conv_geom(h, kh, sh, ph)
+    gw = common.conv_geom(w, kw, sw, pw)
+    cols = f32(rng, n, c * kh * kw, gh.out * gw.out)
+    got = K.col2im(cols, c, (h, w), (kh, kw), (sh, sw), (ph, pw))
+    want = ref.col2im(cols, c, (h, w), (kh, kw), (sh, sw), (ph, pw))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@SET
+@given(st.integers(1, 2), st.integers(1, 3), st.integers(5, 10),
+       st.integers(5, 10), window, st.integers(0, 2**31 - 1))
+def test_im2col_col2im_adjoint(n, c, h, w, wgeom, seed):
+    """<im2col(x), y> == <x, col2im(y)> — the defining adjointness property
+    the convolution backward pass relies on."""
+    (k, s, p) = wgeom
+    if h + 2 * p < k or w + 2 * p < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = f32(rng, n, c, h, w)
+    cols_x = K.im2col(x, (k, k), (s, s), (p, p))
+    y = f32(rng, *cols_x.shape)
+    lhs = float(jnp.vdot(cols_x, y))
+    rhs = float(jnp.vdot(x, K.col2im(y, c, (h, w), (k, k), (s, s), (p, p))))
+    assert abs(lhs - rhs) <= 1e-3 * max(1.0, abs(lhs))
+
+
+def test_im2col_figure2_example():
+    """Fig. 2/3 of the paper: 2x2 filter, stride 1, pad 0 over a 4x3 input
+    (we use the transposed 3x4 reading so OH*OW = 2*3 = 6 columns)."""
+    x = jnp.arange(12, dtype=jnp.float32).reshape(1, 1, 3, 4)
+    cols = K.im2col(x, (2, 2), (1, 1), (0, 0))
+    assert cols.shape == (1, 4, 6)
+    np.testing.assert_array_equal(
+        np.asarray(cols[0]),
+        np.array([[0, 1, 2, 4, 5, 6],
+                  [1, 2, 3, 5, 6, 7],
+                  [4, 5, 6, 8, 9, 10],
+                  [5, 6, 7, 9, 10, 11]], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Pooling
+# ---------------------------------------------------------------------------
+
+pool_geo = st.tuples(st.integers(2, 4), st.integers(1, 3), st.integers(0, 1))
+
+
+@SET
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(6, 14),
+       st.integers(6, 14), pool_geo, st.integers(0, 2**31 - 1))
+def test_maxpool_fwd_bwd_vs_ref(n, c, h, w, geo, seed):
+    k, s, p = geo
+    if p >= k:
+        return
+    rng = np.random.default_rng(seed)
+    x = f32(rng, n, c, h, w)
+    v1, a1 = K.maxpool(x, (k, k), (s, s), (p, p))
+    v2, a2 = ref.maxpool(x, (k, k), (s, s), (p, p))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    dy = f32(rng, *v1.shape)
+    g1 = K.maxpool_bwd(dy, a1, (h, w), (k, k), (s, s), (p, p))
+    g2 = ref.maxpool_bwd(dy, a2, (h, w), (k, k), (s, s), (p, p))
+    np.testing.assert_allclose(g1, g2, rtol=1e-6)
+
+
+@SET
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(6, 14),
+       st.integers(6, 14), pool_geo, st.integers(0, 2**31 - 1))
+def test_avepool_fwd_bwd_vs_ref(n, c, h, w, geo, seed):
+    k, s, p = geo
+    if p >= k:
+        return
+    rng = np.random.default_rng(seed)
+    x = f32(rng, n, c, h, w)
+    np.testing.assert_allclose(K.avepool(x, (k, k), (s, s), (p, p)),
+                               ref.avepool(x, (k, k), (s, s), (p, p)),
+                               rtol=1e-5, atol=1e-6)
+    gh = common.pool_geom(h, k, s, p)
+    gw = common.pool_geom(w, k, s, p)
+    dy = f32(rng, n, c, gh.out, gw.out)
+    np.testing.assert_allclose(
+        K.avepool_bwd(dy, (h, w), (k, k), (s, s), (p, p)),
+        ref.avepool_bwd(dy, (h, w), (k, k), (s, s), (p, p)),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_maxpool_routes_gradient_to_argmax():
+    x = jnp.zeros((1, 1, 4, 4), jnp.float32).at[0, 0, 1, 2].set(9.0)
+    v, a = K.maxpool(x, (2, 2), (2, 2), (0, 0))
+    assert float(v[0, 0, 0, 1]) == 9.0
+    dy = jnp.ones((1, 1, 2, 2), jnp.float32)
+    g = K.maxpool_bwd(dy, a, (4, 4), (2, 2), (2, 2), (0, 0))
+    assert float(g[0, 0, 1, 2]) == 1.0
+    # every window routes exactly one unit of gradient
+    assert float(jnp.sum(g)) == 4.0
+
+
+def test_pool_ceil_mode_geometry():
+    """cifar10-quick pool1: 3x3 stride 2 on 32 -> ceil((32-3)/2)+1 = 16."""
+    g = common.pool_geom(32, 3, 2, 0)
+    assert g.out == 16
+    # Caffe clip rule with padding: last window must start inside input+pad
+    g2 = common.pool_geom(7, 3, 2, 1)
+    assert g2.out == 4
+
+
+# ---------------------------------------------------------------------------
+# Activations / heads
+# ---------------------------------------------------------------------------
+
+@SET
+@given(st.integers(1, 32), st.integers(1, 32),
+       st.floats(0.0, 0.5), st.integers(0, 2**31 - 1))
+def test_leaky_relu(n, c, alpha, seed):
+    rng = np.random.default_rng(seed)
+    x = f32(rng, n, c)
+    dy = f32(rng, n, c)
+    np.testing.assert_allclose(K.leaky_relu(x, alpha), ref.leaky_relu(x, alpha))
+    np.testing.assert_allclose(K.leaky_relu_bwd(x, dy, alpha),
+                               ref.leaky_relu_bwd(x, dy, alpha))
+
+
+@SET
+@given(st.integers(1, 32), st.integers(2, 16), st.integers(0, 2**31 - 1))
+def test_softmax_simplex(n, c, seed):
+    rng = np.random.default_rng(seed)
+    x = f32(rng, n, c) * 10.0
+    p = K.softmax(x)
+    np.testing.assert_allclose(p, ref.softmax(x), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(jnp.sum(p, axis=-1)), np.ones(n),
+                               rtol=1e-5)
+    assert float(jnp.min(p)) >= 0.0
+
+
+@SET
+@given(st.integers(1, 32), st.integers(2, 16), st.integers(0, 2**31 - 1))
+def test_softmax_xent_and_bwd(n, c, seed):
+    rng = np.random.default_rng(seed)
+    x = f32(rng, n, c) * 3.0
+    labels = jnp.asarray(rng.integers(0, c, size=n).astype(np.int32))
+    loss, p = K.softmax_xent(x, labels)
+    loss_r, p_r = ref.softmax_xent(x, labels)
+    np.testing.assert_allclose(float(loss[0]), float(loss_r), rtol=1e-5)
+    np.testing.assert_allclose(p, p_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(K.softmax_xent_bwd(p, labels),
+                               ref.softmax_xent_bwd(p_r, labels),
+                               rtol=1e-5, atol=1e-6)
+    # gradient rows sum to zero (probability simplex tangent)
+    g = np.asarray(K.softmax_xent_bwd(p, labels))
+    np.testing.assert_allclose(g.sum(axis=1), np.zeros(n), atol=1e-6)
+
+
+@SET
+@given(st.integers(1, 48), st.integers(2, 12), st.integers(0, 2**31 - 1))
+def test_accuracy_top1(n, c, seed):
+    rng = np.random.default_rng(seed)
+    x = f32(rng, n, c)
+    labels = jnp.asarray(rng.integers(0, c, size=n).astype(np.int32))
+    got = float(K.accuracy(x, labels)[0])
+    want = float(ref.accuracy(x, labels, top_k=1))
+    assert abs(got - want) < 1e-6
+
+
+def test_softmax_xent_perfect_prediction():
+    x = jnp.asarray([[100.0, 0.0], [0.0, 100.0]], jnp.float32)
+    labels = jnp.asarray([0, 1], jnp.int32)
+    loss, _ = K.softmax_xent(x, labels)
+    assert float(loss[0]) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Unported-feature gate (Table 1 structure)
+# ---------------------------------------------------------------------------
+
+def test_conv_gate_rejects_unported():
+    with pytest.raises(K.Unported):
+        K.check_conv_supported(num_spatial_axes=3)
+    with pytest.raises(K.Unported):
+        K.check_conv_supported(dilation=(2, 2))
+    with pytest.raises(K.Unported):
+        K.check_conv_supported(group=2)
+    K.check_conv_supported()  # the LeNet configuration passes

@@ -1,0 +1,43 @@
+//! Bench: §4.3 layout-conversion ablation — the paper suspects the
+//! row-major/column-major relayout paid at every domain crossing is "the
+//! biggest quote in the current gap breakdown".  Measure the paper
+//! placement with and without the conversion.
+//!
+//! `cargo bench --bench ablation_layout`
+
+use phast_caffe::experiments::{measure_placement, render_transfers};
+use phast_caffe::phast::Placement;
+use phast_caffe::proto::{presets, NetConfig};
+use phast_caffe::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open_default()?;
+    for net in ["mnist", "cifar"] {
+        let cfg = NetConfig::from_text(presets::net_by_name(net).unwrap())?;
+        let reps = 5;
+        let with = measure_placement(
+            &engine,
+            net,
+            "with layout conversion",
+            Placement::paper_partial(&cfg),
+            true,
+            reps,
+        )?;
+        let without = measure_placement(
+            &engine,
+            net,
+            "without layout conversion",
+            Placement::paper_partial(&cfg),
+            false,
+            reps,
+        )?;
+        println!("==== {net} (paper placement, {reps} reps) ====");
+        print!("{}", render_transfers(&[with.clone(), without.clone()]));
+        println!(
+            "conversion cost: {:.2} ms/iter ({:.1}% of the partial-port time)\n",
+            with.conversion_ms,
+            100.0 * with.conversion_ms / with.mean_ms
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,20 @@
+//! Bench: §4.3 ablation — incremental-porting sweep.  Regenerates the
+//! paper's transfer-count analysis: time and crossings as a function of the
+//! ported layer set.
+//!
+//! `cargo bench --bench ablation_partial`
+
+use phast_caffe::experiments::{porting_sweep, render_transfers};
+use phast_caffe::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open_default()?;
+    for net in ["mnist", "cifar"] {
+        println!("==== {net}: porting sweep (3 reps each) ====");
+        let sweep = porting_sweep(&engine, net, 3)?;
+        print!("{}", render_transfers(&sweep));
+        println!();
+    }
+    println!("paper: ~10 (MNIST) / ~30 (CIFAR) unnecessary transfers per inference");
+    Ok(())
+}

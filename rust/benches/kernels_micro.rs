@@ -1,0 +1,112 @@
+//! Bench: kernel micro-benchmarks — native ops vs their PJRT artifacts at
+//! the LeNet shapes.  This is the per-layer breakdown behind Table 2 and
+//! the input to the §Perf optimization log.
+//!
+//! `cargo bench --bench kernels_micro`
+
+use std::time::Instant;
+
+use phast_caffe::ops::{self, gemm::Trans, im2col::Conv2dGeom, pool::Pool2dGeom};
+use phast_caffe::propcheck::Rng;
+use phast_caffe::runtime::{Engine, Value};
+use phast_caffe::tensor::{Shape, Tensor};
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..3 {
+        f(); // warmup
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ms = t0.elapsed().as_secs_f64() * 1000.0 / iters as f64;
+    println!("{name:<44} {ms:>9.3} ms");
+    ms
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(1);
+    println!("{:<44} {:>12}", "kernel (batch 64, LeNet shapes)", "mean");
+
+    // GeMM: conv2-as-GeMM shape, per batch of 64 samples
+    let a = rng.normal_vec(50 * 500);
+    let b = rng.normal_vec(500 * 64);
+    let mut c = vec![0.0f32; 50 * 64];
+    bench("native gemm 50x500x64 (x64 samples)", 10, || {
+        for _ in 0..64 {
+            ops::gemm(Trans::No, Trans::No, 50, 64, 500, 1.0, &a, &b, 0.0, &mut c);
+        }
+    });
+
+    // im2col at conv2 shape
+    let x2 = rng.normal_vec(20 * 12 * 12);
+    let g2 = Conv2dGeom { kh: 5, kw: 5, sh: 1, sw: 1, ph: 0, pw: 0 };
+    let mut cols = vec![0.0f32; 500 * 64];
+    bench("native im2col conv2 (x64 samples)", 10, || {
+        for _ in 0..64 {
+            ops::im2col(&x2, 20, 12, 12, g2, &mut cols);
+        }
+    });
+
+    // maxpool at pool1 shape
+    let xp = rng.normal_vec(20 * 24 * 24);
+    let gp = Pool2dGeom { kh: 2, kw: 2, sh: 2, sw: 2, ph: 0, pw: 0 };
+    let mut pout = vec![0.0f32; 20 * 12 * 12];
+    let mut parg = vec![0i32; 20 * 12 * 12];
+    bench("native maxpool pool1 (x64 samples)", 10, || {
+        for _ in 0..64 {
+            ops::maxpool(&xp, 20, 24, 24, gp, &mut pout, &mut parg);
+        }
+    });
+
+    // softmax-xent at head shape
+    let logits = rng.normal_vec(64 * 10);
+    let labels: Vec<i32> = (0..64).map(|i| (i % 10) as i32).collect();
+    let mut probs = vec![0.0f32; 640];
+    bench("native softmax_xent 64x10", 100, || {
+        ops::softmax_xent(&logits, &labels, 64, 10, &mut probs);
+    });
+
+    // PJRT artifacts at the same shapes (includes the H2D/D2H transfers a
+    // per-layer domain hop pays — the honest partial-port cost).
+    let engine = Engine::open_default()?;
+    let shape = Shape::nchw(64, 20, 12, 12);
+    let x = Tensor::from_vec(shape.clone(), rng.normal_vec(shape.count()));
+    let w = Tensor::from_vec(Shape::new(&[50, 20, 5, 5]), rng.normal_vec(50 * 500));
+    let bias = Tensor::from_vec(Shape::new(&[50]), rng.normal_vec(50));
+    engine.warmup(&["mnist.conv2.fwd", "mnist.pool1.fwd", "mnist.ip1.fwd"])?;
+    bench("pjrt  mnist.conv2.fwd (im2col+gemm+bias)", 10, || {
+        engine
+            .run(
+                "mnist.conv2.fwd",
+                &[Value::F32(x.clone()), Value::F32(w.clone()), Value::F32(bias.clone())],
+            )
+            .unwrap();
+    });
+
+    let xp1 = Tensor::from_vec(Shape::nchw(64, 20, 24, 24), rng.normal_vec(64 * 20 * 576));
+    bench("pjrt  mnist.pool1.fwd", 10, || {
+        engine.run("mnist.pool1.fwd", &[Value::F32(xp1.clone())]).unwrap();
+    });
+
+    let xip = Tensor::from_vec(Shape::new(&[64, 800]), rng.normal_vec(64 * 800));
+    let wip = Tensor::from_vec(Shape::new(&[500, 800]), rng.normal_vec(500 * 800));
+    let bip = Tensor::from_vec(Shape::new(&[500]), rng.normal_vec(500));
+    bench("pjrt  mnist.ip1.fwd", 10, || {
+        engine
+            .run(
+                "mnist.ip1.fwd",
+                &[Value::F32(xip.clone()), Value::F32(wip.clone()), Value::F32(bip.clone())],
+            )
+            .unwrap();
+    });
+
+    let st = engine.stats();
+    println!(
+        "\npjrt transfer totals: {} executions, {:.1} MiB H2D, {:.1} MiB D2H",
+        st.executions,
+        st.h2d_bytes as f64 / (1 << 20) as f64,
+        st.d2h_bytes as f64 / (1 << 20) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Bench: **Table 2** — average forward-backward execution time (ms) for
+//! LeNet-MNIST and cifar10-quick under the three configurations
+//! (native baseline / paper-partial PHAST port / fused whole-net artifact).
+//!
+//! `cargo bench --bench table2`
+
+use phast_caffe::experiments::{render_table2, run_table2};
+use phast_caffe::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::open_default()?;
+    let (warmup, reps) = (3, 20);
+    eprintln!("table2: {reps} reps after {warmup} warmup, batch 64");
+    let mnist = run_table2(&engine, "mnist", warmup, reps)?;
+    let cifar = run_table2(&engine, "cifar", warmup, reps)?;
+    print!("{}", render_table2(&mnist, &cifar));
+    println!(
+        "\npaper Table 2 (ms): MNIST Caffe 71.42 / PHAST 198.60 (2.8x);  \
+         CIFAR Caffe 399.50 / PHAST 1113.71 (2.8x)  [CPU column]"
+    );
+    Ok(())
+}

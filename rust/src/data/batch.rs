@@ -1,0 +1,109 @@
+//! Batch iterator: epoch shuffling + NCHW batch assembly for the Data layer.
+
+use crate::propcheck::Rng;
+use crate::tensor::{IntTensor, Shape, Tensor};
+
+use super::synthetic::Dataset;
+
+/// Cycles over a dataset in shuffled epochs, emitting fixed-size batches.
+pub struct BatchIterator {
+    ds: Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    epoch: usize,
+}
+
+impl BatchIterator {
+    pub fn new(ds: Dataset, batch: usize, seed: u64) -> Self {
+        assert!(batch > 0 && ds.len() >= batch, "dataset smaller than batch");
+        let mut it = BatchIterator {
+            order: (0..ds.len()).collect(),
+            ds,
+            batch,
+            cursor: 0,
+            rng: Rng::new(seed ^ 0xBA7C4),
+            epoch: 0,
+        };
+        it.reshuffle();
+        it
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Batch shape (N, C, H, W).
+    pub fn batch_shape(&self) -> Shape {
+        let s = self.ds.spec.sample_shape();
+        Shape::nchw(self.batch, s.dim(0), s.dim(1), s.dim(2))
+    }
+
+    /// Next (images, labels) batch; wraps and reshuffles at epoch end.
+    pub fn next_batch(&mut self) -> (Tensor, IntTensor) {
+        let n = self.ds.sample_len();
+        let mut data = Vec::with_capacity(self.batch * n);
+        let mut labels = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.epoch += 1;
+                self.reshuffle();
+            }
+            let idx = self.order[self.cursor];
+            self.cursor += 1;
+            data.extend_from_slice(self.ds.image(idx));
+            labels.push(self.ds.labels[idx]);
+        }
+        (
+            Tensor::from_vec(self.batch_shape(), data),
+            IntTensor::from_vec(Shape::new(&[self.batch]), labels),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    #[test]
+    fn batches_have_right_shape() {
+        let ds = Dataset::generate(SyntheticSpec::Mnist, 100, 1);
+        let mut it = BatchIterator::new(ds, 16, 9);
+        let (x, y) = it.next_batch();
+        assert_eq!(x.shape().dims(), &[16, 1, 28, 28]);
+        assert_eq!(y.len(), 16);
+    }
+
+    #[test]
+    fn epoch_advances_and_covers_dataset() {
+        let ds = Dataset::generate(SyntheticSpec::Mnist, 32, 2);
+        let mut it = BatchIterator::new(ds, 16, 3);
+        assert_eq!(it.epoch(), 0);
+        it.next_batch();
+        it.next_batch();
+        it.next_batch(); // wraps
+        assert_eq!(it.epoch(), 1);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let ds = Dataset::generate(SyntheticSpec::Mnist, 64, 2);
+        let mut a = BatchIterator::new(ds.clone(), 8, 5);
+        let mut b = BatchIterator::new(ds, 8, 5);
+        let (xa, ya) = a.next_batch();
+        let (xb, yb) = b.next_batch();
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
+    }
+}

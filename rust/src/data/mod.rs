@@ -1,0 +1,17 @@
+//! Data pipeline: synthetic datasets standing in for MNIST / CIFAR-10, a
+//! binary record format (the LMDB stand-in Caffe reads from), and the batch
+//! iterator the Data layer consumes.
+//!
+//! The paper's evaluation needs image sets only as a workload — its metrics
+//! are forward-backward time and block-level conformance — but the E2E
+//! example must genuinely *learn*, so the generators produce structured,
+//! separable classes: per-class stroke templates (MNIST analog) and
+//! color/texture patterns (CIFAR analog) with translation jitter and noise.
+
+mod synthetic;
+mod records;
+mod batch;
+
+pub use synthetic::{Dataset, SyntheticSpec};
+pub use records::{read_records, write_records};
+pub use batch::BatchIterator;

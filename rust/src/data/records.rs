@@ -1,0 +1,116 @@
+//! On-disk record format — the LMDB stand-in.
+//!
+//! Layout (little-endian):
+//!   magic "PCRF" | u32 version | u32 count | u32 sample_len | u8 spec_tag
+//!   then per record: i32 label, sample_len * f32 pixels.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::synthetic::{Dataset, SyntheticSpec};
+
+const MAGIC: &[u8; 4] = b"PCRF";
+const VERSION: u32 = 1;
+
+fn spec_tag(spec: SyntheticSpec) -> u8 {
+    match spec {
+        SyntheticSpec::Mnist => 1,
+        SyntheticSpec::Cifar10 => 2,
+    }
+}
+
+fn tag_spec(tag: u8) -> Result<SyntheticSpec> {
+    Ok(match tag {
+        1 => SyntheticSpec::Mnist,
+        2 => SyntheticSpec::Cifar10,
+        t => bail!("unknown dataset tag {t}"),
+    })
+}
+
+/// Serialize a dataset to `path`.
+pub fn write_records(path: &Path, ds: &Dataset) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(ds.len() as u32).to_le_bytes())?;
+    w.write_all(&(ds.sample_len() as u32).to_le_bytes())?;
+    w.write_all(&[spec_tag(ds.spec)])?;
+    for i in 0..ds.len() {
+        w.write_all(&ds.labels[i].to_le_bytes())?;
+        for v in ds.image(i) {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a dataset from `path`.
+pub fn read_records(path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?} is not a phast-caffe record file");
+    }
+    let mut u32buf = [0u8; 4];
+    r.read_exact(&mut u32buf)?;
+    let version = u32::from_le_bytes(u32buf);
+    if version != VERSION {
+        bail!("unsupported record version {version}");
+    }
+    r.read_exact(&mut u32buf)?;
+    let count = u32::from_le_bytes(u32buf) as usize;
+    r.read_exact(&mut u32buf)?;
+    let sample_len = u32::from_le_bytes(u32buf) as usize;
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    let spec = tag_spec(tag[0])?;
+    if spec.sample_shape().count() != sample_len {
+        bail!("sample_len {sample_len} inconsistent with {spec:?}");
+    }
+    let mut labels = Vec::with_capacity(count);
+    let mut images = Vec::with_capacity(count * sample_len);
+    let mut fbuf = vec![0u8; sample_len * 4];
+    for _ in 0..count {
+        r.read_exact(&mut u32buf)?;
+        labels.push(i32::from_le_bytes(u32buf));
+        r.read_exact(&mut fbuf)?;
+        for ch in fbuf.chunks_exact(4) {
+            images.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+        }
+    }
+    Ok(Dataset { spec, images, labels })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ds = Dataset::generate(SyntheticSpec::Mnist, 10, 5);
+        let dir = std::env::temp_dir().join("phast_caffe_test_records");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mnist.pcrf");
+        write_records(&path, &ds).unwrap();
+        let back = read_records(&path).unwrap();
+        assert_eq!(back.spec, ds.spec);
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.images, ds.images);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("phast_caffe_test_records");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.pcrf");
+        std::fs::write(&path, b"not a record file at all").unwrap();
+        assert!(read_records(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,238 @@
+//! Procedural datasets with the exact shapes of the paper's workloads
+//! (28x28x1 / 10 classes, 32x32x3 / 10 classes) and enough class structure
+//! that LeNet reaches high accuracy within a few hundred steps.
+
+use crate::propcheck::Rng;
+use crate::tensor::Shape;
+
+/// What to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyntheticSpec {
+    /// 28x28 grayscale digit-like strokes, 10 classes.
+    Mnist,
+    /// 32x32 RGB color/texture patterns, 10 classes.
+    Cifar10,
+}
+
+impl SyntheticSpec {
+    pub fn from_source(source: &str) -> Option<Self> {
+        match source {
+            "synthetic-mnist" | "mnist" => Some(SyntheticSpec::Mnist),
+            "synthetic-cifar10" | "cifar10" | "cifar" => Some(SyntheticSpec::Cifar10),
+            _ => None,
+        }
+    }
+
+    pub fn sample_shape(&self) -> Shape {
+        match self {
+            SyntheticSpec::Mnist => Shape::new(&[1, 28, 28]),
+            SyntheticSpec::Cifar10 => Shape::new(&[3, 32, 32]),
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        10
+    }
+}
+
+/// An in-memory labelled dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub spec: SyntheticSpec,
+    /// Flattened samples, each `sample_len` long, pixel range [0, 1].
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn sample_len(&self) -> usize {
+        self.spec.sample_shape().count()
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let n = self.sample_len();
+        &self.images[i * n..(i + 1) * n]
+    }
+
+    /// Generate `count` samples with a deterministic seed.
+    pub fn generate(spec: SyntheticSpec, count: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed ^ 0xDA7A_5E7);
+        let n = spec.sample_shape().count();
+        let mut images = Vec::with_capacity(count * n);
+        let mut labels = Vec::with_capacity(count);
+        for _ in 0..count {
+            let label = rng.range(0, spec.num_classes() - 1);
+            labels.push(label as i32);
+            match spec {
+                SyntheticSpec::Mnist => gen_mnist_like(&mut rng, label, &mut images),
+                SyntheticSpec::Cifar10 => gen_cifar_like(&mut rng, label, &mut images),
+            }
+        }
+        Dataset { spec, images, labels }
+    }
+}
+
+/// Draw an anti-aliased line segment into a 28x28 canvas.
+fn draw_line(img: &mut [f32], x0: f32, y0: f32, x1: f32, y1: f32) {
+    let steps = 40;
+    for t in 0..=steps {
+        let f = t as f32 / steps as f32;
+        let x = x0 + (x1 - x0) * f;
+        let y = y0 + (y1 - y0) * f;
+        for dy in -1..=1i32 {
+            for dx in -1..=1i32 {
+                let xi = (x + dx as f32).round() as i32;
+                let yi = (y + dy as f32).round() as i32;
+                if (0..28).contains(&xi) && (0..28).contains(&yi) {
+                    let d2 = (x - xi as f32).powi(2) + (y - yi as f32).powi(2);
+                    let v = (1.2 - d2).clamp(0.0, 1.0);
+                    let idx = (yi * 28 + xi) as usize;
+                    img[idx] = img[idx].max(v);
+                }
+            }
+        }
+    }
+}
+
+/// Stroke templates per class (digit-like glyphs), jittered and noised.
+fn gen_mnist_like(rng: &mut Rng, label: usize, out: &mut Vec<f32>) {
+    let mut img = vec![0.0f32; 28 * 28];
+    let jx = rng.range_f32(-2.0, 2.0);
+    let jy = rng.range_f32(-2.0, 2.0);
+    let s = rng.range_f32(0.85, 1.15); // scale jitter
+    let strokes: &[(f32, f32, f32, f32)] = match label {
+        0 => &[(9., 7., 19., 7.), (19., 7., 19., 21.), (19., 21., 9., 21.), (9., 21., 9., 7.)],
+        1 => &[(14., 5., 14., 23.), (11., 8., 14., 5.)],
+        2 => &[(9., 8., 19., 8.), (19., 8., 19., 14.), (19., 14., 9., 21.), (9., 21., 19., 21.)],
+        3 => &[(9., 7., 19., 7.), (19., 7., 13., 14.), (13., 14., 19., 21.), (19., 21., 9., 21.)],
+        4 => &[(17., 5., 9., 16.), (9., 16., 20., 16.), (17., 5., 17., 23.)],
+        5 => &[(19., 7., 9., 7.), (9., 7., 9., 14.), (9., 14., 19., 14.), (19., 14., 19., 21.), (19., 21., 9., 21.)],
+        6 => &[(17., 6., 10., 14.), (10., 14., 10., 21.), (10., 21., 18., 21.), (18., 21., 18., 15.), (18., 15., 10., 15.)],
+        7 => &[(9., 7., 19., 7.), (19., 7., 12., 23.)],
+        8 => &[(10., 7., 18., 7.), (18., 7., 18., 21.), (18., 21., 10., 21.), (10., 21., 10., 7.), (10., 14., 18., 14.)],
+        _ => &[(10., 7., 18., 7.), (18., 7., 18., 14.), (18., 14., 10., 14.), (10., 14., 10., 7.), (18., 14., 18., 22.)],
+    };
+    let cx = 14.0;
+    let cy = 14.0;
+    for &(x0, y0, x1, y1) in strokes {
+        draw_line(
+            &mut img,
+            cx + (x0 - cx) * s + jx,
+            cy + (y0 - cy) * s + jy,
+            cx + (x1 - cx) * s + jx,
+            cy + (y1 - cy) * s + jy,
+        );
+    }
+    for v in img.iter_mut() {
+        *v = (*v + 0.08 * rng.normal()).clamp(0.0, 1.0);
+    }
+    out.extend_from_slice(&img);
+}
+
+/// CIFAR analog: class = (dominant hue, spatial pattern) pair.
+fn gen_cifar_like(rng: &mut Rng, label: usize, out: &mut Vec<f32>) {
+    const W: usize = 32;
+    let hue = label % 5;
+    let pattern = label / 5; // 0: radial blob, 1: diagonal stripes
+    let base = [
+        [0.9, 0.2, 0.2],
+        [0.2, 0.9, 0.2],
+        [0.2, 0.3, 0.9],
+        [0.9, 0.8, 0.2],
+        [0.8, 0.2, 0.9],
+    ][hue];
+    let cx = rng.range_f32(12.0, 20.0);
+    let cy = rng.range_f32(12.0, 20.0);
+    let phase = rng.range_f32(0.0, 8.0);
+    let mut img = vec![0.0f32; 3 * W * W];
+    for y in 0..W {
+        for x in 0..W {
+            let m = match pattern {
+                0 => {
+                    let d = ((x as f32 - cx).powi(2) + (y as f32 - cy).powi(2)).sqrt();
+                    (1.0 - d / 16.0).clamp(0.0, 1.0)
+                }
+                _ => {
+                    let v = ((x + y) as f32 + phase) / 6.0;
+                    if (v as i64) % 2 == 0 { 0.85 } else { 0.15 }
+                }
+            };
+            for c in 0..3 {
+                let noise = 0.06 * rng.normal();
+                img[c * W * W + y * W + x] =
+                    (base[c] * m + 0.1 + noise).clamp(0.0, 1.0);
+            }
+        }
+    }
+    out.extend_from_slice(&img);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        for spec in [SyntheticSpec::Mnist, SyntheticSpec::Cifar10] {
+            let ds = Dataset::generate(spec, 32, 7);
+            assert_eq!(ds.len(), 32);
+            assert_eq!(ds.images.len(), 32 * ds.sample_len());
+            assert!(ds.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            assert!(ds.labels.iter().all(|&l| (0..10).contains(&l)));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Dataset::generate(SyntheticSpec::Mnist, 8, 42);
+        let b = Dataset::generate(SyntheticSpec::Mnist, 8, 42);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let c = Dataset::generate(SyntheticSpec::Mnist, 8, 43);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Mean images of two different classes should differ much more than
+        // two draws of the same class — the separability the E2E training
+        // example relies on.
+        let ds = Dataset::generate(SyntheticSpec::Mnist, 400, 3);
+        let n = ds.sample_len();
+        let mean_of = |cls: i32| -> Vec<f32> {
+            let mut acc = vec![0.0f32; n];
+            let mut cnt = 0;
+            for i in 0..ds.len() {
+                if ds.labels[i] == cls {
+                    for (a, v) in acc.iter_mut().zip(ds.image(i)) {
+                        *a += v;
+                    }
+                    cnt += 1;
+                }
+            }
+            acc.iter_mut().for_each(|a| *a /= cnt.max(1) as f32);
+            acc
+        };
+        let m0 = mean_of(0);
+        let m1 = mean_of(1);
+        let dist: f32 = m0.iter().zip(&m1).map(|(a, b)| (a - b).abs()).sum();
+        assert!(dist > 10.0, "class means too close: {dist}");
+    }
+
+    #[test]
+    fn source_lookup() {
+        assert_eq!(SyntheticSpec::from_source("synthetic-mnist"),
+                   Some(SyntheticSpec::Mnist));
+        assert_eq!(SyntheticSpec::from_source("synthetic-cifar10"),
+                   Some(SyntheticSpec::Cifar10));
+        assert_eq!(SyntheticSpec::from_source("imagenet"), None);
+    }
+}

@@ -1,0 +1,273 @@
+//! Experiment drivers shared by the CLI, the examples and the benches —
+//! one function per paper artifact (DESIGN.md §4 experiment index).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::net::Net;
+use crate::phast::{BoundaryOptions, FusedRunner, Placement, PortedNet};
+use crate::proto::{presets, LayerType, NetConfig};
+use crate::runtime::Engine;
+use crate::tensor::{IntTensor, Shape, Tensor};
+
+/// Build a preset net by short name ("mnist" | "cifar").
+pub fn preset_net(name: &str, seed: u64) -> Result<Net> {
+    let src = presets::net_by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown net '{name}' (mnist|cifar)"))?;
+    Net::from_config(NetConfig::from_text(src)?, seed)
+}
+
+/// Grab one (x, labels) batch by running a net's data layer.
+pub fn sample_batch(net: &mut Net) -> Result<(Tensor, IntTensor)> {
+    net.forward_layer(0)?;
+    let x = net.blob("data").unwrap().data().clone();
+    let lf = net.blob("label").unwrap().data();
+    let labels = IntTensor::from_vec(
+        Shape::new(&[lf.len()]),
+        lf.as_slice().iter().map(|&v| v as i32).collect(),
+    );
+    Ok((x, labels))
+}
+
+/// One Table 2 measurement: mean forward-backward wall time in ms.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub mean_ms: f64,
+    pub reps: usize,
+}
+
+fn time_loop(reps: usize, mut f: impl FnMut() -> Result<()>) -> Result<Timing> {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f()?;
+    }
+    Ok(Timing { mean_ms: t0.elapsed().as_secs_f64() * 1000.0 / reps as f64, reps })
+}
+
+/// Table 2 rows for one net: native baseline ("Caffe"), the paper's partial
+/// placement ("Caffe (PHAST)") and the fused whole-net artifact (the
+/// paper's predicted fully-ported end state).
+#[derive(Clone, Copy, Debug)]
+pub struct Table2Row {
+    pub native: Timing,
+    pub partial: Timing,
+    pub fused: Timing,
+}
+
+/// Run the Table 2 measurement for `name` ("mnist" | "cifar").
+pub fn run_table2(engine: &Engine, name: &str, warmup: usize, reps: usize) -> Result<Table2Row> {
+    // --- native baseline (original Caffe) ---
+    let mut native = preset_net(name, 1)?;
+    let mut native_fb = || -> Result<()> {
+        native.zero_param_diffs();
+        native.forward()?;
+        native.backward()?;
+        Ok(())
+    };
+    for _ in 0..warmup {
+        native_fb()?;
+    }
+    let t_native = time_loop(reps, native_fb)?;
+
+    // --- paper partial placement ---
+    let cfg = NetConfig::from_text(presets::net_by_name(name).unwrap())?;
+    let placement = Placement::paper_partial(&cfg);
+    let mut partial = PortedNet::new(
+        preset_net(name, 1)?,
+        engine,
+        placement,
+        BoundaryOptions::default(),
+    )?;
+    for _ in 0..warmup {
+        partial.forward_backward()?;
+    }
+    let t_partial = time_loop(reps, || partial.forward_backward().map(|_| ()))?;
+
+    // --- fused whole-net artifact ---
+    let mut feeder = preset_net(name, 1)?;
+    let fused = FusedRunner::from_net(engine, &feeder)?;
+    let (x, labels) = sample_batch(&mut feeder)?;
+    for _ in 0..warmup {
+        fused.grads(x.clone(), labels.clone())?;
+    }
+    let t_fused = time_loop(reps, || fused.grads(x.clone(), labels.clone()).map(|_| ()))?;
+
+    Ok(Table2Row { native: t_native, partial: t_partial, fused: t_fused })
+}
+
+/// Render the Table 2 comparison (paper numbers alongside ours).
+pub fn render_table2(mnist: &Table2Row, cifar: &Table2Row) -> String {
+    let mut s = String::new();
+    s.push_str("Average Forward-Backward execution time (ms), batch 64\n");
+    s.push_str(&format!(
+        "{:<26} {:>12} {:>12}\n",
+        "configuration", "MNIST", "CIFAR-10"
+    ));
+    s.push_str(&format!(
+        "{:<26} {:>12.2} {:>12.2}\n",
+        "Caffe (native baseline)", mnist.native.mean_ms, cifar.native.mean_ms
+    ));
+    s.push_str(&format!(
+        "{:<26} {:>12.2} {:>12.2}\n",
+        "Caffe (PHAST, partial)", mnist.partial.mean_ms, cifar.partial.mean_ms
+    ));
+    s.push_str(&format!(
+        "{:<26} {:>12.2} {:>12.2}\n",
+        "Caffe (PHAST, fused)", mnist.fused.mean_ms, cifar.fused.mean_ms
+    ));
+    s.push_str(&format!(
+        "{:<26} {:>12.2} {:>12.2}\n",
+        "slowdown partial/native",
+        mnist.partial.mean_ms / mnist.native.mean_ms,
+        cifar.partial.mean_ms / cifar.native.mean_ms
+    ));
+    s.push_str(&format!(
+        "{:<26} {:>12.2} {:>12.2}\n",
+        "slowdown fused/native",
+        mnist.fused.mean_ms / mnist.native.mean_ms,
+        cifar.fused.mean_ms / cifar.native.mean_ms
+    ));
+    s.push_str("paper (i9-9900K/RTX2080):  CPU 2.8x, GPU 4.0x partial-port slowdown;\n");
+    s.push_str("full porting predicted to remove most of the gap (paper section 4.3)\n");
+    s
+}
+
+/// §4.3 transfer accounting for one placement.
+#[derive(Clone, Debug)]
+pub struct TransferReport {
+    pub label: String,
+    pub ported_layers: usize,
+    pub crossings_fwd: u64,
+    pub crossings_bwd: u64,
+    pub conversion_bytes: u64,
+    pub conversion_ms: f64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub executions: u64,
+    pub mean_ms: f64,
+}
+
+/// Measure one placement's crossings + physical traffic over `reps`
+/// forward-backward iterations.
+pub fn measure_placement(
+    engine: &Engine,
+    name: &str,
+    label: &str,
+    placement: Placement,
+    layout_conversion: bool,
+    reps: usize,
+) -> Result<TransferReport> {
+    let cfg = NetConfig::from_text(presets::net_by_name(name).unwrap())?;
+    let ported_layers = placement.ported_count(&cfg);
+    let mut pnet = PortedNet::new(
+        preset_net(name, 1)?,
+        engine,
+        placement,
+        BoundaryOptions { layout_conversion },
+    )?;
+    pnet.forward_backward()?; // warmup (compiles artifacts)
+    pnet.reset_stats();
+    let t = time_loop(reps, || pnet.forward_backward().map(|_| ()))?;
+    let st = pnet.stats;
+    let es = engine.stats();
+    Ok(TransferReport {
+        label: label.to_string(),
+        ported_layers,
+        crossings_fwd: st.crossings_fwd / reps as u64,
+        crossings_bwd: st.crossings_bwd / reps as u64,
+        conversion_bytes: st.conversion_bytes / reps as u64,
+        conversion_ms: st.conversion_time.as_secs_f64() * 1000.0 / reps as f64,
+        h2d_bytes: es.h2d_bytes / reps as u64,
+        d2h_bytes: es.d2h_bytes / reps as u64,
+        executions: es.executions / reps as u64,
+        mean_ms: t.mean_ms,
+    })
+}
+
+/// The §4.3 analysis: incremental-porting sweep from nothing ported to the
+/// paper placement to everything ported.
+pub fn porting_sweep(engine: &Engine, name: &str, reps: usize) -> Result<Vec<TransferReport>> {
+    let cfg = NetConfig::from_text(presets::net_by_name(name).unwrap())?;
+    let heavy: Vec<&str> = cfg
+        .layers
+        .iter()
+        .filter(|l| {
+            matches!(
+                l.ltype,
+                LayerType::Convolution | LayerType::Pooling | LayerType::InnerProduct
+            )
+        })
+        .map(|l| l.name.as_str())
+        .collect();
+    let mut out = vec![measure_placement(
+        engine,
+        name,
+        "nothing ported (native)",
+        Placement::native_all(),
+        true,
+        reps,
+    )?];
+    for k in 1..=heavy.len() {
+        let label = format!("ported: {}", heavy[..k].join(","));
+        out.push(measure_placement(
+            engine,
+            name,
+            &label,
+            Placement::ported_set(&heavy[..k]),
+            true,
+            reps,
+        )?);
+    }
+    out.push(measure_placement(
+        engine,
+        name,
+        "everything ported (per-layer)",
+        Placement::phast_all(),
+        true,
+        reps,
+    )?);
+    Ok(out)
+}
+
+/// Render transfer reports as a table.
+pub fn render_transfers(reports: &[TransferReport]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<36} {:>6} {:>8} {:>8} {:>10} {:>9} {:>9}\n",
+        "placement", "ported", "xings.f", "xings.b", "conv.KB", "exec/it", "ms/iter"
+    ));
+    for r in reports {
+        s.push_str(&format!(
+            "{:<36} {:>6} {:>8} {:>8} {:>10.1} {:>9} {:>9.2}\n",
+            r.label,
+            r.ported_layers,
+            r.crossings_fwd,
+            r.crossings_bwd,
+            r.conversion_bytes as f64 / 1024.0,
+            r.executions,
+            r.mean_ms
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_net_resolves() {
+        assert!(preset_net("mnist", 1).is_ok());
+        assert!(preset_net("cifar", 1).is_ok());
+        assert!(preset_net("alexnet", 1).is_err());
+    }
+
+    #[test]
+    fn sample_batch_shapes() {
+        let mut net = preset_net("mnist", 1).unwrap();
+        let (x, y) = sample_batch(&mut net).unwrap();
+        assert_eq!(x.shape().dims(), &[64, 1, 28, 28]);
+        assert_eq!(y.len(), 64);
+    }
+}

@@ -1,0 +1,97 @@
+//! Accuracy layer — "not a real layer" (paper §3): evaluation-only top-k
+//! classification accuracy, no backward.
+
+use anyhow::{bail, Result};
+
+use crate::ops;
+use crate::proto::LayerConfig;
+use crate::tensor::{Shape, Tensor};
+
+use super::{labels_to_i32, Layer};
+
+pub struct AccuracyLayer {
+    cfg: LayerConfig,
+    n: usize,
+    c: usize,
+}
+
+impl AccuracyLayer {
+    pub fn new(cfg: LayerConfig) -> Self {
+        AccuracyLayer { cfg, n: 0, c: 0 }
+    }
+}
+
+impl Layer for AccuracyLayer {
+    fn config(&self) -> &LayerConfig {
+        &self.cfg
+    }
+
+    fn setup(&mut self, bottom_shapes: &[Shape]) -> Result<Vec<Shape>> {
+        if bottom_shapes.len() != 2 {
+            bail!("Accuracy expects (logits, labels)");
+        }
+        let bs = &bottom_shapes[0];
+        self.n = bs.num();
+        self.c = bs.count_from(1);
+        if self.cfg.top_k > self.c {
+            bail!("top_k {} exceeds class count {}", self.cfg.top_k, self.c);
+        }
+        Ok(vec![Shape::new(&[1])])
+    }
+
+    fn forward(&mut self, bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()> {
+        let labels = labels_to_i32(bottoms[1]);
+        tops[0].as_mut_slice()[0] =
+            ops::accuracy(bottoms[0].as_slice(), &labels, self.n, self.c, self.cfg.top_k);
+        Ok(())
+    }
+
+    fn backward(
+        &mut self,
+        _top_diffs: &[&Tensor],
+        _bottom_datas: &[&Tensor],
+        _bottom_diffs: &mut [Tensor],
+    ) -> Result<()> {
+        Ok(()) // evaluation only
+    }
+
+    fn needs_backward(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::LayerType;
+
+    #[test]
+    fn top1_and_topk() {
+        let mut cfg = LayerConfig {
+            name: "acc".into(),
+            ltype: LayerType::Accuracy,
+            ..Default::default()
+        };
+        cfg.top_k = 1;
+        let mut l = AccuracyLayer::new(cfg);
+        let logits = Shape::new(&[2, 3]);
+        l.setup(&[logits.clone(), Shape::new(&[2])]).unwrap();
+        let x = Tensor::from_vec(logits, vec![0.1, 0.9, 0.0, 0.8, 0.1, 0.1]);
+        let y = Tensor::from_vec(Shape::new(&[2]), vec![1.0, 2.0]);
+        let mut top = Tensor::zeros(Shape::new(&[1]));
+        l.forward(&[&x, &y], std::slice::from_mut(&mut top)).unwrap();
+        assert_eq!(top.as_slice()[0], 0.5);
+    }
+
+    #[test]
+    fn rejects_oversized_topk() {
+        let cfg = LayerConfig {
+            name: "acc".into(),
+            ltype: LayerType::Accuracy,
+            top_k: 11,
+            ..Default::default()
+        };
+        let mut l = AccuracyLayer::new(cfg);
+        assert!(l.setup(&[Shape::new(&[2, 10]), Shape::new(&[2])]).is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! Convolution layer — im2col + GeMM, per sample, exactly Caffe's CPU
+//! schedule (paper §3.1).  The column buffer is allocated once at setup and
+//! reused by forward and backward (Caffe's shared `col_buffer_`).
+
+use anyhow::{bail, Result};
+
+use crate::ops::im2col::Conv2dGeom;
+use crate::ops::{self, gemm::Trans};
+use crate::propcheck::Rng;
+use crate::proto::LayerConfig;
+use crate::tensor::{Blob, Shape, Tensor};
+
+use super::{xavier_fill, Layer};
+
+pub struct ConvLayer {
+    cfg: LayerConfig,
+    params: Vec<Blob>, // [weight (Cout, Cin, kh, kw), bias (Cout,)]
+    // cached geometry
+    cin: usize,
+    h: usize,
+    w: usize,
+    oh: usize,
+    ow: usize,
+    /// Shared scratch column buffer (C*kh*kw, OH*OW).
+    cols: Vec<f32>,
+    seed: u64,
+}
+
+impl ConvLayer {
+    pub fn new(cfg: LayerConfig, seed: u64) -> Result<Self> {
+        // The ported subset gate — N-D / dilated / grouped convolution were
+        // NOT ported (paper §3.1, Table 1).
+        if cfg.dilation != 1 {
+            bail!("Unported: dilated convolution (dilation={})", cfg.dilation);
+        }
+        if cfg.group != 1 {
+            bail!("Unported: grouped convolution (group={})", cfg.group);
+        }
+        Ok(ConvLayer {
+            cfg,
+            params: vec![],
+            cin: 0,
+            h: 0,
+            w: 0,
+            oh: 0,
+            ow: 0,
+            cols: vec![],
+            seed,
+        })
+    }
+
+    fn geom(&self) -> Conv2dGeom {
+        Conv2dGeom {
+            kh: self.cfg.kernel_size,
+            kw: self.cfg.kernel_size,
+            sh: self.cfg.stride,
+            sw: self.cfg.stride,
+            ph: self.cfg.pad,
+            pw: self.cfg.pad,
+        }
+    }
+
+    fn ckk(&self) -> usize {
+        self.cin * self.cfg.kernel_size * self.cfg.kernel_size
+    }
+}
+
+impl Layer for ConvLayer {
+    fn config(&self) -> &LayerConfig {
+        &self.cfg
+    }
+
+    fn setup(&mut self, bottom_shapes: &[Shape]) -> Result<Vec<Shape>> {
+        if bottom_shapes.len() != 1 {
+            bail!("Convolution expects 1 bottom");
+        }
+        let bs = &bottom_shapes[0];
+        if bs.ndim() != 4 {
+            bail!("Unported: N-D convolution (input is {}-D)", bs.ndim());
+        }
+        self.cin = bs.channels();
+        self.h = bs.height();
+        self.w = bs.width();
+        let k = self.cfg.kernel_size;
+        let gh = ops::conv_geom(self.h, k, self.cfg.stride, self.cfg.pad);
+        let gw = ops::conv_geom(self.w, k, self.cfg.stride, self.cfg.pad);
+        self.oh = gh.out;
+        self.ow = gw.out;
+        let cout = self.cfg.num_output;
+
+        if self.params.is_empty() {
+            let mut weight = Blob::new(
+                format!("{}.w", self.cfg.name),
+                Shape::new(&[cout, self.cin, k, k]),
+            );
+            let mut rng = Rng::new(self.seed ^ fxhash(&self.cfg.name));
+            let fan_in = self.cin * k * k;
+            xavier_fill(weight.data_mut(), fan_in, &mut rng);
+            let bias = Blob::new(format!("{}.b", self.cfg.name), Shape::new(&[cout]));
+            self.params = vec![weight, bias];
+        }
+        self.cols = vec![0.0; self.ckk() * self.oh * self.ow];
+        Ok(vec![Shape::nchw(bs.num(), cout, self.oh, self.ow)])
+    }
+
+    fn forward(&mut self, bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()> {
+        let x = bottoms[0];
+        let n = x.shape().num();
+        let cout = self.cfg.num_output;
+        let (ckk, ohw) = (self.ckk(), self.oh * self.ow);
+        let wmat = self.params[0].data().as_slice();
+        let bias = self.params[1].data().as_slice();
+        let sample = self.cin * self.h * self.w;
+        let top = &mut tops[0];
+        for s in 0..n {
+            ops::im2col(
+                &x.as_slice()[s * sample..(s + 1) * sample],
+                self.cin,
+                self.h,
+                self.w,
+                self.geom(),
+                &mut self.cols,
+            );
+            let out = &mut top.as_mut_slice()[s * cout * ohw..(s + 1) * cout * ohw];
+            ops::gemm(Trans::No, Trans::No, cout, ohw, ckk, 1.0, wmat, &self.cols, 0.0, out);
+            for (c, b) in bias.iter().enumerate() {
+                for v in &mut out[c * ohw..(c + 1) * ohw] {
+                    *v += b;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn backward(
+        &mut self,
+        top_diffs: &[&Tensor],
+        bottom_datas: &[&Tensor],
+        bottom_diffs: &mut [Tensor],
+    ) -> Result<()> {
+        let dy = top_diffs[0];
+        let x = bottom_datas[0];
+        let n = x.shape().num();
+        let cout = self.cfg.num_output;
+        let (ckk, ohw) = (self.ckk(), self.oh * self.ow);
+        let sample = self.cin * self.h * self.w;
+        let g = self.geom();
+
+        // Split the params vec so weight data and bias diff borrow cleanly.
+        let (wblob, bblob) = self.params.split_at_mut(1);
+        let wmat = wblob[0].data().as_slice().to_vec(); // weights needed while diff borrowed
+        let dw = wblob[0].diff_mut().as_mut_slice();
+        let db = bblob[0].diff_mut().as_mut_slice();
+        let mut dcols = vec![0.0f32; ckk * ohw];
+
+        for s in 0..n {
+            let dys = &dy.as_slice()[s * cout * ohw..(s + 1) * cout * ohw];
+            // Recompute the column buffer (Caffe re-runs im2col in backward).
+            ops::im2col(
+                &x.as_slice()[s * sample..(s + 1) * sample],
+                self.cin,
+                self.h,
+                self.w,
+                g,
+                &mut self.cols,
+            );
+            // dW += dY_s (Cout, OHW) * cols^T (OHW, CKK)
+            ops::gemm(Trans::No, Trans::Yes, cout, ckk, ohw, 1.0, dys, &self.cols, 1.0, dw);
+            // db += row sums of dY_s
+            for c in 0..cout {
+                db[c] += dys[c * ohw..(c + 1) * ohw].iter().sum::<f32>();
+            }
+            // dcols = W^T (CKK, Cout) * dY_s (Cout, OHW)
+            ops::gemm(Trans::Yes, Trans::No, ckk, ohw, cout, 1.0, &wmat, dys, 0.0, &mut dcols);
+            ops::col2im(
+                &dcols,
+                self.cin,
+                self.h,
+                self.w,
+                g,
+                &mut bottom_diffs[0].as_mut_slice()[s * sample..(s + 1) * sample],
+            );
+        }
+        Ok(())
+    }
+
+    fn params(&self) -> &[Blob] {
+        &self.params
+    }
+
+    fn params_mut(&mut self) -> &mut [Blob] {
+        &mut self.params
+    }
+}
+
+/// Tiny string hash for per-layer seeds.
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propcheck::{close, Rng};
+    use crate::proto::LayerType;
+
+    fn conv_cfg(cout: usize, k: usize, s: usize, p: usize) -> LayerConfig {
+        LayerConfig {
+            name: "c".into(),
+            ltype: LayerType::Convolution,
+            bottoms: vec!["x".into()],
+            tops: vec!["y".into()],
+            num_output: cout,
+            kernel_size: k,
+            stride: s,
+            pad: p,
+            ..Default::default()
+        }
+    }
+
+    /// Finite-difference check of dW, db, dX on a tiny conv.
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut layer = ConvLayer::new(conv_cfg(2, 3, 1, 1), 3).unwrap();
+        let in_shape = Shape::nchw(2, 3, 5, 4);
+        let out_shape = layer.setup(&[in_shape.clone()]).unwrap().remove(0);
+
+        let mut rng = Rng::new(9);
+        let x = Tensor::from_vec(in_shape.clone(), rng.normal_vec(in_shape.count()));
+        let dy = Tensor::from_vec(out_shape.clone(), rng.normal_vec(out_shape.count()));
+
+        // loss = <y, dy>; analytic grads:
+        let mut y = Tensor::zeros(out_shape.clone());
+        layer.forward(&[&x], std::slice::from_mut(&mut y)).unwrap();
+        let mut dx = Tensor::zeros(in_shape.clone());
+        layer
+            .backward(&[&dy], &[&x], std::slice::from_mut(&mut dx))
+            .unwrap();
+
+        let eps = 1e-2f32;
+        let loss = |layer: &mut ConvLayer, x: &Tensor| -> f32 {
+            let mut y = Tensor::zeros(out_shape.clone());
+            layer.forward(&[x], std::slice::from_mut(&mut y)).unwrap();
+            y.as_slice().iter().zip(dy.as_slice()).map(|(a, b)| a * b).sum()
+        };
+        // dX
+        for idx in [0usize, 7, 23, in_shape.count() - 1] {
+            let mut xp = x.clone();
+            xp.as_mut_slice()[idx] += eps;
+            let mut xm = x.clone();
+            xm.as_mut_slice()[idx] -= eps;
+            let num = (loss(&mut layer, &xp) - loss(&mut layer, &xm)) / (2.0 * eps);
+            let ana = dx.as_slice()[idx];
+            assert!(close(num, ana, 2e-2, 2e-2), "dX[{idx}]: {num} vs {ana}");
+        }
+        // dW
+        for idx in [0usize, 5, 20] {
+            let orig = layer.params()[0].data().as_slice()[idx];
+            let ana = layer.params()[0].diff().as_slice()[idx];
+            layer.params_mut()[0].data_mut().as_mut_slice()[idx] = orig + eps;
+            let lp = loss(&mut layer, &x);
+            layer.params_mut()[0].data_mut().as_mut_slice()[idx] = orig - eps;
+            let lm = loss(&mut layer, &x);
+            layer.params_mut()[0].data_mut().as_mut_slice()[idx] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(close(num, ana, 2e-2, 2e-2), "dW[{idx}]: {num} vs {ana}");
+        }
+    }
+
+    #[test]
+    fn rejects_unported_features() {
+        let mut cfg = conv_cfg(2, 3, 1, 0);
+        cfg.dilation = 2;
+        assert!(ConvLayer::new(cfg, 1).is_err());
+        let mut cfg = conv_cfg(2, 3, 1, 0);
+        cfg.group = 2;
+        assert!(ConvLayer::new(cfg, 1).is_err());
+        // 3-D input = N-D convolution -> rejected at setup
+        let mut l = ConvLayer::new(conv_cfg(2, 3, 1, 0), 1).unwrap();
+        assert!(l.setup(&[Shape::new(&[2, 3, 8, 8, 8])]).is_err());
+    }
+
+    #[test]
+    fn output_shape_lenet_conv1() {
+        let mut l = ConvLayer::new(conv_cfg(20, 5, 1, 0), 1).unwrap();
+        let tops = l.setup(&[Shape::nchw(64, 1, 28, 28)]).unwrap();
+        assert_eq!(tops[0].dims(), &[64, 20, 24, 24]);
+    }
+}

@@ -1,0 +1,120 @@
+//! Data layer: feeds (data, label) batches from the synthetic datasets (or
+//! a record file) — the LMDB DataLayer stand-in.
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{BatchIterator, Dataset, SyntheticSpec};
+use crate::proto::LayerConfig;
+use crate::tensor::{Shape, Tensor};
+
+use super::Layer;
+
+/// Number of synthetic samples generated per dataset (one "epoch" pool).
+pub const DEFAULT_TRAIN_SIZE: usize = 2048;
+
+pub struct DataLayer {
+    cfg: LayerConfig,
+    iter: BatchIterator,
+}
+
+impl DataLayer {
+    pub fn new(cfg: LayerConfig, seed: u64) -> Result<Self> {
+        let ds = if let Some(spec) = SyntheticSpec::from_source(&cfg.source) {
+            Dataset::generate(spec, DEFAULT_TRAIN_SIZE, seed)
+        } else if cfg.source.ends_with(".pcrf") {
+            crate::data::read_records(std::path::Path::new(&cfg.source))
+                .with_context(|| format!("loading records from {}", cfg.source))?
+        } else {
+            bail!("unknown data source '{}'", cfg.source);
+        };
+        if cfg.tops.len() != 2 {
+            bail!("Data layer needs two tops (data, label)");
+        }
+        let iter = BatchIterator::new(ds, cfg.batch_size, seed ^ 0xF00D);
+        Ok(DataLayer { cfg, iter })
+    }
+
+    /// Replace the dataset (used by tests and the eval path).
+    pub fn with_dataset(cfg: LayerConfig, ds: Dataset, seed: u64) -> Result<Self> {
+        let iter = BatchIterator::new(ds, cfg.batch_size, seed ^ 0xF00D);
+        Ok(DataLayer { cfg, iter })
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.iter.epoch()
+    }
+}
+
+impl Layer for DataLayer {
+    fn config(&self) -> &LayerConfig {
+        &self.cfg
+    }
+
+    fn setup(&mut self, bottom_shapes: &[Shape]) -> Result<Vec<Shape>> {
+        if !bottom_shapes.is_empty() {
+            bail!("Data layer takes no bottoms");
+        }
+        Ok(vec![
+            self.iter.batch_shape(),
+            Shape::new(&[self.iter.batch_size()]),
+        ])
+    }
+
+    fn forward(&mut self, _bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()> {
+        let (x, labels) = self.iter.next_batch();
+        tops[0].as_mut_slice().copy_from_slice(x.as_slice());
+        for (dst, &l) in tops[1].as_mut_slice().iter_mut().zip(labels.as_slice()) {
+            *dst = l as f32; // Caffe stores labels in float blobs
+        }
+        Ok(())
+    }
+
+    fn backward(
+        &mut self,
+        _top_diffs: &[&Tensor],
+        _bottom_datas: &[&Tensor],
+        _bottom_diffs: &mut [Tensor],
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    fn needs_backward(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::LayerType;
+
+    fn data_cfg() -> LayerConfig {
+        LayerConfig {
+            name: "data".into(),
+            ltype: LayerType::Data,
+            tops: vec!["data".into(), "label".into()],
+            batch_size: 8,
+            source: "synthetic-mnist".into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn produces_batches() {
+        let mut l = DataLayer::new(data_cfg(), 1).unwrap();
+        let shapes = l.setup(&[]).unwrap();
+        assert_eq!(shapes[0].dims(), &[8, 1, 28, 28]);
+        assert_eq!(shapes[1].dims(), &[8]);
+        let mut tops = vec![Tensor::zeros(shapes[0].clone()), Tensor::zeros(shapes[1].clone())];
+        l.forward(&[], &mut tops).unwrap();
+        assert!(tops[0].l2() > 0.0);
+        assert!(tops[1].as_slice().iter().all(|&v| (0.0..10.0).contains(&v)));
+    }
+
+    #[test]
+    fn unknown_source_rejected() {
+        let mut cfg = data_cfg();
+        cfg.source = "lmdb://nope".into();
+        assert!(DataLayer::new(cfg, 1).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! InnerProduct (perceptron/dense) layer — paper §3.2, Listings 1.1/1.2.
+//!
+//! Forward: Y = X * W^T + 1·b^T (the `matrixPlusVectorRows` functor of
+//! Listing 1.2 is the bias loop in `forward`).  Backward: three GeMMs, the
+//! Caffe everything-is-a-GeMM trick.
+
+use anyhow::{bail, Result};
+
+use crate::ops::{self, gemm::Trans};
+use crate::propcheck::Rng;
+use crate::proto::LayerConfig;
+use crate::tensor::{Blob, Shape, Tensor};
+
+use super::{xavier_fill, Layer};
+
+pub struct IpLayer {
+    cfg: LayerConfig,
+    params: Vec<Blob>, // [weight (Nout, K), bias (Nout,)]
+    k: usize,
+    seed: u64,
+}
+
+impl IpLayer {
+    pub fn new(cfg: LayerConfig, seed: u64) -> Self {
+        IpLayer { cfg, params: vec![], k: 0, seed }
+    }
+}
+
+impl Layer for IpLayer {
+    fn config(&self) -> &LayerConfig {
+        &self.cfg
+    }
+
+    fn setup(&mut self, bottom_shapes: &[Shape]) -> Result<Vec<Shape>> {
+        if bottom_shapes.len() != 1 {
+            bail!("InnerProduct expects 1 bottom");
+        }
+        let bs = &bottom_shapes[0];
+        self.k = bs.count_from(1);
+        let nout = self.cfg.num_output;
+        if self.params.is_empty() {
+            let mut weight =
+                Blob::new(format!("{}.w", self.cfg.name), Shape::new(&[nout, self.k]));
+            let mut rng = Rng::new(self.seed ^ self.cfg.name.len() as u64 ^ 0x1b);
+            xavier_fill(weight.data_mut(), self.k, &mut rng);
+            let bias = Blob::new(format!("{}.b", self.cfg.name), Shape::new(&[nout]));
+            self.params = vec![weight, bias];
+        }
+        Ok(vec![Shape::new(&[bs.num(), nout])])
+    }
+
+    fn forward(&mut self, bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()> {
+        let x = bottoms[0];
+        let n = x.shape().num();
+        let nout = self.cfg.num_output;
+        let w = self.params[0].data().as_slice();
+        let b = self.params[1].data().as_slice();
+        let y = tops[0].as_mut_slice();
+        // Y = X (n, k) * W^T (k, nout)
+        ops::gemm(Trans::No, Trans::Yes, n, nout, self.k, 1.0, x.as_slice(), w, 0.0, y);
+        // matrixPlusVectorRows
+        for r in 0..n {
+            for (yv, bv) in y[r * nout..(r + 1) * nout].iter_mut().zip(b) {
+                *yv += bv;
+            }
+        }
+        Ok(())
+    }
+
+    fn backward(
+        &mut self,
+        top_diffs: &[&Tensor],
+        bottom_datas: &[&Tensor],
+        bottom_diffs: &mut [Tensor],
+    ) -> Result<()> {
+        let dy = top_diffs[0];
+        let x = bottom_datas[0];
+        let n = x.shape().num();
+        let nout = self.cfg.num_output;
+        let (wblob, bblob) = self.params.split_at_mut(1);
+        let w = wblob[0].data().as_slice().to_vec();
+        let dw = wblob[0].diff_mut().as_mut_slice();
+        let db = bblob[0].diff_mut().as_mut_slice();
+        // dW += dY^T (nout, n) * X (n, k)
+        ops::gemm(Trans::Yes, Trans::No, nout, self.k, n, 1.0, dy.as_slice(), x.as_slice(), 1.0, dw);
+        // db += column sums of dY
+        for r in 0..n {
+            for (dbv, dyv) in db.iter_mut().zip(&dy.as_slice()[r * nout..(r + 1) * nout]) {
+                *dbv += dyv;
+            }
+        }
+        // dX = dY (n, nout) * W (nout, k)
+        ops::gemm(
+            Trans::No,
+            Trans::No,
+            n,
+            self.k,
+            nout,
+            1.0,
+            dy.as_slice(),
+            &w,
+            0.0,
+            bottom_diffs[0].as_mut_slice(),
+        );
+        Ok(())
+    }
+
+    fn params(&self) -> &[Blob] {
+        &self.params
+    }
+
+    fn params_mut(&mut self) -> &mut [Blob] {
+        &mut self.params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propcheck::{close, Rng};
+    use crate::proto::LayerType;
+
+    fn ip_cfg(nout: usize) -> LayerConfig {
+        LayerConfig {
+            name: "ip".into(),
+            ltype: LayerType::InnerProduct,
+            bottoms: vec!["x".into()],
+            tops: vec!["y".into()],
+            num_output: nout,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn forward_matches_manual() {
+        let mut l = IpLayer::new(ip_cfg(2), 1);
+        l.setup(&[Shape::new(&[1, 3])]).unwrap();
+        l.params_mut()[0]
+            .data_mut()
+            .as_mut_slice()
+            .copy_from_slice(&[1., 0., 2., 0., 1., -1.]); // W (2,3)
+        l.params_mut()[1].data_mut().as_mut_slice().copy_from_slice(&[0.5, -0.5]);
+        let x = Tensor::from_vec(Shape::new(&[1, 3]), vec![1., 2., 3.]);
+        let mut y = Tensor::zeros(Shape::new(&[1, 2]));
+        l.forward(&[&x], std::slice::from_mut(&mut y)).unwrap();
+        // row0: 1*1 + 0*2 + 2*3 + 0.5 = 7.5 ; row1: 0 + 2 - 3 - 0.5 = -1.5
+        assert_eq!(y.as_slice(), &[7.5, -1.5]);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut l = IpLayer::new(ip_cfg(4), 7);
+        let in_shape = Shape::new(&[3, 5]);
+        let out_shape = l.setup(&[in_shape.clone()]).unwrap().remove(0);
+        let mut rng = Rng::new(2);
+        let x = Tensor::from_vec(in_shape.clone(), rng.normal_vec(15));
+        let dy = Tensor::from_vec(out_shape.clone(), rng.normal_vec(12));
+
+        let mut dx = Tensor::zeros(in_shape.clone());
+        let mut y = Tensor::zeros(out_shape.clone());
+        l.forward(&[&x], std::slice::from_mut(&mut y)).unwrap();
+        l.backward(&[&dy], &[&x], std::slice::from_mut(&mut dx)).unwrap();
+
+        let loss = |l: &mut IpLayer, x: &Tensor| -> f32 {
+            let mut y = Tensor::zeros(out_shape.clone());
+            l.forward(&[x], std::slice::from_mut(&mut y)).unwrap();
+            y.as_slice().iter().zip(dy.as_slice()).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-2;
+        for idx in [0usize, 7, 14] {
+            let mut xp = x.clone();
+            xp.as_mut_slice()[idx] += eps;
+            let mut xm = x.clone();
+            xm.as_mut_slice()[idx] -= eps;
+            let num = (loss(&mut l, &xp) - loss(&mut l, &xm)) / (2.0 * eps);
+            assert!(close(num, dx.as_slice()[idx], 2e-2, 2e-2));
+        }
+        for idx in [0usize, 9, 19] {
+            let orig = l.params()[0].data().as_slice()[idx];
+            let ana = l.params()[0].diff().as_slice()[idx];
+            l.params_mut()[0].data_mut().as_mut_slice()[idx] = orig + eps;
+            let lp = loss(&mut l, &x);
+            l.params_mut()[0].data_mut().as_mut_slice()[idx] = orig - eps;
+            let lm = loss(&mut l, &x);
+            l.params_mut()[0].data_mut().as_mut_slice()[idx] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(close(num, ana, 2e-2, 2e-2), "dW[{idx}]");
+        }
+    }
+
+    #[test]
+    fn flattens_conv_output() {
+        let mut l = IpLayer::new(ip_cfg(500), 1);
+        let tops = l.setup(&[Shape::nchw(64, 50, 4, 4)]).unwrap();
+        assert_eq!(tops[0].dims(), &[64, 500]);
+        assert_eq!(l.params()[0].shape().dims(), &[500, 800]);
+    }
+}

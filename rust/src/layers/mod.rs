@@ -1,0 +1,131 @@
+//! Executors — the paper's second block category: the eight ported layer
+//! types, each with a native (baseline Caffe) implementation.  The PHAST
+//! domain executes the same layers through AOT artifacts (`phast::`).
+
+mod data_layer;
+mod conv;
+mod pool;
+mod ip;
+mod relu;
+mod softmax;
+mod accuracy;
+
+pub use accuracy::AccuracyLayer;
+pub use conv::ConvLayer;
+pub use data_layer::DataLayer;
+pub use ip::IpLayer;
+pub use pool::PoolLayer;
+pub use relu::ReluLayer;
+pub use softmax::{SoftmaxLayer, SoftmaxLossLayer};
+
+use anyhow::Result;
+
+use crate::proto::{LayerConfig, LayerType};
+use crate::tensor::{Blob, Shape, Tensor};
+
+/// The Caffe layer contract, monomorphized to f32 tensors.
+///
+/// `bottoms`/`tops` are resolved by name in `net::Net`; in-place layers are
+/// not supported (the presets are written out-of-place), which keeps the
+/// blob store borrow-safe.
+pub trait Layer {
+    /// Static configuration (name, type, connectivity, hyper-parameters).
+    fn config(&self) -> &LayerConfig;
+
+    /// Shape inference + parameter allocation.  Returns one shape per top.
+    fn setup(&mut self, bottom_shapes: &[Shape]) -> Result<Vec<Shape>>;
+
+    /// Forward pass: read `bottoms`, write `tops`.
+    fn forward(&mut self, bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()>;
+
+    /// Backward pass: read `top_diffs` (and `bottom_datas`), write
+    /// `bottom_diffs` and accumulate parameter gradients internally.
+    fn backward(
+        &mut self,
+        top_diffs: &[&Tensor],
+        bottom_datas: &[&Tensor],
+        bottom_diffs: &mut [Tensor],
+    ) -> Result<()>;
+
+    /// Learnable parameter blobs (weight, bias) — empty for stateless layers.
+    fn params(&self) -> &[Blob] {
+        &[]
+    }
+
+    fn params_mut(&mut self) -> &mut [Blob] {
+        &mut []
+    }
+
+    /// Whether this layer produces a loss (drives backward seeding).
+    fn is_loss(&self) -> bool {
+        false
+    }
+
+    /// Whether backward does anything (Accuracy/Data do not).
+    fn needs_backward(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &str {
+        &self.config().name
+    }
+
+    fn ltype(&self) -> LayerType {
+        self.config().ltype
+    }
+}
+
+/// Construct a layer from its config (the Caffe layer factory).
+pub fn create_layer(cfg: &LayerConfig, seed: u64) -> Result<Box<dyn Layer>> {
+    Ok(match cfg.ltype {
+        LayerType::Data => Box::new(DataLayer::new(cfg.clone(), seed)?),
+        LayerType::Convolution => Box::new(ConvLayer::new(cfg.clone(), seed)?),
+        LayerType::Pooling => Box::new(PoolLayer::new(cfg.clone())),
+        LayerType::InnerProduct => Box::new(IpLayer::new(cfg.clone(), seed)),
+        LayerType::ReLU => Box::new(ReluLayer::new(cfg.clone())),
+        LayerType::SoftMax => Box::new(SoftmaxLayer::new(cfg.clone())),
+        LayerType::SoftMaxWithLoss => Box::new(SoftmaxLossLayer::new(cfg.clone())),
+        LayerType::Accuracy => Box::new(AccuracyLayer::new(cfg.clone())),
+    })
+}
+
+/// Xavier/uniform fill (Caffe's `xavier` FillerParameter): U(-a, a) with
+/// a = sqrt(3 / fan_in).
+pub fn xavier_fill(t: &mut Tensor, fan_in: usize, rng: &mut crate::propcheck::Rng) {
+    let a = (3.0f32 / fan_in as f32).sqrt();
+    for v in t.as_mut_slice() {
+        *v = rng.range_f32(-a, a);
+    }
+}
+
+/// Convert a float label tensor (Caffe stores labels in f32 blobs) to i32.
+pub fn labels_to_i32(labels: &Tensor) -> Vec<i32> {
+    labels.as_slice().iter().map(|&v| v as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propcheck::Rng;
+
+    #[test]
+    fn xavier_fill_in_range() {
+        let mut t = Tensor::zeros(Shape::new(&[100]));
+        let mut rng = Rng::new(4);
+        xavier_fill(&mut t, 300, &mut rng);
+        let a = (3.0f32 / 300.0).sqrt();
+        assert!(t.as_slice().iter().all(|v| v.abs() <= a));
+        assert!(t.l2() > 0.0);
+    }
+
+    #[test]
+    fn factory_creates_all_types() {
+        use crate::proto::presets;
+        use crate::proto::NetConfig;
+        let net = NetConfig::from_text(presets::LENET_MNIST).unwrap();
+        for cfg in &net.layers {
+            let layer = create_layer(cfg, 1).unwrap();
+            assert_eq!(layer.name(), cfg.name);
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Pooling layer (MAX with argmax routing, AVE with clipped divisor) —
+//! Caffe ceil-mode semantics, paper §3.3.
+
+use anyhow::{bail, Result};
+
+use crate::ops::{self, pool::Pool2dGeom};
+use crate::proto::{LayerConfig, PoolMethod};
+use crate::tensor::{Shape, Tensor};
+
+use super::Layer;
+
+pub struct PoolLayer {
+    cfg: LayerConfig,
+    c: usize,
+    h: usize,
+    w: usize,
+    oh: usize,
+    ow: usize,
+    /// Argmax phases recorded in forward, consumed by backward (MAX only).
+    arg: Vec<i32>,
+}
+
+impl PoolLayer {
+    pub fn new(cfg: LayerConfig) -> Self {
+        PoolLayer { cfg, c: 0, h: 0, w: 0, oh: 0, ow: 0, arg: vec![] }
+    }
+
+    fn geom(&self) -> Pool2dGeom {
+        Pool2dGeom {
+            kh: self.cfg.kernel_size,
+            kw: self.cfg.kernel_size,
+            sh: self.cfg.stride,
+            sw: self.cfg.stride,
+            ph: self.cfg.pad,
+            pw: self.cfg.pad,
+        }
+    }
+
+    /// The recorded argmax phases (exposed for the PHAST parity tests).
+    pub fn argmax(&self) -> &[i32] {
+        &self.arg
+    }
+}
+
+impl Layer for PoolLayer {
+    fn config(&self) -> &LayerConfig {
+        &self.cfg
+    }
+
+    fn setup(&mut self, bottom_shapes: &[Shape]) -> Result<Vec<Shape>> {
+        if bottom_shapes.len() != 1 {
+            bail!("Pooling expects 1 bottom");
+        }
+        let bs = &bottom_shapes[0];
+        self.c = bs.channels();
+        self.h = bs.height();
+        self.w = bs.width();
+        let gh = ops::pool_geom(self.h, self.cfg.kernel_size, self.cfg.stride, self.cfg.pad);
+        let gw = ops::pool_geom(self.w, self.cfg.kernel_size, self.cfg.stride, self.cfg.pad);
+        self.oh = gh.out;
+        self.ow = gw.out;
+        self.arg = vec![0; bs.num() * self.c * self.oh * self.ow];
+        Ok(vec![Shape::nchw(bs.num(), self.c, self.oh, self.ow)])
+    }
+
+    fn forward(&mut self, bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()> {
+        let x = bottoms[0];
+        let n = x.shape().num();
+        let sample_in = self.c * self.h * self.w;
+        let sample_out = self.c * self.oh * self.ow;
+        let g = self.geom();
+        let top = &mut tops[0];
+        for s in 0..n {
+            let xin = &x.as_slice()[s * sample_in..(s + 1) * sample_in];
+            let out = &mut top.as_mut_slice()[s * sample_out..(s + 1) * sample_out];
+            match self.cfg.pool {
+                PoolMethod::Max => {
+                    let arg = &mut self.arg[s * sample_out..(s + 1) * sample_out];
+                    ops::maxpool(xin, self.c, self.h, self.w, g, out, arg);
+                }
+                PoolMethod::Ave => ops::avepool(xin, self.c, self.h, self.w, g, out),
+            }
+        }
+        Ok(())
+    }
+
+    fn backward(
+        &mut self,
+        top_diffs: &[&Tensor],
+        _bottom_datas: &[&Tensor],
+        bottom_diffs: &mut [Tensor],
+    ) -> Result<()> {
+        let dy = top_diffs[0];
+        let n = dy.shape().num();
+        let sample_in = self.c * self.h * self.w;
+        let sample_out = self.c * self.oh * self.ow;
+        let g = self.geom();
+        for s in 0..n {
+            let dys = &dy.as_slice()[s * sample_out..(s + 1) * sample_out];
+            let dxs = &mut bottom_diffs[0].as_mut_slice()[s * sample_in..(s + 1) * sample_in];
+            match self.cfg.pool {
+                PoolMethod::Max => {
+                    let arg = &self.arg[s * sample_out..(s + 1) * sample_out];
+                    ops::maxpool_bwd(dys, arg, self.c, self.h, self.w, g, dxs);
+                }
+                PoolMethod::Ave => ops::avepool_bwd(dys, self.c, self.h, self.w, g, dxs),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::LayerType;
+
+    fn pool_cfg(method: PoolMethod, k: usize, s: usize) -> LayerConfig {
+        LayerConfig {
+            name: "p".into(),
+            ltype: LayerType::Pooling,
+            bottoms: vec!["x".into()],
+            tops: vec!["y".into()],
+            kernel_size: k,
+            stride: s,
+            pool: method,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn lenet_pool_shapes() {
+        let mut l = PoolLayer::new(pool_cfg(PoolMethod::Max, 2, 2));
+        let tops = l.setup(&[Shape::nchw(64, 20, 24, 24)]).unwrap();
+        assert_eq!(tops[0].dims(), &[64, 20, 12, 12]);
+    }
+
+    #[test]
+    fn cifar_ceil_mode_shape() {
+        let mut l = PoolLayer::new(pool_cfg(PoolMethod::Ave, 3, 2));
+        let tops = l.setup(&[Shape::nchw(4, 32, 16, 16)]).unwrap();
+        assert_eq!(tops[0].dims(), &[4, 32, 8, 8]);
+    }
+
+    #[test]
+    fn max_forward_backward_roundtrip() {
+        let mut l = PoolLayer::new(pool_cfg(PoolMethod::Max, 2, 2));
+        let in_shape = Shape::nchw(1, 1, 4, 4);
+        let out_shape = l.setup(&[in_shape.clone()]).unwrap().remove(0);
+        let x = Tensor::from_vec(
+            in_shape,
+            vec![1., 2., 5., 6., 3., 4., 7., 8., 0., 0., 1., 0., 9., 0., 0., 0.],
+        );
+        let mut y = Tensor::zeros(out_shape.clone());
+        l.forward(&[&x], std::slice::from_mut(&mut y)).unwrap();
+        assert_eq!(y.as_slice(), &[4., 8., 9., 1.]);
+        let dy = Tensor::from_vec(out_shape, vec![1., 1., 1., 1.]);
+        let mut dx = Tensor::zeros(x.shape().clone());
+        l.backward(&[&dy], &[&x], std::slice::from_mut(&mut dx)).unwrap();
+        assert_eq!(dx.sum(), 4.0);
+        assert_eq!(dx.as_slice()[5], 1.0); // value 4 at (1,1)
+    }
+}

@@ -1,0 +1,80 @@
+//! ReLU layer (Caffe's leaky variant via `negative_slope`).
+
+use anyhow::Result;
+
+use crate::ops;
+use crate::proto::LayerConfig;
+use crate::tensor::{Shape, Tensor};
+
+use super::Layer;
+
+pub struct ReluLayer {
+    cfg: LayerConfig,
+}
+
+impl ReluLayer {
+    pub fn new(cfg: LayerConfig) -> Self {
+        ReluLayer { cfg }
+    }
+}
+
+impl Layer for ReluLayer {
+    fn config(&self) -> &LayerConfig {
+        &self.cfg
+    }
+
+    fn setup(&mut self, bottom_shapes: &[Shape]) -> Result<Vec<Shape>> {
+        Ok(vec![bottom_shapes[0].clone()])
+    }
+
+    fn forward(&mut self, bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()> {
+        ops::leaky_relu(
+            bottoms[0].as_slice(),
+            self.cfg.negative_slope,
+            tops[0].as_mut_slice(),
+        );
+        Ok(())
+    }
+
+    fn backward(
+        &mut self,
+        top_diffs: &[&Tensor],
+        bottom_datas: &[&Tensor],
+        bottom_diffs: &mut [Tensor],
+    ) -> Result<()> {
+        ops::leaky_relu_bwd(
+            bottom_datas[0].as_slice(),
+            top_diffs[0].as_slice(),
+            self.cfg.negative_slope,
+            bottom_diffs[0].as_mut_slice(),
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::LayerType;
+
+    #[test]
+    fn forward_and_backward() {
+        let cfg = LayerConfig {
+            name: "r".into(),
+            ltype: LayerType::ReLU,
+            negative_slope: 0.25,
+            ..Default::default()
+        };
+        let mut l = ReluLayer::new(cfg);
+        let shape = Shape::new(&[1, 4]);
+        l.setup(&[shape.clone()]).unwrap();
+        let x = Tensor::from_vec(shape.clone(), vec![-4.0, -1.0, 0.0, 2.0]);
+        let mut y = Tensor::zeros(shape.clone());
+        l.forward(&[&x], std::slice::from_mut(&mut y)).unwrap();
+        assert_eq!(y.as_slice(), &[-1.0, -0.25, 0.0, 2.0]);
+        let dy = Tensor::from_vec(shape.clone(), vec![1.0; 4]);
+        let mut dx = Tensor::zeros(shape);
+        l.backward(&[&dy], &[&x], std::slice::from_mut(&mut dx)).unwrap();
+        assert_eq!(dx.as_slice(), &[0.25, 0.25, 0.25, 1.0]);
+    }
+}

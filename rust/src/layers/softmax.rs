@@ -1,0 +1,187 @@
+//! SoftMax and SoftMaxWithLoss layers (paper §3: "maps any set of numbers
+//! to probabilities that add up to 1" + the loss variant used in training).
+
+use anyhow::{bail, Result};
+
+use crate::ops;
+use crate::proto::LayerConfig;
+use crate::tensor::{Shape, Tensor};
+
+use super::{labels_to_i32, Layer};
+
+/// Plain SoftMax over the class axis of (N, C) logits.
+pub struct SoftmaxLayer {
+    cfg: LayerConfig,
+    n: usize,
+    c: usize,
+    /// Stashed probabilities for the backward pass.
+    probs: Vec<f32>,
+}
+
+impl SoftmaxLayer {
+    pub fn new(cfg: LayerConfig) -> Self {
+        SoftmaxLayer { cfg, n: 0, c: 0, probs: vec![] }
+    }
+}
+
+impl Layer for SoftmaxLayer {
+    fn config(&self) -> &LayerConfig {
+        &self.cfg
+    }
+
+    fn setup(&mut self, bottom_shapes: &[Shape]) -> Result<Vec<Shape>> {
+        let bs = &bottom_shapes[0];
+        self.n = bs.num();
+        self.c = bs.count_from(1);
+        self.probs = vec![0.0; self.n * self.c];
+        Ok(vec![bs.clone()])
+    }
+
+    fn forward(&mut self, bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()> {
+        ops::softmax(bottoms[0].as_slice(), self.n, self.c, tops[0].as_mut_slice());
+        self.probs.copy_from_slice(tops[0].as_slice());
+        Ok(())
+    }
+
+    fn backward(
+        &mut self,
+        top_diffs: &[&Tensor],
+        _bottom_datas: &[&Tensor],
+        bottom_diffs: &mut [Tensor],
+    ) -> Result<()> {
+        // dX_i = p_i * (dY_i - sum_j dY_j p_j)  (softmax Jacobian product)
+        let dy = top_diffs[0].as_slice();
+        let dx = bottom_diffs[0].as_mut_slice();
+        for r in 0..self.n {
+            let p = &self.probs[r * self.c..(r + 1) * self.c];
+            let dyr = &dy[r * self.c..(r + 1) * self.c];
+            let dot: f32 = p.iter().zip(dyr).map(|(a, b)| a * b).sum();
+            for j in 0..self.c {
+                dx[r * self.c + j] = p[j] * (dyr[j] - dot);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// SoftMaxWithLoss: softmax + mean cross-entropy against integer labels.
+pub struct SoftmaxLossLayer {
+    cfg: LayerConfig,
+    n: usize,
+    c: usize,
+    probs: Vec<f32>,
+    labels: Vec<i32>,
+}
+
+impl SoftmaxLossLayer {
+    pub fn new(cfg: LayerConfig) -> Self {
+        SoftmaxLossLayer { cfg, n: 0, c: 0, probs: vec![], labels: vec![] }
+    }
+
+    /// Probabilities from the last forward (the paper validates ports by
+    /// comparing such intermediate matrices).
+    pub fn probs(&self) -> &[f32] {
+        &self.probs
+    }
+}
+
+impl Layer for SoftmaxLossLayer {
+    fn config(&self) -> &LayerConfig {
+        &self.cfg
+    }
+
+    fn setup(&mut self, bottom_shapes: &[Shape]) -> Result<Vec<Shape>> {
+        if bottom_shapes.len() != 2 {
+            bail!("SoftmaxWithLoss expects (logits, labels)");
+        }
+        let bs = &bottom_shapes[0];
+        self.n = bs.num();
+        self.c = bs.count_from(1);
+        self.probs = vec![0.0; self.n * self.c];
+        self.labels = vec![0; self.n];
+        Ok(vec![Shape::new(&[1])])
+    }
+
+    fn forward(&mut self, bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()> {
+        self.labels = labels_to_i32(bottoms[1]);
+        let loss = ops::softmax_xent(
+            bottoms[0].as_slice(),
+            &self.labels,
+            self.n,
+            self.c,
+            &mut self.probs,
+        );
+        tops[0].as_mut_slice()[0] = loss;
+        Ok(())
+    }
+
+    fn backward(
+        &mut self,
+        _top_diffs: &[&Tensor],
+        _bottom_datas: &[&Tensor],
+        bottom_diffs: &mut [Tensor],
+    ) -> Result<()> {
+        // Loss layers seed the gradient themselves (loss weight 1.0).
+        ops::softmax_xent_bwd(
+            &self.probs,
+            &self.labels,
+            self.n,
+            self.c,
+            bottom_diffs[0].as_mut_slice(),
+        );
+        Ok(())
+    }
+
+    fn is_loss(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propcheck::close;
+    use crate::proto::LayerType;
+
+    fn cfg(t: LayerType) -> LayerConfig {
+        LayerConfig { name: "s".into(), ltype: t, ..Default::default() }
+    }
+
+    #[test]
+    fn softmax_forward_simplex() {
+        let mut l = SoftmaxLayer::new(cfg(LayerType::SoftMax));
+        let shape = Shape::new(&[2, 3]);
+        l.setup(&[shape.clone()]).unwrap();
+        let x = Tensor::from_vec(shape.clone(), vec![1., 2., 3., 0., 0., 0.]);
+        let mut y = Tensor::zeros(shape);
+        l.forward(&[&x], std::slice::from_mut(&mut y)).unwrap();
+        let s0: f32 = y.as_slice()[..3].iter().sum();
+        assert!(close(s0, 1.0, 1e-5, 1e-6));
+        assert!(close(y.as_slice()[3], 1.0 / 3.0, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn loss_layer_uniform_logits() {
+        let mut l = SoftmaxLossLayer::new(cfg(LayerType::SoftMaxWithLoss));
+        let logits = Shape::new(&[2, 10]);
+        let labels = Shape::new(&[2]);
+        l.setup(&[logits.clone(), labels.clone()]).unwrap();
+        let x = Tensor::zeros(logits.clone());
+        let y = Tensor::from_vec(labels, vec![3.0, 7.0]);
+        let mut top = Tensor::zeros(Shape::new(&[1]));
+        l.forward(&[&x, &y], std::slice::from_mut(&mut top)).unwrap();
+        assert!(close(top.as_slice()[0], (10.0f32).ln(), 1e-5, 1e-6));
+        // gradient rows sum to 0 and point away from the label
+        let mut dx = Tensor::zeros(logits);
+        let mut dlbl = Tensor::zeros(Shape::new(&[2]));
+        let mut diffs = vec![dx, dlbl];
+        l.backward(&[], &[], &mut diffs).unwrap();
+        dx = diffs.remove(0);
+        dlbl = diffs.remove(0);
+        let row: &[f32] = &dx.as_slice()[..10];
+        assert!(close(row.iter().sum::<f32>(), 0.0, 1e-6, 1e-6));
+        assert!(row[3] < 0.0);
+        assert_eq!(dlbl.sum(), 0.0);
+        let _ = dlbl;
+    }
+}

@@ -1,0 +1,39 @@
+//! # phast-caffe
+//!
+//! A single-source deep-learning framework reproducing *"Using PHAST to port
+//! Caffe library: First experiences and lessons learned"* (CS.DC 2020).
+//!
+//! The crate is the L3 coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the ported Caffe
+//!   blocks (im2col+GeMM convolution, pooling, InnerProduct, ReLU, SoftMax,
+//!   SoftMax-with-loss, Accuracy), written once.
+//! * **L2** — JAX graphs (`python/compile/model.py`): LeNet-MNIST and
+//!   CIFAR10-quick forward/backward composed from the L1 kernels and
+//!   AOT-lowered to HLO text (`make artifacts`).
+//! * **L3** — this crate: blobs, layers, nets, the SGD solver, the data
+//!   pipeline, the PJRT runtime that executes the artifacts, and the
+//!   domain-placement machinery that reproduces the paper's partial-porting
+//!   analysis (transfer counting, layout conversion at domain boundaries).
+//!
+//! The *native* modules ([`ops`], the native paths of [`layers`]) play the
+//! role of original Caffe + OpenBLAS — the baseline the paper compares
+//! against.  The *ported* path runs the AOT artifacts through [`runtime`]
+//! under a per-layer [`phast::Placement`].
+
+pub mod tensor;
+pub mod ops;
+pub mod propcheck;
+pub mod proto;
+pub mod data;
+pub mod layers;
+pub mod net;
+pub mod solver;
+pub mod runtime;
+pub mod phast;
+pub mod metrics;
+pub mod conformance;
+pub mod experiments;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

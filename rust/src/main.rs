@@ -1,0 +1,246 @@
+//! `repro` — the phast-caffe command line (the `caffe` binary analog).
+//!
+//! Subcommands map one-to-one onto the paper's artifacts:
+//!
+//! ```text
+//! repro train     --net mnist --iters 300 --backend native|partial|fused
+//! repro time      --net mnist --reps 30            # per-layer timing
+//! repro table1                                     # conformance suite
+//! repro table2    --reps 30                        # fwd-bwd comparison
+//! repro transfers --net mnist --reps 5             # §4.3 crossing sweep
+//! repro info                                       # platform + catalog
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use phast_caffe::conformance;
+use phast_caffe::experiments::{
+    measure_placement, porting_sweep, preset_net, render_table2, render_transfers,
+    run_table2, sample_batch,
+};
+use phast_caffe::phast::{BoundaryOptions, FusedRunner, Placement, PortedNet, PortedSolver};
+use phast_caffe::proto::{presets, NetConfig, SolverConfig};
+use phast_caffe::runtime::Engine;
+use phast_caffe::solver::Solver;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            m.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn flag<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(String::as_str).unwrap_or(default)
+}
+
+fn usize_flag(flags: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    flags
+        .get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn cmd_info() -> Result<()> {
+    let engine = Engine::open_default().context("open artifacts (run `make artifacts`)")?;
+    println!("phast-caffe — single-source Caffe reproduction (PHAST paper, CS.DC 2020)");
+    println!("PJRT platform : {}", engine.platform());
+    println!("artifacts     : {}", engine.manifest().len());
+    for n in engine.manifest().names() {
+        let spec = engine.manifest().get(n).unwrap();
+        println!("  {:28} {:>2} in / {} out", n, spec.ins.len(), spec.outs.len());
+    }
+    Ok(())
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flag(flags, "net", "mnist");
+    let backend = flag(flags, "backend", "native");
+    let solver_src = presets::solver_by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("no preset solver for '{name}'"))?;
+    let mut cfg = SolverConfig::from_text(solver_src)?;
+    if let Some(it) = flags.get("iters") {
+        cfg.max_iter = it.parse()?;
+    }
+    let iters = cfg.max_iter;
+    let display = cfg.display.max(1);
+    println!("training {name} for {iters} iterations (backend: {backend})");
+
+    match backend {
+        "native" => {
+            let net = preset_net(name, cfg.seed)?;
+            let mut solver = Solver::new(cfg, net);
+            for _ in 0..iters {
+                let loss = solver.step()?;
+                if solver.iter() % display == 0 {
+                    let (tl, ta) = solver.test(2)?;
+                    println!(
+                        "iter {:>5}  loss {:.4}  lr {:.5}  test-loss {:.4}  test-acc {:.3}",
+                        solver.iter(),
+                        loss,
+                        solver.lr(),
+                        tl,
+                        ta
+                    );
+                }
+            }
+        }
+        "partial" | "phast" => {
+            let engine = Engine::open_default()?;
+            let net_cfg = NetConfig::from_text(presets::net_by_name(name).unwrap())?;
+            let placement = if backend == "partial" {
+                Placement::paper_partial(&net_cfg)
+            } else {
+                Placement::phast_all()
+            };
+            let pnet = PortedNet::new(
+                preset_net(name, cfg.seed)?,
+                &engine,
+                placement,
+                BoundaryOptions::default(),
+            )?;
+            let mut solver = PortedSolver::new(cfg, pnet);
+            for _ in 0..iters {
+                let loss = solver.step()?;
+                if solver.iter() % display == 0 {
+                    println!("iter {:>5}  loss {loss:.4}  lr {:.5}", solver.iter(), solver.lr());
+                }
+            }
+            let st = solver.pnet.stats;
+            println!(
+                "boundary crossings: fwd {} bwd {} ({} KiB relayouted)",
+                st.crossings_fwd,
+                st.crossings_bwd,
+                st.conversion_bytes / 1024
+            );
+        }
+        "fused" => {
+            let engine = Engine::open_default()?;
+            let mut feeder = preset_net(name, cfg.seed)?;
+            let mut fused = FusedRunner::from_net(&engine, &feeder)?;
+            for i in 0..iters {
+                let (x, labels) = sample_batch(&mut feeder)?;
+                let lr = cfg.lr_policy.lr_at(cfg.base_lr, i);
+                let loss = fused.step(x, labels, lr)?;
+                if (i + 1) % display == 0 {
+                    println!("iter {:>5}  loss {loss:.4}  lr {lr:.5}", i + 1);
+                }
+            }
+        }
+        other => bail!("unknown backend '{other}' (native|partial|phast|fused)"),
+    }
+    Ok(())
+}
+
+fn cmd_time(flags: &HashMap<String, String>) -> Result<()> {
+    // `caffe time` analog: per-layer forward/backward timing.
+    let name = flag(flags, "net", "mnist");
+    let reps = usize_flag(flags, "reps", 20);
+    let mut net = preset_net(name, 1)?;
+    for _ in 0..3 {
+        net.zero_param_diffs();
+        net.forward()?;
+        net.backward()?;
+    }
+    net.metrics.clear();
+    for _ in 0..reps {
+        net.zero_param_diffs();
+        net.forward()?;
+        net.backward()?;
+    }
+    println!("per-layer timings over {reps} iterations ({name}, native):");
+    print!("{}", net.metrics.report());
+    Ok(())
+}
+
+fn cmd_table1() -> Result<()> {
+    let engine = Engine::open_default().ok();
+    if engine.is_none() {
+        println!("(artifacts missing: running without PJRT parity sub-checks)");
+    }
+    let results = conformance::run_suite(engine.as_ref());
+    println!("Table 1 — Caffe tests results for the modified blocks (f32):\n");
+    print!("{}", conformance::render_table1(&results));
+    println!("\nfailed checks (unimplemented functionality, as in the paper):");
+    for r in &results {
+        if !r.passed {
+            println!("  {:<14} {:<34} {}", r.block, r.name, r.note);
+        }
+    }
+    println!("\npaper: Conv 3/15, Pool 11/11, IP 9/9, SoftMax 4/4, Loss 4/4, Acc 9/12");
+    Ok(())
+}
+
+fn cmd_table2(flags: &HashMap<String, String>) -> Result<()> {
+    let warmup = usize_flag(flags, "warmup", 3);
+    let reps = usize_flag(flags, "reps", 20);
+    let engine = Engine::open_default()?;
+    println!("measuring Table 2 ({reps} reps, {warmup} warmup)...");
+    let mnist = run_table2(&engine, "mnist", warmup, reps)?;
+    let cifar = run_table2(&engine, "cifar", warmup, reps)?;
+    print!("{}", render_table2(&mnist, &cifar));
+    Ok(())
+}
+
+fn cmd_transfers(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flag(flags, "net", "mnist");
+    let reps = usize_flag(flags, "reps", 3);
+    let engine = Engine::open_default()?;
+    println!("§4.3 transfer analysis for {name} (fwd+bwd, per iteration):\n");
+    let sweep = porting_sweep(&engine, name, reps)?;
+    print!("{}", render_transfers(&sweep));
+
+    let cfg = NetConfig::from_text(presets::net_by_name(name).unwrap())?;
+    let with = measure_placement(
+        &engine,
+        name,
+        "paper placement + layout conv",
+        Placement::paper_partial(&cfg),
+        true,
+        reps,
+    )?;
+    let without = measure_placement(
+        &engine,
+        name,
+        "paper placement, no layout conv",
+        Placement::paper_partial(&cfg),
+        false,
+        reps,
+    )?;
+    println!("\nlayout-conversion ablation:");
+    print!("{}", render_transfers(&[with, without]));
+    println!("\npaper estimate: ~10 (MNIST) / ~30 (CIFAR) unnecessary transfers per");
+    println!("inference pass at the paper's porting snapshot, doubled by backward.");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "info" => cmd_info(),
+        "train" => cmd_train(&flags),
+        "time" => cmd_time(&flags),
+        "table1" => cmd_table1(),
+        "table2" => cmd_table2(&flags),
+        "transfers" => cmd_transfers(&flags),
+        _ => {
+            println!(
+                "usage: repro <info|train|time|table1|table2|transfers> [--net mnist|cifar]\n\
+                 [--backend native|partial|phast|fused] [--iters N] [--reps N]"
+            );
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Timing and counting instrumentation: per-layer wall-clock stats and the
+//! transfer counters the §4.3 reproduction reports.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Online statistics for a stream of duration samples.
+#[derive(Clone, Debug, Default)]
+pub struct TimingStat {
+    samples_us: Vec<u64>,
+}
+
+impl TimingStat {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.samples_us.iter().sum::<u64>() as f64 / 1000.0
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            0.0
+        } else {
+            self.total_ms() / self.samples_us.len() as f64
+        }
+    }
+
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_unstable();
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx] as f64 / 1000.0
+    }
+}
+
+/// Named timers + counters, printed as the `caffe time`-style report.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    timers: BTreeMap<String, TimingStat>,
+    counters: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(name, t0.elapsed());
+        out
+    }
+
+    pub fn record(&mut self, name: &str, d: Duration) {
+        self.timers.entry(name.to_string()).or_default().record(d);
+    }
+
+    pub fn bump(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn timer(&self, name: &str) -> Option<&TimingStat> {
+        self.timers.get(name)
+    }
+
+    pub fn timers(&self) -> impl Iterator<Item = (&str, &TimingStat)> {
+        self.timers.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Human-readable table.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        if !self.timers.is_empty() {
+            out.push_str(&format!(
+                "{:<28} {:>7} {:>10} {:>10} {:>10}\n",
+                "timer", "n", "mean ms", "p50 ms", "p95 ms"
+            ));
+            for (name, stat) in &self.timers {
+                out.push_str(&format!(
+                    "{:<28} {:>7} {:>10.3} {:>10.3} {:>10.3}\n",
+                    name,
+                    stat.count(),
+                    stat.mean_ms(),
+                    stat.percentile_ms(50.0),
+                    stat.percentile_ms(95.0)
+                ));
+            }
+        }
+        if !self.counters.is_empty() {
+            out.push_str(&format!("{:<28} {:>10}\n", "counter", "value"));
+            for (name, v) in &self.counters {
+                out.push_str(&format!("{:<28} {:>10}\n", name, v));
+            }
+        }
+        out
+    }
+
+    pub fn clear(&mut self) {
+        self.timers.clear();
+        self.counters.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats() {
+        let mut s = TimingStat::default();
+        for ms in [1u64, 2, 3, 4, 100] {
+            s.record(Duration::from_millis(ms));
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean_ms() - 22.0).abs() < 0.5);
+        assert!(s.percentile_ms(50.0) <= 4.0);
+        assert!(s.percentile_ms(95.0) >= 4.0);
+    }
+
+    #[test]
+    fn counters_and_report() {
+        let mut m = Metrics::new();
+        m.bump("transfers.h2d", 3);
+        m.bump("transfers.h2d", 2);
+        m.time("fwd", || std::thread::sleep(Duration::from_millis(1)));
+        assert_eq!(m.counter("transfers.h2d"), 5);
+        let r = m.report();
+        assert!(r.contains("transfers.h2d"));
+        assert!(r.contains("fwd"));
+    }
+}

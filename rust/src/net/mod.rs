@@ -1,0 +1,297 @@
+//! The Net: a DAG of layers over a named blob store, with forward/backward
+//! sweeps and per-layer timing — Caffe's `Net<float>`, Fig. 1 of the paper.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::layers::{create_layer, Layer};
+use crate::metrics::Metrics;
+use crate::proto::{LayerType, NetConfig};
+use crate::tensor::{Blob, Shape, Tensor};
+
+/// A fully set-up network.
+pub struct Net {
+    config: NetConfig,
+    layers: Vec<Box<dyn Layer>>,
+    blobs: Vec<Blob>,
+    blob_index: HashMap<String, usize>,
+    /// Per-layer bottom/top blob indices.
+    bottom_ids: Vec<Vec<usize>>,
+    top_ids: Vec<Vec<usize>>,
+    pub metrics: Metrics,
+}
+
+impl Net {
+    /// Build + setup from a parsed config.  `seed` drives weight init and
+    /// the data pipeline.
+    pub fn from_config(config: NetConfig, seed: u64) -> Result<Net> {
+        let mut layers = Vec::new();
+        let mut blobs: Vec<Blob> = Vec::new();
+        let mut blob_index: HashMap<String, usize> = HashMap::new();
+        let mut bottom_ids = Vec::new();
+        let mut top_ids = Vec::new();
+
+        for cfg in &config.layers {
+            let mut layer = create_layer(cfg, seed)?;
+            // Resolve bottoms (must already exist).
+            let mut bids = Vec::new();
+            let mut bshapes = Vec::new();
+            for b in &cfg.bottoms {
+                let id = *blob_index
+                    .get(b)
+                    .with_context(|| format!("layer '{}' bottom '{}' undefined", cfg.name, b))?;
+                bids.push(id);
+                bshapes.push(blobs[id].shape().clone());
+            }
+            // In-place layers are unsupported (kept out-of-place by design).
+            for t in &cfg.tops {
+                if cfg.bottoms.contains(t) {
+                    bail!("in-place layer '{}' not supported; use distinct top names", cfg.name);
+                }
+            }
+            let tshapes = layer
+                .setup(&bshapes)
+                .with_context(|| format!("setting up layer '{}'", cfg.name))?;
+            if tshapes.len() != cfg.tops.len() {
+                bail!(
+                    "layer '{}' produced {} tops, config names {}",
+                    cfg.name,
+                    tshapes.len(),
+                    cfg.tops.len()
+                );
+            }
+            let mut tids = Vec::new();
+            for (t, shape) in cfg.tops.iter().zip(tshapes) {
+                if blob_index.contains_key(t) {
+                    bail!("duplicate top blob '{}'", t);
+                }
+                let id = blobs.len();
+                blobs.push(Blob::new(t.clone(), shape));
+                blob_index.insert(t.clone(), id);
+                tids.push(id);
+            }
+            bottom_ids.push(bids);
+            top_ids.push(tids);
+            layers.push(layer);
+        }
+        Ok(Net {
+            config,
+            layers,
+            blobs,
+            blob_index,
+            bottom_ids,
+            top_ids,
+            metrics: Metrics::new(),
+        })
+    }
+
+    pub fn config(&self) -> &NetConfig {
+        &self.config
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn layer(&self, i: usize) -> &dyn Layer {
+        self.layers[i].as_ref()
+    }
+
+    pub fn layer_mut(&mut self, i: usize) -> &mut (dyn Layer + '_) {
+        self.layers[i].as_mut()
+    }
+
+    pub fn layer_by_name_mut(&mut self, name: &str) -> Option<&mut Box<dyn Layer>> {
+        self.layers.iter_mut().find(|l| l.name() == name)
+    }
+
+    /// Blob by name (activations, labels, loss, accuracy).
+    pub fn blob(&self, name: &str) -> Option<&Blob> {
+        self.blob_index.get(name).map(|&i| &self.blobs[i])
+    }
+
+    pub fn blob_mut(&mut self, name: &str) -> Option<&mut Blob> {
+        let i = *self.blob_index.get(name)?;
+        Some(&mut self.blobs[i])
+    }
+
+    pub fn blob_names(&self) -> impl Iterator<Item = &str> {
+        self.blobs.iter().map(|b| b.name())
+    }
+
+    /// Run one layer's native forward against the blob store.
+    pub fn forward_layer(&mut self, li: usize) -> Result<()> {
+        // Move tops out to satisfy the borrow checker (no in-place layers).
+        let tids = self.top_ids[li].clone();
+        let mut tops: Vec<Tensor> = tids
+            .iter()
+            .map(|&i| std::mem::replace(self.blobs[i].data_mut(), Tensor::zeros(Shape::new(&[0]))))
+            .collect();
+        let bottoms: Vec<&Tensor> =
+            self.bottom_ids[li].iter().map(|&i| self.blobs[i].data()).collect();
+        let result = self.layers[li].forward(&bottoms, &mut tops);
+        for (&i, t) in tids.iter().zip(tops) {
+            *self.blobs[i].data_mut() = t;
+        }
+        result.with_context(|| format!("forward of layer '{}'", self.layers[li].name()))
+    }
+
+    /// Run one layer's native backward against the blob store.
+    pub fn backward_layer(&mut self, li: usize) -> Result<()> {
+        if !self.layers[li].needs_backward() {
+            return Ok(());
+        }
+        let bids = self.bottom_ids[li].clone();
+        let mut bottom_diffs: Vec<Tensor> = bids
+            .iter()
+            .map(|&i| std::mem::replace(self.blobs[i].diff_mut(), Tensor::zeros(Shape::new(&[0]))))
+            .collect();
+        let top_diffs: Vec<&Tensor> =
+            self.top_ids[li].iter().map(|&i| self.blobs[i].diff()).collect();
+        let bottom_datas: Vec<&Tensor> =
+            bids.iter().map(|&i| self.blobs[i].data()).collect();
+        let result = self.layers[li].backward(&top_diffs, &bottom_datas, &mut bottom_diffs);
+        for (&i, t) in bids.iter().zip(bottom_diffs) {
+            *self.blobs[i].diff_mut() = t;
+        }
+        result.with_context(|| format!("backward of layer '{}'", self.layers[li].name()))
+    }
+
+    /// Full forward sweep (records per-layer timings).  Returns the loss if
+    /// a loss layer is present.
+    pub fn forward(&mut self) -> Result<Option<f32>> {
+        let mut loss = None;
+        for li in 0..self.layers.len() {
+            let t0 = Instant::now();
+            self.forward_layer(li)?;
+            let name = format!("fwd.{}", self.layers[li].name());
+            self.metrics.record(&name, t0.elapsed());
+            if self.layers[li].is_loss() {
+                let tid = self.top_ids[li][0];
+                loss = Some(self.blobs[tid].data().as_slice()[0]);
+            }
+        }
+        Ok(loss)
+    }
+
+    /// Full backward sweep (loss layers seed their own gradients).
+    pub fn backward(&mut self) -> Result<()> {
+        for li in (0..self.layers.len()).rev() {
+            let t0 = Instant::now();
+            self.backward_layer(li)?;
+            let name = format!("bwd.{}", self.layers[li].name());
+            self.metrics.record(&name, t0.elapsed());
+        }
+        Ok(())
+    }
+
+    /// Zero all parameter gradients (start of an iteration).
+    pub fn zero_param_diffs(&mut self) {
+        for l in &mut self.layers {
+            for p in l.params_mut() {
+                p.zero_diff();
+            }
+        }
+    }
+
+    /// All learnable parameter blobs, in layer order.
+    pub fn params_mut(&mut self) -> Vec<&mut Blob> {
+        self.layers
+            .iter_mut()
+            .flat_map(|l| l.params_mut().iter_mut())
+            .collect()
+    }
+
+    pub fn params(&self) -> Vec<&Blob> {
+        self.layers.iter().flat_map(|l| l.params().iter()).collect()
+    }
+
+    /// Total learnable parameter count.
+    pub fn num_params(&self) -> usize {
+        self.params().iter().map(|b| b.count()).sum()
+    }
+
+    /// Indices of layers of a given type.
+    pub fn layers_of_type(&self, t: LayerType) -> Vec<usize> {
+        (0..self.layers.len())
+            .filter(|&i| self.layers[i].ltype() == t)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::presets;
+
+    fn lenet() -> Net {
+        let cfg = NetConfig::from_text(presets::LENET_MNIST).unwrap();
+        Net::from_config(cfg, 1).unwrap()
+    }
+
+    #[test]
+    fn setup_wires_blobs() {
+        let net = lenet();
+        assert_eq!(net.num_layers(), 10);
+        assert_eq!(net.blob("conv1").unwrap().shape().dims(), &[64, 20, 24, 24]);
+        assert_eq!(net.blob("pool2").unwrap().shape().dims(), &[64, 50, 4, 4]);
+        assert_eq!(net.blob("ip2").unwrap().shape().dims(), &[64, 10]);
+        assert_eq!(net.blob("loss").unwrap().shape().dims(), &[1]);
+        // LeNet's canonical parameter count
+        assert_eq!(net.num_params(), 20 * 25 + 20 + 50 * 20 * 25 + 50
+                   + 500 * 800 + 500 + 10 * 500 + 10);
+    }
+
+    #[test]
+    fn forward_produces_finite_loss() {
+        let mut net = lenet();
+        let loss = net.forward().unwrap().expect("has loss layer");
+        assert!(loss.is_finite());
+        // Untrained on 10 classes: loss near ln(10)
+        assert!((1.5..4.0).contains(&loss), "loss {loss}");
+        let acc = net.blob("accuracy").unwrap().data().as_slice()[0];
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn backward_fills_param_grads() {
+        let mut net = lenet();
+        net.zero_param_diffs();
+        net.forward().unwrap();
+        net.backward().unwrap();
+        for p in net.params() {
+            assert!(p.diff().l2() > 0.0, "zero grad for {}", p.name());
+        }
+    }
+
+    #[test]
+    fn forward_deterministic_given_seed() {
+        let mut a = lenet();
+        let mut b = lenet();
+        let la = a.forward().unwrap().unwrap();
+        let lb = b.forward().unwrap().unwrap();
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn cifar_net_builds() {
+        let cfg = NetConfig::from_text(presets::CIFAR10_QUICK).unwrap();
+        let mut net = Net::from_config(cfg, 2).unwrap();
+        assert_eq!(net.blob("pool3").unwrap().shape().dims(), &[64, 64, 4, 4]);
+        let loss = net.forward().unwrap().unwrap();
+        assert!(loss.is_finite());
+    }
+
+    #[test]
+    fn rejects_undefined_bottom() {
+        let src = r#"
+            name: "bad"
+            layer { name: "ip" type: "InnerProduct" bottom: "ghost" top: "y"
+                    inner_product_param { num_output: 4 } }
+        "#;
+        let cfg = NetConfig::from_text(src).unwrap();
+        assert!(Net::from_config(cfg, 1).is_err());
+    }
+}

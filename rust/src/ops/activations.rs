@@ -1,0 +1,170 @@
+//! Elementwise and classification-head ops: leaky ReLU, SoftMax,
+//! SoftMax-with-loss, Accuracy — native baseline implementations.
+
+/// Caffe ReLULayer with `negative_slope` (the paper notes Caffe implements
+/// the leaky variant; slope 0 is plain ReLU).
+pub fn leaky_relu(x: &[f32], alpha: f32, y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi = if *xi > 0.0 { *xi } else { alpha * *xi };
+    }
+}
+
+/// dX for leaky ReLU given the forward *input*.
+pub fn leaky_relu_bwd(x: &[f32], dy: &[f32], alpha: f32, dx: &mut [f32]) {
+    assert_eq!(x.len(), dy.len());
+    assert_eq!(x.len(), dx.len());
+    for ((xi, gi), di) in x.iter().zip(dy).zip(dx.iter_mut()) {
+        *di = if *xi > 0.0 { *gi } else { alpha * *gi };
+    }
+}
+
+/// Row-wise softmax over (n, c) logits.
+pub fn softmax(x: &[f32], n: usize, c: usize, p: &mut [f32]) {
+    assert_eq!(x.len(), n * c);
+    assert_eq!(p.len(), n * c);
+    for r in 0..n {
+        let row = &x[r * c..(r + 1) * c];
+        let out = &mut p[r * c..(r + 1) * c];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for (o, v) in out.iter_mut().zip(row) {
+            *o = (v - m).exp();
+            z += *o;
+        }
+        let inv = 1.0 / z;
+        out.iter_mut().for_each(|o| *o *= inv);
+    }
+}
+
+/// SoftmaxWithLoss forward: mean cross-entropy + probabilities.
+pub fn softmax_xent(x: &[f32], labels: &[i32], n: usize, c: usize, p: &mut [f32]) -> f32 {
+    softmax(x, n, c, p);
+    let mut loss = 0.0f32;
+    for r in 0..n {
+        let l = labels[r] as usize;
+        assert!(l < c, "label {l} out of range {c}");
+        loss -= p[r * c + l].max(f32::MIN_POSITIVE).ln();
+    }
+    loss / n as f32
+}
+
+/// SoftmaxWithLoss backward: (p - onehot) / n.
+pub fn softmax_xent_bwd(p: &[f32], labels: &[i32], n: usize, c: usize, dx: &mut [f32]) {
+    assert_eq!(p.len(), n * c);
+    assert_eq!(dx.len(), n * c);
+    let inv = 1.0 / n as f32;
+    for r in 0..n {
+        let l = labels[r] as usize;
+        for j in 0..c {
+            let onehot = if j == l { 1.0 } else { 0.0 };
+            dx[r * c + j] = (p[r * c + j] - onehot) * inv;
+        }
+    }
+}
+
+/// Top-k accuracy over (n, c) logits.  Caffe's AccuracyLayer counts a hit
+/// when fewer than k classes score strictly higher than the label.
+pub fn accuracy(x: &[f32], labels: &[i32], n: usize, c: usize, top_k: usize) -> f32 {
+    assert_eq!(x.len(), n * c);
+    let mut hits = 0usize;
+    for r in 0..n {
+        let row = &x[r * c..(r + 1) * c];
+        let l = labels[r] as usize;
+        let better = row.iter().filter(|&&v| v > row[l]).count();
+        if better < top_k {
+            hits += 1;
+        }
+    }
+    hits as f32 / n as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propcheck::{assert_close, close, forall, Rng};
+
+    #[test]
+    fn relu_basic() {
+        let x = [-2.0, -0.5, 0.0, 0.5, 2.0];
+        let mut y = [0.0; 5];
+        leaky_relu(&x, 0.1, &mut y);
+        assert_close(&y, &[-0.2, -0.05, 0.0, 0.5, 2.0], 1e-6, 1e-7);
+        let mut dx = [0.0; 5];
+        leaky_relu_bwd(&x, &[1.0; 5], 0.1, &mut dx);
+        assert_close(&dx, &[0.1, 0.1, 0.1, 1.0, 1.0], 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        forall("softmax-simplex", 16, |rng: &mut Rng| {
+            let n = rng.range(1, 16);
+            let c = rng.range(2, 12);
+            let x: Vec<f32> = rng.normal_vec(n * c).iter().map(|v| v * 5.0).collect();
+            let mut p = vec![0.0f32; n * c];
+            softmax(&x, n, c, &mut p);
+            for r in 0..n {
+                let s: f32 = p[r * c..(r + 1) * c].iter().sum();
+                assert!(close(s, 1.0, 1e-5, 1e-5), "row sum {s}");
+                assert!(p[r * c..(r + 1) * c].iter().all(|&v| v >= 0.0));
+            }
+        });
+    }
+
+    #[test]
+    fn softmax_invariant_to_shift() {
+        let x = [1.0, 2.0, 3.0];
+        let xs = [101.0, 102.0, 103.0];
+        let (mut p1, mut p2) = ([0.0f32; 3], [0.0f32; 3]);
+        softmax(&x, 1, 3, &mut p1);
+        softmax(&xs, 1, 3, &mut p2);
+        assert_close(&p1, &p2, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn xent_perfect_prediction_is_zero() {
+        let x = [100.0, 0.0, 0.0, 100.0];
+        let mut p = [0.0f32; 4];
+        let loss = softmax_xent(&x, &[0, 1], 2, 2, &mut p);
+        assert!(loss < 1e-6, "{loss}");
+    }
+
+    #[test]
+    fn xent_uniform_is_log_c() {
+        let x = [0.0f32; 10];
+        let mut p = [0.0f32; 10];
+        let loss = softmax_xent(&x, &[3], 1, 10, &mut p);
+        assert!(close(loss, (10.0f32).ln(), 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn xent_bwd_rows_sum_zero() {
+        forall("xent-grad-simplex", 12, |rng: &mut Rng| {
+            let n = rng.range(1, 9);
+            let c = rng.range(2, 8);
+            let x = rng.normal_vec(n * c);
+            let labels: Vec<i32> = (0..n).map(|_| rng.range(0, c - 1) as i32).collect();
+            let mut p = vec![0.0f32; n * c];
+            softmax_xent(&x, &labels, n, c, &mut p);
+            let mut dx = vec![0.0f32; n * c];
+            softmax_xent_bwd(&p, &labels, n, c, &mut dx);
+            for r in 0..n {
+                let s: f32 = dx[r * c..(r + 1) * c].iter().sum();
+                assert!(s.abs() < 1e-6, "row grad sum {s}");
+            }
+        });
+    }
+
+    #[test]
+    fn accuracy_top1_and_topk() {
+        // logits rows: argmax = 2, 0
+        let x = [0.1, 0.2, 0.9, 0.8, 0.1, 0.3];
+        assert_eq!(accuracy(&x, &[2, 0], 2, 3, 1), 1.0);
+        assert_eq!(accuracy(&x, &[0, 0], 2, 3, 1), 0.5);
+        // label 1 in row 0 (0.2) is 2nd best -> top-1 misses, top-2 hits
+        assert_eq!(accuracy(&x, &[1, 0], 2, 3, 2), 1.0);
+        // label 0 in row 0 (0.1) is worst -> top-2 misses, top-3 hits
+        assert_eq!(accuracy(&x, &[0, 0], 2, 3, 2), 0.5);
+        assert_eq!(accuracy(&x, &[0, 0], 2, 3, 3), 1.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Blocked single-threaded GeMM — the OpenBLAS stand-in of the native
+//! baseline.
+//!
+//! `C = alpha * op(A) * op(B) + beta * C`, f32, row-major storage.  The
+//! kernel blocks over K and N to keep the B panel in L1/L2 cache and lets
+//! LLVM auto-vectorize the inner j-loop (contiguous in both B and C).
+//! Transposed operands are handled by packing the transposed panel once —
+//! not by strided access in the hot loop.
+//!
+//! `gemm_colmajor_b` consumes a column-major B panel, the layout OpenBLAS
+//! prefers; the PHAST boundary in `phast::` pays an explicit conversion to
+//! call it — reproducing the per-crossing transpose the paper blames for a
+//! large share of the partial-port slowdown (§4.3).
+
+/// Operand transposition flag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trans {
+    No,
+    Yes,
+}
+
+const KC: usize = 256; // K-panel
+const NC: usize = 512; // N-panel (fits L1 with KC in L2)
+
+/// C(m,n) = alpha * op(A)(m,k) * op(B)(k,n) + beta * C.
+///
+/// `a` is (m,k) row-major if `ta == No`, else (k,m); likewise for `b`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    assert_eq!(c.len(), m * n, "C size");
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(b.len(), k * n, "B size");
+
+    if beta == 0.0 {
+        c.iter_mut().for_each(|v| *v = 0.0);
+    } else if beta != 1.0 {
+        c.iter_mut().for_each(|v| *v *= beta);
+    }
+
+    // Pack transposed operands once so the kernel always reads row-major
+    // (m,k) x (k,n).
+    let a_packed;
+    let a_rm: &[f32] = match ta {
+        Trans::No => a,
+        Trans::Yes => {
+            a_packed = transpose(a, k, m);
+            &a_packed
+        }
+    };
+    let b_packed;
+    let b_rm: &[f32] = match tb {
+        Trans::No => b,
+        Trans::Yes => {
+            b_packed = transpose(b, n, k);
+            &b_packed
+        }
+    };
+
+    // Blocked i-k-j with a 4-wide k unroll in the microkernel.
+    for kb in (0..k).step_by(KC) {
+        let kmax = (kb + KC).min(k);
+        for nb in (0..n).step_by(NC) {
+            let nmax = (nb + NC).min(n);
+            for i in 0..m {
+                let arow = &a_rm[i * k..(i + 1) * k];
+                let crow = &mut c[i * n + nb..i * n + nmax];
+                let mut kk = kb;
+                while kk + 4 <= kmax {
+                    let (a0, a1, a2, a3) = (
+                        alpha * arow[kk],
+                        alpha * arow[kk + 1],
+                        alpha * arow[kk + 2],
+                        alpha * arow[kk + 3],
+                    );
+                    let b0 = &b_rm[kk * n + nb..kk * n + nmax];
+                    let b1 = &b_rm[(kk + 1) * n + nb..(kk + 1) * n + nmax];
+                    let b2 = &b_rm[(kk + 2) * n + nb..(kk + 2) * n + nmax];
+                    let b3 = &b_rm[(kk + 3) * n + nb..(kk + 3) * n + nmax];
+                    for j in 0..crow.len() {
+                        crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                    kk += 4;
+                }
+                while kk < kmax {
+                    let av = alpha * arow[kk];
+                    let brow = &b_rm[kk * n + nb..kk * n + nmax];
+                    for j in 0..crow.len() {
+                        crow[j] += av * brow[j];
+                    }
+                    kk += 1;
+                }
+            }
+        }
+    }
+}
+
+/// GeMM whose B operand is stored **column-major** (OpenBLAS-friendly).
+/// C(m,n) += A(m,k) * B_cm(k,n), with `b_cm[j*k + l] = B[l][j]`.
+pub fn gemm_colmajor_b(m: usize, n: usize, k: usize, a: &[f32], b_cm: &[f32], c: &mut [f32]) {
+    assert_eq!(b_cm.len(), k * n);
+    // A column-major B is exactly a row-major (n,k) matrix = B^T.
+    gemm(Trans::No, Trans::Yes, m, n, k, 1.0, a, b_cm, 0.0, c);
+}
+
+/// Row-major transpose: input is (r, c), output (c, r).
+pub fn transpose(x: &[f32], r: usize, c: usize) -> Vec<f32> {
+    assert_eq!(x.len(), r * c);
+    let mut out = vec![0.0f32; r * c];
+    // Tile for cache friendliness.
+    const T: usize = 32;
+    for i0 in (0..r).step_by(T) {
+        for j0 in (0..c).step_by(T) {
+            for i in i0..(i0 + T).min(r) {
+                for j in j0..(j0 + T).min(c) {
+                    out[j * r + i] = x[i * c + j];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propcheck::{assert_close, forall, Rng};
+
+    fn naive(
+        ta: Trans,
+        tb: Trans,
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        b: &[f32],
+    ) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for l in 0..k {
+                    let av = match ta {
+                        Trans::No => a[i * k + l],
+                        Trans::Yes => a[l * m + i],
+                    };
+                    let bv = match tb {
+                        Trans::No => b[l * n + j],
+                        Trans::Yes => b[j * k + l],
+                    };
+                    acc += av * bv;
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_all_transposes() {
+        forall("gemm-vs-naive", 24, |rng: &mut Rng| {
+            let m = rng.range(1, 33);
+            let n = rng.range(1, 33);
+            let k = rng.range(1, 65);
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            for (ta, tb) in [
+                (Trans::No, Trans::No),
+                (Trans::Yes, Trans::No),
+                (Trans::No, Trans::Yes),
+                (Trans::Yes, Trans::Yes),
+            ] {
+                let mut c = vec![0.0f32; m * n];
+                gemm(ta, tb, m, n, k, 1.0, &a, &b, 0.0, &mut c);
+                let want = naive(ta, tb, m, n, k, &a, &b);
+                assert_close(&c, &want, 1e-4, 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn alpha_beta() {
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
+        let b = vec![1.0, 0.0, 0.0, 1.0];
+        let mut c = vec![10.0, 10.0, 10.0, 10.0];
+        gemm(Trans::No, Trans::No, 2, 2, 2, 2.0, &a, &b, 0.5, &mut c);
+        assert_eq!(c, vec![7.0, 9.0, 11.0, 13.0]);
+    }
+
+    #[test]
+    fn colmajor_b_equals_transposed() {
+        forall("gemm-colmajor", 12, |rng: &mut Rng| {
+            let m = rng.range(1, 17);
+            let n = rng.range(1, 17);
+            let k = rng.range(1, 33);
+            let a = rng.normal_vec(m * k);
+            let b_rm = rng.normal_vec(k * n); // (k, n) row-major
+            let b_cm = transpose(&b_rm, k, n); // (n, k) = column-major B
+            let mut c1 = vec![0.0f32; m * n];
+            gemm(Trans::No, Trans::No, m, n, k, 1.0, &a, &b_rm, 0.0, &mut c1);
+            let mut c2 = vec![0.0f32; m * n];
+            gemm_colmajor_b(m, n, k, &a, &b_cm, &mut c2);
+            assert_close(&c1, &c2, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        forall("transpose", 8, |rng: &mut Rng| {
+            let r = rng.range(1, 50);
+            let c = rng.range(1, 50);
+            let x = rng.normal_vec(r * c);
+            let t = transpose(&x, r, c);
+            let back = transpose(&t, c, r);
+            assert_eq!(x, back);
+        });
+    }
+}

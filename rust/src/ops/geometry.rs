@@ -1,0 +1,69 @@
+//! Sliding-window geometry — one definition shared by conv and pool layers,
+//! mirroring `python/compile/kernels/common.py` exactly (conv uses floor
+//! mode, Caffe pooling uses ceil mode with the border clip).
+
+/// Geometry of one spatial axis of a sliding-window op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowGeom {
+    pub size: usize,
+    pub pad: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    /// Number of window positions.
+    pub out: usize,
+}
+
+/// Caffe convolution geometry (floor mode).
+pub fn conv_geom(size: usize, kernel: usize, stride: usize, pad: usize) -> WindowGeom {
+    assert!(size + 2 * pad >= kernel, "convolution output collapsed");
+    let out = (size + 2 * pad - kernel) / stride + 1;
+    WindowGeom { size, pad, kernel, stride, out }
+}
+
+/// Caffe pooling geometry (ceil mode + border clip: the last window must
+/// start strictly inside `size + pad`).
+pub fn pool_geom(size: usize, kernel: usize, stride: usize, pad: usize) -> WindowGeom {
+    let padded = size + 2 * pad;
+    assert!(padded >= kernel, "pooling output collapsed");
+    let mut out = (padded - kernel).div_ceil(stride) + 1;
+    if pad > 0 && (out - 1) * stride >= size + pad {
+        out -= 1;
+    }
+    WindowGeom { size, pad, kernel, stride, out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_conv_shapes() {
+        assert_eq!(conv_geom(28, 5, 1, 0).out, 24);
+        assert_eq!(conv_geom(12, 5, 1, 0).out, 8);
+        assert_eq!(conv_geom(32, 5, 1, 2).out, 32);
+    }
+
+    #[test]
+    fn caffe_pool_ceil_mode() {
+        assert_eq!(pool_geom(24, 2, 2, 0).out, 12);
+        assert_eq!(pool_geom(32, 3, 2, 0).out, 16); // cifar10-quick pool1
+        assert_eq!(pool_geom(16, 3, 2, 0).out, 8);
+        assert_eq!(pool_geom(8, 3, 2, 0).out, 4);
+    }
+
+    #[test]
+    fn pool_border_clip_with_pad() {
+        // ceil((7 + 2 - 3)/2)+1 = 4; last window starts at 3*2-1 = 5 < 7+1,
+        // no clip.
+        assert_eq!(pool_geom(7, 3, 2, 1).out, 4);
+        // ceil((4 + 2 - 3)/2)+1 = 3; window 2 starts at 2*2-1 = 3 < 4+1 ok;
+        // window check: (3-1)*2 = 4 >= 4+1? no -> stays 3.
+        assert_eq!(pool_geom(4, 3, 2, 1).out, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn collapsed_conv_panics() {
+        conv_geom(2, 5, 1, 0);
+    }
+}

@@ -1,0 +1,192 @@
+//! im2col / col2im — Caffe's convolution lowering (paper §3.1, Figs. 2–3).
+//!
+//! This is the faithful port of Caffe's "penta-loop", restructured the way
+//! the paper describes: merged loops parameterized so every output element
+//! is independent.  Layout matches Caffe and the Pallas kernels exactly:
+//! `cols[(c*kh + i)*kw + j][oh*OW + ow]`.
+
+use super::geometry::conv_geom;
+
+/// Parameters of a 2-D sliding window (kernel/stride/pad per axis).
+#[derive(Clone, Copy, Debug)]
+pub struct Conv2dGeom {
+    pub kh: usize,
+    pub kw: usize,
+    pub sh: usize,
+    pub sw: usize,
+    pub ph: usize,
+    pub pw: usize,
+}
+
+/// One sample: `x` is (C, H, W) row-major; writes (C*kh*kw, OH*OW) into
+/// `cols` (must be pre-sized).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    g: Conv2dGeom,
+    cols: &mut [f32],
+) {
+    let gh = conv_geom(h, g.kh, g.sh, g.ph);
+    let gw = conv_geom(w, g.kw, g.sw, g.pw);
+    let (oh, ow) = (gh.out, gw.out);
+    assert_eq!(x.len(), c * h * w);
+    assert_eq!(cols.len(), c * g.kh * g.kw * oh * ow);
+
+    let mut row = 0usize;
+    for ch in 0..c {
+        let img = &x[ch * h * w..(ch + 1) * h * w];
+        for i in 0..g.kh {
+            for j in 0..g.kw {
+                let dst = &mut cols[row * oh * ow..(row + 1) * oh * ow];
+                for oy in 0..oh {
+                    let iy = (oy * g.sh + i) as isize - g.ph as isize;
+                    let drow = &mut dst[oy * ow..(oy + 1) * ow];
+                    if iy < 0 || iy as usize >= h {
+                        drow.iter_mut().for_each(|v| *v = 0.0);
+                        continue;
+                    }
+                    let src = &img[iy as usize * w..(iy as usize + 1) * w];
+                    for (ox, d) in drow.iter_mut().enumerate() {
+                        let ix = (ox * g.sw + j) as isize - g.pw as isize;
+                        *d = if ix < 0 || ix as usize >= w {
+                            0.0
+                        } else {
+                            src[ix as usize]
+                        };
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// Adjoint of [`im2col`]: scatter-add `cols` back into (C, H, W).
+/// `x` is zeroed first (Caffe `caffe_set` then `col2im_cpu`).
+#[allow(clippy::too_many_arguments)]
+pub fn col2im(
+    cols: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    g: Conv2dGeom,
+    x: &mut [f32],
+) {
+    let gh = conv_geom(h, g.kh, g.sh, g.ph);
+    let gw = conv_geom(w, g.kw, g.sw, g.pw);
+    let (oh, ow) = (gh.out, gw.out);
+    assert_eq!(x.len(), c * h * w);
+    assert_eq!(cols.len(), c * g.kh * g.kw * oh * ow);
+    x.iter_mut().for_each(|v| *v = 0.0);
+
+    let mut row = 0usize;
+    for ch in 0..c {
+        let img = &mut x[ch * h * w..(ch + 1) * h * w];
+        for i in 0..g.kh {
+            for j in 0..g.kw {
+                let src = &cols[row * oh * ow..(row + 1) * oh * ow];
+                for oy in 0..oh {
+                    let iy = (oy * g.sh + i) as isize - g.ph as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    let dst = &mut img[iy as usize * w..(iy as usize + 1) * w];
+                    let srow = &src[oy * ow..(oy + 1) * ow];
+                    for (ox, s) in srow.iter().enumerate() {
+                        let ix = (ox * g.sw + j) as isize - g.pw as isize;
+                        if ix >= 0 && (ix as usize) < w {
+                            dst[ix as usize] += s;
+                        }
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propcheck::{close, forall, Rng};
+
+    fn geom(k: usize, s: usize, p: usize) -> Conv2dGeom {
+        Conv2dGeom { kh: k, kw: k, sh: s, sw: s, ph: p, pw: p }
+    }
+
+    /// The worked example of paper Fig. 2/3: 2x2 filter, stride 1, pad 0
+    /// over a 3x4 input.
+    #[test]
+    fn figure2_example() {
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let g = geom(2, 1, 0);
+        let mut cols = vec![0.0f32; 4 * 6];
+        im2col(&x, 1, 3, 4, g, &mut cols);
+        #[rustfmt::skip]
+        let want = [
+            0., 1., 2., 4., 5., 6.,
+            1., 2., 3., 5., 6., 7.,
+            4., 5., 6., 8., 9., 10.,
+            5., 6., 7., 9., 10., 11.,
+        ];
+        assert_eq!(cols, want);
+    }
+
+    #[test]
+    fn padding_zero_fills() {
+        let x = vec![1.0f32; 4]; // 1x2x2
+        let g = geom(3, 1, 1);
+        let mut cols = vec![0.0f32; 9 * 4];
+        im2col(&x, 1, 2, 2, g, &mut cols);
+        // centre tap sees all ones
+        let centre = &cols[4 * 4..5 * 4];
+        assert_eq!(centre, &[1.0, 1.0, 1.0, 1.0]);
+        // top-left tap only overlaps input at output (1,1)
+        let tl = &cols[0..4];
+        assert_eq!(tl, &[0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn adjointness() {
+        // <im2col(x), y> == <x, col2im(y)> for random shapes.
+        forall("im2col-adjoint", 20, |rng: &mut Rng| {
+            let c = rng.range(1, 4);
+            let h = rng.range(4, 12);
+            let w = rng.range(4, 12);
+            let k = rng.range(1, 3.min(h).min(w));
+            let s = rng.range(1, 3);
+            let p = rng.range(0, k - 1);
+            let g = geom(k, s, p);
+            let gh = conv_geom(h, k, s, p);
+            let gw = conv_geom(w, k, s, p);
+            let x = rng.normal_vec(c * h * w);
+            let mut cols = vec![0.0f32; c * k * k * gh.out * gw.out];
+            im2col(&x, c, h, w, g, &mut cols);
+            let y = rng.normal_vec(cols.len());
+            let lhs: f32 = cols.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let mut back = vec![0.0f32; x.len()];
+            col2im(&y, c, h, w, g, &mut back);
+            let rhs: f32 = x.iter().zip(&back).map(|(a, b)| a * b).sum();
+            assert!(close(lhs, rhs, 1e-3, 1e-3), "{lhs} vs {rhs}");
+        });
+    }
+
+    #[test]
+    fn col2im_counts_window_coverage() {
+        // col2im(ones) == number of windows covering each input pixel.
+        let g = geom(2, 1, 0);
+        let cols = vec![1.0f32; 4 * 6];
+        let mut x = vec![0.0f32; 12];
+        col2im(&cols, 1, 3, 4, g, &mut x);
+        #[rustfmt::skip]
+        let want = [
+            1., 2., 2., 1.,
+            2., 4., 4., 2.,
+            1., 2., 2., 1.,
+        ];
+        assert_eq!(x, want);
+    }
+}

@@ -1,0 +1,48 @@
+//! BLAS level-1 helpers the solver and layers use (Caffe `caffe_axpy` etc.).
+
+/// y += alpha * x.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y = alpha * x + beta * y (Caffe `caffe_cpu_axpby`).
+pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi = alpha * xi + beta * *yi;
+    }
+}
+
+/// x *= alpha.
+pub fn scal(alpha: f32, x: &mut [f32]) {
+    x.iter_mut().for_each(|v| *v *= alpha);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_works() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+    }
+
+    #[test]
+    fn axpby_works() {
+        let mut y = vec![1.0, 2.0];
+        axpby(2.0, &[3.0, 4.0], 0.5, &mut y);
+        assert_eq!(y, vec![6.5, 9.0]);
+    }
+
+    #[test]
+    fn scal_works() {
+        let mut x = vec![2.0, -4.0];
+        scal(0.5, &mut x);
+        assert_eq!(x, vec![1.0, -2.0]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Native CPU math — the "original Caffe + OpenBLAS" baseline the paper
+//! compares its PHAST port against (Table 2's `Caffe` rows).
+//!
+//! Everything here is an independent, hand-written Rust implementation of
+//! the same Caffe semantics the Pallas kernels implement; the integration
+//! tests close the triangle natively-computed == PJRT-computed == pure-jnp
+//! oracle.
+
+pub mod geometry;
+pub mod gemm;
+pub mod im2col;
+pub mod pool;
+pub mod activations;
+pub mod math;
+
+pub use geometry::{conv_geom, pool_geom, WindowGeom};
+pub use gemm::{gemm, gemm_colmajor_b, Trans};
+pub use im2col::{col2im, im2col};
+pub use pool::{avepool, avepool_bwd, maxpool, maxpool_bwd};
+pub use activations::{
+    accuracy, leaky_relu, leaky_relu_bwd, softmax, softmax_xent, softmax_xent_bwd,
+};
+pub use math::{axpy, axpby, scal};

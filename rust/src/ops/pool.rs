@@ -1,0 +1,267 @@
+//! Max / average pooling, Caffe semantics (ceil mode, border clip), native
+//! baseline implementations.
+//!
+//! Max pooling records the *window phase* (i*kw + j) of the winner — the
+//! same encoding as the Pallas kernel — so argmax tensors are directly
+//! comparable across domains in the parity tests.
+
+use super::geometry::pool_geom;
+
+/// Pooling window parameters (square semantics per axis).
+#[derive(Clone, Copy, Debug)]
+pub struct Pool2dGeom {
+    pub kh: usize,
+    pub kw: usize,
+    pub sh: usize,
+    pub sw: usize,
+    pub ph: usize,
+    pub pw: usize,
+}
+
+/// One sample (C,H,W) -> (vals, argmax-phase) of shape (C, OH, OW).
+pub fn maxpool(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    g: Pool2dGeom,
+    out: &mut [f32],
+    arg: &mut [i32],
+) {
+    let gh = pool_geom(h, g.kh, g.sh, g.ph);
+    let gw = pool_geom(w, g.kw, g.sw, g.pw);
+    let (oh, ow) = (gh.out, gw.out);
+    assert_eq!(out.len(), c * oh * ow);
+    assert_eq!(arg.len(), out.len());
+
+    for ch in 0..c {
+        let img = &x[ch * h * w..(ch + 1) * h * w];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut best = f32::NEG_INFINITY;
+                let mut phase = 0i32;
+                for i in 0..g.kh {
+                    let iy = (oy * g.sh + i) as isize - g.ph as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    for j in 0..g.kw {
+                        let ix = (ox * g.sw + j) as isize - g.pw as isize;
+                        if ix < 0 || ix as usize >= w {
+                            continue;
+                        }
+                        let v = img[iy as usize * w + ix as usize];
+                        if v > best {
+                            best = v;
+                            phase = (i * g.kw + j) as i32;
+                        }
+                    }
+                }
+                out[ch * oh * ow + oy * ow + ox] = best;
+                arg[ch * oh * ow + oy * ow + ox] = phase;
+            }
+        }
+    }
+}
+
+/// Route pooled gradients back through the recorded argmax phases.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_bwd(
+    dy: &[f32],
+    arg: &[i32],
+    c: usize,
+    h: usize,
+    w: usize,
+    g: Pool2dGeom,
+    dx: &mut [f32],
+) {
+    let gh = pool_geom(h, g.kh, g.sh, g.ph);
+    let gw = pool_geom(w, g.kw, g.sw, g.pw);
+    let (oh, ow) = (gh.out, gw.out);
+    assert_eq!(dx.len(), c * h * w);
+    dx.iter_mut().for_each(|v| *v = 0.0);
+
+    for ch in 0..c {
+        let img = &mut dx[ch * h * w..(ch + 1) * h * w];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let idx = ch * oh * ow + oy * ow + ox;
+                let phase = arg[idx] as usize;
+                let (i, j) = (phase / g.kw, phase % g.kw);
+                let iy = (oy * g.sh + i) as isize - g.ph as isize;
+                let ix = (ox * g.sw + j) as isize - g.pw as isize;
+                debug_assert!(iy >= 0 && ix >= 0);
+                img[iy as usize * w + ix as usize] += dy[idx];
+            }
+        }
+    }
+}
+
+/// Caffe AVE-pool divisor: window area clipped to the padded canvas.
+fn ave_div(oy: usize, ox: usize, h: usize, w: usize, g: Pool2dGeom) -> f32 {
+    let hs = (oy * g.sh) as isize - g.ph as isize;
+    let he = (hs + g.kh as isize).min((h + g.ph) as isize);
+    let hs = hs.max(-(g.ph as isize));
+    let ws = (ox * g.sw) as isize - g.pw as isize;
+    let we = (ws + g.kw as isize).min((w + g.pw) as isize);
+    let ws = ws.max(-(g.pw as isize));
+    ((he - hs) * (we - ws)) as f32
+}
+
+/// Average pooling: sum of real elements / clipped window area.
+pub fn avepool(x: &[f32], c: usize, h: usize, w: usize, g: Pool2dGeom, out: &mut [f32]) {
+    let gh = pool_geom(h, g.kh, g.sh, g.ph);
+    let gw = pool_geom(w, g.kw, g.sw, g.pw);
+    let (oh, ow) = (gh.out, gw.out);
+    assert_eq!(out.len(), c * oh * ow);
+
+    for ch in 0..c {
+        let img = &x[ch * h * w..(ch + 1) * h * w];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0.0f32;
+                for i in 0..g.kh {
+                    let iy = (oy * g.sh + i) as isize - g.ph as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    for j in 0..g.kw {
+                        let ix = (ox * g.sw + j) as isize - g.pw as isize;
+                        if ix < 0 || ix as usize >= w {
+                            continue;
+                        }
+                        acc += img[iy as usize * w + ix as usize];
+                    }
+                }
+                out[ch * oh * ow + oy * ow + ox] = acc / ave_div(oy, ox, h, w, g);
+            }
+        }
+    }
+}
+
+/// Backward of [`avepool`].
+pub fn avepool_bwd(dy: &[f32], c: usize, h: usize, w: usize, g: Pool2dGeom, dx: &mut [f32]) {
+    let gh = pool_geom(h, g.kh, g.sh, g.ph);
+    let gw = pool_geom(w, g.kw, g.sw, g.pw);
+    let (oh, ow) = (gh.out, gw.out);
+    assert_eq!(dx.len(), c * h * w);
+    dx.iter_mut().for_each(|v| *v = 0.0);
+
+    for ch in 0..c {
+        let img = &mut dx[ch * h * w..(ch + 1) * h * w];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let gshare = dy[ch * oh * ow + oy * ow + ox] / ave_div(oy, ox, h, w, g);
+                for i in 0..g.kh {
+                    let iy = (oy * g.sh + i) as isize - g.ph as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    for j in 0..g.kw {
+                        let ix = (ox * g.sw + j) as isize - g.pw as isize;
+                        if ix < 0 || ix as usize >= w {
+                            continue;
+                        }
+                        img[iy as usize * w + ix as usize] += gshare;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propcheck::{close, forall, Rng};
+
+    fn geom(k: usize, s: usize, p: usize) -> Pool2dGeom {
+        Pool2dGeom { kh: k, kw: k, sh: s, sw: s, ph: p, pw: p }
+    }
+
+    #[test]
+    fn maxpool_2x2() {
+        #[rustfmt::skip]
+        let x = [
+            1., 2., 5., 6.,
+            3., 4., 7., 8.,
+            0., 0., 1., 0.,
+            9., 0., 0., 0.,
+        ];
+        let mut out = vec![0.0f32; 4];
+        let mut arg = vec![0i32; 4];
+        maxpool(&x, 1, 4, 4, geom(2, 2, 0), &mut out, &mut arg);
+        assert_eq!(out, vec![4., 8., 9., 1.]);
+        assert_eq!(arg, vec![3, 3, 2, 0]);
+    }
+
+    #[test]
+    fn maxpool_bwd_routes_to_winner() {
+        let x = [1., 2., 3., 4.];
+        let mut out = vec![0.0f32; 1];
+        let mut arg = vec![0i32; 1];
+        maxpool(&x, 1, 2, 2, geom(2, 2, 0), &mut out, &mut arg);
+        let mut dx = vec![0.0f32; 4];
+        maxpool_bwd(&[5.0], &arg, 1, 2, 2, geom(2, 2, 0), &mut dx);
+        assert_eq!(dx, vec![0., 0., 0., 5.]);
+    }
+
+    #[test]
+    fn avepool_simple() {
+        let x = [1., 2., 3., 4.];
+        let mut out = vec![0.0f32; 1];
+        avepool(&x, 1, 2, 2, geom(2, 2, 0), &mut out);
+        assert_eq!(out, vec![2.5]);
+    }
+
+    #[test]
+    fn avepool_gradient_conserved_when_unclipped() {
+        // Without clipping (stride == kernel, no pad), sum(dx) == sum(dy).
+        forall("avepool-conserve", 10, |rng: &mut Rng| {
+            let c = rng.range(1, 3);
+            let k = rng.range(1, 3);
+            let oh = rng.range(1, 5);
+            let h = oh * k;
+            let dy = rng.normal_vec(c * oh * oh);
+            let mut dx = vec![0.0f32; c * h * h];
+            avepool_bwd(&dy, c, h, h, geom(k, k, 0), &mut dx);
+            let sdx: f32 = dx.iter().sum();
+            let sdy: f32 = dy.iter().sum();
+            assert!(close(sdx, sdy, 1e-4, 1e-4), "{sdx} vs {sdy}");
+        });
+    }
+
+    #[test]
+    fn max_bwd_total_equals_dy_total() {
+        forall("maxpool-conserve", 10, |rng: &mut Rng| {
+            let c = rng.range(1, 3);
+            let h = rng.range(4, 10);
+            let k = rng.range(2, 3);
+            let s = k; // non-overlapping
+            let g = geom(k, s, 0);
+            let gh = pool_geom(h, k, s, 0);
+            let x = rng.normal_vec(c * h * h);
+            let mut out = vec![0.0f32; c * gh.out * gh.out];
+            let mut arg = vec![0i32; out.len()];
+            maxpool(&x, c, h, h, g, &mut out, &mut arg);
+            let dy = rng.normal_vec(out.len());
+            let mut dx = vec![0.0f32; x.len()];
+            maxpool_bwd(&dy, &arg, c, h, h, g, &mut dx);
+            let sdx: f32 = dx.iter().sum();
+            let sdy: f32 = dy.iter().sum();
+            assert!(close(sdx, sdy, 1e-4, 1e-4));
+        });
+    }
+
+    #[test]
+    fn cifar_pool_output_16() {
+        let g = geom(3, 2, 0);
+        let x = vec![1.0f32; 32 * 32];
+        let gh = pool_geom(32, 3, 2, 0);
+        assert_eq!(gh.out, 16);
+        let mut out = vec![0.0f32; 16 * 16];
+        let mut arg = vec![0i32; 256];
+        maxpool(&x, 1, 32, 32, g, &mut out, &mut arg);
+        assert!(out.iter().all(|&v| v == 1.0));
+    }
+}

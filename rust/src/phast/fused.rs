@@ -1,0 +1,145 @@
+//! Whole-net fused execution — the paper's predicted end state (§4.3):
+//! every layer ported, "inference/back-propagation activities mainly run
+//! without artificial interruption across the layers and unneeded data
+//! transfers".
+//!
+//! One artifact per operation class: `{tag}.step` (fwd+bwd+SGD),
+//! `{tag}.grads` (fwd+bwd), `{tag}.eval` (loss+accuracy+probs),
+//! `{tag}.infer` (probs).  Parameters and momentum live as host tensors
+//! recycled between calls; the only per-step traffic is the batch in and
+//! the loss out plus the parameter round-trip of a single executable —
+//! no per-layer hops.
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::Net;
+use crate::runtime::{Engine, Value};
+use crate::tensor::{IntTensor, Tensor};
+
+use super::ported::net_tag;
+
+/// Driver for the fused artifacts of one net.
+pub struct FusedRunner<'e> {
+    engine: &'e Engine,
+    tag: String,
+    params: Vec<Tensor>,
+    vels: Vec<Tensor>,
+}
+
+impl<'e> FusedRunner<'e> {
+    /// Initialize from a native net's parameters (guarantees the fused and
+    /// native runs start from identical weights).
+    pub fn from_net(engine: &'e Engine, net: &Net) -> Result<FusedRunner<'e>> {
+        let tag = net_tag(&net.config().name)?.to_string();
+        let params: Vec<Tensor> = net.params().iter().map(|b| b.data().clone()).collect();
+        Self::new(engine, &tag, params)
+    }
+
+    pub fn new(engine: &'e Engine, tag: &str, params: Vec<Tensor>) -> Result<FusedRunner<'e>> {
+        let spec = engine.spec(&format!("{tag}.step"))?;
+        let expected = (spec.ins.len() - 3) / 2;
+        if params.len() != expected {
+            bail!("{tag}.step expects {expected} params, got {}", params.len());
+        }
+        let vels = params
+            .iter()
+            .map(|p| Tensor::zeros(p.shape().clone()))
+            .collect();
+        Ok(FusedRunner { engine, tag: tag.to_string(), params, vels })
+    }
+
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    /// Copy current parameters back into a native net (for validation).
+    pub fn sync_to_net(&self, net: &mut Net) {
+        for (blob, p) in net.params_mut().into_iter().zip(&self.params) {
+            blob.data_mut().as_mut_slice().copy_from_slice(p.as_slice());
+        }
+    }
+
+    /// One fused training step; returns the loss.
+    pub fn step(&mut self, x: Tensor, labels: IntTensor, lr: f32) -> Result<f32> {
+        let mut args = Vec::with_capacity(3 + 2 * self.params.len());
+        args.push(Value::F32(x));
+        args.push(Value::I32(labels));
+        args.push(Value::Scalar(lr));
+        for p in &self.params {
+            args.push(Value::F32(p.clone()));
+        }
+        for v in &self.vels {
+            args.push(Value::F32(v.clone()));
+        }
+        let mut out = self.engine.run(&format!("{}.step", self.tag), &args)?;
+        // outputs: loss, new params..., new velocities...
+        let n = self.params.len();
+        if out.len() != 1 + 2 * n {
+            bail!("fused step returned {} outputs", out.len());
+        }
+        let vels: Vec<Tensor> = out
+            .drain(1 + n..)
+            .map(|v| v.into_f32())
+            .collect::<Result<_>>()?;
+        let params: Vec<Tensor> = out
+            .drain(1..)
+            .map(|v| v.into_f32())
+            .collect::<Result<_>>()?;
+        // Restore original (possibly 4-D) shapes.
+        self.params = params
+            .into_iter()
+            .zip(&self.params)
+            .map(|(t, old)| t.reshaped(old.shape().clone()))
+            .collect();
+        self.vels = vels
+            .into_iter()
+            .zip(&self.vels)
+            .map(|(t, old)| t.reshaped(old.shape().clone()))
+            .collect();
+        let loss = out.pop().context("missing loss output")?.into_f32()?;
+        Ok(loss.as_slice()[0])
+    }
+
+    /// Fused forward+backward without the update (Table 2's measured op).
+    pub fn grads(&self, x: Tensor, labels: IntTensor) -> Result<(f32, Vec<Tensor>)> {
+        let mut args = Vec::with_capacity(2 + self.params.len());
+        args.push(Value::F32(x));
+        args.push(Value::I32(labels));
+        for p in &self.params {
+            args.push(Value::F32(p.clone()));
+        }
+        let mut out = self.engine.run(&format!("{}.grads", self.tag), &args)?;
+        let grads: Vec<Tensor> = out
+            .drain(1..)
+            .map(|v| v.into_f32())
+            .collect::<Result<_>>()?;
+        let loss = out.pop().context("missing loss")?.into_f32()?;
+        Ok((loss.as_slice()[0], grads))
+    }
+
+    /// Fused evaluation: (loss, accuracy, probs).
+    pub fn eval(&self, x: Tensor, labels: IntTensor) -> Result<(f32, f32, Tensor)> {
+        let mut args = Vec::with_capacity(2 + self.params.len());
+        args.push(Value::F32(x));
+        args.push(Value::I32(labels));
+        for p in &self.params {
+            args.push(Value::F32(p.clone()));
+        }
+        let mut out = self.engine.run(&format!("{}.eval", self.tag), &args)?;
+        let probs = out.pop().context("probs")?.into_f32()?;
+        let acc = out.pop().context("acc")?.into_f32()?;
+        let loss = out.pop().context("loss")?.into_f32()?;
+        Ok((loss.as_slice()[0], acc.as_slice()[0], probs))
+    }
+
+    /// Fused inference: class probabilities.
+    pub fn infer(&self, x: Tensor) -> Result<Tensor> {
+        let mut args = Vec::with_capacity(1 + self.params.len());
+        args.push(Value::F32(x));
+        for p in &self.params {
+            args.push(Value::F32(p.clone()));
+        }
+        let mut out = self.engine.run(&format!("{}.infer", self.tag), &args)?;
+        out.pop().context("probs")?.into_f32()
+    }
+}

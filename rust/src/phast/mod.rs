@@ -1,0 +1,20 @@
+//! The PHAST domain — the paper's contribution, reconstructed.
+//!
+//! A [`Placement`] assigns every layer to the **native** domain (the
+//! original-Caffe baseline in `ops`/`layers`) or the **PHAST** domain (the
+//! single-source AOT kernels executed through `runtime::Engine`).  The
+//! [`PortedNet`] runs a net under a placement, detecting every
+//! domain-boundary crossing, counting it, and optionally paying the
+//! row-major <-> column-major layout conversion the paper blames for the
+//! largest share of the partial-port slowdown (§4.3).
+//!
+//! [`FusedRunner`] is the paper's predicted end state: the entire
+//! forward+backward(+SGD) step as one artifact, no intermediate crossings.
+
+mod placement;
+mod ported;
+mod fused;
+
+pub use fused::FusedRunner;
+pub use placement::{Domain, Placement};
+pub use ported::{BoundaryOptions, BoundaryStats, PortedNet, PortedSolver};

@@ -1,0 +1,115 @@
+//! Per-layer domain assignment.
+
+use std::collections::HashMap;
+
+use crate::proto::{LayerType, NetConfig};
+
+/// Which implementation executes a layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    /// Original-Caffe baseline (rust `ops`/`layers`).
+    Native,
+    /// Single-source AOT kernels via PJRT.
+    Phast,
+}
+
+/// Layer-name -> domain map with a default.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    map: HashMap<String, Domain>,
+    default: Domain,
+}
+
+impl Placement {
+    /// Everything native — original Caffe (Table 2's `Caffe` rows).
+    pub fn native_all() -> Placement {
+        Placement { map: HashMap::new(), default: Domain::Native }
+    }
+
+    /// Everything ported (layer-by-layer artifacts; the crossings vanish
+    /// *semantically* but each layer still dispatches one executable).
+    pub fn phast_all() -> Placement {
+        Placement { map: HashMap::new(), default: Domain::Phast }
+    }
+
+    /// The paper's snapshot (§3, §4.3): Convolution, Pooling and
+    /// InnerProduct ported ("the heaviest layers ... have been already
+    /// ported"); ReLU, SoftMax(/Loss), Accuracy and the data path still
+    /// original.  This is the configuration behind Table 2's
+    /// `Caffe (PHAST)` rows.
+    pub fn paper_partial(cfg: &NetConfig) -> Placement {
+        let mut map = HashMap::new();
+        for l in &cfg.layers {
+            let d = match l.ltype {
+                LayerType::Convolution | LayerType::Pooling | LayerType::InnerProduct => {
+                    Domain::Phast
+                }
+                _ => Domain::Native,
+            };
+            map.insert(l.name.clone(), d);
+        }
+        Placement { map, default: Domain::Native }
+    }
+
+    /// Port exactly the named layers.
+    pub fn ported_set(names: &[&str]) -> Placement {
+        let mut map = HashMap::new();
+        for n in names {
+            map.insert((*n).to_string(), Domain::Phast);
+        }
+        Placement { map, default: Domain::Native }
+    }
+
+    pub fn set(&mut self, layer: &str, d: Domain) {
+        self.map.insert(layer.to_string(), d);
+    }
+
+    /// Domain of `layer`.  Data layers always run natively (the framework's
+    /// ingest path was not ported in the paper either).
+    pub fn domain(&self, layer: &str, ltype: LayerType) -> Domain {
+        if ltype == LayerType::Data {
+            return Domain::Native;
+        }
+        *self.map.get(layer).unwrap_or(&self.default)
+    }
+
+    /// Number of explicitly ported layers (for reports).
+    pub fn ported_count(&self, cfg: &NetConfig) -> usize {
+        cfg.layers
+            .iter()
+            .filter(|l| self.domain(&l.name, l.ltype) == Domain::Phast)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::{presets, NetConfig};
+
+    #[test]
+    fn paper_partial_ports_heavy_layers() {
+        let cfg = NetConfig::from_text(presets::LENET_MNIST).unwrap();
+        let p = Placement::paper_partial(&cfg);
+        assert_eq!(p.domain("conv1", LayerType::Convolution), Domain::Phast);
+        assert_eq!(p.domain("pool2", LayerType::Pooling), Domain::Phast);
+        assert_eq!(p.domain("ip1", LayerType::InnerProduct), Domain::Phast);
+        assert_eq!(p.domain("relu1", LayerType::ReLU), Domain::Native);
+        assert_eq!(p.domain("loss", LayerType::SoftMaxWithLoss), Domain::Native);
+        assert_eq!(p.ported_count(&cfg), 6); // 2 conv + 2 pool + 2 ip
+    }
+
+    #[test]
+    fn data_layer_always_native() {
+        let p = Placement::phast_all();
+        assert_eq!(p.domain("data", LayerType::Data), Domain::Native);
+        assert_eq!(p.domain("conv1", LayerType::Convolution), Domain::Phast);
+    }
+
+    #[test]
+    fn cifar_partial_count() {
+        let cfg = NetConfig::from_text(presets::CIFAR10_QUICK).unwrap();
+        let p = Placement::paper_partial(&cfg);
+        assert_eq!(p.ported_count(&cfg), 8); // 3 conv + 3 pool + 2 ip
+    }
+}

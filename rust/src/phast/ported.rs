@@ -1,0 +1,472 @@
+//! Mixed-domain net execution — the paper's partially-ported Caffe.
+//!
+//! Each layer runs in its placed domain; every time a blob produced in one
+//! domain is consumed in the other, a **boundary crossing** is recorded and
+//! (optionally) the row-major <-> column-major **layout conversion** is
+//! physically paid (the paper: "they require also an additional copy
+//! host-side per transfer as to transpose the memory layout", §4.3).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::Net;
+use crate::ops::gemm::transpose;
+use crate::proto::{LayerType, PoolMethod, SolverConfig};
+use crate::runtime::{Engine, Value};
+use crate::solver::apply_sgd_update;
+use crate::tensor::{IntTensor, Shape, Tensor};
+
+use super::placement::{Domain, Placement};
+
+/// Boundary behaviour knobs (the §4.3 ablation axes).
+#[derive(Clone, Copy, Debug)]
+pub struct BoundaryOptions {
+    /// Pay the host-side relayout copy at each crossing.
+    pub layout_conversion: bool,
+}
+
+impl Default for BoundaryOptions {
+    fn default() -> Self {
+        BoundaryOptions { layout_conversion: true }
+    }
+}
+
+/// Accumulated boundary accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BoundaryStats {
+    /// Semantic domain-boundary crossings (the paper's "unnecessary
+    /// transfers"): blobs produced in one domain, consumed in the other.
+    pub crossings: u64,
+    pub crossings_fwd: u64,
+    pub crossings_bwd: u64,
+    /// Bytes relayouted at crossings.
+    pub conversion_bytes: u64,
+    /// Wall time spent in the relayout copies.
+    pub conversion_time: Duration,
+}
+
+/// A net executing under a [`Placement`].
+pub struct PortedNet<'e> {
+    pub net: Net,
+    engine: &'e Engine,
+    tag: String,
+    placement: Placement,
+    opts: BoundaryOptions,
+    /// Freshest-copy domain per blob name (data and diff tracked apart).
+    data_domain: HashMap<String, Domain>,
+    diff_domain: HashMap<String, Domain>,
+    /// Phast-side stashes.
+    argmax: HashMap<String, IntTensor>,
+    probs: HashMap<String, Tensor>,
+    labels_cache: HashMap<String, IntTensor>,
+    pub stats: BoundaryStats,
+}
+
+/// Artifact tag for a net name ("lenet-mnist" -> "mnist").
+pub fn net_tag(name: &str) -> Result<&'static str> {
+    match name {
+        "lenet-mnist" => Ok("mnist"),
+        "cifar10-quick" => Ok("cifar"),
+        other => bail!("no artifact catalog for net '{other}'"),
+    }
+}
+
+impl<'e> PortedNet<'e> {
+    pub fn new(net: Net, engine: &'e Engine, placement: Placement,
+               opts: BoundaryOptions) -> Result<PortedNet<'e>> {
+        let tag = net_tag(&net.config().name)?.to_string();
+        Ok(PortedNet {
+            net,
+            engine,
+            tag,
+            placement,
+            opts,
+            data_domain: HashMap::new(),
+            diff_domain: HashMap::new(),
+            argmax: HashMap::new(),
+            probs: HashMap::new(),
+            labels_cache: HashMap::new(),
+            stats: BoundaryStats::default(),
+        })
+    }
+
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = BoundaryStats::default();
+        self.engine.reset_stats();
+    }
+
+    /// Pay the relayout copy for one tensor (transpose out and back — the
+    /// host-side format adaptation at a domain boundary).
+    fn pay_conversion(&mut self, name: &str, fwd: bool) {
+        self.stats.crossings += 1;
+        if fwd {
+            self.stats.crossings_fwd += 1;
+        } else {
+            self.stats.crossings_bwd += 1;
+        }
+        if !self.opts.layout_conversion {
+            return;
+        }
+        let Some(blob) = self.net.blob_mut(name) else { return };
+        let t = if fwd { blob.data_mut() } else { blob.diff_mut() };
+        if t.len() < 2 {
+            return;
+        }
+        let rows = t.shape().num().max(1);
+        let cols = t.len() / rows;
+        if rows * cols != t.len() {
+            return;
+        }
+        let t0 = Instant::now();
+        let tr = transpose(t.as_slice(), rows, cols);
+        let back = transpose(&tr, cols, rows);
+        t.as_mut_slice().copy_from_slice(&back);
+        self.stats.conversion_bytes += (t.len() * 4) as u64;
+        self.stats.conversion_time += t0.elapsed();
+    }
+
+    fn data_domain_of(&self, name: &str) -> Domain {
+        *self.data_domain.get(name).unwrap_or(&Domain::Native)
+    }
+
+    fn diff_domain_of(&self, name: &str) -> Domain {
+        *self.diff_domain.get(name).unwrap_or(&Domain::Native)
+    }
+
+    fn cross_data_if_needed(&mut self, name: &str, target: Domain) {
+        if self.data_domain_of(name) != target {
+            self.pay_conversion(name, true);
+            self.data_domain.insert(name.to_string(), target);
+        }
+    }
+
+    fn cross_diff_if_needed(&mut self, name: &str, target: Domain) {
+        if self.diff_domain_of(name) != target {
+            self.pay_conversion(name, false);
+            self.diff_domain.insert(name.to_string(), target);
+        }
+    }
+
+    fn blob_data(&self, name: &str) -> Result<Tensor> {
+        Ok(self
+            .net
+            .blob(name)
+            .with_context(|| format!("blob '{name}'"))?
+            .data()
+            .clone())
+    }
+
+    fn blob_diff(&self, name: &str) -> Result<Tensor> {
+        Ok(self
+            .net
+            .blob(name)
+            .with_context(|| format!("blob '{name}'"))?
+            .diff()
+            .clone())
+    }
+
+    fn labels_i32(&mut self, name: &str) -> Result<IntTensor> {
+        let t = self.blob_data(name)?;
+        let v: Vec<i32> = t.as_slice().iter().map(|&x| x as i32).collect();
+        let it = IntTensor::from_vec(Shape::new(&[t.len()]), v);
+        self.labels_cache.insert(name.to_string(), it.clone());
+        Ok(it)
+    }
+
+    fn flat2d(&self, t: Tensor) -> Tensor {
+        let s = t.shape().flatten_2d();
+        t.reshaped(s)
+    }
+
+    fn param_value(&self, li: usize, pi: usize) -> Value {
+        Value::F32(self.net.layer(li).params()[pi].data().clone())
+    }
+
+    /// Store artifact output into a blob's data, reshaped to the blob.
+    fn store_data(&mut self, name: &str, v: Value) -> Result<()> {
+        let t = v.into_f32()?;
+        let blob = self.net.blob_mut(name).with_context(|| format!("blob '{name}'"))?;
+        let shape = blob.shape().clone();
+        *blob.data_mut() = t.reshaped(shape);
+        self.data_domain.insert(name.to_string(), Domain::Phast);
+        Ok(())
+    }
+
+    fn store_diff(&mut self, name: &str, v: Value) -> Result<()> {
+        let t = v.into_f32()?;
+        let blob = self.net.blob_mut(name).with_context(|| format!("blob '{name}'"))?;
+        let shape = blob.shape().clone();
+        *blob.diff_mut() = t.reshaped(shape);
+        self.diff_domain.insert(name.to_string(), Domain::Phast);
+        Ok(())
+    }
+
+    /// Accumulate artifact (dw, db) into a layer's parameter diffs.
+    fn accumulate_param_grads(&mut self, li: usize, dw: Value, db: Value) -> Result<()> {
+        let dw = dw.into_f32()?;
+        let db = db.into_f32()?;
+        let params = self.net.layer_mut(li).params_mut();
+        for (dst, src) in params[0].diff_mut().as_mut_slice().iter_mut().zip(dw.as_slice()) {
+            *dst += src;
+        }
+        for (dst, src) in params[1].diff_mut().as_mut_slice().iter_mut().zip(db.as_slice()) {
+            *dst += src;
+        }
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Forward
+    // -----------------------------------------------------------------
+
+    fn forward_layer_phast(&mut self, li: usize) -> Result<()> {
+        let cfg = self.net.layer(li).config().clone();
+        for b in &cfg.bottoms {
+            self.cross_data_if_needed(b, Domain::Phast);
+        }
+        let art = format!("{}.{}.fwd", self.tag, cfg.name);
+        match cfg.ltype {
+            LayerType::Convolution => {
+                let x = self.blob_data(&cfg.bottoms[0])?;
+                let (w, b) = (self.param_value(li, 0), self.param_value(li, 1));
+                let out = self.engine.run(&art, &[Value::F32(x), w, b])?;
+                self.store_data(&cfg.tops[0], out.into_iter().next().unwrap())?;
+            }
+            LayerType::Pooling => {
+                let x = self.blob_data(&cfg.bottoms[0])?;
+                let mut out = self.engine.run(&art, &[Value::F32(x)])?;
+                match cfg.pool {
+                    PoolMethod::Max => {
+                        let arg = out.pop().unwrap().into_i32()?;
+                        let y = out.pop().unwrap();
+                        self.store_data(&cfg.tops[0], y)?;
+                        self.argmax.insert(cfg.name.clone(), arg);
+                    }
+                    PoolMethod::Ave => {
+                        self.store_data(&cfg.tops[0], out.pop().unwrap())?;
+                    }
+                }
+            }
+            LayerType::InnerProduct => {
+                let x = self.flat2d(self.blob_data(&cfg.bottoms[0])?);
+                let (w, b) = (self.param_value(li, 0), self.param_value(li, 1));
+                let out = self.engine.run(&art, &[Value::F32(x), w, b])?;
+                self.store_data(&cfg.tops[0], out.into_iter().next().unwrap())?;
+            }
+            LayerType::ReLU => {
+                let x = self.blob_data(&cfg.bottoms[0])?;
+                let out = self.engine.run(&art, &[Value::F32(x)])?;
+                self.store_data(&cfg.tops[0], out.into_iter().next().unwrap())?;
+            }
+            LayerType::SoftMaxWithLoss => {
+                let x = self.flat2d(self.blob_data(&cfg.bottoms[0])?);
+                let labels = self.labels_i32(&cfg.bottoms[1])?;
+                let mut out = self.engine.run(&art, &[Value::F32(x), Value::I32(labels)])?;
+                let probs = out.pop().unwrap().into_f32()?;
+                let loss = out.pop().unwrap();
+                self.store_data(&cfg.tops[0], loss)?;
+                self.probs.insert(cfg.name.clone(), probs);
+            }
+            LayerType::Accuracy => {
+                let x = self.flat2d(self.blob_data(&cfg.bottoms[0])?);
+                let labels = self.labels_i32(&cfg.bottoms[1])?;
+                let out = self.engine.run(&art, &[Value::F32(x), Value::I32(labels)])?;
+                self.store_data(&cfg.tops[0], out.into_iter().next().unwrap())?;
+            }
+            LayerType::SoftMax => {
+                let x = self.flat2d(self.blob_data(&cfg.bottoms[0])?);
+                let out = self.engine.run(&art, &[Value::F32(x)])?;
+                self.store_data(&cfg.tops[0], out.into_iter().next().unwrap())?;
+            }
+            LayerType::Data => unreachable!("data layers are always native"),
+        }
+        Ok(())
+    }
+
+    /// Full forward sweep under the placement; returns loss if present.
+    pub fn forward(&mut self) -> Result<Option<f32>> {
+        let mut loss = None;
+        for li in 0..self.net.num_layers() {
+            let cfg = self.net.layer(li).config();
+            let (name, ltype) = (cfg.name.clone(), cfg.ltype);
+            let tops = cfg.tops.clone();
+            let bottoms = cfg.bottoms.clone();
+            match self.placement.domain(&name, ltype) {
+                Domain::Native => {
+                    for b in &bottoms {
+                        self.cross_data_if_needed(b, Domain::Native);
+                    }
+                    self.net.forward_layer(li)?;
+                    for t in &tops {
+                        self.data_domain.insert(t.clone(), Domain::Native);
+                    }
+                }
+                Domain::Phast => self.forward_layer_phast(li)?,
+            }
+            if ltype == LayerType::SoftMaxWithLoss {
+                loss = Some(self.net.blob(&tops[0]).unwrap().data().as_slice()[0]);
+            }
+        }
+        Ok(loss)
+    }
+
+    // -----------------------------------------------------------------
+    // Backward
+    // -----------------------------------------------------------------
+
+    fn backward_layer_phast(&mut self, li: usize) -> Result<()> {
+        let cfg = self.net.layer(li).config().clone();
+        for t in &cfg.tops {
+            self.cross_diff_if_needed(t, Domain::Phast);
+        }
+        let art = format!("{}.{}.bwd", self.tag, cfg.name);
+        match cfg.ltype {
+            LayerType::Convolution => {
+                let x = self.blob_data(&cfg.bottoms[0])?;
+                let w = self.param_value(li, 0);
+                let dy = self.blob_diff(&cfg.tops[0])?;
+                let mut out = self.engine.run(&art, &[Value::F32(x), w, Value::F32(dy)])?;
+                let db = out.pop().unwrap();
+                let dw = out.pop().unwrap();
+                let dx = out.pop().unwrap();
+                self.store_diff(&cfg.bottoms[0], dx)?;
+                self.accumulate_param_grads(li, dw, db)?;
+            }
+            LayerType::InnerProduct => {
+                let x = self.flat2d(self.blob_data(&cfg.bottoms[0])?);
+                let w = self.param_value(li, 0);
+                let dy = self.blob_diff(&cfg.tops[0])?;
+                let mut out = self.engine.run(&art, &[Value::F32(x), w, Value::F32(dy)])?;
+                let db = out.pop().unwrap();
+                let dw = out.pop().unwrap();
+                let dx = out.pop().unwrap();
+                self.store_diff(&cfg.bottoms[0], dx)?;
+                self.accumulate_param_grads(li, dw, db)?;
+            }
+            LayerType::Pooling => {
+                let dy = self.blob_diff(&cfg.tops[0])?;
+                let out = match cfg.pool {
+                    PoolMethod::Max => {
+                        let arg = self
+                            .argmax
+                            .get(&cfg.name)
+                            .with_context(|| format!("no argmax stash for '{}'", cfg.name))?
+                            .clone();
+                        self.engine.run(&art, &[Value::F32(dy), Value::I32(arg)])?
+                    }
+                    PoolMethod::Ave => self.engine.run(&art, &[Value::F32(dy)])?,
+                };
+                self.store_diff(&cfg.bottoms[0], out.into_iter().next().unwrap())?;
+            }
+            LayerType::ReLU => {
+                let x = self.blob_data(&cfg.bottoms[0])?;
+                let dy = self.blob_diff(&cfg.tops[0])?;
+                let out = self.engine.run(&art, &[Value::F32(x), Value::F32(dy)])?;
+                self.store_diff(&cfg.bottoms[0], out.into_iter().next().unwrap())?;
+            }
+            LayerType::SoftMaxWithLoss => {
+                let probs = self
+                    .probs
+                    .get(&cfg.name)
+                    .with_context(|| format!("no probs stash for '{}'", cfg.name))?
+                    .clone();
+                let labels = match self.labels_cache.get(&cfg.bottoms[1]) {
+                    Some(l) => l.clone(),
+                    None => self.labels_i32(&cfg.bottoms[1])?,
+                };
+                let out = self
+                    .engine
+                    .run(&art, &[Value::F32(probs), Value::I32(labels)])?;
+                self.store_diff(&cfg.bottoms[0], out.into_iter().next().unwrap())?;
+            }
+            LayerType::Accuracy | LayerType::SoftMax | LayerType::Data => {}
+        }
+        Ok(())
+    }
+
+    /// Full backward sweep under the placement.
+    pub fn backward(&mut self) -> Result<()> {
+        for li in (0..self.net.num_layers()).rev() {
+            let cfg = self.net.layer(li).config();
+            let (name, ltype) = (cfg.name.clone(), cfg.ltype);
+            if ltype == LayerType::Data || ltype == LayerType::Accuracy {
+                continue;
+            }
+            let tops = cfg.tops.clone();
+            let bottoms = cfg.bottoms.clone();
+            match self.placement.domain(&name, ltype) {
+                Domain::Native => {
+                    for t in &tops {
+                        self.cross_diff_if_needed(t, Domain::Native);
+                    }
+                    self.net.backward_layer(li)?;
+                    for b in &bottoms {
+                        self.diff_domain.insert(b.clone(), Domain::Native);
+                    }
+                }
+                Domain::Phast => self.backward_layer_phast(li)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Forward + backward — the quantity Table 2 measures.
+    pub fn forward_backward(&mut self) -> Result<f32> {
+        self.net.zero_param_diffs();
+        let loss = self.forward()?.unwrap_or(0.0);
+        self.backward()?;
+        Ok(loss)
+    }
+}
+
+/// SGD solver over a [`PortedNet`] (same math as `solver::Solver`).
+pub struct PortedSolver<'e> {
+    pub config: SolverConfig,
+    pub pnet: PortedNet<'e>,
+    history: Vec<Vec<f32>>,
+    iter: usize,
+}
+
+impl<'e> PortedSolver<'e> {
+    pub fn new(config: SolverConfig, mut pnet: PortedNet<'e>) -> PortedSolver<'e> {
+        let history = pnet
+            .net
+            .params_mut()
+            .iter()
+            .map(|p| vec![0.0f32; p.count()])
+            .collect();
+        PortedSolver { config, pnet, history, iter: 0 }
+    }
+
+    pub fn iter(&self) -> usize {
+        self.iter
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.config.lr_policy.lr_at(self.config.base_lr, self.iter)
+    }
+
+    pub fn step(&mut self) -> Result<f32> {
+        let loss = self.pnet.forward_backward()?;
+        let lr = self.lr();
+        apply_sgd_update(
+            self.pnet.net.params_mut(),
+            &mut self.history,
+            lr,
+            self.config.momentum,
+            self.config.weight_decay,
+        );
+        self.iter += 1;
+        Ok(loss)
+    }
+}

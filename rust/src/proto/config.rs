@@ -1,0 +1,364 @@
+//! Typed views over the parsed prototxt: net and solver configurations.
+
+use anyhow::{bail, Context, Result};
+
+use super::parse::{parse, Message, Value};
+
+/// Layer kinds of the ported subset (paper §3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerType {
+    Data,
+    Convolution,
+    Pooling,
+    InnerProduct,
+    ReLU,
+    SoftMax,
+    SoftMaxWithLoss,
+    Accuracy,
+}
+
+impl LayerType {
+    pub fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "Data" => LayerType::Data,
+            "Convolution" => LayerType::Convolution,
+            "Pooling" => LayerType::Pooling,
+            "InnerProduct" => LayerType::InnerProduct,
+            "ReLU" => LayerType::ReLU,
+            "Softmax" | "SoftMax" => LayerType::SoftMax,
+            "SoftmaxWithLoss" | "SoftMaxWithLoss" => LayerType::SoftMaxWithLoss,
+            "Accuracy" => LayerType::Accuracy,
+            other => bail!("unsupported layer type '{other}' (not in the ported subset)"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LayerType::Data => "Data",
+            LayerType::Convolution => "Convolution",
+            LayerType::Pooling => "Pooling",
+            LayerType::InnerProduct => "InnerProduct",
+            LayerType::ReLU => "ReLU",
+            LayerType::SoftMax => "Softmax",
+            LayerType::SoftMaxWithLoss => "SoftmaxWithLoss",
+            LayerType::Accuracy => "Accuracy",
+        }
+    }
+}
+
+/// Pooling reduction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolMethod {
+    Max,
+    Ave,
+}
+
+/// One layer block from the net prototxt.
+#[derive(Clone, Debug)]
+pub struct LayerConfig {
+    pub name: String,
+    pub ltype: LayerType,
+    pub bottoms: Vec<String>,
+    pub tops: Vec<String>,
+    /// Convolution/InnerProduct.
+    pub num_output: usize,
+    pub kernel_size: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Unported Caffe conv features, kept so the conformance suite can ask
+    /// for them and be refused (Table 1).
+    pub dilation: usize,
+    pub group: usize,
+    /// Pooling.
+    pub pool: PoolMethod,
+    /// ReLU.
+    pub negative_slope: f32,
+    /// Accuracy.
+    pub top_k: usize,
+    /// Data.
+    pub batch_size: usize,
+    pub source: String,
+}
+
+impl Default for LayerConfig {
+    fn default() -> Self {
+        LayerConfig {
+            name: String::new(),
+            ltype: LayerType::Data,
+            bottoms: vec![],
+            tops: vec![],
+            num_output: 0,
+            kernel_size: 1,
+            stride: 1,
+            pad: 0,
+            dilation: 1,
+            group: 1,
+            pool: PoolMethod::Max,
+            negative_slope: 0.0,
+            top_k: 1,
+            batch_size: 64,
+            source: String::new(),
+        }
+    }
+}
+
+impl LayerConfig {
+    fn from_msg(m: &Message) -> Result<Self> {
+        let mut lc = LayerConfig {
+            name: m.str_field("name").context("layer missing name")?.to_string(),
+            ltype: LayerType::from_str(m.str_field("type").context("layer missing type")?)?,
+            bottoms: m.get_all("bottom").filter_map(Value::as_str).map(String::from).collect(),
+            tops: m.get_all("top").filter_map(Value::as_str).map(String::from).collect(),
+            ..Default::default()
+        };
+        // Caffe nests these in *_param blocks; accept both nested and flat.
+        let sub = ["convolution_param", "pooling_param", "inner_product_param",
+                   "relu_param", "accuracy_param", "data_param"]
+            .iter()
+            .filter_map(|k| m.get(k).and_then(Value::as_msg))
+            .collect::<Vec<_>>();
+        let lookup_num = |key: &str| -> Option<f64> {
+            m.num_field(key).or_else(|| sub.iter().find_map(|s| s.num_field(key)))
+        };
+        let lookup_str = |key: &str| -> Option<&str> {
+            m.str_field(key).or_else(|| sub.iter().find_map(|s| s.str_field(key)))
+        };
+        if let Some(v) = lookup_num("num_output") {
+            lc.num_output = v as usize;
+        }
+        if let Some(v) = lookup_num("kernel_size") {
+            lc.kernel_size = v as usize;
+        }
+        if let Some(v) = lookup_num("stride") {
+            lc.stride = v as usize;
+        }
+        if let Some(v) = lookup_num("pad") {
+            lc.pad = v as usize;
+        }
+        if let Some(v) = lookup_num("dilation") {
+            lc.dilation = v as usize;
+        }
+        if let Some(v) = lookup_num("group") {
+            lc.group = v as usize;
+        }
+        if let Some(v) = lookup_num("negative_slope") {
+            lc.negative_slope = v as f32;
+        }
+        if let Some(v) = lookup_num("top_k") {
+            lc.top_k = v as usize;
+        }
+        if let Some(v) = lookup_num("batch_size") {
+            lc.batch_size = v as usize;
+        }
+        if let Some(s) = lookup_str("pool") {
+            lc.pool = match s {
+                "MAX" | "max" => PoolMethod::Max,
+                "AVE" | "ave" => PoolMethod::Ave,
+                other => bail!("unsupported pool method '{other}'"),
+            };
+        }
+        if let Some(s) = lookup_str("source") {
+            lc.source = s.to_string();
+        }
+        Ok(lc)
+    }
+}
+
+/// Whole-net configuration.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    pub name: String,
+    pub layers: Vec<LayerConfig>,
+}
+
+impl NetConfig {
+    pub fn from_text(src: &str) -> Result<Self> {
+        let m = parse(src)?;
+        let name = m.str_field("name").unwrap_or("net").to_string();
+        let mut layers = Vec::new();
+        for v in m.get_all("layer") {
+            let lm = v.as_msg().context("layer must be a block")?;
+            layers.push(LayerConfig::from_msg(lm)?);
+        }
+        if layers.is_empty() {
+            bail!("net '{name}' has no layers");
+        }
+        Ok(NetConfig { name, layers })
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&LayerConfig> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+/// Learning-rate schedule (Caffe `lr_policy`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrPolicy {
+    Fixed,
+    /// base_lr * gamma^(iter / step)
+    Step { gamma: f32, step: usize },
+    /// base_lr * (1 + gamma * iter)^(-power)  — LeNet's schedule.
+    Inv { gamma: f32, power: f32 },
+}
+
+impl LrPolicy {
+    pub fn lr_at(&self, base_lr: f32, iter: usize) -> f32 {
+        match self {
+            LrPolicy::Fixed => base_lr,
+            LrPolicy::Step { gamma, step } => {
+                base_lr * gamma.powi((iter / step.max(&1)) as i32)
+            }
+            LrPolicy::Inv { gamma, power } => {
+                base_lr * (1.0 + gamma * iter as f32).powf(-power)
+            }
+        }
+    }
+}
+
+/// Solver configuration (Caffe SGDSolver subset).
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    pub net: String,
+    pub base_lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub lr_policy: LrPolicy,
+    pub max_iter: usize,
+    pub test_interval: usize,
+    pub test_iter: usize,
+    pub display: usize,
+    pub snapshot: usize,
+    pub snapshot_prefix: String,
+    pub seed: u64,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            net: String::new(),
+            base_lr: 0.01,
+            momentum: 0.9,
+            weight_decay: 0.0005,
+            lr_policy: LrPolicy::Fixed,
+            max_iter: 100,
+            test_interval: 0,
+            test_iter: 10,
+            display: 20,
+            snapshot: 0,
+            snapshot_prefix: "snapshot".into(),
+            seed: 1,
+        }
+    }
+}
+
+impl SolverConfig {
+    pub fn from_text(src: &str) -> Result<Self> {
+        let m = parse(src)?;
+        let mut sc = SolverConfig {
+            net: m.str_field("net").unwrap_or_default().to_string(),
+            ..Default::default()
+        };
+        if let Some(v) = m.num_field("base_lr") {
+            sc.base_lr = v as f32;
+        }
+        if let Some(v) = m.num_field("momentum") {
+            sc.momentum = v as f32;
+        }
+        if let Some(v) = m.num_field("weight_decay") {
+            sc.weight_decay = v as f32;
+        }
+        if let Some(v) = m.usize_field("max_iter") {
+            sc.max_iter = v;
+        }
+        if let Some(v) = m.usize_field("test_interval") {
+            sc.test_interval = v;
+        }
+        if let Some(v) = m.usize_field("test_iter") {
+            sc.test_iter = v;
+        }
+        if let Some(v) = m.usize_field("display") {
+            sc.display = v;
+        }
+        if let Some(v) = m.usize_field("snapshot") {
+            sc.snapshot = v;
+        }
+        if let Some(s) = m.str_field("snapshot_prefix") {
+            sc.snapshot_prefix = s.to_string();
+        }
+        if let Some(v) = m.num_field("random_seed") {
+            sc.seed = v as u64;
+        }
+        let gamma = m.num_field("gamma").unwrap_or(0.0) as f32;
+        let power = m.num_field("power").unwrap_or(1.0) as f32;
+        let step = m.usize_field("stepsize").unwrap_or(1);
+        sc.lr_policy = match m.str_field("lr_policy").unwrap_or("fixed") {
+            "fixed" => LrPolicy::Fixed,
+            "step" => LrPolicy::Step { gamma, step },
+            "inv" => LrPolicy::Inv { gamma, power },
+            other => bail!("unsupported lr_policy '{other}'"),
+        };
+        Ok(sc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::presets;
+
+    #[test]
+    fn parses_lenet_preset() {
+        let net = NetConfig::from_text(presets::LENET_MNIST).unwrap();
+        assert_eq!(net.name, "lenet-mnist");
+        assert_eq!(net.layers.len(), 10); // data..accuracy
+        let conv1 = net.layer("conv1").unwrap();
+        assert_eq!(conv1.ltype, LayerType::Convolution);
+        assert_eq!(conv1.num_output, 20);
+        assert_eq!(conv1.kernel_size, 5);
+        let pool2 = net.layer("pool2").unwrap();
+        assert_eq!(pool2.pool, PoolMethod::Max);
+    }
+
+    #[test]
+    fn parses_cifar_preset() {
+        let net = NetConfig::from_text(presets::CIFAR10_QUICK).unwrap();
+        assert_eq!(net.name, "cifar10-quick");
+        let convs = net.layers.iter()
+            .filter(|l| l.ltype == LayerType::Convolution).count();
+        let pools = net.layers.iter()
+            .filter(|l| l.ltype == LayerType::Pooling).count();
+        let ips = net.layers.iter()
+            .filter(|l| l.ltype == LayerType::InnerProduct).count();
+        // paper: "8 layers (3 Convolutions, 3 Poolings, and 2 InnerProducts)"
+        assert_eq!((convs, pools, ips), (3, 3, 2));
+        assert_eq!(net.layer("pool2").unwrap().pool, PoolMethod::Ave);
+    }
+
+    #[test]
+    fn solver_config_lenet() {
+        let sc = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+        assert_eq!(sc.base_lr, 0.01);
+        assert_eq!(sc.momentum, 0.9);
+        assert!(matches!(sc.lr_policy, LrPolicy::Inv { .. }));
+        // Caffe's inv policy decays monotonically
+        let l0 = sc.lr_policy.lr_at(sc.base_lr, 0);
+        let l100 = sc.lr_policy.lr_at(sc.base_lr, 100);
+        assert!(l100 < l0);
+        assert_eq!(l0, 0.01);
+    }
+
+    #[test]
+    fn lr_policies() {
+        assert_eq!(LrPolicy::Fixed.lr_at(0.1, 500), 0.1);
+        let step = LrPolicy::Step { gamma: 0.5, step: 10 };
+        assert_eq!(step.lr_at(1.0, 0), 1.0);
+        assert_eq!(step.lr_at(1.0, 10), 0.5);
+        assert_eq!(step.lr_at(1.0, 25), 0.25);
+    }
+
+    #[test]
+    fn rejects_unknown_layer_type() {
+        let src = r#"name: "x" layer { name: "l" type: "LSTM" }"#;
+        assert!(NetConfig::from_text(src).is_err());
+    }
+}

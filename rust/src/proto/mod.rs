@@ -1,0 +1,13 @@
+//! Prototxt-style configuration — parser + typed net/solver configs.
+//!
+//! Caffe describes nets and solvers in protobuf text format; this module
+//! implements a compatible-enough subset (`key: value` scalars, repeated
+//! keys, nested `key { ... }` blocks, `#` comments) without a protobuf
+//! dependency, plus the typed views the framework consumes.
+
+mod parse;
+mod config;
+pub mod presets;
+
+pub use parse::{parse, Message, Value};
+pub use config::{LayerConfig, LayerType, NetConfig, PoolMethod, SolverConfig, LrPolicy};

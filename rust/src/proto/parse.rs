@@ -1,0 +1,272 @@
+//! Minimal protobuf-text parser: scalars, repeated fields, nested messages.
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed field value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Msg(Message),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_msg(&self) -> Option<&Message> {
+        match self {
+            Value::Msg(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// Ordered multi-map of fields.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Message {
+    pub fields: Vec<(String, Value)>,
+}
+
+impl Message {
+    /// First value for `key`.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// All values for `key` (repeated fields like `top`).
+    pub fn get_all<'a>(&'a self, key: &'a str) -> impl Iterator<Item = &'a Value> {
+        self.fields.iter().filter(move |(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn str_field(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    pub fn num_field(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_num)
+    }
+
+    pub fn usize_field(&self, key: &str) -> Option<usize> {
+        self.num_field(key).map(|n| n as usize)
+    }
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+}
+
+#[derive(Debug, PartialEq)]
+enum Tok {
+    Ident(String),
+    Str(String),
+    Num(f64),
+    Colon,
+    LBrace,
+    RBrace,
+    Eof,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(src: &'a str) -> Self {
+        Lexer { src: src.as_bytes(), pos: 0, line: 1 }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.src.len() {
+            match self.src[self.pos] {
+                b'\n' => {
+                    self.line += 1;
+                    self.pos += 1;
+                }
+                b' ' | b'\t' | b'\r' => self.pos += 1,
+                b'#' => {
+                    while self.pos < self.src.len() && self.src[self.pos] != b'\n' {
+                        self.pos += 1;
+                    }
+                }
+                _ => break,
+            }
+        }
+    }
+
+    fn next(&mut self) -> Result<Tok> {
+        self.skip_ws();
+        if self.pos >= self.src.len() {
+            return Ok(Tok::Eof);
+        }
+        let c = self.src[self.pos];
+        match c {
+            b':' => {
+                self.pos += 1;
+                Ok(Tok::Colon)
+            }
+            b'{' => {
+                self.pos += 1;
+                Ok(Tok::LBrace)
+            }
+            b'}' => {
+                self.pos += 1;
+                Ok(Tok::RBrace)
+            }
+            b'"' => {
+                self.pos += 1;
+                let start = self.pos;
+                while self.pos < self.src.len() && self.src[self.pos] != b'"' {
+                    self.pos += 1;
+                }
+                if self.pos >= self.src.len() {
+                    bail!("unterminated string at line {}", self.line);
+                }
+                let s = std::str::from_utf8(&self.src[start..self.pos])?.to_string();
+                self.pos += 1;
+                Ok(Tok::Str(s))
+            }
+            b'-' | b'+' | b'0'..=b'9' | b'.' => {
+                let start = self.pos;
+                self.pos += 1;
+                while self.pos < self.src.len()
+                    && matches!(self.src[self.pos],
+                                b'0'..=b'9' | b'.' | b'e' | b'E' | b'-' | b'+')
+                {
+                    self.pos += 1;
+                }
+                let s = std::str::from_utf8(&self.src[start..self.pos])?;
+                Ok(Tok::Num(s.parse().with_context(|| {
+                    format!("bad number '{s}' at line {}", self.line)
+                })?))
+            }
+            _ if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = self.pos;
+                while self.pos < self.src.len()
+                    && (self.src[self.pos].is_ascii_alphanumeric()
+                        || self.src[self.pos] == b'_')
+                {
+                    self.pos += 1;
+                }
+                Ok(Tok::Ident(
+                    std::str::from_utf8(&self.src[start..self.pos])?.to_string(),
+                ))
+            }
+            _ => bail!("unexpected character '{}' at line {}", c as char, self.line),
+        }
+    }
+}
+
+fn parse_message(lx: &mut Lexer<'_>, top_level: bool) -> Result<Message> {
+    let mut msg = Message::default();
+    loop {
+        let tok = lx.next()?;
+        match tok {
+            Tok::Eof => {
+                if !top_level {
+                    bail!("unexpected EOF inside block at line {}", lx.line);
+                }
+                return Ok(msg);
+            }
+            Tok::RBrace => {
+                if top_level {
+                    bail!("unmatched '}}' at line {}", lx.line);
+                }
+                return Ok(msg);
+            }
+            Tok::Ident(key) => {
+                let next = lx.next()?;
+                match next {
+                    Tok::Colon => {
+                        let val = match lx.next()? {
+                            Tok::Str(s) => Value::Str(s),
+                            Tok::Num(n) => Value::Num(n),
+                            Tok::Ident(w) if w == "true" => Value::Bool(true),
+                            Tok::Ident(w) if w == "false" => Value::Bool(false),
+                            // bare enum identifiers (e.g. `pool: MAX`)
+                            Tok::Ident(w) => Value::Str(w),
+                            other => bail!(
+                                "expected value after '{key}:' at line {}, got {other:?}",
+                                lx.line
+                            ),
+                        };
+                        msg.fields.push((key, val));
+                    }
+                    Tok::LBrace => {
+                        let inner = parse_message(lx, false)?;
+                        msg.fields.push((key, Value::Msg(inner)));
+                    }
+                    other => bail!(
+                        "expected ':' or '{{' after '{key}' at line {}, got {other:?}",
+                        lx.line
+                    ),
+                }
+            }
+            other => bail!("unexpected token {other:?} at line {}", lx.line),
+        }
+    }
+}
+
+/// Parse protobuf-text into a [`Message`].
+pub fn parse(src: &str) -> Result<Message> {
+    parse_message(&mut Lexer::new(src), true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_strings() {
+        let m = parse(r#"name: "lenet" base_lr: 0.01 max_iter: 300 debug: true"#).unwrap();
+        assert_eq!(m.str_field("name"), Some("lenet"));
+        assert_eq!(m.num_field("base_lr"), Some(0.01));
+        assert_eq!(m.usize_field("max_iter"), Some(300));
+        assert_eq!(m.get("debug"), Some(&Value::Bool(true)));
+    }
+
+    #[test]
+    fn nested_and_repeated() {
+        let m = parse(
+            r#"
+            layer { name: "a" top: "x" top: "y" }
+            layer { name: "b" bottom: "x" }
+            "#,
+        )
+        .unwrap();
+        let layers: Vec<_> = m.get_all("layer").collect();
+        assert_eq!(layers.len(), 2);
+        let a = layers[0].as_msg().unwrap();
+        let tops: Vec<_> = a.get_all("top").filter_map(Value::as_str).collect();
+        assert_eq!(tops, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn comments_ignored() {
+        let m = parse("# header\nname: \"x\" # trailing\n").unwrap();
+        assert_eq!(m.str_field("name"), Some("x"));
+    }
+
+    #[test]
+    fn bare_enum_identifier() {
+        let m = parse("pool: MAX").unwrap();
+        assert_eq!(m.str_field("pool"), Some("MAX"));
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(parse("layer {").is_err());
+        assert!(parse("}").is_err());
+        assert!(parse("x: @").is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Built-in net/solver definitions — the two networks of the paper's
+//! evaluation (§4.2), transcribed from Caffe's examples/mnist and
+//! examples/cifar10 prototxts with the layer counts the paper quotes:
+//! LeNet-MNIST = 2 conv + 2 pool + 2 ip; CIFAR10-quick = 3 conv + 3 pool +
+//! 2 ip, plus SoftmaxWithLoss, Accuracy and ReLU in both.
+
+/// LeNet for (synthetic) MNIST, Caffe examples/mnist/lenet_train_test.
+pub const LENET_MNIST: &str = r#"
+name: "lenet-mnist"
+layer {
+  name: "data"
+  type: "Data"
+  top: "data"
+  top: "label"
+  data_param { source: "synthetic-mnist" batch_size: 64 }
+}
+layer {
+  name: "conv1"
+  type: "Convolution"
+  bottom: "data"
+  top: "conv1"
+  convolution_param { num_output: 20 kernel_size: 5 stride: 1 }
+}
+layer {
+  name: "pool1"
+  type: "Pooling"
+  bottom: "conv1"
+  top: "pool1"
+  pooling_param { pool: MAX kernel_size: 2 stride: 2 }
+}
+layer {
+  name: "conv2"
+  type: "Convolution"
+  bottom: "pool1"
+  top: "conv2"
+  convolution_param { num_output: 50 kernel_size: 5 stride: 1 }
+}
+layer {
+  name: "pool2"
+  type: "Pooling"
+  bottom: "conv2"
+  top: "pool2"
+  pooling_param { pool: MAX kernel_size: 2 stride: 2 }
+}
+layer {
+  name: "ip1"
+  type: "InnerProduct"
+  bottom: "pool2"
+  top: "ip1"
+  inner_product_param { num_output: 500 }
+}
+layer {
+  name: "relu1"
+  type: "ReLU"
+  bottom: "ip1"
+  top: "relu1"
+}
+layer {
+  name: "ip2"
+  type: "InnerProduct"
+  bottom: "relu1"
+  top: "ip2"
+  inner_product_param { num_output: 10 }
+}
+layer {
+  name: "loss"
+  type: "SoftmaxWithLoss"
+  bottom: "ip2"
+  bottom: "label"
+  top: "loss"
+}
+layer {
+  name: "accuracy"
+  type: "Accuracy"
+  bottom: "ip2"
+  bottom: "label"
+  top: "accuracy"
+}
+"#;
+
+/// cifar10_quick, Caffe examples/cifar10.
+pub const CIFAR10_QUICK: &str = r#"
+name: "cifar10-quick"
+layer {
+  name: "data"
+  type: "Data"
+  top: "data"
+  top: "label"
+  data_param { source: "synthetic-cifar10" batch_size: 64 }
+}
+layer {
+  name: "conv1"
+  type: "Convolution"
+  bottom: "data"
+  top: "conv1"
+  convolution_param { num_output: 32 kernel_size: 5 stride: 1 pad: 2 }
+}
+layer {
+  name: "pool1"
+  type: "Pooling"
+  bottom: "conv1"
+  top: "pool1"
+  pooling_param { pool: MAX kernel_size: 3 stride: 2 }
+}
+layer {
+  name: "relu1"
+  type: "ReLU"
+  bottom: "pool1"
+  top: "relu1"
+}
+layer {
+  name: "conv2"
+  type: "Convolution"
+  bottom: "relu1"
+  top: "conv2"
+  convolution_param { num_output: 32 kernel_size: 5 stride: 1 pad: 2 }
+}
+layer {
+  name: "relu2"
+  type: "ReLU"
+  bottom: "conv2"
+  top: "relu2"
+}
+layer {
+  name: "pool2"
+  type: "Pooling"
+  bottom: "relu2"
+  top: "pool2"
+  pooling_param { pool: AVE kernel_size: 3 stride: 2 }
+}
+layer {
+  name: "conv3"
+  type: "Convolution"
+  bottom: "pool2"
+  top: "conv3"
+  convolution_param { num_output: 64 kernel_size: 5 stride: 1 pad: 2 }
+}
+layer {
+  name: "relu3"
+  type: "ReLU"
+  bottom: "conv3"
+  top: "relu3"
+}
+layer {
+  name: "pool3"
+  type: "Pooling"
+  bottom: "relu3"
+  top: "pool3"
+  pooling_param { pool: AVE kernel_size: 3 stride: 2 }
+}
+layer {
+  name: "ip1"
+  type: "InnerProduct"
+  bottom: "pool3"
+  top: "ip1"
+  inner_product_param { num_output: 64 }
+}
+layer {
+  name: "ip2"
+  type: "InnerProduct"
+  bottom: "ip1"
+  top: "ip2"
+  inner_product_param { num_output: 10 }
+}
+layer {
+  name: "loss"
+  type: "SoftmaxWithLoss"
+  bottom: "ip2"
+  bottom: "label"
+  top: "loss"
+}
+layer {
+  name: "accuracy"
+  type: "Accuracy"
+  bottom: "ip2"
+  bottom: "label"
+  top: "accuracy"
+}
+"#;
+
+/// LeNet solver (Caffe examples/mnist/lenet_solver.prototxt, shortened run).
+pub const LENET_SOLVER: &str = r#"
+net: "lenet-mnist"
+base_lr: 0.01
+momentum: 0.9
+weight_decay: 0.0005
+lr_policy: "inv"
+gamma: 0.0001
+power: 0.75
+display: 50
+max_iter: 300
+test_interval: 100
+test_iter: 4
+snapshot: 0
+snapshot_prefix: "snapshots/lenet"
+random_seed: 1
+"#;
+
+/// cifar10_quick solver (fixed lr phase 1).
+pub const CIFAR_SOLVER: &str = r#"
+net: "cifar10-quick"
+base_lr: 0.001
+momentum: 0.9
+weight_decay: 0.004
+lr_policy: "fixed"
+display: 50
+max_iter: 200
+test_interval: 100
+test_iter: 4
+snapshot: 0
+snapshot_prefix: "snapshots/cifar"
+random_seed: 1
+"#;
+
+/// Look up a preset net by name.
+pub fn net_by_name(name: &str) -> Option<&'static str> {
+    match name {
+        "lenet-mnist" | "mnist" => Some(LENET_MNIST),
+        "cifar10-quick" | "cifar" => Some(CIFAR10_QUICK),
+        _ => None,
+    }
+}
+
+/// Look up a preset solver by net name.
+pub fn solver_by_name(name: &str) -> Option<&'static str> {
+    match name {
+        "lenet-mnist" | "mnist" => Some(LENET_SOLVER),
+        "cifar10-quick" | "cifar" => Some(CIFAR_SOLVER),
+        _ => None,
+    }
+}

@@ -1,0 +1,279 @@
+//! The execution engine: compile-on-demand cache of PJRT executables plus
+//! typed host<->device value marshalling with byte accounting.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{IntTensor, Shape, Tensor};
+
+use super::manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// A host value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+    /// f32 scalar (e.g. the learning rate input of the fused step).
+    Scalar(f32),
+}
+
+impl Value {
+    pub fn bytes(&self) -> usize {
+        match self {
+            Value::F32(t) => t.len() * 4,
+            Value::I32(t) => t.len() * 4,
+            Value::Scalar(_) => 4,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            other => bail!("expected f32 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            other => bail!("expected f32 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<IntTensor> {
+        match self {
+            Value::I32(t) => Ok(t),
+            other => bail!("expected i32 tensor, got {other:?}"),
+        }
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        match self {
+            Value::F32(t) => spec.dtype == DType::F32 && t.shape().dims() == spec.dims,
+            Value::I32(t) => spec.dtype == DType::I32 && t.shape().dims() == spec.dims,
+            Value::Scalar(_) => spec.dtype == DType::F32 && spec.dims.is_empty(),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Value::F32(t) => {
+                let lit = xla::Literal::vec1(t.as_slice());
+                if t.shape().ndim() == 1 {
+                    lit
+                } else {
+                    lit.reshape(&t.shape().dims_i64())?
+                }
+            }
+            Value::I32(t) => {
+                let lit = xla::Literal::vec1(t.as_slice());
+                if t.shape().ndim() == 1 {
+                    lit
+                } else {
+                    lit.reshape(&t.shape().dims_i64())?
+                }
+            }
+            Value::Scalar(v) => xla::Literal::scalar(*v),
+        })
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Value> {
+        let shape = Shape::new(&spec.dims);
+        Ok(match spec.dtype {
+            DType::F32 => Value::F32(Tensor::from_vec(shape, lit.to_vec::<f32>()?)),
+            DType::I32 => Value::I32(IntTensor::from_vec(shape, lit.to_vec::<i32>()?)),
+        })
+    }
+}
+
+/// Cumulative transfer statistics (physical host<->device traffic).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransferStats {
+    pub h2d_count: u64,
+    pub h2d_bytes: u64,
+    pub d2h_count: u64,
+    pub d2h_bytes: u64,
+    pub executions: u64,
+}
+
+/// PJRT engine: one CPU client + a compile cache over the manifest catalog.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: std::path::PathBuf,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<TransferStats>,
+    /// Wall time spent inside PJRT execute calls.
+    exec_time: RefCell<std::time::Duration>,
+}
+
+impl Engine {
+    /// Open the engine over an artifacts directory (`manifest.txt` inside).
+    pub fn open(dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(&dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(TransferStats::default()),
+            exec_time: RefCell::new(std::time::Duration::ZERO),
+        })
+    }
+
+    /// Open over the default artifacts directory.
+    pub fn open_default() -> Result<Engine> {
+        Self::open(&super::artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest (run `make artifacts`)"))
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.spec(name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("PJRT compile of '{name}'"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (warmup; keeps compile time out of
+    /// the benchmarks).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with host `args`; returns host outputs.
+    ///
+    /// Every call pays one H2D transfer per argument and one D2H for the
+    /// result tuple — the physical cost of hopping between the native and
+    /// PHAST domains that the paper's §4.3 analyses.
+    pub fn run(&self, name: &str, args: &[Value]) -> Result<Vec<Value>> {
+        let spec = self.spec(name)?.clone();
+        if args.len() != spec.ins.len() {
+            bail!("'{name}' expects {} args, got {}", spec.ins.len(), args.len());
+        }
+        for (i, (a, s)) in args.iter().zip(&spec.ins).enumerate() {
+            if !a.matches(s) {
+                bail!("'{name}' arg {i}: value does not match spec {s:?}");
+            }
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.h2d_count += args.len() as u64;
+            st.h2d_bytes += args.iter().map(|a| a.bytes() as u64).sum::<u64>();
+            st.executions += 1;
+        }
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        *self.exec_time.borrow_mut() += t0.elapsed();
+        let mut tuple = result.to_tuple()?;
+        if tuple.len() != spec.outs.len() {
+            bail!("'{name}' returned {} outputs, manifest says {}", tuple.len(), spec.outs.len());
+        }
+        {
+            let mut st = self.stats.borrow_mut();
+            st.d2h_count += tuple.len() as u64;
+            st.d2h_bytes += spec.outs.iter().map(|o| o.bytes() as u64).sum::<u64>();
+        }
+        let mut outs = Vec::with_capacity(tuple.len());
+        for (lit, ospec) in tuple.iter_mut().zip(&spec.outs) {
+            outs.push(Value::from_literal(lit, ospec)?);
+        }
+        Ok(outs)
+    }
+
+    pub fn stats(&self) -> TransferStats {
+        *self.stats.borrow()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = TransferStats::default();
+        *self.exec_time.borrow_mut() = std::time::Duration::ZERO;
+    }
+
+    pub fn exec_time(&self) -> std::time::Duration {
+        *self.exec_time.borrow()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests require `make artifacts`; they are skipped (not failed)
+    /// when the catalog is absent so `cargo test` works pre-build.
+    fn engine() -> Option<Engine> {
+        Engine::open_default().ok()
+    }
+
+    #[test]
+    fn relu_artifact_round_trip() {
+        let Some(eng) = engine() else { return };
+        let spec = eng.spec("mnist.relu1.fwd").unwrap().clone();
+        let n = spec.ins[0].count();
+        let xs: Vec<f32> = (0..n).map(|i| i as f32 - (n / 2) as f32).collect();
+        let x = Tensor::from_vec(Shape::new(&spec.ins[0].dims), xs.clone());
+        let out = eng.run("mnist.relu1.fwd", &[Value::F32(x)]).unwrap();
+        let y = out[0].as_f32().unwrap();
+        for (xi, yi) in xs.iter().zip(y.as_slice()) {
+            assert_eq!(*yi, xi.max(0.0));
+        }
+        let st = eng.stats();
+        assert_eq!(st.executions, 1);
+        assert_eq!(st.h2d_bytes, (n * 4) as u64);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(eng) = engine() else { return };
+        let bad = Tensor::zeros(Shape::new(&[2, 2]));
+        assert!(eng.run("mnist.relu1.fwd", &[Value::F32(bad)]).is_err());
+        assert!(eng.run("mnist.relu1.fwd", &[]).is_err());
+        assert!(eng.run("no.such.artifact", &[]).is_err());
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(eng) = engine() else { return };
+        let a = eng.executable("mnist.accuracy.fwd").unwrap();
+        let b = eng.executable("mnist.accuracy.fwd").unwrap();
+        assert!(std::rc::Rc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,199 @@
+//! Parser for `artifacts/manifest.txt` — the contract between the Python
+//! compile path and the Rust runtime.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of an artifact argument/result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unknown dtype '{other}' in manifest"),
+        })
+    }
+}
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.count() * 4
+    }
+}
+
+/// One AOT-compiled executable: its file and I/O signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub ins: Vec<TensorSpec>,
+    pub outs: Vec<TensorSpec>,
+}
+
+/// The whole artifact catalog.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    specs: HashMap<String, ArtifactSpec>,
+    order: Vec<String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let kw = parts.next().unwrap();
+            let ctx = || format!("manifest line {}", lineno + 1);
+            match kw {
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("{}: nested artifact", ctx());
+                    }
+                    cur = Some(ArtifactSpec {
+                        name: parts.next().with_context(ctx)?.to_string(),
+                        file: String::new(),
+                        ins: vec![],
+                        outs: vec![],
+                    });
+                }
+                "file" => {
+                    cur.as_mut().with_context(ctx)?.file =
+                        parts.next().with_context(ctx)?.to_string();
+                }
+                "in" | "out" => {
+                    let dtype = DType::parse(parts.next().with_context(ctx)?)?;
+                    let dims_str = parts.next().with_context(ctx)?;
+                    let dims = if dims_str == "scalar" {
+                        vec![]
+                    } else {
+                        dims_str
+                            .split(',')
+                            .map(|d| d.parse::<usize>().map_err(anyhow::Error::from))
+                            .collect::<Result<Vec<_>>>()
+                            .with_context(ctx)?
+                    };
+                    let spec = TensorSpec { dtype, dims };
+                    let art = cur.as_mut().with_context(ctx)?;
+                    if kw == "in" {
+                        art.ins.push(spec);
+                    } else {
+                        art.outs.push(spec);
+                    }
+                }
+                "end" => {
+                    let art = cur.take().with_context(ctx)?;
+                    if art.file.is_empty() {
+                        bail!("{}: artifact '{}' missing file", ctx(), art.name);
+                    }
+                    m.order.push(art.name.clone());
+                    m.specs.insert(art.name.clone(), art);
+                }
+                other => bail!("{}: unknown keyword '{other}'", ctx()),
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest truncated (missing final 'end')");
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.order.iter().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+artifact mnist.conv1.fwd
+file mnist.conv1.fwd.hlo.txt
+in f32 64,1,28,28
+in f32 20,1,5,5
+in f32 20
+out f32 64,20,24,24
+end
+artifact mnist.step
+file mnist.step.hlo.txt
+in f32 64,1,28,28
+in i32 64
+in f32 scalar
+out f32 1
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let c = m.get("mnist.conv1.fwd").unwrap();
+        assert_eq!(c.ins.len(), 3);
+        assert_eq!(c.ins[0].dims, vec![64, 1, 28, 28]);
+        assert_eq!(c.outs[0].bytes(), 64 * 20 * 24 * 24 * 4);
+        let s = m.get("mnist.step").unwrap();
+        assert_eq!(s.ins[1].dtype, DType::I32);
+        assert_eq!(s.ins[2].dims, Vec::<usize>::new());
+        assert_eq!(s.ins[2].count(), 1);
+    }
+
+    #[test]
+    fn rejects_truncation_and_garbage() {
+        assert!(Manifest::parse("artifact x\nfile f\n").is_err());
+        assert!(Manifest::parse("bogus line\n").is_err());
+        assert!(Manifest::parse("artifact x\nin f64 3\nend\n").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let path = crate::runtime::artifacts_dir().join("manifest.txt");
+        if let Ok(m) = Manifest::load(&path) {
+            assert!(m.get("mnist.step").is_some());
+            assert!(m.get("cifar.step").is_some());
+            assert!(m.len() >= 40, "expected full catalog, got {}", m.len());
+        }
+    }
+}

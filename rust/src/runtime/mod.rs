@@ -1,0 +1,24 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them through the `xla` crate's PJRT
+//! CPU client.  This is the only place the crate touches XLA; Python never
+//! runs here.
+//!
+//! Interchange is HLO *text* (see aot.py's module docs for why the
+//! serialized-proto path is a dead end with xla_extension 0.5.1).
+
+mod manifest;
+mod engine;
+
+pub use engine::{Engine, Value};
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory, relative to the crate root (overridable via
+/// the `PHAST_ARTIFACTS` environment variable).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("PHAST_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,245 @@
+//! SGD solver — Caffe's `SGDSolver`: momentum, weight decay, lr policies,
+//! test intervals, snapshots.  Drives either the native net or (through
+//! `phast::PortedNet`) the partially/fully ported ones.
+
+mod snapshot;
+
+pub use snapshot::{load_snapshot, save_snapshot};
+
+use anyhow::Result;
+
+use crate::net::Net;
+use crate::ops;
+use crate::proto::SolverConfig;
+
+/// Training history entry.
+#[derive(Clone, Copy, Debug)]
+pub struct IterStat {
+    pub iter: usize,
+    pub loss: f32,
+    pub lr: f32,
+}
+
+/// Caffe SGDSolver over a native [`Net`].
+pub struct Solver {
+    pub config: SolverConfig,
+    pub net: Net,
+    /// Momentum buffers, one per parameter blob.
+    history: Vec<Vec<f32>>,
+    iter: usize,
+    pub log: Vec<IterStat>,
+}
+
+impl Solver {
+    pub fn new(config: SolverConfig, mut net: Net) -> Solver {
+        let history = net
+            .params_mut()
+            .iter()
+            .map(|p| vec![0.0f32; p.count()])
+            .collect();
+        Solver { config, net, history, iter: 0, log: vec![] }
+    }
+
+    pub fn iter(&self) -> usize {
+        self.iter
+    }
+
+    /// Current learning rate under the configured policy.
+    pub fn lr(&self) -> f32 {
+        self.config.lr_policy.lr_at(self.config.base_lr, self.iter)
+    }
+
+    /// One iteration: forward, backward, SGD update.  Returns the loss.
+    pub fn step(&mut self) -> Result<f32> {
+        self.net.zero_param_diffs();
+        let loss = self.net.forward()?.unwrap_or(0.0);
+        self.net.backward()?;
+        self.apply_update();
+        let lr = self.lr();
+        self.log.push(IterStat { iter: self.iter, loss, lr });
+        self.iter += 1;
+        Ok(loss)
+    }
+
+    fn apply_update(&mut self) {
+        let lr = self.lr();
+        let momentum = self.config.momentum;
+        let decay = self.config.weight_decay;
+        apply_sgd_update(self.net.params_mut(), &mut self.history, lr, momentum, decay);
+    }
+
+    /// Run `n` iterations, logging every `display` steps via `log::info`.
+    pub fn solve(&mut self, n: usize) -> Result<()> {
+        for _ in 0..n {
+            let loss = self.step()?;
+            if self.config.display > 0 && self.iter % self.config.display == 0 {
+                log::info!("iter {} loss {:.4} lr {:.5}", self.iter, loss, self.lr());
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean loss/accuracy over `test_iter` fresh batches (Caffe TEST phase).
+    pub fn test(&mut self, test_iter: usize) -> Result<(f32, f32)> {
+        let mut loss_acc = 0.0f32;
+        let mut acc_acc = 0.0f32;
+        for _ in 0..test_iter {
+            let loss = self.net.forward()?.unwrap_or(0.0);
+            loss_acc += loss;
+            if let Some(b) = self.net.blob("accuracy") {
+                acc_acc += b.data().as_slice()[0];
+            }
+        }
+        Ok((loss_acc / test_iter as f32, acc_acc / test_iter as f32))
+    }
+
+    /// Direct access to momentum history (snapshots).
+    pub fn history(&self) -> &[Vec<f32>] {
+        &self.history
+    }
+
+    pub fn history_mut(&mut self) -> &mut Vec<Vec<f32>> {
+        &mut self.history
+    }
+
+    pub fn set_iter(&mut self, it: usize) {
+        self.iter = it;
+    }
+}
+
+/// Caffe's momentum-SGD update, shared by the native [`Solver`] and the
+/// ported solver in `phast::`:
+///   v = momentum * v + lr * (grad + weight_decay * w);  w -= v
+/// (identical to the fused artifact's update — see model.make_step_fn).
+pub fn apply_sgd_update(
+    params: Vec<&mut crate::tensor::Blob>,
+    history: &mut [Vec<f32>],
+    lr: f32,
+    momentum: f32,
+    decay: f32,
+) {
+    for (p, hist) in params.into_iter().zip(history.iter_mut()) {
+        let n = p.count();
+        for i in 0..n {
+            let g = p.diff().as_slice()[i] + decay * p.data().as_slice()[i];
+            let v = momentum * hist[i] + lr * g;
+            hist[i] = v;
+            p.data_mut().as_mut_slice()[i] -= v;
+        }
+    }
+}
+
+/// Slice-level SGD update (testable without blobs): same math as
+/// [`apply_sgd_update`] for one parameter.
+pub fn apply_sgd_update_slices(
+    w: &mut [f32],
+    g: &[f32],
+    hist: &mut [f32],
+    lr: f32,
+    momentum: f32,
+    decay: f32,
+) {
+    for i in 0..w.len() {
+        let grad = g[i] + decay * w[i];
+        let v = momentum * hist[i] + lr * grad;
+        hist[i] = v;
+        w[i] -= v;
+    }
+}
+
+/// Smoothed loss trace (Caffe-style display smoothing) for reports.
+pub fn smooth_losses(log: &[IterStat], window: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(log.len());
+    for i in 0..log.len() {
+        let lo = i.saturating_sub(window - 1);
+        let s: f32 = log[lo..=i].iter().map(|e| e.loss).sum();
+        out.push(s / (i - lo + 1) as f32);
+    }
+    out
+}
+
+/// Exercise the solver math without a net: one manual SGD step.
+pub fn sgd_update_reference(
+    w: &mut [f32],
+    g: &[f32],
+    hist: &mut [f32],
+    lr: f32,
+    momentum: f32,
+    decay: f32,
+) {
+    for i in 0..w.len() {
+        let grad = g[i] + decay * w[i];
+        let v = momentum * hist[i] + lr * grad;
+        hist[i] = v;
+        w[i] -= v;
+    }
+    let _ = ops::axpy; // keep ops linked for doc example parity
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Net;
+    use crate::proto::{presets, LrPolicy, NetConfig, SolverConfig};
+
+    fn mini_solver(max_iter: usize) -> Solver {
+        let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+        cfg.max_iter = max_iter;
+        cfg.display = 0;
+        let net = Net::from_config(
+            NetConfig::from_text(presets::LENET_MNIST).unwrap(),
+            1,
+        )
+        .unwrap();
+        Solver::new(cfg, net)
+    }
+
+    #[test]
+    fn loss_decreases_over_training() {
+        let mut s = mini_solver(30);
+        let mut losses = vec![];
+        for _ in 0..30 {
+            losses.push(s.step().unwrap());
+        }
+        let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+        let tail: f32 = losses[25..].iter().sum::<f32>() / 5.0;
+        assert!(
+            tail < head,
+            "loss did not decrease: head {head:.3} tail {tail:.3}"
+        );
+    }
+
+    #[test]
+    fn lr_policy_inv_decays() {
+        let s = mini_solver(1);
+        let lr0 = s.config.lr_policy.lr_at(s.config.base_lr, 0);
+        let lr1k = s.config.lr_policy.lr_at(s.config.base_lr, 1000);
+        assert!(lr1k < lr0);
+    }
+
+    #[test]
+    fn sgd_reference_matches_momentum_math() {
+        let mut w = vec![1.0f32];
+        let mut h = vec![0.0f32];
+        sgd_update_reference(&mut w, &[0.5], &mut h, 0.1, 0.9, 0.0);
+        assert!((w[0] - 0.95).abs() < 1e-6);
+        assert!((h[0] - 0.05).abs() < 1e-6);
+        sgd_update_reference(&mut w, &[0.5], &mut h, 0.1, 0.9, 0.0);
+        // v = 0.9*0.05 + 0.1*0.5 = 0.095
+        assert!((h[0] - 0.095).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fixed_policy_is_constant() {
+        assert_eq!(LrPolicy::Fixed.lr_at(0.3, 12345), 0.3);
+    }
+
+    #[test]
+    fn smoothing_works() {
+        let log: Vec<IterStat> = (0..4)
+            .map(|i| IterStat { iter: i, loss: i as f32, lr: 0.1 })
+            .collect();
+        let sm = smooth_losses(&log, 2);
+        assert_eq!(sm, vec![0.0, 0.5, 1.5, 2.5]);
+    }
+}

@@ -1,0 +1,175 @@
+//! Snapshot save/restore — Caffe's `.caffemodel`/`.solverstate` analog in
+//! one little-endian binary file: params + momentum history + iteration.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Solver;
+
+const MAGIC: &[u8; 4] = b"PCSS";
+const VERSION: u32 = 1;
+
+/// Serialize solver state (params, momentum, iter) to `path`.
+pub fn save_snapshot(solver: &mut Solver, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let iter = solver.iter();
+    let hist_flat: Vec<Vec<f32>> = solver.history().to_vec();
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(iter as u64).to_le_bytes())?;
+    let params = solver.net.params_mut();
+    w.write_all(&(params.len() as u32).to_le_bytes())?;
+    for (p, h) in params.iter().zip(&hist_flat) {
+        let name = p.name().as_bytes();
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name)?;
+        w.write_all(&(p.count() as u64).to_le_bytes())?;
+        for v in p.data().as_slice() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for v in h {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Restore solver state saved by [`save_snapshot`].  Parameter names and
+/// sizes must match the current net.
+pub fn load_snapshot(solver: &mut Solver, path: &Path) -> Result<()> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut m4 = [0u8; 4];
+    r.read_exact(&mut m4)?;
+    if &m4 != MAGIC {
+        bail!("{path:?} is not a phast-caffe snapshot");
+    }
+    r.read_exact(&mut m4)?;
+    if u32::from_le_bytes(m4) != VERSION {
+        bail!("unsupported snapshot version");
+    }
+    let mut u8buf = [0u8; 8];
+    r.read_exact(&mut u8buf)?;
+    let iter = u64::from_le_bytes(u8buf) as usize;
+    r.read_exact(&mut m4)?;
+    let nparams = u32::from_le_bytes(m4) as usize;
+
+    // Collect into temporaries first to avoid holding borrows.
+    let mut entries: Vec<(String, Vec<f32>, Vec<f32>)> = Vec::with_capacity(nparams);
+    for _ in 0..nparams {
+        r.read_exact(&mut m4)?;
+        let nlen = u32::from_le_bytes(m4) as usize;
+        let mut nbuf = vec![0u8; nlen];
+        r.read_exact(&mut nbuf)?;
+        let name = String::from_utf8(nbuf)?;
+        r.read_exact(&mut u8buf)?;
+        let count = u64::from_le_bytes(u8buf) as usize;
+        let mut data = vec![0f32; count];
+        let mut hist = vec![0f32; count];
+        let mut fbuf = vec![0u8; count * 4];
+        r.read_exact(&mut fbuf)?;
+        for (d, ch) in data.iter_mut().zip(fbuf.chunks_exact(4)) {
+            *d = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        r.read_exact(&mut fbuf)?;
+        for (d, ch) in hist.iter_mut().zip(fbuf.chunks_exact(4)) {
+            *d = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        entries.push((name, data, hist));
+    }
+
+    {
+        let params = solver.net.params_mut();
+        if params.len() != entries.len() {
+            bail!(
+                "snapshot has {} params, net has {}",
+                entries.len(),
+                params.len()
+            );
+        }
+        for (p, (name, data, _)) in params.into_iter().zip(&entries) {
+            if p.name() != name {
+                bail!("param name mismatch: snapshot '{}' vs net '{}'", name, p.name());
+            }
+            if p.count() != data.len() {
+                bail!("param '{}' size mismatch", name);
+            }
+            p.data_mut().as_mut_slice().copy_from_slice(data);
+        }
+    }
+    {
+        let hist = solver.history_mut();
+        for (h, (_, _, hdata)) in hist.iter_mut().zip(&entries) {
+            h.copy_from_slice(hdata);
+        }
+    }
+    solver.set_iter(iter);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Net;
+    use crate::proto::{presets, NetConfig, SolverConfig};
+
+    fn solver() -> Solver {
+        let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+        cfg.display = 0;
+        let net =
+            Net::from_config(NetConfig::from_text(presets::LENET_MNIST).unwrap(), 1).unwrap();
+        Solver::new(cfg, net)
+    }
+
+    #[test]
+    fn snapshot_roundtrip_resumes_identically() {
+        let dir = std::env::temp_dir().join("phast_caffe_snap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.pcss");
+
+        let mut a = solver();
+        for _ in 0..3 {
+            a.step().unwrap();
+        }
+        save_snapshot(&mut a, &path).unwrap();
+        let params_at_save: Vec<Vec<f32>> = a
+            .net
+            .params_mut()
+            .iter()
+            .map(|p| p.data().as_slice().to_vec())
+            .collect();
+        let hist_at_save = a.history().to_vec();
+        a.step().unwrap(); // mutate further; snapshot must be unaffected
+
+        let mut b = solver();
+        load_snapshot(&mut b, &path).unwrap();
+        assert_eq!(b.iter(), 3);
+        for (p, want) in b.net.params_mut().iter().zip(&params_at_save) {
+            assert_eq!(p.data().as_slice(), want.as_slice());
+        }
+        for (h, want) in b.history().iter().zip(&hist_at_save) {
+            assert_eq!(h, want);
+        }
+        // And training can resume.
+        let lb = b.step().unwrap();
+        assert!(lb.is_finite());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_foreign_file() {
+        let dir = std::env::temp_dir().join("phast_caffe_snap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bogus.pcss");
+        std::fs::write(&path, b"nope").unwrap();
+        let mut s = solver();
+        assert!(load_snapshot(&mut s, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,141 @@
+//! Caffe's `Blob`: a named container holding `data` and `diff`, plus the
+//! synchronization head state the PHAST domain machinery tracks.
+
+use super::{Shape, Tensor};
+
+/// Which copy of a blob is freshest — Caffe's `SyncedMemory::head()`.
+///
+/// In original Caffe this tracks host vs CUDA device; here "device" is the
+/// PHAST/PJRT domain.  Every transition *into* or *out of* `DeviceAhead`
+/// costs a transfer, and the paper's §4.3 argues those transfers (plus the
+/// layout conversion bolted onto each) dominate the partial-port slowdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncState {
+    /// Never touched a device.
+    HostOnly,
+    /// Host copy newer than device copy.
+    HostAhead,
+    /// Device copy newer than host copy.
+    DeviceAhead,
+    /// Both copies identical.
+    Synced,
+}
+
+/// Named data+diff pair (Caffe `Blob<float>`).
+#[derive(Clone, Debug)]
+pub struct Blob {
+    name: String,
+    data: Tensor,
+    diff: Tensor,
+    state: SyncState,
+}
+
+impl Blob {
+    pub fn new(name: impl Into<String>, shape: Shape) -> Self {
+        Blob {
+            name: name.into(),
+            data: Tensor::zeros(shape.clone()),
+            diff: Tensor::zeros(shape),
+            state: SyncState::HostOnly,
+        }
+    }
+
+    pub fn from_data(name: impl Into<String>, data: Tensor) -> Self {
+        let diff = Tensor::zeros(data.shape().clone());
+        Blob { name: name.into(), data, diff, state: SyncState::HostOnly }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn shape(&self) -> &Shape {
+        self.data.shape()
+    }
+
+    pub fn count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &Tensor {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut Tensor {
+        &mut self.data
+    }
+
+    pub fn diff(&self) -> &Tensor {
+        &self.diff
+    }
+
+    pub fn diff_mut(&mut self) -> &mut Tensor {
+        &mut self.diff
+    }
+
+    pub fn state(&self) -> SyncState {
+        self.state
+    }
+
+    pub fn set_state(&mut self, s: SyncState) {
+        self.state = s;
+    }
+
+    /// Caffe `Blob::Reshape` — keeps contents when the count is unchanged,
+    /// reallocates otherwise.
+    pub fn reshape(&mut self, shape: Shape) {
+        if shape.count() == self.data.len() {
+            self.data.reshape_in_place(shape.clone());
+            self.diff.reshape_in_place(shape);
+        } else {
+            self.data = Tensor::zeros(shape.clone());
+            self.diff = Tensor::zeros(shape);
+        }
+    }
+
+    /// `W -= lr * dW` is done by the solver; this is Caffe's `Blob::Update`
+    /// primitive `data -= diff`.
+    pub fn update(&mut self) {
+        for (d, g) in self.data.as_mut_slice().iter_mut().zip(self.diff.as_slice()) {
+            *d -= g;
+        }
+    }
+
+    /// Zero the gradient accumulator.
+    pub fn zero_diff(&mut self) {
+        self.diff.zero();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_blob_is_zeroed() {
+        let b = Blob::new("x", Shape::nchw(1, 2, 3, 4));
+        assert_eq!(b.count(), 24);
+        assert_eq!(b.data().sum(), 0.0);
+        assert_eq!(b.state(), SyncState::HostOnly);
+    }
+
+    #[test]
+    fn update_subtracts_diff() {
+        let mut b = Blob::new("w", Shape::new(&[3]));
+        b.data_mut().as_mut_slice().copy_from_slice(&[1.0, 2.0, 3.0]);
+        b.diff_mut().as_mut_slice().copy_from_slice(&[0.5, 0.5, 0.5]);
+        b.update();
+        assert_eq!(b.data().as_slice(), &[0.5, 1.5, 2.5]);
+    }
+
+    #[test]
+    fn reshape_same_count_preserves() {
+        let mut b = Blob::new("x", Shape::new(&[2, 3]));
+        b.data_mut().as_mut_slice()[0] = 7.0;
+        b.reshape(Shape::new(&[3, 2]));
+        assert_eq!(b.data().as_slice()[0], 7.0);
+        b.reshape(Shape::new(&[5]));
+        assert_eq!(b.count(), 5);
+        assert_eq!(b.data().sum(), 0.0);
+    }
+}

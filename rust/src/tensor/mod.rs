@@ -1,0 +1,197 @@
+//! Containers — the paper's first block category.
+//!
+//! [`Tensor`] is a dense row-major f32 array; [`Blob`] pairs the two vectors
+//! Caffe keeps per blob (`data` + `diff`); [`SyncState`] tracks which domain
+//! (host / PHAST device) holds the freshest copy, which is the substrate the
+//! transfer accounting of `phast::` builds on (paper §4.3).
+
+mod shape;
+mod blob;
+
+pub use shape::Shape;
+pub use blob::{Blob, SyncState};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: Shape) -> Self {
+        let n = shape.count();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Tensor filled with `v`.
+    pub fn full(shape: Shape, v: f32) -> Self {
+        let n = shape.count();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    /// Build from parts; `data.len()` must equal `shape.count()`.
+    pub fn from_vec(shape: Shape, data: Vec<f32>) -> Self {
+        assert_eq!(shape.count(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Reinterpret under a new shape with the same element count.
+    pub fn reshaped(mut self, shape: Shape) -> Self {
+        assert_eq!(shape.count(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Change this tensor's shape in place (must preserve element count —
+    /// Caffe's `Blob::Reshape` with equal count).
+    pub fn reshape_in_place(&mut self, shape: Shape) {
+        assert_eq!(shape.count(), self.data.len());
+        self.shape = shape;
+    }
+
+    /// Fill with zeros (Caffe `caffe_set(0)` between iterations).
+    pub fn zero(&mut self) {
+        self.data.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Sum of all elements.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// L2 norm of the data — handy for debugging/regression checks.
+    pub fn l2(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Maximum absolute difference vs another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Transpose a 2-D tensor (used at PHAST domain boundaries to convert
+    /// between the row-major ported containers and the column-major panels
+    /// the native OpenBLAS-style GeMM consumes — the layout-conversion cost
+    /// the paper singles out in §4.3).
+    pub fn transposed_2d(&self) -> Tensor {
+        assert_eq!(self.shape.ndim(), 2, "transpose needs a matrix");
+        let (r, c) = (self.shape.dim(0), self.shape.dim(1));
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::from_vec(Shape::new(&[c, r]), out)
+    }
+}
+
+/// Dense row-major i32 tensor (labels, pooling argmax phases).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    shape: Shape,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn zeros(shape: Shape) -> Self {
+        let n = shape.count();
+        IntTensor { shape, data: vec![0; n] }
+    }
+
+    pub fn from_vec(shape: Shape, data: Vec<i32>) -> Self {
+        assert_eq!(shape.count(), data.len());
+        IntTensor { shape, data }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_full() {
+        let t = Tensor::zeros(Shape::new(&[2, 3]));
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.sum(), 0.0);
+        let f = Tensor::full(Shape::new(&[4]), 2.5);
+        assert_eq!(f.sum(), 10.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(Shape::new(&[2, 3]), vec![1., 2., 3., 4., 5., 6.]);
+        let r = t.clone().reshaped(Shape::new(&[3, 2]));
+        assert_eq!(r.as_slice(), t.as_slice());
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_count_mismatch_panics() {
+        let t = Tensor::zeros(Shape::new(&[2, 3]));
+        let _ = t.reshaped(Shape::new(&[7]));
+    }
+
+    #[test]
+    fn transpose_2d_roundtrip() {
+        let t = Tensor::from_vec(Shape::new(&[2, 3]), vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transposed_2d();
+        assert_eq!(tt.shape().dims(), &[3, 2]);
+        assert_eq!(tt.as_slice(), &[1., 4., 2., 5., 3., 6.]);
+        assert_eq!(tt.transposed_2d(), t);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::from_vec(Shape::new(&[3]), vec![1., 2., 3.]);
+        let b = Tensor::from_vec(Shape::new(&[3]), vec![1., 2.5, 2.]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

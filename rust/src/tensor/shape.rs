@@ -1,0 +1,112 @@
+//! N-dimensional shape with Caffe's canonical NCHW conventions.
+
+use std::fmt;
+
+/// Row-major tensor shape (outermost dimension first).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Shape {
+    dims: Vec<usize>,
+}
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        Shape { dims: dims.to_vec() }
+    }
+
+    /// Caffe's canonical 4-D blob shape.
+    pub fn nchw(n: usize, c: usize, h: usize, w: usize) -> Self {
+        Shape::new(&[n, c, h, w])
+    }
+
+    pub fn scalar() -> Self {
+        Shape { dims: vec![] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.dims[i]
+    }
+
+    /// Total element count (1 for a scalar).
+    pub fn count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Element count from axis `from` to the end (Caffe `count(axis)`).
+    pub fn count_from(&self, from: usize) -> usize {
+        self.dims[from..].iter().product()
+    }
+
+    /// Caffe accessors with the usual 4-D defaults.
+    pub fn num(&self) -> usize {
+        *self.dims.first().unwrap_or(&1)
+    }
+
+    pub fn channels(&self) -> usize {
+        *self.dims.get(1).unwrap_or(&1)
+    }
+
+    pub fn height(&self) -> usize {
+        *self.dims.get(2).unwrap_or(&1)
+    }
+
+    pub fn width(&self) -> usize {
+        *self.dims.get(3).unwrap_or(&1)
+    }
+
+    /// Flatten to (num, rest) — how IP layers view conv outputs.
+    pub fn flatten_2d(&self) -> Shape {
+        Shape::new(&[self.num(), self.count_from(1)])
+    }
+
+    /// i64 dims for the xla crate APIs.
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.dims.iter().map(|&d| d as i64).collect()
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        let s = Shape::nchw(2, 3, 4, 5);
+        assert_eq!(s.count(), 120);
+        assert_eq!(s.count_from(1), 60);
+        assert_eq!(s.count_from(3), 5);
+        assert_eq!(Shape::scalar().count(), 1);
+    }
+
+    #[test]
+    fn accessors() {
+        let s = Shape::nchw(2, 3, 4, 5);
+        assert_eq!((s.num(), s.channels(), s.height(), s.width()), (2, 3, 4, 5));
+        assert_eq!(s.flatten_2d().dims(), &[2, 60]);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Shape::new(&[2, 3]).to_string(), "(2,3)");
+    }
+}

@@ -1,0 +1,31 @@
+//! Table 1 conformance suite run *with* the PJRT engine: the parity
+//! sub-checks against real artifacts must hold and the pass/fail structure
+//! must match the paper exactly.
+
+use phast_caffe::conformance::{checks, run_suite, tally};
+use phast_caffe::runtime::Engine;
+
+#[test]
+fn table1_structure_with_engine() {
+    let engine = Engine::open_default().expect("run `make artifacts`");
+    let results = run_suite(Some(&engine));
+    let t: std::collections::HashMap<_, _> = tally(&results).into_iter().collect();
+    // Exactly the paper's Table 1.
+    assert_eq!((t["Convolution"].passed, t["Convolution"].failed), (3, 12));
+    assert_eq!((t["Pooling"].passed, t["Pooling"].failed), (11, 0));
+    assert_eq!((t["InnerProduct"].passed, t["InnerProduct"].failed), (9, 0));
+    assert_eq!((t["SoftMax"].passed, t["SoftMax"].failed), (4, 0));
+    assert_eq!((t["SoftMax Loss"].passed, t["SoftMax Loss"].failed), (4, 0));
+    assert_eq!((t["Accuracy"].passed, t["Accuracy"].failed), (9, 3));
+    // 55 checks total, 40 passing — the paper's totals.
+    assert_eq!(results.len(), 55);
+    assert_eq!(results.iter().filter(|r| r.passed).count(), 40);
+}
+
+#[test]
+fn check_names_are_unique_per_block() {
+    let mut seen = std::collections::HashSet::new();
+    for (block, name, _) in checks() {
+        assert!(seen.insert((block, name)), "duplicate check {block}:{name}");
+    }
+}

@@ -1,0 +1,278 @@
+//! Cross-domain integration tests — the paper's §4.2 validation method:
+//! "we used ... the output of the network, the accuracy, the loss, and some
+//! intermediate matrices to be sure that both versions ... were obtaining
+//! the same results".
+//!
+//! Requires `make artifacts`.
+
+use phast_caffe::net::Net;
+use phast_caffe::phast::{BoundaryOptions, FusedRunner, Placement, PortedNet, PortedSolver};
+use phast_caffe::proto::{presets, NetConfig, SolverConfig};
+use phast_caffe::runtime::Engine;
+use phast_caffe::solver::Solver;
+use phast_caffe::tensor::{IntTensor, Shape};
+
+fn engine() -> Engine {
+    Engine::open_default().expect("artifacts missing — run `make artifacts`")
+}
+
+fn lenet(seed: u64) -> Net {
+    Net::from_config(NetConfig::from_text(presets::LENET_MNIST).unwrap(), seed).unwrap()
+}
+
+fn cifar(seed: u64) -> Net {
+    Net::from_config(NetConfig::from_text(presets::CIFAR10_QUICK).unwrap(), seed).unwrap()
+}
+
+/// Native and fully-ported forward passes agree on every intermediate blob.
+#[test]
+fn ported_forward_matches_native_intermediates() {
+    let eng = engine();
+    let mut native = lenet(7);
+    let ported_net = lenet(7); // same seed -> same weights and batches
+    let mut ported =
+        PortedNet::new(ported_net, &eng, Placement::phast_all(), BoundaryOptions::default())
+            .unwrap();
+
+    let loss_n = native.forward().unwrap().unwrap();
+    let loss_p = ported.forward().unwrap().unwrap();
+    assert!(
+        (loss_n - loss_p).abs() < 1e-4,
+        "loss divergence: native {loss_n} vs ported {loss_p}"
+    );
+    for blob in ["conv1", "pool1", "conv2", "pool2", "ip1", "relu1", "ip2"] {
+        let a = native.blob(blob).unwrap().data();
+        let b = ported.net.blob(blob).unwrap().data();
+        let d = a.max_abs_diff(b);
+        assert!(d < 1e-3, "intermediate '{blob}' diverged by {d}");
+    }
+    let acc_n = native.blob("accuracy").unwrap().data().as_slice()[0];
+    let acc_p = ported.net.blob("accuracy").unwrap().data().as_slice()[0];
+    assert_eq!(acc_n, acc_p);
+}
+
+/// Backward parity: parameter gradients agree across domains.
+#[test]
+fn ported_backward_matches_native_grads() {
+    let eng = engine();
+    let mut native = lenet(9);
+    let ported_net = lenet(9);
+    let mut ported =
+        PortedNet::new(ported_net, &eng, Placement::phast_all(), BoundaryOptions::default())
+            .unwrap();
+
+    native.zero_param_diffs();
+    native.forward().unwrap();
+    native.backward().unwrap();
+    ported.forward_backward().unwrap();
+
+    let pn = native.params();
+    let pp = ported.net.params();
+    assert_eq!(pn.len(), pp.len());
+    for (a, b) in pn.iter().zip(pp.iter()) {
+        let d = a.diff().max_abs_diff(b.diff());
+        let scale = a.diff().l2().max(1e-6);
+        assert!(
+            d / scale < 1e-2,
+            "grad '{}' diverged: {d} (l2 {scale})",
+            a.name()
+        );
+    }
+}
+
+/// The paper's partial placement also stays numerically faithful.
+#[test]
+fn paper_partial_placement_matches_native() {
+    let eng = engine();
+    let cfg = NetConfig::from_text(presets::LENET_MNIST).unwrap();
+    let placement = Placement::paper_partial(&cfg);
+    let mut native = lenet(11);
+    let mut ported =
+        PortedNet::new(lenet(11), &eng, placement, BoundaryOptions::default()).unwrap();
+    let loss_n = native.forward().unwrap().unwrap();
+    let loss_p = ported.forward().unwrap().unwrap();
+    assert!((loss_n - loss_p).abs() < 1e-4, "{loss_n} vs {loss_p}");
+    // partial placement must cross domains (the paper's whole point)
+    assert!(ported.stats.crossings > 0);
+}
+
+/// Fused whole-net artifact agrees with the native evaluation.
+#[test]
+fn fused_eval_matches_native() {
+    let eng = engine();
+    let mut native = lenet(13);
+    let loss_n = native.forward().unwrap().unwrap();
+    let acc_n = native.blob("accuracy").unwrap().data().as_slice()[0];
+
+    // reuse exactly the batch the native net consumed
+    let x = native.blob("data").unwrap().data().clone();
+    let labels_f = native.blob("label").unwrap().data();
+    let labels = IntTensor::from_vec(
+        Shape::new(&[labels_f.len()]),
+        labels_f.as_slice().iter().map(|&v| v as i32).collect(),
+    );
+    let runner = FusedRunner::from_net(&eng, &native).unwrap();
+    let (loss_f, acc_f, probs) = runner.eval(x, labels).unwrap();
+    assert!((loss_n - loss_f).abs() < 1e-4, "{loss_n} vs {loss_f}");
+    assert!((acc_n - acc_f).abs() < 1e-6);
+    // probs rows on the simplex
+    let p = probs.as_slice();
+    for r in 0..64 {
+        let s: f32 = p[r * 10..(r + 1) * 10].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4);
+    }
+}
+
+/// CIFAR variant: ported forward matches native too.
+#[test]
+fn cifar_ported_forward_matches_native() {
+    let eng = engine();
+    let mut native = cifar(5);
+    let mut ported =
+        PortedNet::new(cifar(5), &eng, Placement::phast_all(), BoundaryOptions::default())
+            .unwrap();
+    let loss_n = native.forward().unwrap().unwrap();
+    let loss_p = ported.forward().unwrap().unwrap();
+    assert!((loss_n - loss_p).abs() < 2e-4, "{loss_n} vs {loss_p}");
+    for blob in ["conv1", "pool2", "pool3", "ip2"] {
+        let d = native
+            .blob(blob)
+            .unwrap()
+            .data()
+            .max_abs_diff(ported.net.blob(blob).unwrap().data());
+        assert!(d < 2e-3, "'{blob}' diverged by {d}");
+    }
+}
+
+/// Training through the ported solver converges like the native solver.
+#[test]
+fn ported_training_decreases_loss() {
+    let eng = engine();
+    let cfg = NetConfig::from_text(presets::LENET_MNIST).unwrap();
+    let placement = Placement::paper_partial(&cfg);
+    let pnet =
+        PortedNet::new(lenet(3), &eng, placement, BoundaryOptions::default()).unwrap();
+    let mut solver_cfg = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+    solver_cfg.display = 0;
+    let mut solver = PortedSolver::new(solver_cfg, pnet);
+    let mut losses = vec![];
+    for _ in 0..15 {
+        losses.push(solver.step().unwrap());
+    }
+    let head: f32 = losses[..3].iter().sum::<f32>() / 3.0;
+    let tail: f32 = losses[12..].iter().sum::<f32>() / 3.0;
+    assert!(tail < head, "ported training diverged: {losses:?}");
+}
+
+/// Fused-step training matches the native solver's trajectory step-by-step
+/// (same init, same batches, same update rule).
+#[test]
+fn fused_training_tracks_native_solver() {
+    let eng = engine();
+    let mut solver_cfg = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+    solver_cfg.display = 0;
+    let mut native_solver = Solver::new(solver_cfg.clone(), lenet(21));
+
+    // a twin net provides identical batches for the fused runner
+    let mut feeder = lenet(21);
+    let mut fused = FusedRunner::from_net(&eng, &native_solver.net).unwrap();
+
+    for i in 0..5 {
+        let loss_n = native_solver.step().unwrap();
+        feeder.forward_layer(0).unwrap(); // produce the same batch
+        let x = feeder.blob("data").unwrap().data().clone();
+        let lf = feeder.blob("label").unwrap().data();
+        let labels = IntTensor::from_vec(
+            Shape::new(&[lf.len()]),
+            lf.as_slice().iter().map(|&v| v as i32).collect(),
+        );
+        let lr = solver_cfg.lr_policy.lr_at(solver_cfg.base_lr, i);
+        let loss_f = fused.step(x, labels, lr).unwrap();
+        assert!(
+            (loss_n - loss_f).abs() < 5e-3,
+            "step {i}: native {loss_n} vs fused {loss_f}"
+        );
+    }
+}
+
+/// Transfer accounting: the fully-native run crosses no boundaries; the
+/// paper placement crosses every time a ported layer neighbours an
+/// un-ported one (§4.3).
+#[test]
+fn boundary_crossing_counts() {
+    let eng = engine();
+    let cfg = NetConfig::from_text(presets::LENET_MNIST).unwrap();
+
+    let mut native_only = PortedNet::new(
+        lenet(2),
+        &eng,
+        Placement::native_all(),
+        BoundaryOptions::default(),
+    )
+    .unwrap();
+    native_only.forward_backward().unwrap();
+    assert_eq!(native_only.stats.crossings, 0);
+
+    let mut partial = PortedNet::new(
+        lenet(2),
+        &eng,
+        Placement::paper_partial(&cfg),
+        BoundaryOptions::default(),
+    )
+    .unwrap();
+    partial.forward_backward().unwrap();
+    // MNIST paper placement: data->conv1, ip1->relu1, relu1->ip2, ip2->loss,
+    // ip2->accuracy in forward; mirrored crossings in backward.
+    assert!(
+        partial.stats.crossings_fwd >= 4,
+        "fwd crossings {}",
+        partial.stats.crossings_fwd
+    );
+    assert!(
+        partial.stats.crossings_bwd >= 3,
+        "bwd crossings {}",
+        partial.stats.crossings_bwd
+    );
+    assert!(partial.stats.conversion_bytes > 0);
+
+    // disabling layout conversion keeps the crossings but removes the copies
+    let mut no_conv = PortedNet::new(
+        lenet(2),
+        &eng,
+        Placement::paper_partial(&cfg),
+        BoundaryOptions { layout_conversion: false },
+    )
+    .unwrap();
+    no_conv.forward_backward().unwrap();
+    assert_eq!(no_conv.stats.crossings, partial.stats.crossings);
+    assert_eq!(no_conv.stats.conversion_bytes, 0);
+}
+
+/// Fully-ported placement leaves only the unavoidable entry/exit crossings.
+#[test]
+fn phast_all_minimizes_crossings() {
+    let eng = engine();
+    let cfg = NetConfig::from_text(presets::LENET_MNIST).unwrap();
+    let mut all = PortedNet::new(
+        lenet(2),
+        &eng,
+        Placement::phast_all(),
+        BoundaryOptions::default(),
+    )
+    .unwrap();
+    let mut partial = PortedNet::new(
+        lenet(2),
+        &eng,
+        Placement::paper_partial(&cfg),
+        BoundaryOptions::default(),
+    )
+    .unwrap();
+    all.forward_backward().unwrap();
+    partial.forward_backward().unwrap();
+    assert!(
+        all.stats.crossings < partial.stats.crossings,
+        "full port should cross less: {} vs {}",
+        all.stats.crossings,
+        partial.stats.crossings
+    );
+}

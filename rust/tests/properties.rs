@@ -1,0 +1,133 @@
+//! Cross-cutting property tests (propcheck): framework-level invariants
+//! that hold across random shapes, seeds and placements.
+
+use phast_caffe::data::{BatchIterator, Dataset, SyntheticSpec};
+use phast_caffe::experiments::preset_net;
+use phast_caffe::ops::{self, gemm::Trans};
+use phast_caffe::propcheck::{close, forall, Rng};
+use phast_caffe::proto::{presets, NetConfig, SolverConfig};
+use phast_caffe::solver::Solver;
+
+/// GeMM linearity: C(alpha*A) == alpha*C(A).
+#[test]
+fn gemm_is_linear_in_a() {
+    forall("gemm-linear", 12, |rng: &mut Rng| {
+        let (m, n, k) = (rng.range(1, 16), rng.range(1, 16), rng.range(1, 24));
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let alpha = rng.range_f32(0.5, 2.0);
+        let a2: Vec<f32> = a.iter().map(|v| v * alpha).collect();
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        ops::gemm(Trans::No, Trans::No, m, n, k, 1.0, &a, &b, 0.0, &mut c1);
+        ops::gemm(Trans::No, Trans::No, m, n, k, 1.0, &a2, &b, 0.0, &mut c2);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!(close(x * alpha, *y, 1e-3, 1e-3));
+        }
+    });
+}
+
+/// im2col of a conv-stride-1 identity kernel position reproduces the input.
+#[test]
+fn im2col_k1_is_identity() {
+    forall("im2col-k1", 10, |rng: &mut Rng| {
+        let c = rng.range(1, 4);
+        let h = rng.range(2, 10);
+        let w = rng.range(2, 10);
+        let x = rng.normal_vec(c * h * w);
+        let g = ops::im2col::Conv2dGeom { kh: 1, kw: 1, sh: 1, sw: 1, ph: 0, pw: 0 };
+        let mut cols = vec![0.0; c * h * w];
+        ops::im2col(&x, c, h, w, g, &mut cols);
+        assert_eq!(cols, x);
+    });
+}
+
+/// Softmax-loss gradient magnitude is bounded by 1/N per element.
+#[test]
+fn xent_grad_bounded() {
+    forall("xent-bound", 10, |rng: &mut Rng| {
+        let n = rng.range(1, 16);
+        let c = rng.range(2, 10);
+        let x: Vec<f32> = rng.normal_vec(n * c).iter().map(|v| v * 4.0).collect();
+        let labels: Vec<i32> = (0..n).map(|_| rng.range(0, c - 1) as i32).collect();
+        let mut p = vec![0.0; n * c];
+        ops::softmax_xent(&x, &labels, n, c, &mut p);
+        let mut dx = vec![0.0; n * c];
+        ops::softmax_xent_bwd(&p, &labels, n, c, &mut dx);
+        let bound = 1.0 / n as f32 + 1e-6;
+        assert!(dx.iter().all(|v| v.abs() <= bound));
+    });
+}
+
+/// Batch iterator covers the whole dataset exactly once per epoch.
+#[test]
+fn batch_iterator_epoch_coverage() {
+    forall("epoch-coverage", 6, |rng: &mut Rng| {
+        let n_batches = rng.range(2, 6);
+        let batch = 8;
+        let ds = Dataset::generate(SyntheticSpec::Mnist, n_batches * batch, 3);
+        let labels_sorted = {
+            let mut l = ds.labels.clone();
+            l.sort_unstable();
+            l
+        };
+        let mut it = BatchIterator::new(ds, batch, rng.next_u64());
+        let mut seen = vec![];
+        for _ in 0..n_batches {
+            let (_, y) = it.next_batch();
+            seen.extend_from_slice(y.as_slice());
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, labels_sorted);
+    });
+}
+
+/// Weight decay shrinks weights even with zero gradients.
+#[test]
+fn weight_decay_contracts() {
+    let mut w = vec![1.0f32; 4];
+    let g = vec![0.0f32; 4];
+    let mut h = vec![0.0f32; 4];
+    phast_caffe::solver::apply_sgd_update_slices(&mut w, &g, &mut h, 0.1, 0.0, 0.5);
+    assert!(w.iter().all(|&v| v < 1.0 && v > 0.0));
+}
+
+/// A solver with lr=0 never changes the parameters.
+#[test]
+fn zero_lr_freezes_params() {
+    let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+    cfg.base_lr = 0.0;
+    cfg.weight_decay = 0.0;
+    cfg.display = 0;
+    let mut solver = Solver::new(cfg, preset_net("mnist", 6).unwrap());
+    let before: Vec<f32> = solver
+        .net
+        .params_mut()
+        .iter()
+        .map(|p| p.data().l2())
+        .collect();
+    for _ in 0..3 {
+        solver.step().unwrap();
+    }
+    let after: Vec<f32> = solver
+        .net
+        .params_mut()
+        .iter()
+        .map(|p| p.data().l2())
+        .collect();
+    assert_eq!(before, after);
+}
+
+/// Different seeds give different initializations; same seed identical.
+#[test]
+fn seeding_controls_init() {
+    let cfg = || NetConfig::from_text(presets::LENET_MNIST).unwrap();
+    let a = phast_caffe::net::Net::from_config(cfg(), 1).unwrap();
+    let b = phast_caffe::net::Net::from_config(cfg(), 1).unwrap();
+    let c = phast_caffe::net::Net::from_config(cfg(), 2).unwrap();
+    let l2 = |n: &phast_caffe::net::Net| -> Vec<String> {
+        n.params().iter().map(|p| format!("{:.6}", p.data().l2())).collect()
+    };
+    assert_eq!(l2(&a), l2(&b));
+    assert_ne!(l2(&a), l2(&c));
+}
