@@ -1,0 +1,75 @@
+//! Bench: serial-vs-parallel scaling of the native backend — the
+//! multi-core honesty check behind the Table 2 "Caffe" baseline.
+//!
+//! Runs full forward+backward iterations of LeNet-MNIST (batch 64, the
+//! paper's workload) at increasing thread counts via the
+//! `ops::par::with_threads` knob, prints the scaling table, and records
+//! it to `BENCH_threads.json` for the CI artifact.
+//!
+//! `cargo bench --bench threads_scaling`
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use phast_caffe::experiments::preset_net;
+use phast_caffe::ops::par;
+
+/// Mean forward+backward ms over `iters` iterations at `threads`.
+fn fwd_bwd_ms(threads: usize, warmup: usize, iters: usize) -> anyhow::Result<f64> {
+    par::with_threads(threads, || -> anyhow::Result<f64> {
+        let mut net = preset_net("mnist", 11)?;
+        for _ in 0..warmup {
+            net.zero_param_diffs();
+            net.forward()?;
+            net.backward()?;
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            net.zero_param_diffs();
+            net.forward()?;
+            net.backward()?;
+        }
+        Ok(t0.elapsed().as_secs_f64() * 1000.0 / iters as f64)
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut counts = vec![1usize, 2, 4];
+    if !counts.contains(&hw) {
+        counts.push(hw);
+    }
+    counts.sort_unstable();
+    counts.dedup();
+
+    let (warmup, iters) = (2usize, 8usize);
+    println!("threads_scaling: LeNet-MNIST fwd+bwd, batch 64, {iters} iters ({hw} hw threads)");
+    println!("{:>8} {:>12} {:>9}", "threads", "fwd+bwd ms", "speedup");
+
+    let mut rows = Vec::new();
+    let mut serial_ms = None;
+    for &t in &counts {
+        let ms = fwd_bwd_ms(t, warmup, iters)?;
+        let base = *serial_ms.get_or_insert(ms);
+        let speedup = base / ms;
+        println!("{t:>8} {ms:>12.2} {speedup:>8.2}x");
+        rows.push((t, ms, speedup));
+    }
+
+    // Hand-rolled JSON (no serde in the dependency-free build).
+    let mut json = String::from("{\n  \"bench\": \"threads_scaling\",\n");
+    let _ = writeln!(json, "  \"net\": \"lenet-mnist\",\n  \"batch\": 64,");
+    let _ = writeln!(json, "  \"iters\": {iters},\n  \"hw_threads\": {hw},");
+    json.push_str("  \"results\": [\n");
+    for (i, (t, ms, speedup)) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"threads\": {t}, \"fwd_bwd_ms\": {ms:.3}, \"speedup\": {speedup:.3}}}{comma}"
+        );
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_threads.json", &json)?;
+    println!("\nwrote BENCH_threads.json");
+    Ok(())
+}

@@ -1,16 +1,28 @@
-//! Convolution layer — im2col + GeMM, per sample, exactly Caffe's CPU
-//! schedule (paper §3.1).  The column buffer is allocated once at setup and
-//! reused by forward and backward (Caffe's shared `col_buffer_`).
+//! Convolution layer — im2col + GeMM per sample, Caffe's CPU schedule
+//! (paper §3.1), parallelized over batch samples.
+//!
+//! Forward and backward split the batch into contiguous sample ranges,
+//! one scoped worker each ([`ops::par`]); every worker owns its own
+//! column scratch (Caffe's shared `col_buffer_` becomes per-thread
+//! scratch, the refactor batch-parallelism forces).  Backward workers
+//! additionally accumulate into private `dW`/`db` buffers that are
+//! reduced in worker order afterwards — deterministic for a fixed thread
+//! count.  The per-sample GeMMs inside workers stay serial (nested
+//! regions collapse).  Knobs: `PHAST_NUM_THREADS` + `PHAST_CONV_GRAIN`
+//! (samples per worker).
 
 use anyhow::{bail, Result};
 
 use crate::ops::im2col::Conv2dGeom;
-use crate::ops::{self, gemm::Trans};
+use crate::ops::{self, gemm::Trans, par};
 use crate::propcheck::Rng;
 use crate::proto::LayerConfig;
 use crate::tensor::{Blob, Shape, Tensor};
 
 use super::{xavier_fill, Layer};
+
+/// Minimum samples per worker (`PHAST_CONV_GRAIN` overrides).
+static CONV_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_CONV_GRAIN", 1);
 
 pub struct ConvLayer {
     cfg: LayerConfig,
@@ -21,7 +33,8 @@ pub struct ConvLayer {
     w: usize,
     oh: usize,
     ow: usize,
-    /// Shared scratch column buffer (C*kh*kw, OH*OW).
+    /// Persistent column scratch (C*kh*kw, OH*OW) for the single-worker
+    /// paths (Caffe's `col_buffer_`); parallel workers allocate their own.
     cols: Vec<f32>,
     seed: u64,
 }
@@ -105,30 +118,49 @@ impl Layer for ConvLayer {
 
     fn forward(&mut self, bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()> {
         let x = bottoms[0];
-        let n = x.shape().num();
         let cout = self.cfg.num_output;
         let (ckk, ohw) = (self.ckk(), self.oh * self.ow);
         let wmat = self.params[0].data().as_slice();
         let bias = self.params[1].data().as_slice();
         let sample = self.cin * self.h * self.w;
-        let top = &mut tops[0];
-        for s in 0..n {
-            ops::im2col(
-                &x.as_slice()[s * sample..(s + 1) * sample],
-                self.cin,
-                self.h,
-                self.w,
-                self.geom(),
-                &mut self.cols,
-            );
-            let out = &mut top.as_mut_slice()[s * cout * ohw..(s + 1) * cout * ohw];
-            ops::gemm(Trans::No, Trans::No, cout, ohw, ckk, 1.0, wmat, &self.cols, 0.0, out);
-            for (c, b) in bias.iter().enumerate() {
-                for v in &mut out[c * ohw..(c + 1) * ohw] {
-                    *v += b;
+        let (cin, h, w, g) = (self.cin, self.h, self.w, self.geom());
+        let xs = x.as_slice();
+        let top = tops[0].as_mut_slice();
+        let tune = par::Tuning::new(CONV_GRAIN.get());
+        let n = top.len() / (cout * ohw);
+
+        // Single worker: reuse the persistent column scratch — no
+        // per-call allocation, the seed's serial cost profile.
+        if tune.workers(n) <= 1 {
+            let cols = &mut self.cols;
+            for s in 0..n {
+                ops::im2col(&xs[s * sample..(s + 1) * sample], cin, h, w, g, cols);
+                let out = &mut top[s * cout * ohw..(s + 1) * cout * ohw];
+                ops::gemm(Trans::No, Trans::No, cout, ohw, ckk, 1.0, wmat, cols, 0.0, out);
+                for (c, b) in bias.iter().enumerate() {
+                    for v in &mut out[c * ohw..(c + 1) * ohw] {
+                        *v += b;
+                    }
                 }
             }
+            return Ok(());
         }
+
+        // One contiguous sample range per worker; each worker owns its
+        // column scratch, allocated once for its whole range.
+        par::parallel_chunks_mut(top, cout * ohw, tune, |samples, block| {
+            let mut cols = vec![0.0f32; ckk * ohw];
+            for (bi, s) in samples.enumerate() {
+                ops::im2col(&xs[s * sample..(s + 1) * sample], cin, h, w, g, &mut cols);
+                let out = &mut block[bi * cout * ohw..(bi + 1) * cout * ohw];
+                ops::gemm(Trans::No, Trans::No, cout, ohw, ckk, 1.0, wmat, &cols, 0.0, out);
+                for (c, b) in bias.iter().enumerate() {
+                    for v in &mut out[c * ohw..(c + 1) * ohw] {
+                        *v += b;
+                    }
+                }
+            }
+        });
         Ok(())
     }
 
@@ -140,46 +172,86 @@ impl Layer for ConvLayer {
     ) -> Result<()> {
         let dy = top_diffs[0];
         let x = bottom_datas[0];
-        let n = x.shape().num();
         let cout = self.cfg.num_output;
         let (ckk, ohw) = (self.ckk(), self.oh * self.ow);
         let sample = self.cin * self.h * self.w;
-        let g = self.geom();
+        let (cin, h, w, g) = (self.cin, self.h, self.w, self.geom());
 
-        // Split the params vec so weight data and bias diff borrow cleanly.
+        // Split borrows: weight *data* is read by every worker while the
+        // weight *diff* waits for the post-reduction merge — no clone.
         let (wblob, bblob) = self.params.split_at_mut(1);
-        let wmat = wblob[0].data().as_slice().to_vec(); // weights needed while diff borrowed
-        let dw = wblob[0].diff_mut().as_mut_slice();
-        let db = bblob[0].diff_mut().as_mut_slice();
-        let mut dcols = vec![0.0f32; ckk * ohw];
+        let (wdata, wdiff) = wblob[0].data_and_diff_mut();
+        let wmat = wdata.as_slice();
+        let dys_all = dy.as_slice();
+        let xs = x.as_slice();
+        let dx = bottom_diffs[0].as_mut_slice();
+        let tune = par::Tuning::new(CONV_GRAIN.get());
 
-        for s in 0..n {
-            let dys = &dy.as_slice()[s * cout * ohw..(s + 1) * cout * ohw];
-            // Recompute the column buffer (Caffe re-runs im2col in backward).
-            ops::im2col(
-                &x.as_slice()[s * sample..(s + 1) * sample],
-                self.cin,
-                self.h,
-                self.w,
-                g,
-                &mut self.cols,
-            );
-            // dW += dY_s (Cout, OHW) * cols^T (OHW, CKK)
-            ops::gemm(Trans::No, Trans::Yes, cout, ckk, ohw, 1.0, dys, &self.cols, 1.0, dw);
-            // db += row sums of dY_s
-            for c in 0..cout {
-                db[c] += dys[c * ohw..(c + 1) * ohw].iter().sum::<f32>();
+        // Serial path (one worker): accumulate straight into the blob
+        // diffs — no local dW/db, no merge pass, matching the seed's
+        // serial cost profile.
+        let n = dx.len() / sample;
+        if tune.workers(n) <= 1 {
+            let dw = wdiff.as_mut_slice();
+            let db = bblob[0].diff_mut().as_mut_slice();
+            let cols = &mut self.cols; // persistent scratch, like the seed
+            let mut dcols = vec![0.0f32; ckk * ohw];
+            for s in 0..n {
+                let dys = &dys_all[s * cout * ohw..(s + 1) * cout * ohw];
+                ops::im2col(&xs[s * sample..(s + 1) * sample], cin, h, w, g, cols);
+                ops::gemm(Trans::No, Trans::Yes, cout, ckk, ohw, 1.0, dys, cols, 1.0, dw);
+                for c in 0..cout {
+                    db[c] += dys[c * ohw..(c + 1) * ohw].iter().sum::<f32>();
+                }
+                ops::gemm(Trans::Yes, Trans::No, ckk, ohw, cout, 1.0, wmat, dys, 0.0, &mut dcols);
+                ops::col2im(&dcols, cin, h, w, g, &mut dx[s * sample..(s + 1) * sample]);
             }
-            // dcols = W^T (CKK, Cout) * dY_s (Cout, OHW)
-            ops::gemm(Trans::Yes, Trans::No, ckk, ohw, cout, 1.0, &wmat, dys, 0.0, &mut dcols);
-            ops::col2im(
-                &dcols,
-                self.cin,
-                self.h,
-                self.w,
-                g,
-                &mut bottom_diffs[0].as_mut_slice()[s * sample..(s + 1) * sample],
-            );
+            return Ok(());
+        }
+
+        // Each worker: private cols/dcols scratch + private dW/db
+        // accumulators over its contiguous sample range; dX planes are
+        // disjoint so they are written in place.
+        let partials = par::parallel_chunks_reduce(dx, sample, tune, |samples, dx_block| {
+            let mut cols = vec![0.0f32; ckk * ohw];
+            let mut dcols = vec![0.0f32; ckk * ohw];
+            let mut dw_loc = vec![0.0f32; cout * ckk];
+            let mut db_loc = vec![0.0f32; cout];
+            for (bi, s) in samples.enumerate() {
+                let dys = &dys_all[s * cout * ohw..(s + 1) * cout * ohw];
+                // Recompute the column buffer (Caffe re-runs im2col in
+                // backward).
+                ops::im2col(&xs[s * sample..(s + 1) * sample], cin, h, w, g, &mut cols);
+                // dW += dY_s (Cout, OHW) * cols^T (OHW, CKK)
+                ops::gemm(Trans::No, Trans::Yes, cout, ckk, ohw, 1.0, dys, &cols, 1.0, &mut dw_loc);
+                // db += row sums of dY_s
+                for c in 0..cout {
+                    db_loc[c] += dys[c * ohw..(c + 1) * ohw].iter().sum::<f32>();
+                }
+                // dcols = W^T (CKK, Cout) * dY_s (Cout, OHW)
+                ops::gemm(Trans::Yes, Trans::No, ckk, ohw, cout, 1.0, wmat, dys, 0.0, &mut dcols);
+                ops::col2im(
+                    &dcols,
+                    cin,
+                    h,
+                    w,
+                    g,
+                    &mut dx_block[bi * sample..(bi + 1) * sample],
+                );
+            }
+            (dw_loc, db_loc)
+        });
+
+        // Deterministic merge: partials arrive in worker (= sample) order.
+        let dw = wdiff.as_mut_slice();
+        let db = bblob[0].diff_mut().as_mut_slice();
+        for (dw_loc, db_loc) in partials {
+            for (d, s) in dw.iter_mut().zip(&dw_loc) {
+                *d += s;
+            }
+            for (d, s) in db.iter_mut().zip(&db_loc) {
+                *d += s;
+            }
         }
         Ok(())
     }

@@ -77,11 +77,14 @@ impl Layer for IpLayer {
         let x = bottom_datas[0];
         let n = x.shape().num();
         let nout = self.cfg.num_output;
+        // Split borrows: weight data read-only next to its mutable diff —
+        // no per-call clone of the weight matrix.
         let (wblob, bblob) = self.params.split_at_mut(1);
-        let w = wblob[0].data().as_slice().to_vec();
-        let dw = wblob[0].diff_mut().as_mut_slice();
+        let (wdata, wdiff) = wblob[0].data_and_diff_mut();
+        let w = wdata.as_slice();
+        let dw = wdiff.as_mut_slice();
         let db = bblob[0].diff_mut().as_mut_slice();
-        // dW += dY^T (nout, n) * X (n, k)
+        // dW += dY^T (nout, n) * X (n, k)  — parallel inside gemm
         ops::gemm(Trans::Yes, Trans::No, nout, self.k, n, 1.0, dy.as_slice(), x.as_slice(), 1.0, dw);
         // db += column sums of dY
         for r in 0..n {
@@ -89,7 +92,7 @@ impl Layer for IpLayer {
                 *dbv += dyv;
             }
         }
-        // dX = dY (n, nout) * W (nout, k)
+        // dX = dY (n, nout) * W (nout, k)  — parallel inside gemm
         ops::gemm(
             Trans::No,
             Trans::No,
@@ -98,7 +101,7 @@ impl Layer for IpLayer {
             nout,
             1.0,
             dy.as_slice(),
-            &w,
+            w,
             0.0,
             bottom_diffs[0].as_mut_slice(),
         );

@@ -1,5 +1,8 @@
 //! Pooling layer (MAX with argmax routing, AVE with clipped divisor) —
 //! Caffe ceil-mode semantics, paper §3.3.
+//!
+//! Forward and backward run the batched ops (`ops::*pool*_batch`), which
+//! parallelize over the N*C (sample, channel) planes via [`crate::ops::par`].
 
 use anyhow::{bail, Result};
 
@@ -66,19 +69,21 @@ impl Layer for PoolLayer {
     fn forward(&mut self, bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()> {
         let x = bottoms[0];
         let n = x.shape().num();
-        let sample_in = self.c * self.h * self.w;
-        let sample_out = self.c * self.oh * self.ow;
         let g = self.geom();
-        let top = &mut tops[0];
-        for s in 0..n {
-            let xin = &x.as_slice()[s * sample_in..(s + 1) * sample_in];
-            let out = &mut top.as_mut_slice()[s * sample_out..(s + 1) * sample_out];
-            match self.cfg.pool {
-                PoolMethod::Max => {
-                    let arg = &mut self.arg[s * sample_out..(s + 1) * sample_out];
-                    ops::maxpool(xin, self.c, self.h, self.w, g, out, arg);
-                }
-                PoolMethod::Ave => ops::avepool(xin, self.c, self.h, self.w, g, out),
+        let top = tops[0].as_mut_slice();
+        match self.cfg.pool {
+            PoolMethod::Max => ops::maxpool_batch(
+                x.as_slice(),
+                n,
+                self.c,
+                self.h,
+                self.w,
+                g,
+                top,
+                &mut self.arg,
+            ),
+            PoolMethod::Ave => {
+                ops::avepool_batch(x.as_slice(), n, self.c, self.h, self.w, g, top)
             }
         }
         Ok(())
@@ -92,18 +97,21 @@ impl Layer for PoolLayer {
     ) -> Result<()> {
         let dy = top_diffs[0];
         let n = dy.shape().num();
-        let sample_in = self.c * self.h * self.w;
-        let sample_out = self.c * self.oh * self.ow;
         let g = self.geom();
-        for s in 0..n {
-            let dys = &dy.as_slice()[s * sample_out..(s + 1) * sample_out];
-            let dxs = &mut bottom_diffs[0].as_mut_slice()[s * sample_in..(s + 1) * sample_in];
-            match self.cfg.pool {
-                PoolMethod::Max => {
-                    let arg = &self.arg[s * sample_out..(s + 1) * sample_out];
-                    ops::maxpool_bwd(dys, arg, self.c, self.h, self.w, g, dxs);
-                }
-                PoolMethod::Ave => ops::avepool_bwd(dys, self.c, self.h, self.w, g, dxs),
+        let dx = bottom_diffs[0].as_mut_slice();
+        match self.cfg.pool {
+            PoolMethod::Max => ops::maxpool_bwd_batch(
+                dy.as_slice(),
+                &self.arg,
+                n,
+                self.c,
+                self.h,
+                self.w,
+                g,
+                dx,
+            ),
+            PoolMethod::Ave => {
+                ops::avepool_bwd_batch(dy.as_slice(), n, self.c, self.h, self.w, g, dx)
             }
         }
         Ok(())

@@ -1,4 +1,6 @@
-//! ReLU layer (Caffe's leaky variant via `negative_slope`).
+//! ReLU layer (Caffe's leaky variant via `negative_slope`).  The
+//! elementwise map runs chunk-parallel through `ops::leaky_relu` /
+//! `ops::leaky_relu_bwd` (see [`crate::ops::par`]).
 
 use anyhow::Result;
 

@@ -1,5 +1,7 @@
 //! SoftMax and SoftMaxWithLoss layers (paper §3: "maps any set of numbers
 //! to probabilities that add up to 1" + the loss variant used in training).
+//! The row-wise kernels run row-block-parallel through `ops::softmax` /
+//! `ops::softmax_xent_bwd` (see [`crate::ops::par`]).
 
 use anyhow::{bail, Result};
 

@@ -1,40 +1,65 @@
 //! Elementwise and classification-head ops: leaky ReLU, SoftMax,
 //! SoftMax-with-loss, Accuracy — native baseline implementations.
+//!
+//! The elementwise maps and the row-wise softmax family run through
+//! [`ops::par`](super::par): outputs are split into contiguous chunks
+//! (elements for ReLU, rows for softmax), one scoped worker per chunk.
+//! Every element/row is computed independently with identical ordering,
+//! so results are bitwise independent of the thread count.  Knobs:
+//! `PHAST_NUM_THREADS` + `PHAST_ELTWISE_GRAIN` / `PHAST_SOFTMAX_GRAIN`.
+
+use super::par;
+
+/// Minimum elements per worker for elementwise maps.
+static ELTWISE_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_ELTWISE_GRAIN", 8192);
+
+/// Minimum softmax rows per worker (64 keeps the batch-64 classification
+/// head serial — spawn cost would dominate its few hundred elements).
+static SOFTMAX_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_SOFTMAX_GRAIN", 64);
 
 /// Caffe ReLULayer with `negative_slope` (the paper notes Caffe implements
 /// the leaky variant; slope 0 is plain ReLU).
 pub fn leaky_relu(x: &[f32], alpha: f32, y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
-    for (xi, yi) in x.iter().zip(y.iter_mut()) {
-        *yi = if *xi > 0.0 { *xi } else { alpha * *xi };
-    }
+    par::parallel_chunks_mut(y, 1, par::Tuning::new(ELTWISE_GRAIN.get()), |range, yb| {
+        for (yi, xi) in yb.iter_mut().zip(&x[range]) {
+            *yi = if *xi > 0.0 { *xi } else { alpha * *xi };
+        }
+    });
 }
 
 /// dX for leaky ReLU given the forward *input*.
 pub fn leaky_relu_bwd(x: &[f32], dy: &[f32], alpha: f32, dx: &mut [f32]) {
     assert_eq!(x.len(), dy.len());
     assert_eq!(x.len(), dx.len());
-    for ((xi, gi), di) in x.iter().zip(dy).zip(dx.iter_mut()) {
-        *di = if *xi > 0.0 { *gi } else { alpha * *gi };
-    }
+    par::parallel_chunks_mut(dx, 1, par::Tuning::new(ELTWISE_GRAIN.get()), |range, db| {
+        for ((di, xi), gi) in db.iter_mut().zip(&x[range.clone()]).zip(&dy[range]) {
+            *di = if *xi > 0.0 { *gi } else { alpha * *gi };
+        }
+    });
 }
 
-/// Row-wise softmax over (n, c) logits.
+/// Row-wise softmax over (n, c) logits, parallel over row blocks.
 pub fn softmax(x: &[f32], n: usize, c: usize, p: &mut [f32]) {
     assert_eq!(x.len(), n * c);
     assert_eq!(p.len(), n * c);
-    for r in 0..n {
-        let row = &x[r * c..(r + 1) * c];
-        let out = &mut p[r * c..(r + 1) * c];
-        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut z = 0.0f32;
-        for (o, v) in out.iter_mut().zip(row) {
-            *o = (v - m).exp();
-            z += *o;
-        }
-        let inv = 1.0 / z;
-        out.iter_mut().for_each(|o| *o *= inv);
+    if c == 0 {
+        return;
     }
+    par::parallel_chunks_mut(p, c, par::Tuning::new(SOFTMAX_GRAIN.get()), |rows, pb| {
+        for (bi, r) in rows.enumerate() {
+            let row = &x[r * c..(r + 1) * c];
+            let out = &mut pb[bi * c..(bi + 1) * c];
+            let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for (o, v) in out.iter_mut().zip(row) {
+                *o = (v - m).exp();
+                z += *o;
+            }
+            let inv = 1.0 / z;
+            out.iter_mut().for_each(|o| *o *= inv);
+        }
+    });
 }
 
 /// SoftmaxWithLoss forward: mean cross-entropy + probabilities.
@@ -49,18 +74,23 @@ pub fn softmax_xent(x: &[f32], labels: &[i32], n: usize, c: usize, p: &mut [f32]
     loss / n as f32
 }
 
-/// SoftmaxWithLoss backward: (p - onehot) / n.
+/// SoftmaxWithLoss backward: (p - onehot) / n, parallel over row blocks.
 pub fn softmax_xent_bwd(p: &[f32], labels: &[i32], n: usize, c: usize, dx: &mut [f32]) {
     assert_eq!(p.len(), n * c);
     assert_eq!(dx.len(), n * c);
-    let inv = 1.0 / n as f32;
-    for r in 0..n {
-        let l = labels[r] as usize;
-        for j in 0..c {
-            let onehot = if j == l { 1.0 } else { 0.0 };
-            dx[r * c + j] = (p[r * c + j] - onehot) * inv;
-        }
+    if c == 0 {
+        return;
     }
+    let inv = 1.0 / n as f32;
+    par::parallel_chunks_mut(dx, c, par::Tuning::new(SOFTMAX_GRAIN.get()), |rows, db| {
+        for (bi, r) in rows.enumerate() {
+            let l = labels[r] as usize;
+            for j in 0..c {
+                let onehot = if j == l { 1.0 } else { 0.0 };
+                db[bi * c + j] = (p[r * c + j] - onehot) * inv;
+            }
+        }
+    });
 }
 
 /// Top-k accuracy over (n, c) logits.  Caffe's AccuracyLayer counts a hit

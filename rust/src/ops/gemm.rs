@@ -1,5 +1,6 @@
-//! Blocked single-threaded GeMM — the OpenBLAS stand-in of the native
-//! baseline.
+//! Blocked multi-threaded GeMM — the OpenBLAS stand-in of the native
+//! baseline (Table 2's "Caffe" rows run multi-threaded OpenBLAS, so the
+//! honest reproduction must be multi-core too).
 //!
 //! `C = alpha * op(A) * op(B) + beta * C`, f32, row-major storage.  The
 //! kernel blocks over K and N to keep the B panel in L1/L2 cache and lets
@@ -7,10 +8,21 @@
 //! Transposed operands are handled by packing the transposed panel once —
 //! not by strided access in the hot loop.
 //!
+//! Parallelism ([`ops::par`](super::par)): C is split into contiguous
+//! M-row blocks, one scoped worker per block; A and the packed B panel
+//! are shared read-only.  Because each row of C is computed with the
+//! identical k-ordering regardless of the split, the result is bitwise
+//! independent of the thread count.  Tuning knobs: `PHAST_NUM_THREADS`
+//! and `PHAST_GEMM_GRAIN` (minimum rows per worker).  Small products
+//! (`m*n*k < GEMM_PAR_MIN_FLOPS`) and GeMMs issued from inside another
+//! parallel region (e.g. per-sample conv GeMMs) stay serial.
+//!
 //! `gemm_colmajor_b` consumes a column-major B panel, the layout OpenBLAS
 //! prefers; the PHAST boundary in `phast::` pays an explicit conversion to
 //! call it — reproducing the per-crossing transpose the paper blames for a
 //! large share of the partial-port slowdown (§4.3).
+
+use super::par;
 
 /// Operand transposition flag.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,6 +33,12 @@ pub enum Trans {
 
 const KC: usize = 256; // K-panel
 const NC: usize = 512; // N-panel (fits L1 with KC in L2)
+
+/// Minimum rows of C per worker (`PHAST_GEMM_GRAIN` overrides).
+static GEMM_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_GEMM_GRAIN", 8);
+
+/// Below this many multiply-adds the spawn cost beats the speedup.
+const GEMM_PAR_MIN_FLOPS: usize = 1 << 17;
 
 /// C(m,n) = alpha * op(A)(m,k) * op(B)(k,n) + beta * C.
 ///
@@ -67,14 +85,40 @@ pub fn gemm(
         }
     };
 
-    // Blocked i-k-j with a 4-wide k unroll in the microkernel.
+    // One contiguous M-row block of C per worker; each block runs the
+    // identical blocked i-k-j kernel, so any thread count produces the
+    // same bits.
+    let tune = par::Tuning::new(GEMM_GRAIN.get());
+    if m * n * k >= GEMM_PAR_MIN_FLOPS && tune.workers(m) > 1 {
+        par::parallel_chunks_mut(c, n, tune, |rows, c_block| {
+            gemm_rows(a_rm, b_rm, alpha, rows.start, k, n, c_block);
+        });
+    } else {
+        gemm_rows(a_rm, b_rm, alpha, 0, k, n, c);
+    }
+}
+
+/// Blocked i-k-j microkernel over the row block `c_block`, which holds
+/// `c_block.len() / n` consecutive rows of C starting at `row0`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows(
+    a_rm: &[f32],
+    b_rm: &[f32],
+    alpha: f32,
+    row0: usize,
+    k: usize,
+    n: usize,
+    c_block: &mut [f32],
+) {
+    let rows = c_block.len() / n.max(1);
     for kb in (0..k).step_by(KC) {
         let kmax = (kb + KC).min(k);
         for nb in (0..n).step_by(NC) {
             let nmax = (nb + NC).min(n);
-            for i in 0..m {
+            for bi in 0..rows {
+                let i = row0 + bi;
                 let arow = &a_rm[i * k..(i + 1) * k];
-                let crow = &mut c[i * n + nb..i * n + nmax];
+                let crow = &mut c_block[bi * n + nb..bi * n + nmax];
                 let mut kk = kb;
                 while kk + 4 <= kmax {
                     let (a0, a1, a2, a3) = (

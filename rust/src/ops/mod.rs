@@ -5,8 +5,14 @@
 //! the same Caffe semantics the Pallas kernels implement; the integration
 //! tests close the triangle natively-computed == PJRT-computed == pure-jnp
 //! oracle.
+//!
+//! Since the paper's baseline is *multi-threaded* Caffe+OpenBLAS, the hot
+//! kernels (GeMM, batched pooling, elementwise/softmax) run over the
+//! [`par`] scoped-thread runtime, tuned PHAST-style via `PHAST_NUM_THREADS`
+//! and per-kernel `PHAST_*_GRAIN` knobs.
 
 pub mod geometry;
+pub mod par;
 pub mod gemm;
 pub mod im2col;
 pub mod pool;
@@ -16,7 +22,10 @@ pub mod math;
 pub use geometry::{conv_geom, pool_geom, WindowGeom};
 pub use gemm::{gemm, gemm_colmajor_b, Trans};
 pub use im2col::{col2im, im2col};
-pub use pool::{avepool, avepool_bwd, maxpool, maxpool_bwd};
+pub use pool::{
+    avepool, avepool_batch, avepool_bwd, avepool_bwd_batch, maxpool, maxpool_batch,
+    maxpool_bwd, maxpool_bwd_batch,
+};
 pub use activations::{
     accuracy, leaky_relu, leaky_relu_bwd, softmax, softmax_xent, softmax_xent_bwd,
 };

@@ -1,0 +1,468 @@
+//! `ops::par` — dependency-free chunked parallel runtime for the native
+//! baseline (scoped threads, no rayon/crossbeam).
+//!
+//! The paper's native comparison point (Table 2's "Caffe" rows) is Caffe +
+//! **multi-threaded** OpenBLAS; PHAST itself (Peccerillo & Bartolini, TPDS
+//! 2018) sells "write once, tune with minimal source changes" through two
+//! per-kernel knobs: thread count and block (grain) size.  This module
+//! reproduces exactly that tuning surface for the native Rust kernels:
+//!
+//! * **thread count** — `std::thread::available_parallelism()` by default,
+//!   overridable process-wide via the `PHAST_NUM_THREADS` environment
+//!   variable or [`set_num_threads`], and per-call-tree via
+//!   [`with_threads`] (the analog of PHAST's per-kernel thread setting —
+//!   used by the tuning benches and the serial/parallel property tests);
+//! * **grain size** — each kernel owns a [`GrainKnob`] (its per-kernel
+//!   block-size macro), overridable via `PHAST_<KERNEL>_GRAIN` env vars.
+//!
+//! Work is split into *contiguous* index ranges, one per worker, so every
+//! mutable output is partitioned into disjoint slices (`split_at_mut`) —
+//! no locks, no atomics on the data path, and bitwise-deterministic
+//! results for a fixed thread count (partials are merged in worker order).
+//!
+//! Nested parallel regions serialize automatically: workers set a
+//! thread-local flag, and any parallel entry point called from inside a
+//! worker falls back to the serial path (e.g. the per-sample GeMMs inside
+//! a batch-parallel convolution do not oversubscribe the machine).
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+thread_local! {
+    /// Per-call-tree thread override (0 = none); see [`with_threads`].
+    static THREAD_OVERRIDE: Cell<usize> = const { Cell::new(0) };
+    /// Set inside worker threads so nested parallel calls run serial.
+    static IN_PARALLEL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Process-wide configured thread count (0 = not yet resolved).
+static CONFIGURED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+fn hardware_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The thread count parallel kernels will use when called from this
+/// thread: `with_threads` override, else `PHAST_NUM_THREADS`, else
+/// `available_parallelism()`.
+pub fn num_threads() -> usize {
+    let over = THREAD_OVERRIDE.with(Cell::get);
+    if over > 0 {
+        return over;
+    }
+    let cached = CONFIGURED_THREADS.load(Ordering::Relaxed);
+    if cached > 0 {
+        return cached;
+    }
+    let resolved = std::env::var("PHAST_NUM_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(hardware_threads);
+    CONFIGURED_THREADS.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+/// Set the process-wide thread count (PHAST's global tuning knob).
+pub fn set_num_threads(n: usize) {
+    CONFIGURED_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// True while executing inside a parallel worker (nested regions serialize).
+pub fn in_parallel() -> bool {
+    IN_PARALLEL.with(Cell::get)
+}
+
+/// Run `f` with the thread count forced to `n` on this call tree only —
+/// the per-kernel thread knob.  Restores the previous setting on exit
+/// (including on panic), so property tests can interleave serial and
+/// parallel runs safely.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _guard = THREAD_OVERRIDE.with(|c| {
+        let prev = c.get();
+        c.set(n.max(1));
+        Restore(prev)
+    });
+    f()
+}
+
+/// A per-kernel grain-size knob with an environment override, resolved
+/// once (the PHAST "block size macro" analog).
+pub struct GrainKnob {
+    env: &'static str,
+    default: usize,
+    cached: AtomicUsize,
+}
+
+impl GrainKnob {
+    pub const fn new(env: &'static str, default: usize) -> GrainKnob {
+        GrainKnob { env, default, cached: AtomicUsize::new(0) }
+    }
+
+    pub fn get(&self) -> usize {
+        let cached = self.cached.load(Ordering::Relaxed);
+        if cached > 0 {
+            return cached;
+        }
+        let resolved = std::env::var(self.env)
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(self.default);
+        self.cached.store(resolved, Ordering::Relaxed);
+        resolved
+    }
+}
+
+/// Per-call tuning: thread budget + minimum items per worker.
+#[derive(Clone, Copy, Debug)]
+pub struct Tuning {
+    pub threads: usize,
+    pub grain: usize,
+}
+
+impl Tuning {
+    /// Snapshot the current thread setting with the given grain.
+    pub fn new(grain: usize) -> Tuning {
+        Tuning { threads: num_threads(), grain: grain.max(1) }
+    }
+
+    /// How many workers `n` items warrant: capped by the thread budget,
+    /// by `ceil(n / grain)`, and forced to 1 inside a parallel region.
+    pub fn workers(&self, n: usize) -> usize {
+        if n == 0 || self.threads <= 1 || in_parallel() {
+            return 1;
+        }
+        let by_grain = (n + self.grain - 1) / self.grain;
+        self.threads.min(by_grain).max(1)
+    }
+}
+
+/// Split `0..n` into `parts` contiguous near-equal ranges.
+pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    let (base, rem) = (n / parts, n % parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f` once per worker over disjoint contiguous sub-ranges of `0..n`.
+/// Serial (caller thread, no spawn) when one worker suffices.
+pub fn parallel_for(n: usize, tune: Tuning, f: impl Fn(Range<usize>) + Sync) {
+    if tune.workers(n) <= 1 {
+        if n > 0 {
+            f(0..n);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for r in partition(n, tune.workers(n)) {
+            let f = &f;
+            s.spawn(move || {
+                IN_PARALLEL.with(|c| c.set(true));
+                f(r)
+            });
+        }
+    });
+}
+
+/// Map disjoint ranges of `0..n` through `map` and fold the per-worker
+/// results **in worker order** (deterministic for a fixed thread count).
+pub fn parallel_reduce<A: Send>(
+    n: usize,
+    tune: Tuning,
+    map: impl Fn(Range<usize>) -> A + Sync,
+    mut fold: impl FnMut(A, A) -> A,
+    init: A,
+) -> A {
+    if tune.workers(n) <= 1 {
+        return if n == 0 { init } else { fold(init, map(0..n)) };
+    }
+    let partials = std::thread::scope(|s| {
+        let handles: Vec<_> = partition(n, tune.workers(n))
+            .into_iter()
+            .map(|r| {
+                let map = &map;
+                s.spawn(move || {
+                    IN_PARALLEL.with(|c| c.set(true));
+                    map(r)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<A>>()
+    });
+    partials.into_iter().fold(init, fold)
+}
+
+/// Partition `data` (a packed array of `n = data.len() / item_len` items)
+/// into per-worker contiguous blocks; `f(items, block)` gets the item
+/// range and the matching mutable sub-slice.  One call per worker, so `f`
+/// can allocate per-thread scratch once.
+pub fn parallel_chunks_mut<T: Send>(
+    data: &mut [T],
+    item_len: usize,
+    tune: Tuning,
+    f: impl Fn(Range<usize>, &mut [T]) + Sync,
+) {
+    assert!(item_len > 0, "item_len must be positive");
+    assert_eq!(data.len() % item_len, 0, "data not a whole number of items");
+    let n = data.len() / item_len;
+    let workers = tune.workers(n);
+    if workers <= 1 {
+        if n > 0 {
+            f(0..n, data);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = data;
+        for r in partition(n, workers) {
+            let take = r.len() * item_len;
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let f = &f;
+            s.spawn(move || {
+                IN_PARALLEL.with(|c| c.set(true));
+                f(r, head)
+            });
+        }
+    });
+}
+
+/// Like [`parallel_chunks_mut`] over two parallel arrays with their own
+/// item sizes (e.g. pooling's value and argmax outputs).
+pub fn parallel_chunks2_mut<T: Send, U: Send>(
+    a: &mut [T],
+    a_item: usize,
+    b: &mut [U],
+    b_item: usize,
+    tune: Tuning,
+    f: impl Fn(Range<usize>, &mut [T], &mut [U]) + Sync,
+) {
+    assert!(a_item > 0 && b_item > 0, "item lengths must be positive");
+    assert_eq!(a.len() % a_item, 0, "a not a whole number of items");
+    assert_eq!(b.len() % b_item, 0, "b not a whole number of items");
+    let n = a.len() / a_item;
+    assert_eq!(b.len() / b_item, n, "a and b disagree on item count");
+    let workers = tune.workers(n);
+    if workers <= 1 {
+        if n > 0 {
+            f(0..n, a, b);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest_a = a;
+        let mut rest_b = b;
+        for r in partition(n, workers) {
+            let (head_a, tail_a) = std::mem::take(&mut rest_a).split_at_mut(r.len() * a_item);
+            let (head_b, tail_b) = std::mem::take(&mut rest_b).split_at_mut(r.len() * b_item);
+            rest_a = tail_a;
+            rest_b = tail_b;
+            let f = &f;
+            s.spawn(move || {
+                IN_PARALLEL.with(|c| c.set(true));
+                f(r, head_a, head_b)
+            });
+        }
+    });
+}
+
+/// [`parallel_chunks_mut`] that additionally collects a per-worker
+/// accumulator (e.g. a local `dW`/`db`), returned **in worker order** so
+/// the caller's serial merge is deterministic for a fixed thread count.
+pub fn parallel_chunks_reduce<T: Send, A: Send>(
+    data: &mut [T],
+    item_len: usize,
+    tune: Tuning,
+    f: impl Fn(Range<usize>, &mut [T]) -> A + Sync,
+) -> Vec<A> {
+    assert!(item_len > 0, "item_len must be positive");
+    assert_eq!(data.len() % item_len, 0, "data not a whole number of items");
+    let n = data.len() / item_len;
+    let workers = tune.workers(n);
+    if workers <= 1 {
+        if n == 0 {
+            return vec![];
+        }
+        return vec![f(0..n, data)];
+    }
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let handles: Vec<_> = partition(n, workers)
+            .into_iter()
+            .map(|r| {
+                let take = r.len() * item_len;
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+                rest = tail;
+                let f = &f;
+                s.spawn(move || {
+                    IN_PARALLEL.with(|c| c.set(true));
+                    f(r, head)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn partition_covers_exactly() {
+        for n in [0usize, 1, 2, 7, 64, 65] {
+            for p in [1usize, 2, 3, 8, 100] {
+                let ranges = partition(n, p);
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                }
+                assert_eq!(next, n);
+                // near-equal: sizes differ by at most one
+                if !ranges.is_empty() {
+                    let min = ranges.iter().map(|r| r.len()).min().unwrap();
+                    let max = ranges.iter().map(|r| r.len()).max().unwrap();
+                    assert!(max - min <= 1, "n={n} p={p}: {min}..{max}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        with_threads(4, || {
+            parallel_for(n, Tuning::new(1), |r| {
+                for i in r {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunks_mut_writes_disjoint_blocks() {
+        let mut data = vec![0usize; 12 * 3];
+        with_threads(5, || {
+            parallel_chunks_mut(&mut data, 3, Tuning::new(1), |items, block| {
+                for (bi, item) in items.enumerate() {
+                    for k in 0..3 {
+                        block[bi * 3 + k] = item * 10 + k;
+                    }
+                }
+            });
+        });
+        for item in 0..12 {
+            for k in 0..3 {
+                assert_eq!(data[item * 3 + k], item * 10 + k);
+            }
+        }
+    }
+
+    #[test]
+    fn chunks2_mut_blocks_stay_aligned() {
+        let mut a = vec![0usize; 10 * 2];
+        let mut b = vec![0usize; 10 * 5];
+        with_threads(3, || {
+            parallel_chunks2_mut(&mut a, 2, &mut b, 5, Tuning::new(1), |items, ab, bb| {
+                for (bi, item) in items.enumerate() {
+                    ab[bi * 2] = item;
+                    bb[bi * 5] = item;
+                }
+            });
+        });
+        for item in 0..10 {
+            assert_eq!(a[item * 2], item);
+            assert_eq!(b[item * 5], item);
+        }
+    }
+
+    #[test]
+    fn reduce_matches_serial_sum() {
+        let n = 4321u64;
+        let want: u64 = (0..n).sum();
+        for t in [1usize, 2, 4, 7] {
+            let got = with_threads(t, || {
+                parallel_reduce(
+                    n as usize,
+                    Tuning::new(16),
+                    |r| r.map(|i| i as u64).sum::<u64>(),
+                    |a, b| a + b,
+                    0u64,
+                )
+            });
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn chunks_reduce_returns_worker_order() {
+        let mut data = vec![0u8; 100];
+        let parts = with_threads(4, || {
+            parallel_chunks_reduce(&mut data, 1, Tuning::new(1), |r, _| r.start)
+        });
+        let mut sorted = parts.clone();
+        sorted.sort_unstable();
+        assert_eq!(parts, sorted, "partials must arrive in worker order");
+        assert_eq!(parts.len(), 4);
+    }
+
+    #[test]
+    fn nested_regions_serialize() {
+        let spawned_nested = AtomicU64::new(0);
+        with_threads(4, || {
+            parallel_for(8, Tuning::new(1), |_| {
+                assert!(in_parallel());
+                // a nested parallel call must collapse to one worker
+                let tune = Tuning::new(1);
+                assert_eq!(tune.workers(100), 1);
+                parallel_for(10, tune, |r| {
+                    if r.len() < 10 {
+                        spawned_nested.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            });
+        });
+        assert_eq!(spawned_nested.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn with_threads_restores_on_exit() {
+        let outer = num_threads();
+        with_threads(3, || assert_eq!(num_threads(), 3));
+        assert_eq!(num_threads(), outer);
+        // restored even across a panic
+        let _ = std::panic::catch_unwind(|| with_threads(5, || panic!("boom")));
+        assert_eq!(num_threads(), outer);
+    }
+
+    #[test]
+    fn workers_respect_grain() {
+        with_threads(8, || {
+            let t = Tuning::new(32);
+            assert_eq!(t.workers(0), 1);
+            assert_eq!(t.workers(31), 1);
+            assert_eq!(t.workers(64), 2);
+            assert_eq!(t.workers(10_000), 8);
+        });
+    }
+}

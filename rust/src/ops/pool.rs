@@ -4,8 +4,21 @@
 //! Max pooling records the *window phase* (i*kw + j) of the winner — the
 //! same encoding as the Pallas kernel — so argmax tensors are directly
 //! comparable across domains in the parity tests.
+//!
+//! Every output channel plane is independent, so the `*_batch` variants
+//! parallelize over (sample, channel) pairs through
+//! [`ops::par`](super::par): contiguous blocks of channel planes per
+//! scoped worker, input shared read-only.  Per-channel ordering is
+//! identical under any split, so results are bitwise independent of the
+//! thread count.  Knobs: `PHAST_NUM_THREADS` + `PHAST_POOL_GRAIN`
+//! (channel planes per worker).  The single-sample functions remain the
+//! serial reference the property tests compare against.
 
 use super::geometry::pool_geom;
+use super::par;
+
+/// Minimum (sample, channel) planes per worker (`PHAST_POOL_GRAIN`).
+static POOL_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_POOL_GRAIN", 4);
 
 /// Pooling window parameters (square semantics per axis).
 #[derive(Clone, Copy, Debug)]
@@ -18,7 +31,47 @@ pub struct Pool2dGeom {
     pub pw: usize,
 }
 
-/// One sample (C,H,W) -> (vals, argmax-phase) of shape (C, OH, OW).
+/// One channel plane (H,W) -> (vals, argmax-phase) of shape (OH, OW).
+#[allow(clippy::too_many_arguments)]
+fn maxpool_channel(
+    img: &[f32],
+    h: usize,
+    w: usize,
+    g: Pool2dGeom,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+    arg: &mut [i32],
+) {
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut best = f32::NEG_INFINITY;
+            let mut phase = 0i32;
+            for i in 0..g.kh {
+                let iy = (oy * g.sh + i) as isize - g.ph as isize;
+                if iy < 0 || iy as usize >= h {
+                    continue;
+                }
+                for j in 0..g.kw {
+                    let ix = (ox * g.sw + j) as isize - g.pw as isize;
+                    if ix < 0 || ix as usize >= w {
+                        continue;
+                    }
+                    let v = img[iy as usize * w + ix as usize];
+                    if v > best {
+                        best = v;
+                        phase = (i * g.kw + j) as i32;
+                    }
+                }
+            }
+            out[oy * ow + ox] = best;
+            arg[oy * ow + ox] = phase;
+        }
+    }
+}
+
+/// One sample (C,H,W) -> (vals, argmax-phase) of shape (C, OH, OW) —
+/// the serial reference.
 pub fn maxpool(
     x: &[f32],
     c: usize,
@@ -36,35 +89,83 @@ pub fn maxpool(
 
     for ch in 0..c {
         let img = &x[ch * h * w..(ch + 1) * h * w];
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let mut best = f32::NEG_INFINITY;
-                let mut phase = 0i32;
-                for i in 0..g.kh {
-                    let iy = (oy * g.sh + i) as isize - g.ph as isize;
-                    if iy < 0 || iy as usize >= h {
-                        continue;
-                    }
-                    for j in 0..g.kw {
-                        let ix = (ox * g.sw + j) as isize - g.pw as isize;
-                        if ix < 0 || ix as usize >= w {
-                            continue;
-                        }
-                        let v = img[iy as usize * w + ix as usize];
-                        if v > best {
-                            best = v;
-                            phase = (i * g.kw + j) as i32;
-                        }
-                    }
-                }
-                out[ch * oh * ow + oy * ow + ox] = best;
-                arg[ch * oh * ow + oy * ow + ox] = phase;
-            }
+        maxpool_channel(
+            img,
+            h,
+            w,
+            g,
+            oh,
+            ow,
+            &mut out[ch * oh * ow..(ch + 1) * oh * ow],
+            &mut arg[ch * oh * ow..(ch + 1) * oh * ow],
+        );
+    }
+}
+
+/// Whole batch (N,C,H,W), parallel over the N*C channel planes.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_batch(
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    g: Pool2dGeom,
+    out: &mut [f32],
+    arg: &mut [i32],
+) {
+    let gh = pool_geom(h, g.kh, g.sh, g.ph);
+    let gw = pool_geom(w, g.kw, g.sw, g.pw);
+    let (oh, ow) = (gh.out, gw.out);
+    assert_eq!(x.len(), n * c * h * w);
+    assert_eq!(out.len(), n * c * oh * ow);
+    assert_eq!(arg.len(), out.len());
+    let tune = par::Tuning::new(POOL_GRAIN.get());
+    par::parallel_chunks2_mut(out, oh * ow, arg, oh * ow, tune, |planes, ob, ab| {
+        for (bi, plane) in planes.enumerate() {
+            maxpool_channel(
+                &x[plane * h * w..(plane + 1) * h * w],
+                h,
+                w,
+                g,
+                oh,
+                ow,
+                &mut ob[bi * oh * ow..(bi + 1) * oh * ow],
+                &mut ab[bi * oh * ow..(bi + 1) * oh * ow],
+            );
+        }
+    });
+}
+
+/// Scatter one channel plane's pooled gradients through its phases.
+/// Zeroes the `dx` plane first.
+#[allow(clippy::too_many_arguments)]
+fn maxpool_bwd_channel(
+    dy: &[f32],
+    arg: &[i32],
+    h: usize,
+    w: usize,
+    g: Pool2dGeom,
+    oh: usize,
+    ow: usize,
+    dx: &mut [f32],
+) {
+    dx.iter_mut().for_each(|v| *v = 0.0);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let idx = oy * ow + ox;
+            let phase = arg[idx] as usize;
+            let (i, j) = (phase / g.kw, phase % g.kw);
+            let iy = (oy * g.sh + i) as isize - g.ph as isize;
+            let ix = (ox * g.sw + j) as isize - g.pw as isize;
+            debug_assert!(iy >= 0 && ix >= 0);
+            dx[iy as usize * w + ix as usize] += dy[idx];
         }
     }
 }
 
-/// Route pooled gradients back through the recorded argmax phases.
+/// Route pooled gradients back through the recorded argmax phases —
+/// the serial per-sample reference.
 #[allow(clippy::too_many_arguments)]
 pub fn maxpool_bwd(
     dy: &[f32],
@@ -79,22 +180,54 @@ pub fn maxpool_bwd(
     let gw = pool_geom(w, g.kw, g.sw, g.pw);
     let (oh, ow) = (gh.out, gw.out);
     assert_eq!(dx.len(), c * h * w);
-    dx.iter_mut().for_each(|v| *v = 0.0);
 
     for ch in 0..c {
-        let img = &mut dx[ch * h * w..(ch + 1) * h * w];
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let idx = ch * oh * ow + oy * ow + ox;
-                let phase = arg[idx] as usize;
-                let (i, j) = (phase / g.kw, phase % g.kw);
-                let iy = (oy * g.sh + i) as isize - g.ph as isize;
-                let ix = (ox * g.sw + j) as isize - g.pw as isize;
-                debug_assert!(iy >= 0 && ix >= 0);
-                img[iy as usize * w + ix as usize] += dy[idx];
-            }
-        }
+        maxpool_bwd_channel(
+            &dy[ch * oh * ow..(ch + 1) * oh * ow],
+            &arg[ch * oh * ow..(ch + 1) * oh * ow],
+            h,
+            w,
+            g,
+            oh,
+            ow,
+            &mut dx[ch * h * w..(ch + 1) * h * w],
+        );
     }
+}
+
+/// Whole-batch max-pool backward, parallel over the N*C `dx` planes.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_bwd_batch(
+    dy: &[f32],
+    arg: &[i32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    g: Pool2dGeom,
+    dx: &mut [f32],
+) {
+    let gh = pool_geom(h, g.kh, g.sh, g.ph);
+    let gw = pool_geom(w, g.kw, g.sw, g.pw);
+    let (oh, ow) = (gh.out, gw.out);
+    assert_eq!(dy.len(), n * c * oh * ow);
+    assert_eq!(arg.len(), dy.len());
+    assert_eq!(dx.len(), n * c * h * w);
+    let tune = par::Tuning::new(POOL_GRAIN.get());
+    par::parallel_chunks_mut(dx, h * w, tune, |planes, db| {
+        for (bi, plane) in planes.enumerate() {
+            maxpool_bwd_channel(
+                &dy[plane * oh * ow..(plane + 1) * oh * ow],
+                &arg[plane * oh * ow..(plane + 1) * oh * ow],
+                h,
+                w,
+                g,
+                oh,
+                ow,
+                &mut db[bi * h * w..(bi + 1) * h * w],
+            );
+        }
+    });
 }
 
 /// Caffe AVE-pool divisor: window area clipped to the padded canvas.
@@ -108,7 +241,39 @@ fn ave_div(oy: usize, ox: usize, h: usize, w: usize, g: Pool2dGeom) -> f32 {
     ((he - hs) * (we - ws)) as f32
 }
 
-/// Average pooling: sum of real elements / clipped window area.
+/// Average-pool one channel plane.
+fn avepool_channel(
+    img: &[f32],
+    h: usize,
+    w: usize,
+    g: Pool2dGeom,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut acc = 0.0f32;
+            for i in 0..g.kh {
+                let iy = (oy * g.sh + i) as isize - g.ph as isize;
+                if iy < 0 || iy as usize >= h {
+                    continue;
+                }
+                for j in 0..g.kw {
+                    let ix = (ox * g.sw + j) as isize - g.pw as isize;
+                    if ix < 0 || ix as usize >= w {
+                        continue;
+                    }
+                    acc += img[iy as usize * w + ix as usize];
+                }
+            }
+            out[oy * ow + ox] = acc / ave_div(oy, ox, h, w, g);
+        }
+    }
+}
+
+/// Average pooling: sum of real elements / clipped window area — the
+/// serial per-sample reference.
 pub fn avepool(x: &[f32], c: usize, h: usize, w: usize, g: Pool2dGeom, out: &mut [f32]) {
     let gh = pool_geom(h, g.kh, g.sh, g.ph);
     let gw = pool_geom(w, g.kw, g.sw, g.pw);
@@ -116,58 +281,131 @@ pub fn avepool(x: &[f32], c: usize, h: usize, w: usize, g: Pool2dGeom, out: &mut
     assert_eq!(out.len(), c * oh * ow);
 
     for ch in 0..c {
-        let img = &x[ch * h * w..(ch + 1) * h * w];
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let mut acc = 0.0f32;
-                for i in 0..g.kh {
-                    let iy = (oy * g.sh + i) as isize - g.ph as isize;
-                    if iy < 0 || iy as usize >= h {
+        avepool_channel(
+            &x[ch * h * w..(ch + 1) * h * w],
+            h,
+            w,
+            g,
+            oh,
+            ow,
+            &mut out[ch * oh * ow..(ch + 1) * oh * ow],
+        );
+    }
+}
+
+/// Whole-batch average pooling, parallel over the N*C channel planes.
+#[allow(clippy::too_many_arguments)]
+pub fn avepool_batch(
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    g: Pool2dGeom,
+    out: &mut [f32],
+) {
+    let gh = pool_geom(h, g.kh, g.sh, g.ph);
+    let gw = pool_geom(w, g.kw, g.sw, g.pw);
+    let (oh, ow) = (gh.out, gw.out);
+    assert_eq!(x.len(), n * c * h * w);
+    assert_eq!(out.len(), n * c * oh * ow);
+    let tune = par::Tuning::new(POOL_GRAIN.get());
+    par::parallel_chunks_mut(out, oh * ow, tune, |planes, ob| {
+        for (bi, plane) in planes.enumerate() {
+            avepool_channel(
+                &x[plane * h * w..(plane + 1) * h * w],
+                h,
+                w,
+                g,
+                oh,
+                ow,
+                &mut ob[bi * oh * ow..(bi + 1) * oh * ow],
+            );
+        }
+    });
+}
+
+/// Backward of [`avepool`] for one channel plane (zeroes the plane first).
+fn avepool_bwd_channel(
+    dy: &[f32],
+    h: usize,
+    w: usize,
+    g: Pool2dGeom,
+    oh: usize,
+    ow: usize,
+    dx: &mut [f32],
+) {
+    dx.iter_mut().for_each(|v| *v = 0.0);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let gshare = dy[oy * ow + ox] / ave_div(oy, ox, h, w, g);
+            for i in 0..g.kh {
+                let iy = (oy * g.sh + i) as isize - g.ph as isize;
+                if iy < 0 || iy as usize >= h {
+                    continue;
+                }
+                for j in 0..g.kw {
+                    let ix = (ox * g.sw + j) as isize - g.pw as isize;
+                    if ix < 0 || ix as usize >= w {
                         continue;
                     }
-                    for j in 0..g.kw {
-                        let ix = (ox * g.sw + j) as isize - g.pw as isize;
-                        if ix < 0 || ix as usize >= w {
-                            continue;
-                        }
-                        acc += img[iy as usize * w + ix as usize];
-                    }
+                    dx[iy as usize * w + ix as usize] += gshare;
                 }
-                out[ch * oh * ow + oy * ow + ox] = acc / ave_div(oy, ox, h, w, g);
             }
         }
     }
 }
 
-/// Backward of [`avepool`].
+/// Backward of [`avepool`] — the serial per-sample reference.
 pub fn avepool_bwd(dy: &[f32], c: usize, h: usize, w: usize, g: Pool2dGeom, dx: &mut [f32]) {
     let gh = pool_geom(h, g.kh, g.sh, g.ph);
     let gw = pool_geom(w, g.kw, g.sw, g.pw);
     let (oh, ow) = (gh.out, gw.out);
     assert_eq!(dx.len(), c * h * w);
-    dx.iter_mut().for_each(|v| *v = 0.0);
 
     for ch in 0..c {
-        let img = &mut dx[ch * h * w..(ch + 1) * h * w];
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let gshare = dy[ch * oh * ow + oy * ow + ox] / ave_div(oy, ox, h, w, g);
-                for i in 0..g.kh {
-                    let iy = (oy * g.sh + i) as isize - g.ph as isize;
-                    if iy < 0 || iy as usize >= h {
-                        continue;
-                    }
-                    for j in 0..g.kw {
-                        let ix = (ox * g.sw + j) as isize - g.pw as isize;
-                        if ix < 0 || ix as usize >= w {
-                            continue;
-                        }
-                        img[iy as usize * w + ix as usize] += gshare;
-                    }
-                }
-            }
-        }
+        avepool_bwd_channel(
+            &dy[ch * oh * ow..(ch + 1) * oh * ow],
+            h,
+            w,
+            g,
+            oh,
+            ow,
+            &mut dx[ch * h * w..(ch + 1) * h * w],
+        );
     }
+}
+
+/// Whole-batch average-pool backward, parallel over the N*C `dx` planes.
+#[allow(clippy::too_many_arguments)]
+pub fn avepool_bwd_batch(
+    dy: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    g: Pool2dGeom,
+    dx: &mut [f32],
+) {
+    let gh = pool_geom(h, g.kh, g.sh, g.ph);
+    let gw = pool_geom(w, g.kw, g.sw, g.pw);
+    let (oh, ow) = (gh.out, gw.out);
+    assert_eq!(dy.len(), n * c * oh * ow);
+    assert_eq!(dx.len(), n * c * h * w);
+    let tune = par::Tuning::new(POOL_GRAIN.get());
+    par::parallel_chunks_mut(dx, h * w, tune, |planes, db| {
+        for (bi, plane) in planes.enumerate() {
+            avepool_bwd_channel(
+                &dy[plane * oh * ow..(plane + 1) * oh * ow],
+                h,
+                w,
+                g,
+                oh,
+                ow,
+                &mut db[bi * h * w..(bi + 1) * h * w],
+            );
+        }
+    });
 }
 
 #[cfg(test)]

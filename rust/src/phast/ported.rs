@@ -175,7 +175,15 @@ impl<'e> PortedNet<'e> {
             .clone())
     }
 
+    /// i32 view of a float label blob, converted at most once per batch:
+    /// the cache holds the conversion until a native layer (the data
+    /// layer) rewrites the blob, so the loss and accuracy heads — and the
+    /// backward pass — share one conversion instead of re-running it per
+    /// consumer per iteration.
     fn labels_i32(&mut self, name: &str) -> Result<IntTensor> {
+        if let Some(it) = self.labels_cache.get(name) {
+            return Ok(it.clone());
+        }
         let t = self.blob_data(name)?;
         let v: Vec<i32> = t.as_slice().iter().map(|&x| x as i32).collect();
         let it = IntTensor::from_vec(Shape::new(&[t.len()]), v);
@@ -309,6 +317,10 @@ impl<'e> PortedNet<'e> {
                     self.net.forward_layer(li)?;
                     for t in &tops {
                         self.data_domain.insert(t.clone(), Domain::Native);
+                        // A native layer rewrote this blob (e.g. the data
+                        // layer produced a fresh batch): drop any stale
+                        // i32 label conversion.
+                        self.labels_cache.remove(t);
                     }
                 }
                 Domain::Phast => self.forward_layer_phast(li)?,
@@ -380,10 +392,7 @@ impl<'e> PortedNet<'e> {
                     .get(&cfg.name)
                     .with_context(|| format!("no probs stash for '{}'", cfg.name))?
                     .clone();
-                let labels = match self.labels_cache.get(&cfg.bottoms[1]) {
-                    Some(l) => l.clone(),
-                    None => self.labels_i32(&cfg.bottoms[1])?,
-                };
+                let labels = self.labels_i32(&cfg.bottoms[1])?;
                 let out = self
                     .engine
                     .run(&art, &[Value::F32(probs), Value::I32(labels)])?;

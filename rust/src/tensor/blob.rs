@@ -73,6 +73,13 @@ impl Blob {
         &mut self.diff
     }
 
+    /// Split borrow: read-only `data` alongside mutable `diff`.  Backward
+    /// passes need the weights while accumulating their gradient; this
+    /// keeps that borrow-safe without cloning the weight tensor per call.
+    pub fn data_and_diff_mut(&mut self) -> (&Tensor, &mut Tensor) {
+        (&self.data, &mut self.diff)
+    }
+
     pub fn state(&self) -> SyncState {
         self.state
     }

@@ -1,0 +1,286 @@
+//! Property tests for the multi-core native backend (`ops::par`): every
+//! parallel kernel path must match its serial reference within tolerance
+//! across random shapes and thread counts (1, 2, N) — including the
+//! per-thread `dW`/`db` reduction path of the convolution backward.
+
+use phast_caffe::layers::{ConvLayer, Layer};
+use phast_caffe::ops::{self, gemm::Trans, par, pool::Pool2dGeom};
+use phast_caffe::propcheck::{assert_close, forall, Rng};
+use phast_caffe::proto::{LayerConfig, LayerType};
+use phast_caffe::tensor::{Shape, Tensor};
+
+/// Thread counts every property sweeps: serial, two workers, and more
+/// workers than this container has cores (oversubscription must still be
+/// correct).
+const THREADS: [usize; 3] = [1, 2, 5];
+
+#[test]
+fn gemm_invariant_to_thread_count() {
+    forall("par-gemm", 10, |rng: &mut Rng| {
+        // Big enough that m*n*k always clears the parallel threshold.
+        let m = rng.range(32, 64);
+        let n = rng.range(64, 128);
+        let k = rng.range(64, 128);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        for (ta, tb) in [
+            (Trans::No, Trans::No),
+            (Trans::Yes, Trans::No),
+            (Trans::No, Trans::Yes),
+            (Trans::Yes, Trans::Yes),
+        ] {
+            let mut want = vec![0.5f32; m * n];
+            par::with_threads(1, || {
+                ops::gemm(ta, tb, m, n, k, 1.0, &a, &b, 0.5, &mut want);
+            });
+            for t in [2usize, 5] {
+                let mut got = vec![0.5f32; m * n];
+                par::with_threads(t, || {
+                    ops::gemm(ta, tb, m, n, k, 1.0, &a, &b, 0.5, &mut got);
+                });
+                // Row-block split preserves per-row op order: bitwise equal.
+                assert_eq!(want, got, "gemm {ta:?}/{tb:?} diverged at {t} threads");
+            }
+        }
+    });
+}
+
+fn conv_cfg(cout: usize, k: usize, s: usize, p: usize) -> LayerConfig {
+    LayerConfig {
+        name: "c".into(),
+        ltype: LayerType::Convolution,
+        bottoms: vec!["x".into()],
+        tops: vec!["y".into()],
+        num_output: cout,
+        kernel_size: k,
+        stride: s,
+        pad: p,
+        ..Default::default()
+    }
+}
+
+/// Run one conv forward+backward under `threads`; returns (y, dx, dw, db).
+fn conv_fwd_bwd(
+    threads: usize,
+    cfg: &LayerConfig,
+    in_shape: &Shape,
+    x: &Tensor,
+    dy_seed: u64,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    par::with_threads(threads, || {
+        let mut layer = ConvLayer::new(cfg.clone(), 42).unwrap();
+        let out_shape = layer.setup(std::slice::from_ref(in_shape)).unwrap().remove(0);
+        let mut y = Tensor::zeros(out_shape.clone());
+        layer.forward(&[x], std::slice::from_mut(&mut y)).unwrap();
+        let mut rng = Rng::new(dy_seed);
+        let dy = Tensor::from_vec(out_shape.clone(), rng.normal_vec(out_shape.count()));
+        let mut dx = Tensor::zeros(in_shape.clone());
+        layer.backward(&[&dy], &[x], std::slice::from_mut(&mut dx)).unwrap();
+        (
+            y.as_slice().to_vec(),
+            dx.as_slice().to_vec(),
+            layer.params()[0].diff().as_slice().to_vec(),
+            layer.params()[1].diff().as_slice().to_vec(),
+        )
+    })
+}
+
+#[test]
+fn conv_forward_backward_invariant_to_thread_count() {
+    forall("par-conv", 6, |rng: &mut Rng| {
+        let n = rng.range(2, 8); // batch: the parallel axis
+        let cin = rng.range(1, 3);
+        let h = rng.range(5, 10);
+        let w = rng.range(5, 10);
+        let k = rng.range(1, 3);
+        let cout = rng.range(1, 4);
+        let cfg = conv_cfg(cout, k, 1, rng.range(0, k - 1));
+        let in_shape = Shape::nchw(n, cin, h, w);
+        let x = Tensor::from_vec(in_shape.clone(), rng.normal_vec(in_shape.count()));
+        let dy_seed = rng.next_u64();
+
+        let (y1, dx1, dw1, db1) = conv_fwd_bwd(1, &cfg, &in_shape, &x, dy_seed);
+        for t in [2usize, 5] {
+            let (yt, dxt, dwt, dbt) = conv_fwd_bwd(t, &cfg, &in_shape, &x, dy_seed);
+            // y and dx are per-sample-disjoint: identical op order.
+            assert_close(&y1, &yt, 1e-6, 1e-6);
+            assert_close(&dx1, &dxt, 1e-6, 1e-6);
+            // dW/db go through the per-thread reduction: summation order
+            // differs, so compare within the paper's validation tolerance.
+            assert_close(&dw1, &dwt, 1e-4, 1e-4);
+            assert_close(&db1, &dbt, 1e-4, 1e-4);
+        }
+    });
+}
+
+#[test]
+fn maxpool_batch_matches_serial_reference() {
+    forall("par-maxpool", 8, |rng: &mut Rng| {
+        let n = rng.range(1, 6);
+        let c = rng.range(1, 4);
+        let h = rng.range(4, 12);
+        let w = rng.range(4, 12);
+        let k = rng.range(2, 3.min(h).min(w));
+        let s = rng.range(1, k);
+        let g = Pool2dGeom { kh: k, kw: k, sh: s, sw: s, ph: 0, pw: 0 };
+        let gh = ops::pool_geom(h, k, s, 0);
+        let gw = ops::pool_geom(w, k, s, 0);
+        let (oh, ow) = (gh.out, gw.out);
+        let x = rng.normal_vec(n * c * h * w);
+
+        // serial reference: per-sample loop over the single-sample op
+        let mut want = vec![0.0f32; n * c * oh * ow];
+        let mut want_arg = vec![0i32; want.len()];
+        for smp in 0..n {
+            ops::maxpool(
+                &x[smp * c * h * w..(smp + 1) * c * h * w],
+                c,
+                h,
+                w,
+                g,
+                &mut want[smp * c * oh * ow..(smp + 1) * c * oh * ow],
+                &mut want_arg[smp * c * oh * ow..(smp + 1) * c * oh * ow],
+            );
+        }
+        let dy = rng.normal_vec(want.len());
+        let mut want_dx = vec![0.0f32; x.len()];
+        for smp in 0..n {
+            ops::maxpool_bwd(
+                &dy[smp * c * oh * ow..(smp + 1) * c * oh * ow],
+                &want_arg[smp * c * oh * ow..(smp + 1) * c * oh * ow],
+                c,
+                h,
+                w,
+                g,
+                &mut want_dx[smp * c * h * w..(smp + 1) * c * h * w],
+            );
+        }
+
+        for t in THREADS {
+            par::with_threads(t, || {
+                let mut got = vec![0.0f32; want.len()];
+                let mut got_arg = vec![0i32; want.len()];
+                ops::maxpool_batch(&x, n, c, h, w, g, &mut got, &mut got_arg);
+                assert_eq!(want, got, "maxpool values at {t} threads");
+                assert_eq!(want_arg, got_arg, "maxpool argmax at {t} threads");
+                let mut got_dx = vec![0.0f32; x.len()];
+                ops::maxpool_bwd_batch(&dy, &got_arg, n, c, h, w, g, &mut got_dx);
+                assert_eq!(want_dx, got_dx, "maxpool bwd at {t} threads");
+            });
+        }
+    });
+}
+
+#[test]
+fn avepool_batch_matches_serial_reference() {
+    forall("par-avepool", 8, |rng: &mut Rng| {
+        let n = rng.range(1, 6);
+        let c = rng.range(1, 4);
+        let h = rng.range(4, 12);
+        let k = rng.range(2, 3.min(h));
+        let s = rng.range(1, k);
+        let g = Pool2dGeom { kh: k, kw: k, sh: s, sw: s, ph: 0, pw: 0 };
+        let gh = ops::pool_geom(h, k, s, 0);
+        let (oh, ow) = (gh.out, gh.out);
+        let x = rng.normal_vec(n * c * h * h);
+
+        let mut want = vec![0.0f32; n * c * oh * ow];
+        for smp in 0..n {
+            ops::avepool(
+                &x[smp * c * h * h..(smp + 1) * c * h * h],
+                c,
+                h,
+                h,
+                g,
+                &mut want[smp * c * oh * ow..(smp + 1) * c * oh * ow],
+            );
+        }
+        let dy = rng.normal_vec(want.len());
+        let mut want_dx = vec![0.0f32; x.len()];
+        for smp in 0..n {
+            ops::avepool_bwd(
+                &dy[smp * c * oh * ow..(smp + 1) * c * oh * ow],
+                c,
+                h,
+                h,
+                g,
+                &mut want_dx[smp * c * h * h..(smp + 1) * c * h * h],
+            );
+        }
+
+        for t in THREADS {
+            par::with_threads(t, || {
+                let mut got = vec![0.0f32; want.len()];
+                ops::avepool_batch(&x, n, c, h, h, g, &mut got);
+                assert_eq!(want, got, "avepool values at {t} threads");
+                let mut got_dx = vec![0.0f32; x.len()];
+                ops::avepool_bwd_batch(&dy, n, c, h, h, g, &mut got_dx);
+                assert_eq!(want_dx, got_dx, "avepool bwd at {t} threads");
+            });
+        }
+    });
+}
+
+#[test]
+fn eltwise_and_softmax_invariant_to_thread_count() {
+    forall("par-eltwise", 8, |rng: &mut Rng| {
+        // Long enough to split even at the elementwise grain.
+        let len = rng.range(10_000, 40_000);
+        let x = rng.normal_vec(len);
+        let dy = rng.normal_vec(len);
+        let mut want_y = vec![0.0f32; len];
+        let mut want_dx = vec![0.0f32; len];
+        par::with_threads(1, || {
+            ops::leaky_relu(&x, 0.1, &mut want_y);
+            ops::leaky_relu_bwd(&x, &dy, 0.1, &mut want_dx);
+        });
+
+        // > 64 rows so the softmax row grain actually splits the batch.
+        let n = rng.range(70, 140);
+        let c = rng.range(2, 12);
+        let logits: Vec<f32> = rng.normal_vec(n * c).iter().map(|v| v * 3.0).collect();
+        let labels: Vec<i32> = (0..n).map(|_| rng.range(0, c - 1) as i32).collect();
+        let mut want_p = vec![0.0f32; n * c];
+        let mut want_g = vec![0.0f32; n * c];
+        let want_loss = par::with_threads(1, || {
+            let l = ops::softmax_xent(&logits, &labels, n, c, &mut want_p);
+            ops::softmax_xent_bwd(&want_p, &labels, n, c, &mut want_g);
+            l
+        });
+
+        for t in [2usize, 5] {
+            par::with_threads(t, || {
+                let mut y = vec![0.0f32; len];
+                let mut dx = vec![0.0f32; len];
+                ops::leaky_relu(&x, 0.1, &mut y);
+                ops::leaky_relu_bwd(&x, &dy, 0.1, &mut dx);
+                assert_eq!(want_y, y, "relu at {t} threads");
+                assert_eq!(want_dx, dx, "relu bwd at {t} threads");
+
+                let mut p = vec![0.0f32; n * c];
+                let mut gr = vec![0.0f32; n * c];
+                let loss = ops::softmax_xent(&logits, &labels, n, c, &mut p);
+                ops::softmax_xent_bwd(&p, &labels, n, c, &mut gr);
+                assert_eq!(want_p, p, "softmax at {t} threads");
+                assert_eq!(want_g, gr, "xent bwd at {t} threads");
+                assert!((loss - want_loss).abs() < 1e-6, "loss at {t} threads");
+            });
+        }
+    });
+}
+
+/// PHAST-style tuning: the env-independent `with_threads` knob and the
+/// grain floor interact sanely with an end-to-end layer.
+#[test]
+fn oversubscribed_threads_still_correct() {
+    let cfg = conv_cfg(4, 3, 1, 1);
+    let in_shape = Shape::nchw(3, 2, 7, 7); // batch 3 < 16 threads
+    let mut rng = Rng::new(77);
+    let x = Tensor::from_vec(in_shape.clone(), rng.normal_vec(in_shape.count()));
+    let (y1, dx1, dw1, db1) = conv_fwd_bwd(1, &cfg, &in_shape, &x, 5);
+    let (y16, dx16, dw16, db16) = conv_fwd_bwd(16, &cfg, &in_shape, &x, 5);
+    assert_close(&y1, &y16, 1e-6, 1e-6);
+    assert_close(&dx1, &dx16, 1e-6, 1e-6);
+    assert_close(&dw1, &dw16, 1e-4, 1e-4);
+    assert_close(&db1, &db16, 1e-4, 1e-4);
+}
