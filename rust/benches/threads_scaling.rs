@@ -1,10 +1,18 @@
 //! Bench: serial-vs-parallel scaling of the native backend — the
 //! multi-core honesty check behind the Table 2 "Caffe" baseline.
 //!
-//! Runs full forward+backward iterations of LeNet-MNIST (batch 64, the
-//! paper's workload) at increasing thread counts via the
-//! `ops::par::with_threads` knob, prints the scaling table, and records
-//! it to `BENCH_threads.json` for the CI artifact.
+//! Two sections, both recorded to `BENCH_threads.json` for the CI
+//! artifact:
+//!
+//! 1. **Scaling table** — full forward+backward iterations of
+//!    LeNet-MNIST (batch 64, the paper's workload) at increasing thread
+//!    counts via the `ops::par::with_threads` knob.
+//! 2. **Small-op dispatch microbench** — per-dispatch overhead of the
+//!    persistent worker pool vs the pre-pool scoped-spawn path
+//!    (`par::parallel_for_spawn`), measured on a trivial parallel region.
+//!    This is the many-small-op regime (CIFAR-quick head layers) the
+//!    pool exists for: the spawn path pays thread creation per call, the
+//!    pool only a channel send + latch join.
 //!
 //! `cargo bench --bench threads_scaling`
 
@@ -33,6 +41,37 @@ fn fwd_bwd_ms(threads: usize, warmup: usize, iters: usize) -> anyhow::Result<f64
     })
 }
 
+/// Mean ns per dispatch of a tiny parallel region (`threads` worker
+/// ranges, trivial body) through either the persistent pool or the
+/// scoped-spawn baseline.
+fn dispatch_ns(pool: bool, threads: usize, iters: usize) -> f64 {
+    let tune = par::Tuning { threads, grain: 1 };
+    let sink = std::sync::atomic::AtomicUsize::new(0);
+    let body = |r: std::ops::Range<usize>| {
+        // Just enough work to keep the region from being optimized out.
+        sink.fetch_add(r.end - r.start, std::sync::atomic::Ordering::Relaxed);
+    };
+    // Warm (grows the pool / faults in thread stacks).
+    for _ in 0..16 {
+        if pool {
+            par::parallel_for(threads, tune, body);
+        } else {
+            par::parallel_for_spawn(threads, tune, body);
+        }
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        if pool {
+            par::parallel_for(threads, tune, body);
+        } else {
+            par::parallel_for_spawn(threads, tune, body);
+        }
+    }
+    let ns = t0.elapsed().as_secs_f64() * 1e9 / iters as f64;
+    std::hint::black_box(sink.load(std::sync::atomic::Ordering::Relaxed));
+    ns
+}
+
 fn main() -> anyhow::Result<()> {
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut counts = vec![1usize, 2, 4];
@@ -56,6 +95,17 @@ fn main() -> anyhow::Result<()> {
         rows.push((t, ms, speedup));
     }
 
+    // Small-op dispatch overhead: pool vs per-call spawn at the widest
+    // measured thread count.
+    let t = *counts.last().unwrap();
+    let micro_iters = 2000usize;
+    let pool_ns = dispatch_ns(true, t.max(2), micro_iters);
+    let spawn_ns = dispatch_ns(false, t.max(2), micro_iters);
+    let ratio = spawn_ns / pool_ns;
+    println!("\nsmall-op dispatch ({} workers, {micro_iters} iters):", t.max(2));
+    println!("  pool  {pool_ns:>10.0} ns/dispatch");
+    println!("  spawn {spawn_ns:>10.0} ns/dispatch  ({ratio:.1}x slower)");
+
     // Hand-rolled JSON (no serde in the dependency-free build).
     let mut json = String::from("{\n  \"bench\": \"threads_scaling\",\n");
     let _ = writeln!(json, "  \"net\": \"lenet-mnist\",\n  \"batch\": 64,");
@@ -68,7 +118,14 @@ fn main() -> anyhow::Result<()> {
             "    {{\"threads\": {t}, \"fwd_bwd_ms\": {ms:.3}, \"speedup\": {speedup:.3}}}{comma}"
         );
     }
-    json.push_str("  ]\n}\n");
+    json.push_str("  ],\n");
+    let _ = writeln!(json, "  \"small_op_dispatch\": {{");
+    let _ = writeln!(json, "    \"workers\": {},", t.max(2));
+    let _ = writeln!(json, "    \"iters\": {micro_iters},");
+    let _ = writeln!(json, "    \"pool_ns_per_dispatch\": {pool_ns:.0},");
+    let _ = writeln!(json, "    \"spawn_ns_per_dispatch\": {spawn_ns:.0},");
+    let _ = writeln!(json, "    \"spawn_over_pool\": {ratio:.2}");
+    json.push_str("  }\n}\n");
     std::fs::write("BENCH_threads.json", &json)?;
     println!("\nwrote BENCH_threads.json");
     Ok(())

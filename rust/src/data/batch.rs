@@ -1,9 +1,21 @@
 //! Batch iterator: epoch shuffling + NCHW batch assembly for the Data layer.
+//!
+//! Index draws stay serial (the epoch RNG owns sequential state — the
+//! shuffle order is part of the training trajectory), but the sample
+//! *copies* are embarrassingly parallel: each sample's image is gathered
+//! into its own contiguous block of the batch through
+//! [`ops::par`](crate::ops::par).  Knobs: `PHAST_NUM_THREADS` +
+//! `PHAST_DATA_GRAIN` (samples per worker).  Results are byte-identical
+//! to the serial gather under any thread count (pure disjoint copies).
 
+use crate::ops::par;
 use crate::propcheck::Rng;
 use crate::tensor::{IntTensor, Shape, Tensor};
 
 use super::synthetic::Dataset;
+
+/// Minimum samples per worker for batch assembly (`PHAST_DATA_GRAIN`).
+static DATA_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_DATA_GRAIN", 8);
 
 /// Cycles over a dataset in shuffled epochs, emitting fixed-size batches.
 pub struct BatchIterator {
@@ -49,21 +61,49 @@ impl BatchIterator {
         Shape::nchw(self.batch, s.dim(0), s.dim(1), s.dim(2))
     }
 
-    /// Next (images, labels) batch; wraps and reshuffles at epoch end.
-    pub fn next_batch(&mut self) -> (Tensor, IntTensor) {
-        let n = self.ds.sample_len();
-        let mut data = Vec::with_capacity(self.batch * n);
-        let mut labels = Vec::with_capacity(self.batch);
+    /// Draw the next batch's sample indices (serial: the RNG is
+    /// sequential state shared across epochs).
+    fn draw_indices(&mut self) -> Vec<usize> {
+        let mut picks = Vec::with_capacity(self.batch);
         for _ in 0..self.batch {
             if self.cursor >= self.order.len() {
                 self.epoch += 1;
                 self.reshuffle();
             }
-            let idx = self.order[self.cursor];
+            picks.push(self.order[self.cursor]);
             self.cursor += 1;
-            data.extend_from_slice(self.ds.image(idx));
-            labels.push(self.ds.labels[idx]);
         }
+        picks
+    }
+
+    /// Assemble the next batch directly into caller storage — the Data
+    /// layer's top blobs — with labels widened to f32 (Caffe stores
+    /// labels in float blobs).  The per-sample image copies run parallel
+    /// over contiguous sample blocks; no intermediate tensor is built.
+    pub fn next_batch_into(&mut self, data: &mut [f32], labels: &mut [f32]) {
+        let n = self.ds.sample_len();
+        assert_eq!(data.len(), self.batch * n, "data blob size");
+        assert_eq!(labels.len(), self.batch, "label blob size");
+        let picks = self.draw_indices();
+        for (dst, &idx) in labels.iter_mut().zip(&picks) {
+            *dst = self.ds.labels[idx] as f32;
+        }
+        let ds = &self.ds;
+        let tune = par::Tuning::new(DATA_GRAIN.get());
+        par::parallel_chunks_mut(data, n, tune, |samples, block| {
+            for (bi, s) in samples.enumerate() {
+                block[bi * n..(bi + 1) * n].copy_from_slice(ds.image(picks[s]));
+            }
+        });
+    }
+
+    /// Next (images, labels) batch; wraps and reshuffles at epoch end.
+    pub fn next_batch(&mut self) -> (Tensor, IntTensor) {
+        let n = self.ds.sample_len();
+        let mut data = vec![0.0f32; self.batch * n];
+        let mut labf = vec![0.0f32; self.batch];
+        self.next_batch_into(&mut data, &mut labf);
+        let labels: Vec<i32> = labf.iter().map(|&v| v as i32).collect();
         (
             Tensor::from_vec(self.batch_shape(), data),
             IntTensor::from_vec(Shape::new(&[self.batch]), labels),
@@ -105,5 +145,34 @@ mod tests {
         let (xb, yb) = b.next_batch();
         assert_eq!(xa, xb);
         assert_eq!(ya, yb);
+    }
+
+    #[test]
+    fn assembly_invariant_to_thread_count() {
+        let ds = Dataset::generate(SyntheticSpec::Mnist, 64, 7);
+        let mut serial = BatchIterator::new(ds.clone(), 32, 5);
+        let (want_x, want_y) = par::with_threads(1, || serial.next_batch());
+        for t in [2usize, 5, 16] {
+            let mut it = BatchIterator::new(ds.clone(), 32, 5);
+            let (x, y) = par::with_threads(t, || it.next_batch());
+            assert_eq!(want_x, x, "batch data diverged at {t} threads");
+            assert_eq!(want_y, y, "batch labels diverged at {t} threads");
+        }
+    }
+
+    #[test]
+    fn next_batch_into_matches_next_batch() {
+        let ds = Dataset::generate(SyntheticSpec::Mnist, 48, 3);
+        let mut a = BatchIterator::new(ds.clone(), 16, 9);
+        let mut b = BatchIterator::new(ds, 16, 9);
+        let (x, y) = a.next_batch();
+        let n = x.len() / 16;
+        let mut data = vec![0.0f32; 16 * n];
+        let mut labels = vec![0.0f32; 16];
+        b.next_batch_into(&mut data, &mut labels);
+        assert_eq!(x.as_slice(), &data[..]);
+        for (want, got) in y.as_slice().iter().zip(&labels) {
+            assert_eq!(*want as f32, *got);
+        }
     }
 }

@@ -61,11 +61,11 @@ impl Layer for DataLayer {
     }
 
     fn forward(&mut self, _bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()> {
-        let (x, labels) = self.iter.next_batch();
-        tops[0].as_mut_slice().copy_from_slice(x.as_slice());
-        for (dst, &l) in tops[1].as_mut_slice().iter_mut().zip(labels.as_slice()) {
-            *dst = l as f32; // Caffe stores labels in float blobs
-        }
+        // Assemble straight into the top blobs: the gather is parallel
+        // over samples and skips the intermediate batch tensor + copy
+        // the old `next_batch` path paid per iteration.
+        let (data_top, label_top) = tops.split_at_mut(1);
+        self.iter.next_batch_into(data_top[0].as_mut_slice(), label_top[0].as_mut_slice());
         Ok(())
     }
 

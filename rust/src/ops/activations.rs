@@ -14,8 +14,11 @@ use super::par;
 static ELTWISE_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_ELTWISE_GRAIN", 8192);
 
 /// Minimum softmax rows per worker (64 keeps the batch-64 classification
-/// head serial — spawn cost would dominate its few hundred elements).
+/// head serial — dispatch cost would dominate its few hundred elements).
 static SOFTMAX_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_SOFTMAX_GRAIN", 64);
+
+/// Minimum accuracy rows per worker (`PHAST_ACCURACY_GRAIN` overrides).
+static ACCURACY_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_ACCURACY_GRAIN", 64);
 
 /// Caffe ReLULayer with `negative_slope` (the paper notes Caffe implements
 /// the leaky variant; slope 0 is plain ReLU).
@@ -95,17 +98,34 @@ pub fn softmax_xent_bwd(p: &[f32], labels: &[i32], n: usize, c: usize, dx: &mut 
 
 /// Top-k accuracy over (n, c) logits.  Caffe's AccuracyLayer counts a hit
 /// when fewer than k classes score strictly higher than the label.
+///
+/// Runs as a parallel tree reduction ([`par::parallel_reduce`]) over row
+/// blocks: each worker counts hits in its contiguous range and the
+/// integer partials are summed in worker order.  Integer addition is
+/// associative, so the result is **exactly** thread-count invariant.
+/// Knobs: `PHAST_NUM_THREADS` + `PHAST_ACCURACY_GRAIN` (rows per worker).
 pub fn accuracy(x: &[f32], labels: &[i32], n: usize, c: usize, top_k: usize) -> f32 {
     assert_eq!(x.len(), n * c);
-    let mut hits = 0usize;
-    for r in 0..n {
-        let row = &x[r * c..(r + 1) * c];
-        let l = labels[r] as usize;
-        let better = row.iter().filter(|&&v| v > row[l]).count();
-        if better < top_k {
-            hits += 1;
-        }
-    }
+    assert_eq!(labels.len(), n);
+    let tune = par::Tuning::new(ACCURACY_GRAIN.get());
+    let hits = par::parallel_reduce(
+        n,
+        tune,
+        |rows| {
+            let mut h = 0usize;
+            for r in rows {
+                let row = &x[r * c..(r + 1) * c];
+                let l = labels[r] as usize;
+                let better = row.iter().filter(|&&v| v > row[l]).count();
+                if better < top_k {
+                    h += 1;
+                }
+            }
+            h
+        },
+        |a, b| a + b,
+        0usize,
+    );
     hits as f32 / n as f32
 }
 

@@ -9,7 +9,7 @@
 //! not by strided access in the hot loop.
 //!
 //! Parallelism ([`ops::par`](super::par)): C is split into contiguous
-//! M-row blocks, one scoped worker per block; A and the packed B panel
+//! M-row blocks, one pool worker per block; A and the packed B panel
 //! are shared read-only.  Because each row of C is computed with the
 //! identical k-ordering regardless of the split, the result is bitwise
 //! independent of the thread count.  Tuning knobs: `PHAST_NUM_THREADS`
@@ -27,7 +27,9 @@ use super::par;
 /// Operand transposition flag.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Trans {
+    /// Operand is used as stored (row-major, no transpose).
     No,
+    /// Operand is transposed before the product (packed once, not strided).
     Yes,
 }
 

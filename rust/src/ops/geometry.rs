@@ -5,9 +5,13 @@
 /// Geometry of one spatial axis of a sliding-window op.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WindowGeom {
+    /// Input extent along this axis.
     pub size: usize,
+    /// Zero padding on each side.
     pub pad: usize,
+    /// Window extent.
     pub kernel: usize,
+    /// Window step.
     pub stride: usize,
     /// Number of window positions.
     pub out: usize,

@@ -4,22 +4,79 @@
 //! the paper describes: merged loops parameterized so every output element
 //! is independent.  Layout matches Caffe and the Pallas kernels exactly:
 //! `cols[(c*kh + i)*kw + j][oh*OW + ow]`.
+//!
+//! Both directions are parallel **over channels** through
+//! [`ops::par`](super::par): channel `c` owns the `kh*kw` consecutive
+//! rows of `cols` (im2col) or its own `(H, W)` image plane (col2im), so
+//! per-worker outputs are disjoint contiguous blocks and results are
+//! bitwise independent of the thread count.  Knobs: `PHAST_NUM_THREADS` +
+//! `PHAST_IM2COL_GRAIN` (channels per worker).  Calls issued from inside
+//! another parallel region — the common case, per-sample lowering inside
+//! the batch-parallel convolution — collapse to the serial path with no
+//! dispatch overhead.
 
 use super::geometry::conv_geom;
+use super::par;
+
+/// Minimum channels per worker (`PHAST_IM2COL_GRAIN` overrides).
+static IM2COL_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_IM2COL_GRAIN", 1);
 
 /// Parameters of a 2-D sliding window (kernel/stride/pad per axis).
 #[derive(Clone, Copy, Debug)]
 pub struct Conv2dGeom {
+    /// Kernel height.
     pub kh: usize,
+    /// Kernel width.
     pub kw: usize,
+    /// Vertical stride.
     pub sh: usize,
+    /// Horizontal stride.
     pub sw: usize,
+    /// Vertical (top/bottom) zero padding.
     pub ph: usize,
+    /// Horizontal (left/right) zero padding.
     pub pw: usize,
 }
 
+/// Lower one channel plane: writes the channel's `kh*kw` rows of `cols`.
+fn im2col_channel(
+    img: &[f32],
+    h: usize,
+    w: usize,
+    g: Conv2dGeom,
+    oh: usize,
+    ow: usize,
+    rows: &mut [f32],
+) {
+    let mut row = 0usize;
+    for i in 0..g.kh {
+        for j in 0..g.kw {
+            let dst = &mut rows[row * oh * ow..(row + 1) * oh * ow];
+            for oy in 0..oh {
+                let iy = (oy * g.sh + i) as isize - g.ph as isize;
+                let drow = &mut dst[oy * ow..(oy + 1) * ow];
+                if iy < 0 || iy as usize >= h {
+                    drow.iter_mut().for_each(|v| *v = 0.0);
+                    continue;
+                }
+                let src = &img[iy as usize * w..(iy as usize + 1) * w];
+                for (ox, d) in drow.iter_mut().enumerate() {
+                    let ix = (ox * g.sw + j) as isize - g.pw as isize;
+                    *d = if ix < 0 || ix as usize >= w {
+                        0.0
+                    } else {
+                        src[ix as usize]
+                    };
+                }
+            }
+            row += 1;
+        }
+    }
+}
+
 /// One sample: `x` is (C, H, W) row-major; writes (C*kh*kw, OH*OW) into
-/// `cols` (must be pre-sized).
+/// `cols` (must be pre-sized).  Parallel over channels when called at top
+/// level; serial when nested inside another parallel region.
 #[allow(clippy::too_many_arguments)]
 pub fn im2col(
     x: &[f32],
@@ -35,37 +92,56 @@ pub fn im2col(
     assert_eq!(x.len(), c * h * w);
     assert_eq!(cols.len(), c * g.kh * g.kw * oh * ow);
 
+    // Each channel owns kh*kw consecutive rows of `cols` — a contiguous
+    // block, so the channel axis maps straight onto parallel_chunks_mut.
+    let chan_rows = g.kh * g.kw * oh * ow;
+    let tune = par::Tuning::new(IM2COL_GRAIN.get());
+    par::parallel_chunks_mut(cols, chan_rows, tune, |chans, block| {
+        for (bi, ch) in chans.enumerate() {
+            let img = &x[ch * h * w..(ch + 1) * h * w];
+            im2col_channel(img, h, w, g, oh, ow, &mut block[bi * chan_rows..(bi + 1) * chan_rows]);
+        }
+    });
+}
+
+/// Scatter-add one channel's `kh*kw` rows of `cols` back into its (H, W)
+/// plane.  The plane must already be zeroed.
+fn col2im_channel(
+    rows: &[f32],
+    h: usize,
+    w: usize,
+    g: Conv2dGeom,
+    oh: usize,
+    ow: usize,
+    img: &mut [f32],
+) {
     let mut row = 0usize;
-    for ch in 0..c {
-        let img = &x[ch * h * w..(ch + 1) * h * w];
-        for i in 0..g.kh {
-            for j in 0..g.kw {
-                let dst = &mut cols[row * oh * ow..(row + 1) * oh * ow];
-                for oy in 0..oh {
-                    let iy = (oy * g.sh + i) as isize - g.ph as isize;
-                    let drow = &mut dst[oy * ow..(oy + 1) * ow];
-                    if iy < 0 || iy as usize >= h {
-                        drow.iter_mut().for_each(|v| *v = 0.0);
-                        continue;
-                    }
-                    let src = &img[iy as usize * w..(iy as usize + 1) * w];
-                    for (ox, d) in drow.iter_mut().enumerate() {
-                        let ix = (ox * g.sw + j) as isize - g.pw as isize;
-                        *d = if ix < 0 || ix as usize >= w {
-                            0.0
-                        } else {
-                            src[ix as usize]
-                        };
+    for i in 0..g.kh {
+        for j in 0..g.kw {
+            let src = &rows[row * oh * ow..(row + 1) * oh * ow];
+            for oy in 0..oh {
+                let iy = (oy * g.sh + i) as isize - g.ph as isize;
+                if iy < 0 || iy as usize >= h {
+                    continue;
+                }
+                let dst = &mut img[iy as usize * w..(iy as usize + 1) * w];
+                let srow = &src[oy * ow..(oy + 1) * ow];
+                for (ox, s) in srow.iter().enumerate() {
+                    let ix = (ox * g.sw + j) as isize - g.pw as isize;
+                    if ix >= 0 && (ix as usize) < w {
+                        dst[ix as usize] += s;
                     }
                 }
-                row += 1;
             }
+            row += 1;
         }
     }
 }
 
 /// Adjoint of [`im2col`]: scatter-add `cols` back into (C, H, W).
-/// `x` is zeroed first (Caffe `caffe_set` then `col2im_cpu`).
+/// `x` is zeroed first (Caffe `caffe_set` then `col2im_cpu`).  Parallel
+/// over channels — every channel scatters only into its own image plane,
+/// so no two workers touch the same output element.
 #[allow(clippy::too_many_arguments)]
 pub fn col2im(
     cols: &[f32],
@@ -80,32 +156,17 @@ pub fn col2im(
     let (oh, ow) = (gh.out, gw.out);
     assert_eq!(x.len(), c * h * w);
     assert_eq!(cols.len(), c * g.kh * g.kw * oh * ow);
-    x.iter_mut().for_each(|v| *v = 0.0);
 
-    let mut row = 0usize;
-    for ch in 0..c {
-        let img = &mut x[ch * h * w..(ch + 1) * h * w];
-        for i in 0..g.kh {
-            for j in 0..g.kw {
-                let src = &cols[row * oh * ow..(row + 1) * oh * ow];
-                for oy in 0..oh {
-                    let iy = (oy * g.sh + i) as isize - g.ph as isize;
-                    if iy < 0 || iy as usize >= h {
-                        continue;
-                    }
-                    let dst = &mut img[iy as usize * w..(iy as usize + 1) * w];
-                    let srow = &src[oy * ow..(oy + 1) * ow];
-                    for (ox, s) in srow.iter().enumerate() {
-                        let ix = (ox * g.sw + j) as isize - g.pw as isize;
-                        if ix >= 0 && (ix as usize) < w {
-                            dst[ix as usize] += s;
-                        }
-                    }
-                }
-                row += 1;
-            }
+    let chan_rows = g.kh * g.kw * oh * ow;
+    let plane = h * w;
+    let tune = par::Tuning::new(IM2COL_GRAIN.get());
+    par::parallel_chunks_mut(x, plane, tune, |chans, block| {
+        block.iter_mut().for_each(|v| *v = 0.0);
+        for (bi, ch) in chans.enumerate() {
+            let rows = &cols[ch * chan_rows..(ch + 1) * chan_rows];
+            col2im_channel(rows, h, w, g, oh, ow, &mut block[bi * plane..(bi + 1) * plane]);
         }
-    }
+    });
 }
 
 #[cfg(test)]

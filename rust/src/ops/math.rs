@@ -1,29 +1,54 @@
-//! BLAS level-1 helpers the solver and layers use (Caffe `caffe_axpy` etc.).
+//! BLAS level-1 helpers the solver and layers use (Caffe `caffe_axpy`,
+//! `caffe_cpu_axpby`, `caffe_scal`).
+//!
+//! All three run chunk-parallel through [`ops::par`](super::par): the
+//! output vector is split into contiguous element blocks, one per worker,
+//! with the input read from the matching range.  Every element is updated
+//! independently with identical per-element arithmetic under any split,
+//! so results are **bitwise independent of the thread count** — which is
+//! what lets the solver's SGD update route through these without
+//! perturbing training trajectories.  Knobs: `PHAST_NUM_THREADS` +
+//! `PHAST_AXPY_GRAIN` (minimum elements per worker; the default keeps
+//! small bias/FC blobs serial, where dispatch would dominate).
+
+use super::par;
+
+/// Minimum elements per worker (`PHAST_AXPY_GRAIN` overrides).  Shared by
+/// the whole level-1 family — the ops are memory-bound with identical
+/// per-element cost.
+static AXPY_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_AXPY_GRAIN", 16384);
 
 /// y += alpha * x.
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
-    for (xi, yi) in x.iter().zip(y.iter_mut()) {
-        *yi += alpha * xi;
-    }
+    par::parallel_chunks_mut(y, 1, par::Tuning::new(AXPY_GRAIN.get()), |range, yb| {
+        for (yi, xi) in yb.iter_mut().zip(&x[range]) {
+            *yi += alpha * xi;
+        }
+    });
 }
 
 /// y = alpha * x + beta * y (Caffe `caffe_cpu_axpby`).
 pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
-    for (xi, yi) in x.iter().zip(y.iter_mut()) {
-        *yi = alpha * xi + beta * *yi;
-    }
+    par::parallel_chunks_mut(y, 1, par::Tuning::new(AXPY_GRAIN.get()), |range, yb| {
+        for (yi, xi) in yb.iter_mut().zip(&x[range]) {
+            *yi = alpha * xi + beta * *yi;
+        }
+    });
 }
 
 /// x *= alpha.
 pub fn scal(alpha: f32, x: &mut [f32]) {
-    x.iter_mut().for_each(|v| *v *= alpha);
+    par::parallel_chunks_mut(x, 1, par::Tuning::new(AXPY_GRAIN.get()), |_, xb| {
+        xb.iter_mut().for_each(|v| *v *= alpha);
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ops::par;
 
     #[test]
     fn axpy_works() {
@@ -44,5 +69,28 @@ mod tests {
         let mut x = vec![2.0, -4.0];
         scal(0.5, &mut x);
         assert_eq!(x, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        use crate::propcheck::Rng;
+        let mut rng = Rng::new(41);
+        // Longer than the grain so the parallel path actually splits.
+        let n = 100_000;
+        let x = rng.normal_vec(n);
+        let y0 = rng.normal_vec(n);
+
+        let mut want = y0.clone();
+        par::with_threads(1, || axpy(0.3, &x, &mut want));
+        par::with_threads(1, || axpby(1.7, &x, -0.4, &mut want));
+        par::with_threads(1, || scal(0.9, &mut want));
+
+        for t in [2usize, 5, 16] {
+            let mut got = y0.clone();
+            par::with_threads(t, || axpy(0.3, &x, &mut got));
+            par::with_threads(t, || axpby(1.7, &x, -0.4, &mut got));
+            par::with_threads(t, || scal(0.9, &mut got));
+            assert_eq!(want, got, "level-1 family diverged at {t} threads");
+        }
     }
 }

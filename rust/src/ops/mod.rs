@@ -6,10 +6,13 @@
 //! tests close the triangle natively-computed == PJRT-computed == pure-jnp
 //! oracle.
 //!
-//! Since the paper's baseline is *multi-threaded* Caffe+OpenBLAS, the hot
-//! kernels (GeMM, batched pooling, elementwise/softmax) run over the
-//! [`par`] scoped-thread runtime, tuned PHAST-style via `PHAST_NUM_THREADS`
-//! and per-kernel `PHAST_*_GRAIN` knobs.
+//! Since the paper's baseline is *multi-threaded* Caffe+OpenBLAS, every
+//! hot kernel (GeMM, im2col/col2im, batched pooling, elementwise/softmax,
+//! the accuracy reduction, and the solver's BLAS-1 family) runs over the
+//! [`par`] persistent-worker-pool runtime, tuned PHAST-style via
+//! `PHAST_NUM_THREADS` and per-kernel `PHAST_*_GRAIN` knobs — see
+//! `docs/PARALLEL_RUNTIME.md` for the full knob table and tuning guide.
+#![warn(missing_docs)]
 
 pub mod geometry;
 pub mod par;

@@ -1,5 +1,5 @@
 //! `ops::par` — dependency-free chunked parallel runtime for the native
-//! baseline (scoped threads, no rayon/crossbeam).
+//! baseline (persistent worker pool, no rayon/crossbeam).
 //!
 //! The paper's native comparison point (Table 2's "Caffe" rows) is Caffe +
 //! **multi-threaded** OpenBLAS; PHAST itself (Peccerillo & Bartolini, TPDS
@@ -11,23 +11,57 @@
 //!   overridable process-wide via the `PHAST_NUM_THREADS` environment
 //!   variable or [`set_num_threads`], and per-call-tree via
 //!   [`with_threads`] (the analog of PHAST's per-kernel thread setting —
-//!   used by the tuning benches and the serial/parallel property tests);
+//!   used by the tuning benches and the serial/parallel property tests).
+//!   Precedence: [`with_threads`] > [`set_num_threads`] >
+//!   `PHAST_NUM_THREADS` > `available_parallelism()`.  The environment is
+//!   read **once** (cached in a `OnceLock`), never per call.
 //! * **grain size** — each kernel owns a [`GrainKnob`] (its per-kernel
-//!   block-size macro), overridable via `PHAST_<KERNEL>_GRAIN` env vars.
+//!   block-size macro), overridable via `PHAST_<KERNEL>_GRAIN` env vars,
+//!   likewise parsed once and cached.
+//!
+//! # Execution model: persistent pool, not per-call spawn
+//!
+//! Earlier revisions spawned scoped threads on every parallel call
+//! (~tens of µs each), which dominates the many-small-op regime (the
+//! CIFAR-quick head layers).  Dispatch now goes through a process-wide
+//! pool of **parked workers**, created lazily on the first parallel call
+//! and grown on demand up to the largest worker count ever requested
+//! (never shrunk, never re-created):
+//!
+//! * each worker owns an `mpsc` channel and blocks in `recv()` between
+//!   jobs — zero CPU while parked;
+//! * a parallel region lifetime-erases its closure, sends one job per
+//!   helper worker, runs **worker 0 itself** (so `k` workers cost `k - 1`
+//!   handoffs), and blocks on a latch until every helper has finished —
+//!   which is what makes the borrow erasure sound: no job can outlive
+//!   the dispatching call;
+//! * worker panics are caught, carried through the latch, and re-raised
+//!   on the dispatching thread;
+//! * teardown is trivial by construction: workers hold no task state
+//!   between jobs (every dispatch joins synchronously before returning),
+//!   so process exit simply reclaims threads parked in `recv()`.
 //!
 //! Work is split into *contiguous* index ranges, one per worker, so every
 //! mutable output is partitioned into disjoint slices (`split_at_mut`) —
-//! no locks, no atomics on the data path, and bitwise-deterministic
-//! results for a fixed thread count (partials are merged in worker order).
+//! no locks on the data path, and bitwise-deterministic results for a
+//! fixed thread count (partials are merged in worker order).
 //!
-//! Nested parallel regions serialize automatically: workers set a
-//! thread-local flag, and any parallel entry point called from inside a
-//! worker falls back to the serial path (e.g. the per-sample GeMMs inside
-//! a batch-parallel convolution do not oversubscribe the machine).
+//! Nested parallel regions serialize automatically: pool workers (and the
+//! dispatching thread while it runs its own share) set a thread-local
+//! flag, and any parallel entry point called from inside a worker falls
+//! back to the serial path (e.g. the per-sample GeMMs inside a
+//! batch-parallel convolution do not oversubscribe the machine).
+//!
+//! See `docs/PARALLEL_RUNTIME.md` for the architecture write-up, the full
+//! knob table, and a tuning walkthrough.
 
+use std::any::Any;
 use std::cell::Cell;
 use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Condvar, Mutex, OnceLock};
 
 thread_local! {
     /// Per-call-tree thread override (0 = none); see [`with_threads`].
@@ -36,37 +70,47 @@ thread_local! {
     static IN_PARALLEL: Cell<bool> = const { Cell::new(false) };
 }
 
-/// Process-wide configured thread count (0 = not yet resolved).
-static CONFIGURED_THREADS: AtomicUsize = AtomicUsize::new(0);
+/// Thread count set by [`set_num_threads`] (0 = not set).
+static THREAD_SETTING: AtomicUsize = AtomicUsize::new(0);
+
+/// `PHAST_NUM_THREADS` / `available_parallelism()`, parsed exactly once.
+static ENV_THREADS: OnceLock<usize> = OnceLock::new();
 
 fn hardware_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+fn env_threads() -> usize {
+    *ENV_THREADS.get_or_init(|| {
+        std::env::var("PHAST_NUM_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(hardware_threads)
+    })
+}
+
 /// The thread count parallel kernels will use when called from this
-/// thread: `with_threads` override, else `PHAST_NUM_THREADS`, else
+/// thread.  Resolution order: [`with_threads`] override, else
+/// [`set_num_threads`], else `PHAST_NUM_THREADS` (read once), else
 /// `available_parallelism()`.
 pub fn num_threads() -> usize {
     let over = THREAD_OVERRIDE.with(Cell::get);
     if over > 0 {
         return over;
     }
-    let cached = CONFIGURED_THREADS.load(Ordering::Relaxed);
-    if cached > 0 {
-        return cached;
+    let set = THREAD_SETTING.load(Ordering::Relaxed);
+    if set > 0 {
+        return set;
     }
-    let resolved = std::env::var("PHAST_NUM_THREADS")
-        .ok()
-        .and_then(|s| s.trim().parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(hardware_threads);
-    CONFIGURED_THREADS.store(resolved, Ordering::Relaxed);
-    resolved
+    env_threads()
 }
 
 /// Set the process-wide thread count (PHAST's global tuning knob).
+/// Takes precedence over `PHAST_NUM_THREADS`; a live [`with_threads`]
+/// override still wins on its call tree.
 pub fn set_num_threads(n: usize) {
-    CONFIGURED_THREADS.store(n.max(1), Ordering::Relaxed);
+    THREAD_SETTING.store(n.max(1), Ordering::Relaxed);
 }
 
 /// True while executing inside a parallel worker (nested regions serialize).
@@ -98,33 +142,35 @@ pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
 pub struct GrainKnob {
     env: &'static str,
     default: usize,
-    cached: AtomicUsize,
+    cached: OnceLock<usize>,
 }
 
 impl GrainKnob {
+    /// A knob read from `env`, falling back to `default`.
     pub const fn new(env: &'static str, default: usize) -> GrainKnob {
-        GrainKnob { env, default, cached: AtomicUsize::new(0) }
+        GrainKnob { env, default, cached: OnceLock::new() }
     }
 
+    /// The resolved grain: the env override if set to a positive integer,
+    /// else the compiled-in default.  The environment is consulted only on
+    /// the first call; the result is cached for the process lifetime.
     pub fn get(&self) -> usize {
-        let cached = self.cached.load(Ordering::Relaxed);
-        if cached > 0 {
-            return cached;
-        }
-        let resolved = std::env::var(self.env)
-            .ok()
-            .and_then(|s| s.trim().parse::<usize>().ok())
-            .filter(|&n| n > 0)
-            .unwrap_or(self.default);
-        self.cached.store(resolved, Ordering::Relaxed);
-        resolved
+        *self.cached.get_or_init(|| {
+            std::env::var(self.env)
+                .ok()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or(self.default)
+        })
     }
 }
 
 /// Per-call tuning: thread budget + minimum items per worker.
 #[derive(Clone, Copy, Debug)]
 pub struct Tuning {
+    /// Thread budget for this call (snapshot of [`num_threads`]).
     pub threads: usize,
+    /// Minimum items per worker (the kernel's grain).
     pub grain: usize,
 }
 
@@ -159,28 +205,207 @@ pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// The persistent worker pool.
+// ---------------------------------------------------------------------------
+
+/// Completion latch one parallel region waits on: counts helper workers
+/// still running and carries the first worker panic back to the caller.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Latch {
+        Latch {
+            state: Mutex::new(LatchState { remaining, panic: None }),
+            done: Condvar::new(),
+        }
+    }
+
+    /// One helper finished (optionally with a panic payload).
+    fn arrive(&self, panic: Option<Box<dyn Any + Send>>) {
+        let mut st = self.state.lock().unwrap();
+        if st.panic.is_none() {
+            st.panic = panic;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every helper has arrived; returns the first panic.
+    fn wait(&self) -> Option<Box<dyn Any + Send>> {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        st.panic.take()
+    }
+}
+
+/// One unit of work handed to a parked worker: a lifetime-erased closure
+/// plus the latch of the dispatching parallel region.
+///
+/// Soundness: the dispatching call blocks in [`Latch::wait`] until every
+/// job has arrived, so `data` (a borrow of the caller's stack closure)
+/// and `latch` never dangle while a worker can still dereference them.
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    latch: *const Latch,
+    index: usize,
+}
+
+// SAFETY: the raw pointers are only dereferenced while the dispatching
+// frame is alive (see struct docs); the pointee closure is `Sync`.
+unsafe impl Send for Job {}
+
+unsafe fn call_closure<F: Fn(usize) + Sync>(data: *const (), index: usize) {
+    let f = &*(data as *const F);
+    f(index);
+}
+
+fn worker_loop(rx: Receiver<Job>) {
+    // Pool workers only ever run inside a parallel region: nested
+    // parallel entry points they hit must collapse to serial.
+    IN_PARALLEL.with(|c| c.set(true));
+    while let Ok(job) = rx.recv() {
+        // SAFETY: see `Job` — the dispatcher is parked in `Latch::wait`
+        // until we arrive below, keeping both pointees alive.
+        let latch = unsafe { &*job.latch };
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, job.index) }));
+        latch.arrive(result.err());
+    }
+}
+
+/// The process-wide pool: one channel per parked worker, grown on demand
+/// and reused by every subsequent parallel call (never torn down early —
+/// threads parked in `recv()` are reclaimed by process exit).
+///
+/// A job carries its logical worker index, so *any* pool thread can run
+/// *any* job; dispatch rotates the starting worker (`rr`) so concurrent
+/// top-level regions from different caller threads spread across the
+/// pool instead of all queueing on workers `0..helpers`.
+struct Pool {
+    senders: Mutex<Vec<Sender<Job>>>,
+    spawned: AtomicUsize,
+    rr: AtomicUsize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+impl Pool {
+    fn global() -> &'static Pool {
+        POOL.get_or_init(|| Pool {
+            senders: Mutex::new(Vec::new()),
+            spawned: AtomicUsize::new(0),
+            rr: AtomicUsize::new(0),
+        })
+    }
+
+    /// Hand `job(i)` for `i in 0..helpers` to `helpers` distinct workers
+    /// (round-robin over the whole pool), spawning any that do not exist
+    /// yet.
+    fn dispatch(
+        &self,
+        helpers: usize,
+        data: *const (),
+        call: unsafe fn(*const (), usize),
+        latch: *const Latch,
+    ) {
+        let mut senders = self.senders.lock().unwrap();
+        while senders.len() < helpers {
+            let (tx, rx) = channel::<Job>();
+            let id = senders.len();
+            std::thread::Builder::new()
+                .name(format!("phast-par-{id}"))
+                .spawn(move || worker_loop(rx))
+                .expect("failed to spawn pool worker");
+            senders.push(tx);
+            self.spawned.fetch_add(1, Ordering::Relaxed);
+        }
+        let total = senders.len();
+        let start = self.rr.fetch_add(helpers, Ordering::Relaxed);
+        for i in 0..helpers {
+            // The job carries logical worker index i + 1 (the dispatching
+            // thread itself is worker 0); which pool thread runs it does
+            // not affect the result, only load spread.
+            let job = Job { data, call, latch, index: i + 1 };
+            senders[(start + i) % total].send(job).expect("pool worker channel closed");
+        }
+    }
+}
+
+/// Number of pool threads spawned so far in this process (introspection
+/// for the reuse tests and the tuning docs; 0 before the first parallel
+/// dispatch).
+pub fn pool_size() -> usize {
+    match POOL.get() {
+        Some(p) => p.spawned.load(Ordering::Relaxed),
+        None => 0,
+    }
+}
+
+/// Run `f(worker_index)` for every index in `0..workers`: indices
+/// `1..workers` on parked pool workers, index 0 on the calling thread.
+/// Returns only after all indices have finished; re-raises the caller's
+/// own panic first, then the first worker panic.
+fn run_workers<F: Fn(usize) + Sync>(workers: usize, f: F) {
+    if workers <= 1 {
+        f(0);
+        return;
+    }
+    let latch = Latch::new(workers - 1);
+    let data = &f as *const F as *const ();
+    Pool::global().dispatch(workers - 1, data, call_closure::<F>, &latch);
+    // The dispatching thread doubles as worker 0; while it runs its
+    // share it counts as "inside a parallel region".
+    let was = IN_PARALLEL.with(|c| c.replace(true));
+    let own = catch_unwind(AssertUnwindSafe(|| f(0)));
+    IN_PARALLEL.with(|c| c.set(was));
+    // Always join before returning: the helpers borrow `f` and `latch`.
+    let helper_panic = latch.wait();
+    if let Err(p) = own {
+        resume_unwind(p);
+    }
+    if let Some(p) = helper_panic {
+        resume_unwind(p);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chunked entry points (the public API the kernels call).
+// ---------------------------------------------------------------------------
+
+/// A once-filled hand-off slot: one worker's item range + output block.
+type BlockSlot<'s, T> = Mutex<Option<(Range<usize>, &'s mut [T])>>;
+
 /// Run `f` once per worker over disjoint contiguous sub-ranges of `0..n`.
-/// Serial (caller thread, no spawn) when one worker suffices.
+/// Serial (caller thread, no dispatch) when one worker suffices.
 pub fn parallel_for(n: usize, tune: Tuning, f: impl Fn(Range<usize>) + Sync) {
-    if tune.workers(n) <= 1 {
+    let workers = tune.workers(n);
+    if workers <= 1 {
         if n > 0 {
             f(0..n);
         }
         return;
     }
-    std::thread::scope(|s| {
-        for r in partition(n, tune.workers(n)) {
-            let f = &f;
-            s.spawn(move || {
-                IN_PARALLEL.with(|c| c.set(true));
-                f(r)
-            });
-        }
-    });
+    let ranges = partition(n, workers);
+    run_workers(ranges.len(), |w| f(ranges[w].clone()));
 }
 
 /// Map disjoint ranges of `0..n` through `map` and fold the per-worker
-/// results **in worker order** (deterministic for a fixed thread count).
+/// results **in worker order** (deterministic for a fixed thread count;
+/// bitwise thread-count-invariant only when `fold` is associative over
+/// the mapped values, e.g. integer sums).
 pub fn parallel_reduce<A: Send>(
     n: usize,
     tune: Tuning,
@@ -188,23 +413,18 @@ pub fn parallel_reduce<A: Send>(
     mut fold: impl FnMut(A, A) -> A,
     init: A,
 ) -> A {
-    if tune.workers(n) <= 1 {
+    let workers = tune.workers(n);
+    if workers <= 1 {
         return if n == 0 { init } else { fold(init, map(0..n)) };
     }
-    let partials = std::thread::scope(|s| {
-        let handles: Vec<_> = partition(n, tune.workers(n))
-            .into_iter()
-            .map(|r| {
-                let map = &map;
-                s.spawn(move || {
-                    IN_PARALLEL.with(|c| c.set(true));
-                    map(r)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<A>>()
+    let ranges = partition(n, workers);
+    let slots: Vec<Mutex<Option<A>>> = ranges.iter().map(|_| Mutex::new(None)).collect();
+    run_workers(ranges.len(), |w| {
+        *slots[w].lock().unwrap() = Some(map(ranges[w].clone()));
     });
-    partials.into_iter().fold(init, fold)
+    slots
+        .into_iter()
+        .fold(init, |acc, slot| fold(acc, slot.into_inner().unwrap().unwrap()))
 }
 
 /// Partition `data` (a packed array of `n = data.len() / item_len` items)
@@ -227,18 +447,20 @@ pub fn parallel_chunks_mut<T: Send>(
         }
         return;
     }
-    std::thread::scope(|s| {
-        let mut rest = data;
-        for r in partition(n, workers) {
-            let take = r.len() * item_len;
-            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
-            rest = tail;
-            let f = &f;
-            s.spawn(move || {
-                IN_PARALLEL.with(|c| c.set(true));
-                f(r, head)
-            });
-        }
+    // Split the output into disjoint blocks up front; each worker takes
+    // exactly its own slot (a once-filled Mutex, uncontended by design).
+    let ranges = partition(n, workers);
+    let mut blocks: Vec<BlockSlot<'_, T>> = Vec::with_capacity(ranges.len());
+    let mut rest = data;
+    for r in &ranges {
+        let take = r.len() * item_len;
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        rest = tail;
+        blocks.push(Mutex::new(Some((r.clone(), head))));
+    }
+    run_workers(blocks.len(), |w| {
+        let (r, block) = blocks[w].lock().unwrap().take().unwrap();
+        f(r, block);
     });
 }
 
@@ -264,20 +486,21 @@ pub fn parallel_chunks2_mut<T: Send, U: Send>(
         }
         return;
     }
-    std::thread::scope(|s| {
-        let mut rest_a = a;
-        let mut rest_b = b;
-        for r in partition(n, workers) {
-            let (head_a, tail_a) = std::mem::take(&mut rest_a).split_at_mut(r.len() * a_item);
-            let (head_b, tail_b) = std::mem::take(&mut rest_b).split_at_mut(r.len() * b_item);
-            rest_a = tail_a;
-            rest_b = tail_b;
-            let f = &f;
-            s.spawn(move || {
-                IN_PARALLEL.with(|c| c.set(true));
-                f(r, head_a, head_b)
-            });
-        }
+    let ranges = partition(n, workers);
+    type Slot2<'s, T, U> = Mutex<Option<(Range<usize>, &'s mut [T], &'s mut [U])>>;
+    let mut blocks: Vec<Slot2<'_, T, U>> = Vec::with_capacity(ranges.len());
+    let mut rest_a = a;
+    let mut rest_b = b;
+    for r in &ranges {
+        let (head_a, tail_a) = std::mem::take(&mut rest_a).split_at_mut(r.len() * a_item);
+        let (head_b, tail_b) = std::mem::take(&mut rest_b).split_at_mut(r.len() * b_item);
+        rest_a = tail_a;
+        rest_b = tail_b;
+        blocks.push(Mutex::new(Some((r.clone(), head_a, head_b))));
+    }
+    run_workers(blocks.len(), |w| {
+        let (r, block_a, block_b) = blocks[w].lock().unwrap().take().unwrap();
+        f(r, block_a, block_b);
     });
 }
 
@@ -300,23 +523,46 @@ pub fn parallel_chunks_reduce<T: Send, A: Send>(
         }
         return vec![f(0..n, data)];
     }
+    let ranges = partition(n, workers);
+    let mut blocks: Vec<BlockSlot<'_, T>> = Vec::with_capacity(ranges.len());
+    let mut rest = data;
+    for r in &ranges {
+        let take = r.len() * item_len;
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        rest = tail;
+        blocks.push(Mutex::new(Some((r.clone(), head))));
+    }
+    let results: Vec<Mutex<Option<A>>> = ranges.iter().map(|_| Mutex::new(None)).collect();
+    run_workers(blocks.len(), |w| {
+        let (r, block) = blocks[w].lock().unwrap().take().unwrap();
+        *results[w].lock().unwrap() = Some(f(r, block));
+    });
+    results
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().unwrap())
+        .collect()
+}
+
+/// The pre-pool dispatch: spawn one scoped thread per worker range, every
+/// call.  Kept **only** as the overhead baseline for the pool-vs-spawn
+/// microbench in `benches/threads_scaling.rs`; no kernel calls this.
+pub fn parallel_for_spawn(n: usize, tune: Tuning, f: impl Fn(Range<usize>) + Sync) {
+    let workers = tune.workers(n);
+    if workers <= 1 {
+        if n > 0 {
+            f(0..n);
+        }
+        return;
+    }
     std::thread::scope(|s| {
-        let mut rest = data;
-        let handles: Vec<_> = partition(n, workers)
-            .into_iter()
-            .map(|r| {
-                let take = r.len() * item_len;
-                let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
-                rest = tail;
-                let f = &f;
-                s.spawn(move || {
-                    IN_PARALLEL.with(|c| c.set(true));
-                    f(r, head)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    })
+        for r in partition(n, workers) {
+            let f = &f;
+            s.spawn(move || {
+                IN_PARALLEL.with(|c| c.set(true));
+                f(r)
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -464,5 +710,60 @@ mod tests {
             assert_eq!(t.workers(64), 2);
             assert_eq!(t.workers(10_000), 8);
         });
+    }
+
+    #[test]
+    fn pool_reuses_workers_across_calls() {
+        // Warm the pool beyond any other test's thread demand in this
+        // binary — explicit `with_threads` callers use at most 16, and
+        // un-wrapped callers default to `hardware_threads()` — so
+        // concurrently running tests cannot grow it between our
+        // measurements.
+        let warm = hardware_threads().max(16) + 8;
+        with_threads(warm, || parallel_for(warm * 4, Tuning::new(1), |_| {}));
+        let warmed = pool_size();
+        assert!(warmed >= warm - 1, "pool did not grow to demand: {warmed} < {}", warm - 1);
+        // Hammer it at several worker counts: no further growth.
+        for _ in 0..100 {
+            with_threads(4, || parallel_for(64, Tuning::new(1), |_| {}));
+            with_threads(warm, || parallel_for(warm * 4, Tuning::new(1), |_| {}));
+        }
+        assert_eq!(pool_size(), warmed, "pool grew on reuse");
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            with_threads(4, || {
+                parallel_for(8, Tuning::new(1), |r| {
+                    if r.contains(&7) {
+                        panic!("kernel panic in worker");
+                    }
+                });
+            });
+        }));
+        assert!(boom.is_err(), "worker panic must reach the dispatcher");
+        // The pool must still work after a panic.
+        let hits = AtomicUsize::new(0);
+        with_threads(4, || {
+            parallel_for(8, Tuning::new(1), |r| {
+                hits.fetch_add(r.len(), Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn spawn_baseline_matches_pool_results() {
+        let n = 500;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        with_threads(4, || {
+            parallel_for_spawn(n, Tuning::new(1), |r| {
+                for i in r {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 }

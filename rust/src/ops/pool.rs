@@ -23,11 +23,17 @@ static POOL_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_POOL_GRAIN", 4);
 /// Pooling window parameters (square semantics per axis).
 #[derive(Clone, Copy, Debug)]
 pub struct Pool2dGeom {
+    /// Window height.
     pub kh: usize,
+    /// Window width.
     pub kw: usize,
+    /// Vertical stride.
     pub sh: usize,
+    /// Horizontal stride.
     pub sw: usize,
+    /// Vertical (top/bottom) padding.
     pub ph: usize,
+    /// Horizontal (left/right) padding.
     pub pw: usize,
 }
 

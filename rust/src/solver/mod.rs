@@ -111,6 +111,22 @@ impl Solver {
 /// ported solver in `phast::`:
 ///   v = momentum * v + lr * (grad + weight_decay * w);  w -= v
 /// (identical to the fused artifact's update — see model.make_step_fn).
+///
+/// Implemented as Caffe `SGDSolver`'s exact BLAS call sequence per
+/// parameter blob, each call chunk-parallel over the blob through
+/// [`ops::axpy`]/[`ops::axpby`]:
+///
+/// ```text
+/// diff += decay * data           // caffe_axpy   (L2 regularization)
+/// hist  = lr * diff + momentum * hist  // caffe_cpu_axpby
+/// data -= hist                   // caffe_axpy   (Blob::Update)
+/// ```
+///
+/// Element-wise arithmetic is identical to the fused scalar loop
+/// ([`apply_sgd_update_slices`], the serial reference), and the chunked
+/// kernels are bitwise thread-count invariant, so training trajectories
+/// do not depend on `PHAST_NUM_THREADS`.  Note Caffe semantics: the blob
+/// `diff` holds the *regularized* gradient after this call.
 pub fn apply_sgd_update(
     params: Vec<&mut crate::tensor::Blob>,
     history: &mut [Vec<f32>],
@@ -119,13 +135,12 @@ pub fn apply_sgd_update(
     decay: f32,
 ) {
     for (p, hist) in params.into_iter().zip(history.iter_mut()) {
-        let n = p.count();
-        for i in 0..n {
-            let g = p.diff().as_slice()[i] + decay * p.data().as_slice()[i];
-            let v = momentum * hist[i] + lr * g;
-            hist[i] = v;
-            p.data_mut().as_mut_slice()[i] -= v;
-        }
+        let (data, diff) = p.data_mut_and_diff_mut();
+        let w = data.as_mut_slice();
+        let g = diff.as_mut_slice();
+        ops::axpy(decay, w, g);
+        ops::axpby(lr, g, momentum, hist);
+        ops::axpy(-1.0, hist, w);
     }
 }
 

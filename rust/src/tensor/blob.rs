@@ -80,6 +80,13 @@ impl Blob {
         (&self.data, &mut self.diff)
     }
 
+    /// Split borrow with both sides mutable: the solver's SGD update
+    /// folds weight decay into `diff` (Caffe regularizes in place) while
+    /// also writing the updated weights into `data`.
+    pub fn data_mut_and_diff_mut(&mut self) -> (&mut Tensor, &mut Tensor) {
+        (&mut self.data, &mut self.diff)
+    }
+
     pub fn state(&self) -> SyncState {
         self.state
     }

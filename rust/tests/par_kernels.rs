@@ -1,18 +1,27 @@
 //! Property tests for the multi-core native backend (`ops::par`): every
 //! parallel kernel path must match its serial reference within tolerance
 //! across random shapes and thread counts (1, 2, N) — including the
-//! per-thread `dW`/`db` reduction path of the convolution backward.
+//! per-thread `dW`/`db` reduction path of the convolution backward, the
+//! channel-parallel im2col/col2im, the accuracy tree reduction, the
+//! BLAS-1 solver update, and the persistent pool's reuse guarantee.
 
+use phast_caffe::experiments::preset_net;
 use phast_caffe::layers::{ConvLayer, Layer};
-use phast_caffe::ops::{self, gemm::Trans, par, pool::Pool2dGeom};
+use phast_caffe::net::Net;
+use phast_caffe::ops::{self, gemm::Trans, im2col::Conv2dGeom, par, pool::Pool2dGeom};
 use phast_caffe::propcheck::{assert_close, forall, Rng};
-use phast_caffe::proto::{LayerConfig, LayerType};
+use phast_caffe::proto::{presets, LayerConfig, LayerType, NetConfig, SolverConfig};
+use phast_caffe::solver::{apply_sgd_update_slices, Solver};
 use phast_caffe::tensor::{Shape, Tensor};
 
 /// Thread counts every property sweeps: serial, two workers, and more
 /// workers than this container has cores (oversubscription must still be
 /// correct).
 const THREADS: [usize; 3] = [1, 2, 5];
+
+/// The full sweep for the newly parallelized kernels (ISSUE 2 acceptance):
+/// serial, two, five, and sixteen workers.
+const SWEEP: [usize; 4] = [1, 2, 5, 16];
 
 #[test]
 fn gemm_invariant_to_thread_count() {
@@ -267,6 +276,181 @@ fn eltwise_and_softmax_invariant_to_thread_count() {
             });
         }
     });
+}
+
+#[test]
+fn im2col_col2im_invariant_to_thread_count() {
+    forall("par-im2col", 8, |rng: &mut Rng| {
+        let c = rng.range(2, 8); // channels: the parallel axis
+        let h = rng.range(5, 14);
+        let w = rng.range(5, 14);
+        let k = rng.range(1, 3.min(h).min(w));
+        let s = rng.range(1, 3);
+        let p = rng.range(0, k - 1);
+        let g = Conv2dGeom { kh: k, kw: k, sh: s, sw: s, ph: p, pw: p };
+        let gh = ops::conv_geom(h, k, s, p);
+        let gw = ops::conv_geom(w, k, s, p);
+        let x = rng.normal_vec(c * h * w);
+        let cols_len = c * k * k * gh.out * gw.out;
+
+        let mut want_cols = vec![0.0f32; cols_len];
+        par::with_threads(1, || ops::im2col(&x, c, h, w, g, &mut want_cols));
+        let y = rng.normal_vec(cols_len);
+        let mut want_x = vec![0.0f32; x.len()];
+        par::with_threads(1, || ops::col2im(&y, c, h, w, g, &mut want_x));
+
+        for t in SWEEP {
+            par::with_threads(t, || {
+                let mut cols = vec![0.0f32; cols_len];
+                ops::im2col(&x, c, h, w, g, &mut cols);
+                assert_eq!(want_cols, cols, "im2col at {t} threads");
+                let mut back = vec![0.0f32; x.len()];
+                ops::col2im(&y, c, h, w, g, &mut back);
+                assert_eq!(want_x, back, "col2im at {t} threads");
+            });
+        }
+    });
+}
+
+#[test]
+fn accuracy_reduction_invariant_to_thread_count() {
+    forall("par-accuracy", 10, |rng: &mut Rng| {
+        let n = rng.range(100, 400); // rows: the reduction axis
+        let c = rng.range(2, 12);
+        let top_k = rng.range(1, c.min(3));
+        let x = rng.normal_vec(n * c);
+        let labels: Vec<i32> = (0..n).map(|_| rng.range(0, c - 1) as i32).collect();
+        let want = par::with_threads(1, || ops::accuracy(&x, &labels, n, c, top_k));
+        for t in SWEEP {
+            let got = par::with_threads(t, || ops::accuracy(&x, &labels, n, c, top_k));
+            // Integer hit counts sum associatively: exactly equal.
+            assert_eq!(want, got, "accuracy at {t} threads");
+        }
+    });
+}
+
+#[test]
+fn axpy_axpby_invariant_to_thread_count() {
+    forall("par-axpy", 6, |rng: &mut Rng| {
+        // Longer than the BLAS-1 grain so the dispatch actually splits.
+        let len = rng.range(40_000, 120_000);
+        let x = rng.normal_vec(len);
+        let y0 = rng.normal_vec(len);
+        let mut want = y0.clone();
+        par::with_threads(1, || {
+            ops::axpy(0.7, &x, &mut want);
+            ops::axpby(-0.3, &x, 1.1, &mut want);
+            ops::scal(0.99, &mut want);
+        });
+        for t in SWEEP {
+            let mut got = y0.clone();
+            par::with_threads(t, || {
+                ops::axpy(0.7, &x, &mut got);
+                ops::axpby(-0.3, &x, 1.1, &mut got);
+                ops::scal(0.99, &mut got);
+            });
+            assert_eq!(want, got, "BLAS-1 family diverged at {t} threads");
+        }
+    });
+}
+
+/// The blob-level SGD update (three chunk-parallel BLAS calls) must match
+/// the fused serial scalar reference bitwise at every thread count.
+#[test]
+fn sgd_update_matches_serial_reference_at_all_thread_counts() {
+    forall("par-sgd-update", 6, |rng: &mut Rng| {
+        let n = rng.range(30_000, 80_000);
+        let w0 = rng.normal_vec(n);
+        let g0 = rng.normal_vec(n);
+        let h0 = rng.normal_vec(n);
+        let (lr, momentum, decay) = (0.01f32, 0.9f32, 0.0005f32);
+
+        let mut want_w = w0.clone();
+        let mut want_h = h0.clone();
+        apply_sgd_update_slices(&mut want_w, &g0, &mut want_h, lr, momentum, decay);
+
+        for t in SWEEP {
+            par::with_threads(t, || {
+                let mut blob = phast_caffe::tensor::Blob::new("w", Shape::new(&[n]));
+                blob.data_mut().as_mut_slice().copy_from_slice(&w0);
+                blob.diff_mut().as_mut_slice().copy_from_slice(&g0);
+                let mut hist = vec![h0.clone()];
+                phast_caffe::solver::apply_sgd_update(
+                    vec![&mut blob],
+                    &mut hist,
+                    lr,
+                    momentum,
+                    decay,
+                );
+                assert_eq!(want_w, blob.data().as_slice(), "weights diverged at {t} threads");
+                assert_eq!(want_h, hist[0], "history diverged at {t} threads");
+            });
+        }
+    });
+}
+
+/// Full solver steps are bitwise repeatable at a fixed thread count and
+/// agree across thread counts within the conv-reduction tolerance.
+#[test]
+fn solver_steps_deterministic() {
+    fn run(threads: usize, steps: usize) -> (Vec<f32>, Vec<f32>) {
+        par::with_threads(threads, || {
+            let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+            cfg.display = 0;
+            let net =
+                Net::from_config(NetConfig::from_text(presets::LENET_MNIST).unwrap(), 1).unwrap();
+            let mut s = Solver::new(cfg, net);
+            let mut losses = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                losses.push(s.step().unwrap());
+            }
+            let weights: Vec<f32> = s
+                .net
+                .params_mut()
+                .into_iter()
+                .flat_map(|p| p.data().as_slice().to_vec())
+                .collect();
+            (losses, weights)
+        })
+    }
+
+    let (l4a, w4a) = run(4, 5);
+    let (l4b, w4b) = run(4, 5);
+    assert_eq!(l4a, l4b, "losses not repeatable at fixed thread count");
+    assert_eq!(w4a, w4b, "weights not repeatable at fixed thread count");
+
+    // Across thread counts only the conv dW/db reduction order differs;
+    // trajectories must stay within the paper's validation tolerance.
+    let (l1, w1) = run(1, 5);
+    assert_close(&l1, &l4a, 1e-3, 1e-3);
+    assert_close(&w1, &w4a, 1e-3, 1e-3);
+}
+
+/// The persistent pool must not spawn new threads once warmed: run whole
+/// net iterations repeatedly and watch `par::pool_size()` stay flat.
+#[test]
+fn pool_does_not_grow_across_net_iterations() {
+    // Warm beyond any other test's demand in this binary — explicit
+    // `with_threads` callers use at most 16, un-wrapped callers default
+    // to the hardware thread count — so concurrent tests cannot grow
+    // the pool between our measurements.
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let warm = hw.max(16) + 8;
+    par::with_threads(warm, || {
+        par::parallel_for(warm * 4, par::Tuning::new(1), |_| {});
+    });
+    let warmed = par::pool_size();
+    assert!(warmed >= warm - 1, "pool did not reach warm size: {warmed} < {}", warm - 1);
+
+    par::with_threads(4, || {
+        let mut net = preset_net("mnist", 3).unwrap();
+        for _ in 0..3 {
+            net.zero_param_diffs();
+            net.forward().unwrap();
+            net.backward().unwrap();
+        }
+    });
+    assert_eq!(par::pool_size(), warmed, "pool grew while iterating a warmed net");
 }
 
 /// PHAST-style tuning: the env-independent `with_threads` knob and the

@@ -1,0 +1,79 @@
+#!/usr/bin/env bash
+# Docs/code sync check: fails CI when the parallel-runtime docs and the
+# code drift apart.
+#
+#  1. Every PHAST_* knob mentioned in README.md / docs/PARALLEL_RUNTIME.md
+#     must exist in the Rust sources.
+#  2. Every PHAST_* knob defined in the Rust sources must be documented
+#     in docs/PARALLEL_RUNTIME.md AND summarized in README.md.
+#  3. Every relative markdown link in README.md and docs/*.md must
+#     resolve to an existing file or directory.
+#
+# Run from the repo root: bash tools/check_docs.sh
+set -u
+cd "$(dirname "$0")/.."
+
+fail=0
+
+for f in README.md docs/PARALLEL_RUNTIME.md; do
+  if [ ! -f "$f" ]; then
+    echo "MISSING FILE: $f"
+    fail=1
+  fi
+done
+[ "$fail" -ne 0 ] && exit 1
+
+# --- 1 & 2: knob names must match between docs and code -------------------
+# The tuning surface is PHAST_NUM_THREADS + the per-kernel *_GRAIN knobs;
+# other PHAST_* env vars (e.g. PHAST_ARTIFACTS, the artifact directory)
+# are out of scope.  Prose placeholders like PHAST_*_GRAIN don't match
+# the character class, so they are ignored naturally.
+docs_knobs=$(grep -ohE 'PHAST_([A-Z0-9]+_)*(GRAIN|THREADS)' README.md docs/PARALLEL_RUNTIME.md | sort -u)
+code_knobs=$(grep -rhoE '"PHAST_([A-Z0-9]+_)*(GRAIN|THREADS)"' rust/src | tr -d '"' | sort -u)
+
+for k in $docs_knobs; do
+  if ! echo "$code_knobs" | grep -qx "$k"; then
+    echo "DOC DRIFT: $k is documented but not defined in rust/src"
+    fail=1
+  fi
+done
+
+for k in $code_knobs; do
+  if ! grep -q "$k" docs/PARALLEL_RUNTIME.md; then
+    echo "DOC DRIFT: $k is defined in rust/src but missing from docs/PARALLEL_RUNTIME.md"
+    fail=1
+  fi
+  if ! grep -q "$k" README.md; then
+    echo "DOC DRIFT: $k is defined in rust/src but missing from README.md"
+    fail=1
+  fi
+done
+
+# --- 3: relative markdown links resolve -----------------------------------
+check_links() {
+  local file="$1" dir
+  dir=$(dirname "$file")
+  # [text](target) links, skipping http(s) and anchors
+  grep -oE '\]\(([^)#]+)' "$file" | sed 's/](//' | while read -r target; do
+    case "$target" in
+      http://*|https://*|mailto:*) continue ;;
+    esac
+    if [ ! -e "$dir/$target" ] && [ ! -e "$target" ]; then
+      echo "BROKEN LINK in $file: $target"
+      fail=1
+    fi
+  done
+}
+
+# Subshell loops can't propagate $fail; collect output instead.
+link_errors=$( { check_links README.md; for f in docs/*.md; do check_links "$f"; done; } )
+if [ -n "$link_errors" ]; then
+  echo "$link_errors"
+  fail=1
+fi
+
+if [ "$fail" -ne 0 ]; then
+  echo "docs check FAILED"
+  exit 1
+fi
+echo "docs check OK: knobs and links in sync"
