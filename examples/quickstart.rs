@@ -23,7 +23,18 @@ fn main() -> anyhow::Result<()> {
     println!("native   forward loss = {loss:.4}");
 
     // 3. Same net, every layer executed from the single-source AOT
-    //    artifacts through PJRT ("the PHAST port").
+    //    artifacts through PJRT ("the PHAST port").  Without artifacts
+    //    (e.g. the CI smoke job) the native half above is the smoke test;
+    //    skip the ported half instead of failing.  Only *absent* artifacts
+    //    skip — a present-but-broken artifact set still fails loudly.
+    let manifest = phast_caffe::runtime::artifacts_dir().join("manifest.txt");
+    if !manifest.exists() {
+        println!(
+            "skipping ported-domain half: no artifacts at {} (run `make artifacts`)",
+            manifest.display()
+        );
+        return Ok(());
+    }
     let engine = Engine::open_default()?;
     let mut ported = PortedNet::new(
         Net::from_config(config, 1)?, // same seed -> same weights, same batch

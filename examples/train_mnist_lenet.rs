@@ -7,6 +7,10 @@
 //! make artifacts && cargo run --release --example train_mnist_lenet
 //! ```
 //!
+//! An optional first argument overrides the iteration count (the CI smoke
+//! job runs `-- 2`); the learned-the-task assertions only apply to full
+//! runs, and without AOT artifacts the PJRT half skips gracefully.
+//!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
 use std::time::Instant;
@@ -17,17 +21,27 @@ use phast_caffe::proto::{presets, SolverConfig};
 use phast_caffe::runtime::Engine;
 use phast_caffe::solver::Solver;
 
-const ITERS: usize = 300;
+const DEFAULT_ITERS: usize = 300;
 
 fn main() -> anyhow::Result<()> {
+    let iters: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("bad iteration count argument: {e}"))?
+        .unwrap_or(DEFAULT_ITERS);
+    // Smoke runs (few iterations) exercise the entry points; only a full
+    // run is expected to actually learn the task.
+    let full_run = iters >= DEFAULT_ITERS;
+
     // ---------------- native backend ----------------
     let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER)?;
     cfg.display = 0;
-    cfg.max_iter = ITERS;
+    cfg.max_iter = iters;
     let mut solver = Solver::new(cfg.clone(), preset_net("mnist", 42)?);
-    println!("== native backend: LeNet / synthetic-MNIST, {ITERS} iters, batch 64 ==");
+    println!("== native backend: LeNet / synthetic-MNIST, {iters} iters, batch 64 ==");
     let t0 = Instant::now();
-    for i in 0..ITERS {
+    for i in 0..iters {
         let loss = solver.step()?;
         if (i + 1) % 25 == 0 {
             let (tl, ta) = solver.test(4)?;
@@ -48,12 +62,26 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---------------- fused PJRT backend ----------------
+    // Only *absent* artifacts skip this half (the CI smoke job);
+    // present-but-broken artifacts still fail loudly.
+    let manifest = phast_caffe::runtime::artifacts_dir().join("manifest.txt");
+    if !manifest.exists() {
+        println!(
+            "skipping fused PJRT half: no artifacts at {} (run `make artifacts`)",
+            manifest.display()
+        );
+        if full_run {
+            anyhow::ensure!(final_acc > 0.85, "native run failed to learn ({final_acc})");
+        }
+        println!("\nnative backend ran the task ✓");
+        return Ok(());
+    }
     let engine = Engine::open_default()?;
     let mut feeder = preset_net("mnist", 42)?;
     let mut fused = FusedRunner::from_net(&engine, &feeder)?;
-    println!("== fused PJRT backend: same net, same data, {ITERS} iters ==");
+    println!("== fused PJRT backend: same net, same data, {iters} iters ==");
     let t0 = Instant::now();
-    for i in 0..ITERS {
+    for i in 0..iters {
         let (x, labels) = sample_batch(&mut feeder)?;
         let lr = cfg.lr_policy.lr_at(cfg.base_lr, i);
         let loss = fused.step(x, labels, lr)?;
@@ -66,8 +94,12 @@ fn main() -> anyhow::Result<()> {
     let (eloss, eacc, _) = fused.eval(x, labels)?;
     println!("fused: {fused_s:.1}s, final eval-loss {eloss:.4}, eval-acc {eacc:.3}");
 
-    anyhow::ensure!(final_acc > 0.85, "native run failed to learn ({final_acc})");
-    anyhow::ensure!(eacc > 0.85, "fused run failed to learn ({eacc})");
-    println!("\nboth backends learned the task ✓");
+    if full_run {
+        anyhow::ensure!(final_acc > 0.85, "native run failed to learn ({final_acc})");
+        anyhow::ensure!(eacc > 0.85, "fused run failed to learn ({eacc})");
+        println!("\nboth backends learned the task ✓");
+    } else {
+        println!("\nsmoke run complete ({iters} iters) ✓");
+    }
     Ok(())
 }

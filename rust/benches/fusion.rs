@@ -1,0 +1,122 @@
+//! Bench: fused-vs-unfused region structure — how many parallel regions
+//! (and how much wall-clock) one solver step and one forward sweep pay
+//! under each fusion mode.
+//!
+//! Entries merge-updated into `BENCH_threads.json` (see
+//! `metrics::bench_json`; the `threads_scaling` bench owns the other
+//! keys, and `tools/check_bench.sh` gates both against
+//! `BENCH_baseline.json`):
+//!
+//! * **`fused_sgd_step`** — the solver's SGD update over LeNet's 8
+//!   parameter blobs: the unfused path issues three BLAS-1 regions per
+//!   blob, the fused path one three-stage region per blob
+//!   (`region_ratio` = unfused/fused regions, the 3→1 collapse), and
+//!   `PHAST_FUSE_STEP`'s flat mode a single region for the whole step.
+//! * **`fused_layers`** — full forward sweeps with the net's bias-add →
+//!   activation fusion plan on vs off.
+//!
+//! `cargo bench --bench fusion`
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use phast_caffe::experiments::preset_net;
+use phast_caffe::metrics::bench_json;
+use phast_caffe::ops::par;
+use phast_caffe::solver::{apply_sgd_update_mode, StepFusion};
+
+/// Regions issued and mean µs per SGD update under `mode`.
+fn measure_update(
+    net: &mut phast_caffe::net::Net,
+    history: &mut [Vec<f32>],
+    mode: StepFusion,
+    iters: usize,
+) -> (u64, f64) {
+    let (lr, momentum, decay) = (0.01f32, 0.9f32, 0.0005f32);
+    // Warm once (grows the pool, faults in scratch).
+    apply_sgd_update_mode(net.params_mut(), history, lr, momentum, decay, mode);
+    let r0 = par::region_count();
+    apply_sgd_update_mode(net.params_mut(), history, lr, momentum, decay, mode);
+    let regions = par::region_count() - r0;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        apply_sgd_update_mode(net.params_mut(), history, lr, momentum, decay, mode);
+    }
+    let us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    (regions, us)
+}
+
+/// Regions issued and mean ms per forward sweep with layer fusion on/off.
+fn measure_forward(net: &mut phast_caffe::net::Net, fused: bool, iters: usize) -> (u64, f64) {
+    net.set_layer_fusion(fused);
+    net.forward().expect("forward");
+    let r0 = par::region_count();
+    net.forward().expect("forward");
+    let regions = par::region_count() - r0;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        net.forward().expect("forward");
+    }
+    let ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+    (regions, ms)
+}
+
+fn main() -> anyhow::Result<()> {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut net = preset_net("mnist", 17)?;
+    let nblobs = net.params().len();
+    // Real gradients so the update arithmetic is representative.
+    net.zero_param_diffs();
+    net.forward()?;
+    net.backward()?;
+    let mut history: Vec<Vec<f32>> =
+        net.params().iter().map(|p| vec![0.0f32; p.count()]).collect();
+
+    println!("fusion: LeNet-MNIST, {nblobs} param blobs, {hw} hw threads");
+    let iters = 200usize;
+    let (unfused_regions, unfused_us) =
+        measure_update(&mut net, &mut history, StepFusion::Unfused, iters);
+    let (fused_regions, fused_us) =
+        measure_update(&mut net, &mut history, StepFusion::PerBlob, iters);
+    let (flat_regions, flat_us) = measure_update(&mut net, &mut history, StepFusion::Flat, iters);
+    let region_ratio = unfused_regions as f64 / fused_regions.max(1) as f64;
+    println!("  sgd step regions: unfused {unfused_regions}, fused/blob {fused_regions}, flat {flat_regions}  ({region_ratio:.1}x fewer dispatches fused)");
+    println!("  sgd step time:    unfused {unfused_us:.1} us, fused/blob {fused_us:.1} us, flat {flat_us:.1} us");
+
+    // Layer fusion on CIFAR-quick: two conv→relu pairs in the plan, so
+    // the fused forward issues measurably fewer regions per sweep.
+    let mut cifar = preset_net("cifar", 17)?;
+    let fwd_iters = 8usize;
+    let (fwd_plain_regions, fwd_plain_ms) = measure_forward(&mut cifar, false, fwd_iters);
+    let (fwd_fused_regions, fwd_fused_ms) = measure_forward(&mut cifar, true, fwd_iters);
+    println!("  cifar forward regions: plain {fwd_plain_regions}, fused {fwd_fused_regions}");
+    println!("  cifar forward time:    plain {fwd_plain_ms:.2} ms, fused {fwd_fused_ms:.2} ms");
+
+    let mut sgd = String::from("{\n");
+    let _ = writeln!(sgd, "    \"param_blobs\": {nblobs},");
+    let _ = writeln!(sgd, "    \"iters\": {iters},");
+    let _ = writeln!(sgd, "    \"regions_unfused\": {unfused_regions},");
+    let _ = writeln!(sgd, "    \"regions_fused_per_blob\": {fused_regions},");
+    let _ = writeln!(sgd, "    \"regions_flat\": {flat_regions},");
+    let _ = writeln!(sgd, "    \"region_ratio\": {region_ratio:.2},");
+    let _ = writeln!(sgd, "    \"unfused_us_per_step\": {unfused_us:.1},");
+    let _ = writeln!(sgd, "    \"fused_us_per_step\": {fused_us:.1},");
+    let _ = writeln!(sgd, "    \"flat_us_per_step\": {flat_us:.1}");
+    sgd.push_str("  }");
+
+    let mut layers = String::from("{\n");
+    let _ = writeln!(layers, "    \"net\": \"cifar10-quick\",");
+    let _ = writeln!(layers, "    \"iters\": {fwd_iters},");
+    let _ = writeln!(layers, "    \"regions_plain\": {fwd_plain_regions},");
+    let _ = writeln!(layers, "    \"regions_fused\": {fwd_fused_regions},");
+    let _ = writeln!(layers, "    \"plain_ms_per_fwd\": {fwd_plain_ms:.3},");
+    let _ = writeln!(layers, "    \"fused_ms_per_fwd\": {fwd_fused_ms:.3}");
+    layers.push_str("  }");
+
+    bench_json::merge_entries(
+        std::path::Path::new("BENCH_threads.json"),
+        &[("fused_sgd_step", sgd), ("fused_layers", layers)],
+    )?;
+    println!("\nmerged fused_sgd_step + fused_layers into BENCH_threads.json");
+    Ok(())
+}

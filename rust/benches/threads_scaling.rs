@@ -1,14 +1,17 @@
 //! Bench: serial-vs-parallel scaling of the native backend — the
 //! multi-core honesty check behind the Table 2 "Caffe" baseline.
 //!
-//! Two sections, both recorded to `BENCH_threads.json` for the CI
-//! artifact:
+//! Two sections, both **merge-updated** into `BENCH_threads.json` (keyed
+//! top-level entries via `metrics::bench_json`, so this bench and the
+//! `fusion` bench coexist in one record; the CI perf gate
+//! `tools/check_bench.sh` compares the merged file against
+//! `BENCH_baseline.json`):
 //!
-//! 1. **Scaling table** — full forward+backward iterations of
-//!    LeNet-MNIST (batch 64, the paper's workload) at increasing thread
-//!    counts via the `ops::par::with_threads` knob.
-//! 2. **Small-op dispatch microbench** — per-dispatch overhead of the
-//!    persistent worker pool vs the pre-pool scoped-spawn path
+//! 1. **`scaling`** — full forward+backward iterations of LeNet-MNIST
+//!    (batch 64, the paper's workload) at increasing thread counts via
+//!    the `ops::par::with_threads` knob.
+//! 2. **`small_op_dispatch`** — per-dispatch overhead of the persistent
+//!    worker pool vs the pre-pool scoped-spawn path
 //!    (`par::parallel_for_spawn`), measured on a trivial parallel region.
 //!    This is the many-small-op regime (CIFAR-quick head layers) the
 //!    pool exists for: the spawn path pays thread creation per call, the
@@ -20,6 +23,7 @@ use std::fmt::Write as _;
 use std::time::Instant;
 
 use phast_caffe::experiments::preset_net;
+use phast_caffe::metrics::bench_json;
 use phast_caffe::ops::par;
 
 /// Mean forward+backward ms over `iters` iterations at `threads`.
@@ -106,27 +110,35 @@ fn main() -> anyhow::Result<()> {
     println!("  pool  {pool_ns:>10.0} ns/dispatch");
     println!("  spawn {spawn_ns:>10.0} ns/dispatch  ({ratio:.1}x slower)");
 
-    // Hand-rolled JSON (no serde in the dependency-free build).
-    let mut json = String::from("{\n  \"bench\": \"threads_scaling\",\n");
-    let _ = writeln!(json, "  \"net\": \"lenet-mnist\",\n  \"batch\": 64,");
-    let _ = writeln!(json, "  \"iters\": {iters},\n  \"hw_threads\": {hw},");
-    json.push_str("  \"results\": [\n");
+    // Hand-rolled JSON (no serde in the dependency-free build), merged
+    // into BENCH_threads.json by key so other benches' entries survive.
+    let max_speedup = rows.iter().map(|&(_, _, s)| s).fold(0.0f64, f64::max);
+    let mut scaling = String::from("{\n");
+    let _ = writeln!(scaling, "    \"net\": \"lenet-mnist\",\n    \"batch\": 64,");
+    let _ = writeln!(scaling, "    \"iters\": {iters},\n    \"hw_threads\": {hw},");
+    let _ = writeln!(scaling, "    \"max_speedup\": {max_speedup:.3},");
+    scaling.push_str("    \"results\": [\n");
     for (i, (t, ms, speedup)) in rows.iter().enumerate() {
         let comma = if i + 1 < rows.len() { "," } else { "" };
         let _ = writeln!(
-            json,
-            "    {{\"threads\": {t}, \"fwd_bwd_ms\": {ms:.3}, \"speedup\": {speedup:.3}}}{comma}"
+            scaling,
+            "      {{\"threads\": {t}, \"fwd_bwd_ms\": {ms:.3}, \"speedup\": {speedup:.3}}}{comma}"
         );
     }
-    json.push_str("  ],\n");
-    let _ = writeln!(json, "  \"small_op_dispatch\": {{");
-    let _ = writeln!(json, "    \"workers\": {},", t.max(2));
-    let _ = writeln!(json, "    \"iters\": {micro_iters},");
-    let _ = writeln!(json, "    \"pool_ns_per_dispatch\": {pool_ns:.0},");
-    let _ = writeln!(json, "    \"spawn_ns_per_dispatch\": {spawn_ns:.0},");
-    let _ = writeln!(json, "    \"spawn_over_pool\": {ratio:.2}");
-    json.push_str("  }\n}\n");
-    std::fs::write("BENCH_threads.json", &json)?;
-    println!("\nwrote BENCH_threads.json");
+    scaling.push_str("    ]\n  }");
+
+    let mut dispatch = String::from("{\n");
+    let _ = writeln!(dispatch, "    \"workers\": {},", t.max(2));
+    let _ = writeln!(dispatch, "    \"iters\": {micro_iters},");
+    let _ = writeln!(dispatch, "    \"pool_ns_per_dispatch\": {pool_ns:.0},");
+    let _ = writeln!(dispatch, "    \"spawn_ns_per_dispatch\": {spawn_ns:.0},");
+    let _ = writeln!(dispatch, "    \"spawn_over_pool\": {ratio:.2}");
+    dispatch.push_str("  }");
+
+    bench_json::merge_entries(
+        std::path::Path::new("BENCH_threads.json"),
+        &[("scaling", scaling), ("small_op_dispatch", dispatch)],
+    )?;
+    println!("\nmerged scaling + small_op_dispatch into BENCH_threads.json");
     Ok(())
 }

@@ -10,6 +10,11 @@
 //! count.  The per-sample GeMMs inside workers stay serial (nested
 //! regions collapse).  Knobs: `PHAST_NUM_THREADS` + `PHAST_CONV_GRAIN`
 //! (samples per worker).
+//!
+//! When the net's fusion plan pairs this layer with an adjacent ReLU
+//! (`Net::from_config`), `forward_fused_relu` computes the activation
+//! inside the same batch-parallel region — conv + bias + ReLU in one
+//! dispatch, bitwise-equal to the separate passes.
 
 use anyhow::{bail, Result};
 
@@ -76,6 +81,118 @@ impl ConvLayer {
     fn ckk(&self) -> usize {
         self.cin * self.cfg.kernel_size * self.cfg.kernel_size
     }
+
+    /// Forward body shared by the plain and fused paths.  With
+    /// `fused = Some((act, slope))` the leaky-ReLU of each just-computed
+    /// output plane is written into `act` inside the **same** parallel
+    /// region (one dispatch for conv + bias + activation); the arithmetic
+    /// is identical to `forward` followed by `ops::leaky_relu`, so both
+    /// paths are bitwise equal.
+    fn forward_body(&mut self, x: &Tensor, top: &mut [f32], fused: Option<(&mut [f32], f32)>) {
+        let ctx = SampleCtx {
+            xs: x.as_slice(),
+            wmat: self.params[0].data().as_slice(),
+            bias: self.params[1].data().as_slice(),
+            cin: self.cin,
+            h: self.h,
+            w: self.w,
+            g: self.geom(),
+            cout: self.cfg.num_output,
+            ohw: self.oh * self.ow,
+            ckk: self.ckk(),
+            sample: self.cin * self.h * self.w,
+        };
+        let tune = par::Tuning::new(CONV_GRAIN.get());
+        let item = ctx.cout * ctx.ohw;
+        let n = top.len() / item;
+        let scratch = ctx.ckk * ctx.ohw;
+
+        match fused {
+            None => {
+                // Single worker: reuse the persistent column scratch — no
+                // per-call allocation, the seed's serial cost profile.
+                if tune.workers(n) <= 1 {
+                    let cols = &mut self.cols;
+                    for s in 0..n {
+                        run_sample(&ctx, s, cols, &mut top[s * item..(s + 1) * item], None);
+                    }
+                    return;
+                }
+                // One contiguous sample range per worker; each worker owns
+                // its column scratch, allocated once for its whole range.
+                par::parallel_chunks_mut(top, item, tune, |samples, block| {
+                    let mut cols = vec![0.0f32; scratch];
+                    for (bi, s) in samples.enumerate() {
+                        run_sample(&ctx, s, &mut cols, &mut block[bi * item..(bi + 1) * item], None);
+                    }
+                });
+            }
+            Some((act, slope)) => {
+                debug_assert_eq!(act.len(), top.len());
+                if tune.workers(n) <= 1 {
+                    let cols = &mut self.cols;
+                    for s in 0..n {
+                        let (lo, hi) = (s * item, (s + 1) * item);
+                        let a = &mut act[lo..hi];
+                        run_sample(&ctx, s, cols, &mut top[lo..hi], Some((a, slope)));
+                    }
+                    return;
+                }
+                // Same sample partition, two disjoint output streams: the
+                // conv top and the fused activation — still one dispatch.
+                par::parallel_chunks2_mut(top, item, act, item, tune, |samples, block, ablock| {
+                    let mut cols = vec![0.0f32; scratch];
+                    for (bi, s) in samples.enumerate() {
+                        let (lo, hi) = (bi * item, (bi + 1) * item);
+                        let a = &mut ablock[lo..hi];
+                        run_sample(&ctx, s, &mut cols, &mut block[lo..hi], Some((a, slope)));
+                    }
+                });
+            }
+        }
+    }
+}
+
+/// Borrowed per-forward invariants for [`run_sample`] (weights, bias,
+/// input, geometry) — one struct so the helper stays a plain function
+/// with properly universal lifetimes instead of a closure.
+struct SampleCtx<'a> {
+    xs: &'a [f32],
+    wmat: &'a [f32],
+    bias: &'a [f32],
+    cin: usize,
+    h: usize,
+    w: usize,
+    g: Conv2dGeom,
+    cout: usize,
+    ohw: usize,
+    ckk: usize,
+    sample: usize,
+}
+
+/// One sample's im2col + GeMM + bias into `out`, then (fused path only)
+/// its leaky-ReLU into `act` — the same element order as the unfused
+/// forward followed by `ops::leaky_relu`, hence bitwise-equal.
+fn run_sample(
+    ctx: &SampleCtx<'_>,
+    s: usize,
+    cols: &mut [f32],
+    out: &mut [f32],
+    act: Option<(&mut [f32], f32)>,
+) {
+    let x = &ctx.xs[s * ctx.sample..(s + 1) * ctx.sample];
+    ops::im2col(x, ctx.cin, ctx.h, ctx.w, ctx.g, cols);
+    ops::gemm(Trans::No, Trans::No, ctx.cout, ctx.ohw, ctx.ckk, 1.0, ctx.wmat, cols, 0.0, out);
+    for (c, b) in ctx.bias.iter().enumerate() {
+        for v in &mut out[c * ctx.ohw..(c + 1) * ctx.ohw] {
+            *v += b;
+        }
+    }
+    if let Some((act_out, slope)) = act {
+        for (av, ov) in act_out.iter_mut().zip(out.iter()) {
+            *av = if *ov > 0.0 { *ov } else { slope * *ov };
+        }
+    }
 }
 
 impl Layer for ConvLayer {
@@ -118,50 +235,22 @@ impl Layer for ConvLayer {
 
     fn forward(&mut self, bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()> {
         let x = bottoms[0];
-        let cout = self.cfg.num_output;
-        let (ckk, ohw) = (self.ckk(), self.oh * self.ow);
-        let wmat = self.params[0].data().as_slice();
-        let bias = self.params[1].data().as_slice();
-        let sample = self.cin * self.h * self.w;
-        let (cin, h, w, g) = (self.cin, self.h, self.w, self.geom());
-        let xs = x.as_slice();
         let top = tops[0].as_mut_slice();
-        let tune = par::Tuning::new(CONV_GRAIN.get());
-        let n = top.len() / (cout * ohw);
-
-        // Single worker: reuse the persistent column scratch — no
-        // per-call allocation, the seed's serial cost profile.
-        if tune.workers(n) <= 1 {
-            let cols = &mut self.cols;
-            for s in 0..n {
-                ops::im2col(&xs[s * sample..(s + 1) * sample], cin, h, w, g, cols);
-                let out = &mut top[s * cout * ohw..(s + 1) * cout * ohw];
-                ops::gemm(Trans::No, Trans::No, cout, ohw, ckk, 1.0, wmat, cols, 0.0, out);
-                for (c, b) in bias.iter().enumerate() {
-                    for v in &mut out[c * ohw..(c + 1) * ohw] {
-                        *v += b;
-                    }
-                }
-            }
-            return Ok(());
-        }
-
-        // One contiguous sample range per worker; each worker owns its
-        // column scratch, allocated once for its whole range.
-        par::parallel_chunks_mut(top, cout * ohw, tune, |samples, block| {
-            let mut cols = vec![0.0f32; ckk * ohw];
-            for (bi, s) in samples.enumerate() {
-                ops::im2col(&xs[s * sample..(s + 1) * sample], cin, h, w, g, &mut cols);
-                let out = &mut block[bi * cout * ohw..(bi + 1) * cout * ohw];
-                ops::gemm(Trans::No, Trans::No, cout, ohw, ckk, 1.0, wmat, &cols, 0.0, out);
-                for (c, b) in bias.iter().enumerate() {
-                    for v in &mut out[c * ohw..(c + 1) * ohw] {
-                        *v += b;
-                    }
-                }
-            }
-        });
+        self.forward_body(x, top, None);
         Ok(())
+    }
+
+    fn forward_fused_relu(
+        &mut self,
+        bottoms: &[&Tensor],
+        tops: &mut [Tensor],
+        act: &mut Tensor,
+        slope: f32,
+    ) -> Result<bool> {
+        let x = bottoms[0];
+        let top = tops[0].as_mut_slice();
+        self.forward_body(x, top, Some((act.as_mut_slice(), slope)));
+        Ok(true)
     }
 
     fn backward(

@@ -6,12 +6,20 @@
 
 use anyhow::{bail, Result};
 
-use crate::ops::{self, gemm::Trans};
+use crate::ops::{self, gemm::Trans, par};
 use crate::propcheck::Rng;
 use crate::proto::LayerConfig;
 use crate::tensor::{Blob, Shape, Tensor};
 
 use super::{xavier_fill, Layer};
+
+/// Minimum **elements** per worker for the fused bias-add → activation
+/// region (`PHAST_BIAS_GRAIN` overrides).  The region is chunked by rows,
+/// so the row grain is derived as `ceil(grain / nout)`: with the default
+/// (8192, matching `PHAST_ELTWISE_GRAIN`) LeNet's ip1 (64×500) fans out
+/// exactly like the unfused elementwise ReLU did, while the ip2 head
+/// (64×10) stays serial where dispatch would dominate.
+static BIAS_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_BIAS_GRAIN", 8192);
 
 pub struct IpLayer {
     cfg: LayerConfig,
@@ -65,6 +73,47 @@ impl Layer for IpLayer {
             }
         }
         Ok(())
+    }
+
+    fn forward_fused_relu(
+        &mut self,
+        bottoms: &[&Tensor],
+        tops: &mut [Tensor],
+        act: &mut Tensor,
+        slope: f32,
+    ) -> Result<bool> {
+        let x = bottoms[0];
+        let n = x.shape().num();
+        let nout = self.cfg.num_output;
+        let w = self.params[0].data().as_slice();
+        let b = self.params[1].data().as_slice();
+        let y = tops[0].as_mut_slice();
+        ops::gemm(Trans::No, Trans::Yes, n, nout, self.k, 1.0, x.as_slice(), w, 0.0, y);
+        // matrixPlusVectorRows fused with the following ReLU: one region
+        // writes both the pre-activation top and the activation, instead
+        // of a serial bias sweep plus a separate elementwise region.  The
+        // per-element arithmetic matches `forward` + `ops::leaky_relu`
+        // bitwise.
+        let a = act.as_mut_slice();
+        let row_grain = BIAS_GRAIN.get().div_ceil(nout.max(1));
+        par::parallel_chunks2_mut(
+            y,
+            nout,
+            a,
+            nout,
+            par::Tuning::new(row_grain),
+            |rows, yb, ab| {
+                for (bi, _r) in rows.enumerate() {
+                    let yrow = &mut yb[bi * nout..(bi + 1) * nout];
+                    let arow = &mut ab[bi * nout..(bi + 1) * nout];
+                    for ((yv, bv), av) in yrow.iter_mut().zip(b).zip(arow.iter_mut()) {
+                        *yv += bv;
+                        *av = if *yv > 0.0 { *yv } else { slope * *yv };
+                    }
+                }
+            },
+        );
+        Ok(true)
     }
 
     fn backward(

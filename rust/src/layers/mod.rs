@@ -47,6 +47,22 @@ pub trait Layer {
         bottom_diffs: &mut [Tensor],
     ) -> Result<()>;
 
+    /// Fused forward: compute this layer's `tops` and, within the **same**
+    /// parallel region(s), write `leaky_relu(tops[0], slope)` into `act`
+    /// (the following ReLU layer's top) — the net's bias-add → activation
+    /// fusion seam.  The fused path must be bitwise-equal to `forward`
+    /// followed by `ops::leaky_relu`.  Layers that cannot fuse return
+    /// `Ok(false)` untouched and the net falls back to separate passes.
+    fn forward_fused_relu(
+        &mut self,
+        _bottoms: &[&Tensor],
+        _tops: &mut [Tensor],
+        _act: &mut Tensor,
+        _slope: f32,
+    ) -> Result<bool> {
+        Ok(false)
+    }
+
     /// Learnable parameter blobs (weight, bias) — empty for stateless layers.
     fn params(&self) -> &[Blob] {
         &[]

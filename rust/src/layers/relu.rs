@@ -1,6 +1,12 @@
 //! ReLU layer (Caffe's leaky variant via `negative_slope`).  The
 //! elementwise map runs chunk-parallel through `ops::leaky_relu` /
 //! `ops::leaky_relu_bwd` (see [`crate::ops::par`]).
+//!
+//! In the forward sweep this layer often does not run at all: when it
+//! directly follows a Convolution/InnerProduct layer the net's fusion
+//! plan computes the activation inside the producer's parallel region
+//! (`Layer::forward_fused_relu`) and skips this layer — its top blob is
+//! still fully written, and its backward is unchanged.
 
 use anyhow::Result;
 

@@ -1,7 +1,9 @@
 //! SoftMax and SoftMaxWithLoss layers (paper §3: "maps any set of numbers
 //! to probabilities that add up to 1" + the loss variant used in training).
 //! The row-wise kernels run row-block-parallel through `ops::softmax` /
-//! `ops::softmax_xent_bwd` (see [`crate::ops::par`]).
+//! `ops::softmax_xent_bwd` (see [`crate::ops::par`]); the forward softmax
+//! chain (scale → exp+sum → normalize) is fully fused per row inside a
+//! single dispatch.
 
 use anyhow::{bail, Result};
 

@@ -1,0 +1,199 @@
+//! Merge-update for the hand-rolled `BENCH_*.json` records (the build is
+//! dependency-free, so no serde).
+//!
+//! Benches used to rewrite `BENCH_threads.json` wholesale, so the last
+//! bench to run clobbered every other bench's entries.  This module keeps
+//! the file an object of **keyed entries**: each bench re-writes only its
+//! own top-level keys and preserves the rest, so the dispatch microbench
+//! and the fusion bench coexist in one record — which is also what the CI
+//! perf gate (`tools/check_bench.sh`) compares against the checked-in
+//! `BENCH_baseline.json`.
+
+use std::path::Path;
+
+/// Split a JSON object's top-level `key → raw value` pairs.  The scanner
+/// is string- and nesting-aware but deliberately minimal: it targets the
+/// machine-written records this crate produces (and any well-formed JSON
+/// object); on malformed input it returns the pairs parsed so far.
+pub fn top_level_entries(json: &str) -> Vec<(String, String)> {
+    let chars: Vec<char> = json.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < chars.len() && chars[i] != '{' {
+        i += 1;
+    }
+    if i >= chars.len() {
+        return out;
+    }
+    i += 1; // past '{'
+    loop {
+        while i < chars.len() && (chars[i].is_whitespace() || chars[i] == ',') {
+            i += 1;
+        }
+        if i >= chars.len() || chars[i] == '}' || chars[i] != '"' {
+            break;
+        }
+        let (key, after_key) = match scan_string(&chars, i) {
+            Some(v) => v,
+            None => break,
+        };
+        i = after_key;
+        while i < chars.len() && chars[i].is_whitespace() {
+            i += 1;
+        }
+        if i >= chars.len() || chars[i] != ':' {
+            break;
+        }
+        i += 1;
+        while i < chars.len() && chars[i].is_whitespace() {
+            i += 1;
+        }
+        let start = i;
+        let mut depth = 0usize;
+        let mut in_str = false;
+        let mut esc = false;
+        while i < chars.len() {
+            let ch = chars[i];
+            if in_str {
+                if esc {
+                    esc = false;
+                } else if ch == '\\' {
+                    esc = true;
+                } else if ch == '"' {
+                    in_str = false;
+                }
+            } else {
+                match ch {
+                    '"' => in_str = true,
+                    '{' | '[' => depth += 1,
+                    '}' | ']' => {
+                        if depth == 0 {
+                            break;
+                        }
+                        depth -= 1;
+                    }
+                    ',' if depth == 0 => break,
+                    _ => {}
+                }
+            }
+            i += 1;
+        }
+        let value: String = chars[start..i].iter().collect::<String>().trim_end().to_string();
+        out.push((key, value));
+    }
+    out
+}
+
+/// Scan the JSON string literal starting at `chars[at] == '"'`; returns
+/// the (unescaped-enough-for-keys) content and the index just past the
+/// closing quote.
+fn scan_string(chars: &[char], at: usize) -> Option<(String, usize)> {
+    debug_assert_eq!(chars.get(at), Some(&'"'));
+    let mut s = String::new();
+    let mut i = at + 1;
+    while i < chars.len() {
+        match chars[i] {
+            '\\' => {
+                // Keys in our records never use escapes; keep the pair raw.
+                if i + 1 < chars.len() {
+                    s.push(chars[i]);
+                    s.push(chars[i + 1]);
+                    i += 2;
+                } else {
+                    return None;
+                }
+            }
+            '"' => return Some((s, i + 1)),
+            c => {
+                s.push(c);
+                i += 1;
+            }
+        }
+    }
+    None
+}
+
+/// Read the JSON object at `path` (treated as empty when absent or
+/// unreadable), set each `(key, raw value)` update — replacing the entry
+/// if the key exists, appending otherwise — and write the merged object
+/// back.  Raw values must be valid JSON (number, string, array, object).
+///
+/// The write goes through a temp file + rename so a killed bench can
+/// never leave a truncated record behind, and non-empty existing content
+/// that parses to zero entries (i.e. a corrupt record about to be
+/// dropped) is reported on stderr instead of vanishing silently.
+pub fn merge_entries(path: &Path, updates: &[(&str, String)]) -> std::io::Result<()> {
+    let existing = std::fs::read_to_string(path).unwrap_or_else(|_| String::from("{}"));
+    let mut entries = top_level_entries(&existing);
+    let trimmed = existing.trim();
+    if entries.is_empty() && !trimmed.is_empty() && trimmed != "{}" {
+        eprintln!(
+            "warning: {} held unparseable content; starting a fresh record",
+            path.display()
+        );
+    }
+    for (key, value) in updates {
+        match entries.iter_mut().find(|(k, _)| k == key) {
+            Some(entry) => entry.1 = value.clone(),
+            None => entries.push((key.to_string(), value.clone())),
+        }
+    }
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in entries.iter().enumerate() {
+        let comma = if i + 1 < entries.len() { "," } else { "" };
+        out.push_str(&format!("  \"{k}\": {v}{comma}\n"));
+    }
+    out.push_str("}\n");
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, out)?;
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_scalars_arrays_and_objects() {
+        let json = r#"{
+  "a": 1,
+  "b": [ {"x": 1}, {"y": "s,t\"r"} ],
+  "c": { "nested": { "deep": [1, 2] } },
+  "d": "plain"
+}"#;
+        let entries = top_level_entries(json);
+        let keys: Vec<&str> = entries.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["a", "b", "c", "d"]);
+        assert_eq!(entries[0].1, "1");
+        assert!(entries[1].1.starts_with('[') && entries[1].1.ends_with(']'));
+        assert!(entries[2].1.contains("\"deep\": [1, 2]"));
+        assert_eq!(entries[3].1, "\"plain\"");
+    }
+
+    #[test]
+    fn merge_preserves_other_keys() {
+        let dir = std::env::temp_dir().join("phast_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("merge.json");
+        let _ = std::fs::remove_file(&path);
+
+        merge_entries(&path, &[("first", "{\n    \"v\": 1\n  }".to_string())]).unwrap();
+        merge_entries(&path, &[("second", "[1, 2, 3]".to_string())]).unwrap();
+        merge_entries(&path, &[("first", "{\n    \"v\": 2\n  }".to_string())]).unwrap();
+
+        let merged = std::fs::read_to_string(&path).unwrap();
+        let entries = top_level_entries(&merged);
+        let keys: Vec<&str> = entries.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["first", "second"], "keys lost or reordered: {merged}");
+        assert!(entries[0].1.contains("\"v\": 2"), "update not applied: {merged}");
+        assert_eq!(entries[1].1, "[1, 2, 3]", "sibling entry clobbered: {merged}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_or_missing_input_yields_empty() {
+        assert!(top_level_entries("").is_empty());
+        assert!(top_level_entries("{}").is_empty());
+        assert!(top_level_entries("not json").is_empty());
+    }
+}

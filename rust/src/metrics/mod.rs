@@ -1,6 +1,8 @@
 //! Timing and counting instrumentation: per-layer wall-clock stats and the
 //! transfer counters the §4.3 reproduction reports.
 
+pub mod bench_json;
+
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 

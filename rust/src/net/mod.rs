@@ -2,6 +2,7 @@
 //! sweeps and per-layer timing — Caffe's `Net<float>`, Fig. 1 of the paper.
 
 use std::collections::HashMap;
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -10,6 +11,14 @@ use crate::layers::{create_layer, Layer};
 use crate::metrics::Metrics;
 use crate::proto::{LayerType, NetConfig};
 use crate::tensor::{Blob, Shape, Tensor};
+
+/// `PHAST_FUSE_LAYERS`, parsed once: `0` disables the elementwise layer
+/// fusion plan (bias-add → activation in one region); anything else, or
+/// unset, enables it.  [`Net::set_layer_fusion`] overrides per net.
+fn layer_fusion_default() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| std::env::var("PHAST_FUSE_LAYERS").map(|v| v.trim() != "0").unwrap_or(true))
+}
 
 /// A fully set-up network.
 pub struct Net {
@@ -20,6 +29,13 @@ pub struct Net {
     /// Per-layer bottom/top blob indices.
     bottom_ids: Vec<Vec<usize>>,
     top_ids: Vec<Vec<usize>>,
+    /// Fusion plan: for layer `li`, the index of the adjacent ReLU layer
+    /// whose forward is fused into `li`'s parallel region (the paper's
+    /// §4.3 "no artificial interruption across the layers", at the native
+    /// level).  Built once in [`Net::from_config`].
+    fused_relu: Vec<Option<usize>>,
+    /// Runtime toggle for the plan (`PHAST_FUSE_LAYERS`, default on).
+    layer_fusion: bool,
     pub metrics: Metrics,
 }
 
@@ -76,6 +92,29 @@ impl Net {
             top_ids.push(tids);
             layers.push(layer);
         }
+        // Fusion plan: a Convolution/InnerProduct layer immediately
+        // followed by a ReLU that consumes exactly its single top gets the
+        // activation computed inside its own forward region (bias-add →
+        // activation, one dispatch).  The ReLU's top blob is still fully
+        // written, so downstream consumers and the backward sweep are
+        // unaffected, and results are bitwise-equal to the unfused pass.
+        let mut fused_relu: Vec<Option<usize>> = vec![None; layers.len()];
+        for li in 0..layers.len().saturating_sub(1) {
+            let ri = li + 1;
+            if !matches!(layers[li].ltype(), LayerType::Convolution | LayerType::InnerProduct) {
+                continue;
+            }
+            if layers[ri].ltype() != LayerType::ReLU {
+                continue;
+            }
+            if config.layers[li].tops.len() == 1
+                && config.layers[ri].bottoms.len() == 1
+                && config.layers[ri].tops.len() == 1
+                && config.layers[ri].bottoms[0] == config.layers[li].tops[0]
+            {
+                fused_relu[li] = Some(ri);
+            }
+        }
         Ok(Net {
             config,
             layers,
@@ -83,8 +122,26 @@ impl Net {
             blob_index,
             bottom_ids,
             top_ids,
+            fused_relu,
+            layer_fusion: layer_fusion_default(),
             metrics: Metrics::new(),
         })
+    }
+
+    /// Enable/disable the elementwise layer-fusion plan at runtime
+    /// (overrides `PHAST_FUSE_LAYERS`; both settings are bitwise-equal,
+    /// the toggle exists for A/B benches and the equivalence tests).
+    pub fn set_layer_fusion(&mut self, on: bool) {
+        self.layer_fusion = on;
+    }
+
+    /// The fusion plan as (producer, fused ReLU) layer-index pairs.
+    pub fn fusion_plan(&self) -> Vec<(usize, usize)> {
+        self.fused_relu
+            .iter()
+            .enumerate()
+            .filter_map(|(li, r)| r.map(|ri| (li, ri)))
+            .collect()
     }
 
     pub fn config(&self) -> &NetConfig {
@@ -159,18 +216,61 @@ impl Net {
         result.with_context(|| format!("backward of layer '{}'", self.layers[li].name()))
     }
 
+    /// Run layer `li`'s forward with the adjacent ReLU layer `ri` fused
+    /// into the same parallel region (see the fusion plan in
+    /// [`Net::from_config`]).  Returns false when the layer does not
+    /// support fusion and the caller must fall back to separate passes.
+    fn forward_layer_fused(&mut self, li: usize, ri: usize) -> Result<bool> {
+        let slope = self.layers[ri].config().negative_slope;
+        let tids = self.top_ids[li].clone();
+        let rid = self.top_ids[ri][0];
+        let mut tops: Vec<Tensor> = tids
+            .iter()
+            .map(|&i| std::mem::replace(self.blobs[i].data_mut(), Tensor::zeros(Shape::new(&[0]))))
+            .collect();
+        let mut act =
+            std::mem::replace(self.blobs[rid].data_mut(), Tensor::zeros(Shape::new(&[0])));
+        let bottoms: Vec<&Tensor> =
+            self.bottom_ids[li].iter().map(|&i| self.blobs[i].data()).collect();
+        let result = self.layers[li].forward_fused_relu(&bottoms, &mut tops, &mut act, slope);
+        for (&i, t) in tids.iter().zip(tops) {
+            *self.blobs[i].data_mut() = t;
+        }
+        *self.blobs[rid].data_mut() = act;
+        result.with_context(|| format!("fused forward of layer '{}'", self.layers[li].name()))
+    }
+
     /// Full forward sweep (records per-layer timings).  Returns the loss if
-    /// a loss layer is present.
+    /// a loss layer is present.  Fusion-planned (producer, ReLU) pairs run
+    /// as one region; the ReLU's timer is recorded as zero so per-layer
+    /// reports keep a row per configured layer.
     pub fn forward(&mut self) -> Result<Option<f32>> {
         let mut loss = None;
-        for li in 0..self.layers.len() {
+        let mut li = 0;
+        while li < self.layers.len() {
+            let plan = if self.layer_fusion { self.fused_relu[li] } else { None };
             let t0 = Instant::now();
-            self.forward_layer(li)?;
+            let mut fused_ri = None;
+            if let Some(ri) = plan {
+                if self.forward_layer_fused(li, ri)? {
+                    fused_ri = Some(ri);
+                }
+            }
+            if fused_ri.is_none() {
+                self.forward_layer(li)?;
+            }
             let name = format!("fwd.{}", self.layers[li].name());
             self.metrics.record(&name, t0.elapsed());
             if self.layers[li].is_loss() {
                 let tid = self.top_ids[li][0];
                 loss = Some(self.blobs[tid].data().as_slice()[0]);
+            }
+            if let Some(ri) = fused_ri {
+                let rname = format!("fwd.{}", self.layers[ri].name());
+                self.metrics.record(&rname, std::time::Duration::ZERO);
+                li = ri + 1;
+            } else {
+                li += 1;
             }
         }
         Ok(loss)
@@ -282,6 +382,56 @@ mod tests {
         assert_eq!(net.blob("pool3").unwrap().shape().dims(), &[64, 64, 4, 4]);
         let loss = net.forward().unwrap().unwrap();
         assert!(loss.is_finite());
+    }
+
+    #[test]
+    fn fusion_plan_detects_ip_relu_and_conv_relu_pairs() {
+        // LeNet: ip1 (idx 5) is followed by relu1 (idx 6) consuming "ip1".
+        let net = lenet();
+        assert_eq!(net.fusion_plan(), vec![(5, 6)]);
+        // CIFAR-quick: conv2→relu2 and conv3→relu3 are adjacent; relu1
+        // follows a Pooling layer, which never fuses.
+        let cfg = NetConfig::from_text(presets::CIFAR10_QUICK).unwrap();
+        let net = Net::from_config(cfg, 2).unwrap();
+        let plan = net.fusion_plan();
+        assert_eq!(plan.len(), 2, "plan: {plan:?}");
+        for (li, ri) in plan {
+            assert_eq!(net.layer(li).ltype(), LayerType::Convolution);
+            assert_eq!(net.layer(ri).ltype(), LayerType::ReLU);
+            assert_eq!(ri, li + 1);
+        }
+    }
+
+    #[test]
+    fn fused_forward_bitwise_equals_unfused() {
+        for preset in [presets::LENET_MNIST, presets::CIFAR10_QUICK] {
+            let cfg = NetConfig::from_text(preset).unwrap();
+            let mut fused = Net::from_config(cfg.clone(), 7).unwrap();
+            fused.set_layer_fusion(true);
+            let mut plain = Net::from_config(cfg, 7).unwrap();
+            plain.set_layer_fusion(false);
+            let lf = fused.forward().unwrap().unwrap();
+            let lp = plain.forward().unwrap().unwrap();
+            assert_eq!(lf, lp, "loss diverged under layer fusion");
+            let names: Vec<String> = fused.blob_names().map(str::to_string).collect();
+            for name in names {
+                let a = fused.blob(&name).unwrap().data().as_slice();
+                let b = plain.blob(&name).unwrap().data().as_slice();
+                assert_eq!(a, b, "blob '{name}' diverged under layer fusion");
+            }
+            // Backward through the fused-forward net must also agree (the
+            // ReLU still runs its own backward).
+            fused.zero_param_diffs();
+            plain.zero_param_diffs();
+            fused.backward().unwrap();
+            plain.backward().unwrap();
+            let nparams = fused.params().len();
+            for pi in 0..nparams {
+                let a = fused.params()[pi].diff().as_slice().to_vec();
+                let b = plain.params()[pi].diff().as_slice().to_vec();
+                assert_eq!(a, b, "param grad {pi} diverged under layer fusion");
+            }
+        }
     }
 
     #[test]

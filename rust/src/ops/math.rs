@@ -45,6 +45,144 @@ pub fn scal(alpha: f32, x: &mut [f32]) {
     });
 }
 
+/// The three SGD stage bodies over one element block — shared by the
+/// per-blob and flattened fused updates so both are, by construction,
+/// the same arithmetic as the unfused [`axpy`]/[`axpby`]/[`axpy`] chain:
+///
+/// ```text
+/// stage 0:  g += decay * w          (axpy:  regularize)
+/// stage 1:  h  = lr * g + momentum*h (axpby: momentum)
+/// stage 2:  w -= h                  (axpy:  Blob::Update)
+/// ```
+///
+/// Every element is updated independently with identical per-element
+/// arithmetic under any split, so fused results are **bitwise equal** to
+/// the unfused three-dispatch sequence at every thread count.
+#[inline]
+fn sgd_stage(
+    stage: usize,
+    w: &mut [f32],
+    g: &mut [f32],
+    h: &mut [f32],
+    lr: f32,
+    momentum: f32,
+    decay: f32,
+) {
+    match stage {
+        0 => {
+            for (gi, wi) in g.iter_mut().zip(w.iter()) {
+                *gi += decay * *wi;
+            }
+        }
+        1 => {
+            for (hi, gi) in h.iter_mut().zip(g.iter()) {
+                *hi = lr * *gi + momentum * *hi;
+            }
+        }
+        _ => {
+            for (wi, hi) in w.iter_mut().zip(h.iter()) {
+                *wi -= *hi;
+            }
+        }
+    }
+}
+
+/// Fused momentum-SGD update for one parameter blob: the solver's three
+/// BLAS-1 regions collapse into **one** dispatch of a three-stage fused
+/// region ([`par::parallel_regions`]).  `g` holds the gradient on entry
+/// and the *regularized* gradient on exit (Caffe semantics, identical to
+/// the unfused path).  Knobs: `PHAST_NUM_THREADS` + `PHAST_AXPY_GRAIN`.
+pub fn sgd_update_fused(
+    w: &mut [f32],
+    g: &mut [f32],
+    hist: &mut [f32],
+    lr: f32,
+    momentum: f32,
+    decay: f32,
+) {
+    let n = w.len();
+    assert_eq!(g.len(), n);
+    assert_eq!(hist.len(), n);
+    let tune = par::Tuning::new(AXPY_GRAIN.get());
+    let wv = par::FusedSlice::new(w);
+    let gv = par::FusedSlice::new(g);
+    let hv = par::FusedSlice::new(hist);
+    par::parallel_regions(n, 3, tune, |stage, r| {
+        // SAFETY: every stage re-slices the worker's own partition range,
+        // so concurrent views are disjoint (the fused-region contract).
+        unsafe {
+            sgd_stage(
+                stage,
+                wv.slice_mut(r.clone()),
+                gv.slice_mut(r.clone()),
+                hv.slice_mut(r),
+                lr,
+                momentum,
+                decay,
+            );
+        }
+    });
+}
+
+/// One parameter blob's `(weights, gradient, history)` slices for the
+/// flattened whole-step fused update.
+pub type SgdParamView<'a> = (&'a mut [f32], &'a mut [f32], &'a mut [f32]);
+
+/// Whole-step fused momentum-SGD over a *flattened view* of all parameter
+/// blobs: **one** dispatch for the entire solver step (`PHAST_FUSE_STEP`).
+/// Workers partition the concatenated element space, so one worker's range
+/// may span several blobs; the per-element arithmetic is the same three
+/// stage bodies as [`sgd_update_fused`], hence bitwise equal to both the
+/// per-blob fused path and the unfused three-call sequence.
+pub fn sgd_update_fused_flat(params: Vec<SgdParamView<'_>>, lr: f32, momentum: f32, decay: f32) {
+    struct Seg<'a> {
+        start: usize,
+        end: usize,
+        w: par::FusedSlice<'a, f32>,
+        g: par::FusedSlice<'a, f32>,
+        h: par::FusedSlice<'a, f32>,
+    }
+    let mut segs: Vec<Seg<'_>> = Vec::with_capacity(params.len());
+    let mut total = 0usize;
+    for (w, g, h) in params {
+        let n = w.len();
+        assert_eq!(g.len(), n);
+        assert_eq!(h.len(), n);
+        segs.push(Seg {
+            start: total,
+            end: total + n,
+            w: par::FusedSlice::new(w),
+            g: par::FusedSlice::new(g),
+            h: par::FusedSlice::new(h),
+        });
+        total += n;
+    }
+    let tune = par::Tuning::new(AXPY_GRAIN.get());
+    par::parallel_regions(total, 3, tune, |stage, r| {
+        for seg in &segs {
+            let lo = r.start.max(seg.start);
+            let hi = r.end.min(seg.end);
+            if lo >= hi {
+                continue;
+            }
+            let local = lo - seg.start..hi - seg.start;
+            // SAFETY: disjoint global ranges map to disjoint local ranges
+            // within each segment (the fused-region contract).
+            unsafe {
+                sgd_stage(
+                    stage,
+                    seg.w.slice_mut(local.clone()),
+                    seg.g.slice_mut(local.clone()),
+                    seg.h.slice_mut(local),
+                    lr,
+                    momentum,
+                    decay,
+                );
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -69,6 +207,57 @@ mod tests {
         let mut x = vec![2.0, -4.0];
         scal(0.5, &mut x);
         assert_eq!(x, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn fused_sgd_matches_unfused_three_call_sequence_bitwise() {
+        use crate::propcheck::Rng;
+        let mut rng = Rng::new(97);
+        let n = 60_000; // longer than the grain so the region really splits
+        let w0 = rng.normal_vec(n);
+        let g0 = rng.normal_vec(n);
+        let h0 = rng.normal_vec(n);
+        let (lr, momentum, decay) = (0.01f32, 0.9f32, 0.0005f32);
+
+        // Unfused reference: the exact three-call sequence, serial.
+        let (mut w_ref, mut g_ref, mut h_ref) = (w0.clone(), g0.clone(), h0.clone());
+        par::with_threads(1, || {
+            let w_snapshot = w_ref.clone();
+            axpy(decay, &w_snapshot, &mut g_ref);
+            axpby(lr, &g_ref, momentum, &mut h_ref);
+            axpy(-1.0, &h_ref, &mut w_ref);
+        });
+
+        for t in [1usize, 2, 5, 16] {
+            let (mut w, mut g, mut h) = (w0.clone(), g0.clone(), h0.clone());
+            par::with_threads(t, || sgd_update_fused(&mut w, &mut g, &mut h, lr, momentum, decay));
+            assert_eq!(w_ref, w, "fused weights diverged at {t} threads");
+            assert_eq!(g_ref, g, "fused (regularized) grads diverged at {t} threads");
+            assert_eq!(h_ref, h, "fused history diverged at {t} threads");
+
+            // Flat view over three unequal segments of the same data must
+            // also match bitwise (worker ranges cross segment boundaries).
+            let (mut wf, mut gf, mut hf) = (w0.clone(), g0.clone(), h0.clone());
+            let cut1 = 17; // tiny head segment
+            let cut2 = n / 2 + 13;
+            par::with_threads(t, || {
+                let (wa, wrest) = wf.split_at_mut(cut1);
+                let (wb, wc) = wrest.split_at_mut(cut2 - cut1);
+                let (ga, grest) = gf.split_at_mut(cut1);
+                let (gb, gc) = grest.split_at_mut(cut2 - cut1);
+                let (ha, hrest) = hf.split_at_mut(cut1);
+                let (hb, hc) = hrest.split_at_mut(cut2 - cut1);
+                sgd_update_fused_flat(
+                    vec![(wa, ga, ha), (wb, gb, hb), (wc, gc, hc)],
+                    lr,
+                    momentum,
+                    decay,
+                );
+            });
+            assert_eq!(w_ref, wf, "flat weights diverged at {t} threads");
+            assert_eq!(g_ref, gf, "flat grads diverged at {t} threads");
+            assert_eq!(h_ref, hf, "flat history diverged at {t} threads");
+        }
     }
 
     #[test]

@@ -32,4 +32,4 @@ pub use pool::{
 pub use activations::{
     accuracy, leaky_relu, leaky_relu_bwd, softmax, softmax_xent, softmax_xent_bwd,
 };
-pub use math::{axpy, axpby, scal};
+pub use math::{axpy, axpby, scal, sgd_update_fused, sgd_update_fused_flat};

@@ -52,11 +52,26 @@
 //! back to the serial path (e.g. the per-sample GeMMs inside a
 //! batch-parallel convolution do not oversubscribe the machine).
 //!
+//! # Fused multi-stage regions
+//!
+//! With dispatch in the ~µs range the next overhead tier is the *pass
+//! structure*: chains of dependent small ops (the solver's three BLAS-1
+//! calls per blob, bias-add → activation) each paying their own region.
+//! [`parallel_regions`] / [`FusedRegion`]
+//! run such a chain as **one** dispatch: every stage iterates the same
+//! deterministic contiguous partition (worker `w` keeps its range across
+//! stages), with a poison-aware barrier between dependent stages — so
+//! fused results are bitwise-equal to the unfused sequence, panics still
+//! propagate, and nested fusion still serializes.  [`region_count`]
+//! exposes the per-thread region tally the `fusion` bench uses to show
+//! the 3→1 collapse.
+//!
 //! See `docs/PARALLEL_RUNTIME.md` for the architecture write-up, the full
 //! knob table, and a tuning walkthrough.
 
 use std::any::Any;
 use std::cell::Cell;
+use std::marker::PhantomData;
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -188,6 +203,36 @@ impl Tuning {
         }
         let by_grain = (n + self.grain - 1) / self.grain;
         self.threads.min(by_grain).max(1)
+    }
+}
+
+thread_local! {
+    /// Top-level parallel-region entries issued from this thread — the
+    /// fusion metric.  Every call into a public chunked entry point
+    /// ([`parallel_for`], [`parallel_chunks_mut`], …, [`parallel_regions`])
+    /// counts **once**, whether it dispatched to the pool or ran serial on
+    /// the caller; nested calls (which collapse to serial inside a worker)
+    /// do not count.  A fused multi-stage region is one entry regardless of
+    /// its stage count, which is exactly what the `fusion` bench records:
+    /// the solver's three BLAS-1 regions per blob become one.  Thread-local
+    /// (regions are always noted on the dispatching thread) so concurrent
+    /// callers never perturb each other's measurements.
+    static REGIONS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of top-level parallel-region entries issued from the calling
+/// thread so far: every public chunked entry point counts once per call
+/// (serial fallback included; nested calls excluded), and a fused
+/// multi-stage region counts once regardless of stage count.  Monotonic
+/// per thread; benches diff it around a step to count regions per step.
+pub fn region_count() -> u64 {
+    REGIONS.with(Cell::get)
+}
+
+/// Count one region entry unless we are nested inside a worker.
+fn note_region() {
+    if !in_parallel() {
+        REGIONS.with(|c| c.set(c.get() + 1));
     }
 }
 
@@ -391,6 +436,7 @@ type BlockSlot<'s, T> = Mutex<Option<(Range<usize>, &'s mut [T])>>;
 /// Run `f` once per worker over disjoint contiguous sub-ranges of `0..n`.
 /// Serial (caller thread, no dispatch) when one worker suffices.
 pub fn parallel_for(n: usize, tune: Tuning, f: impl Fn(Range<usize>) + Sync) {
+    note_region();
     let workers = tune.workers(n);
     if workers <= 1 {
         if n > 0 {
@@ -413,6 +459,7 @@ pub fn parallel_reduce<A: Send>(
     mut fold: impl FnMut(A, A) -> A,
     init: A,
 ) -> A {
+    note_region();
     let workers = tune.workers(n);
     if workers <= 1 {
         return if n == 0 { init } else { fold(init, map(0..n)) };
@@ -437,6 +484,7 @@ pub fn parallel_chunks_mut<T: Send>(
     tune: Tuning,
     f: impl Fn(Range<usize>, &mut [T]) + Sync,
 ) {
+    note_region();
     assert!(item_len > 0, "item_len must be positive");
     assert_eq!(data.len() % item_len, 0, "data not a whole number of items");
     let n = data.len() / item_len;
@@ -474,6 +522,7 @@ pub fn parallel_chunks2_mut<T: Send, U: Send>(
     tune: Tuning,
     f: impl Fn(Range<usize>, &mut [T], &mut [U]) + Sync,
 ) {
+    note_region();
     assert!(a_item > 0 && b_item > 0, "item lengths must be positive");
     assert_eq!(a.len() % a_item, 0, "a not a whole number of items");
     assert_eq!(b.len() % b_item, 0, "b not a whole number of items");
@@ -513,6 +562,7 @@ pub fn parallel_chunks_reduce<T: Send, A: Send>(
     tune: Tuning,
     f: impl Fn(Range<usize>, &mut [T]) -> A + Sync,
 ) -> Vec<A> {
+    note_region();
     assert!(item_len > 0, "item_len must be positive");
     assert_eq!(data.len() % item_len, 0, "data not a whole number of items");
     let n = data.len() / item_len;
@@ -543,10 +593,245 @@ pub fn parallel_chunks_reduce<T: Send, A: Send>(
         .collect()
 }
 
+// ---------------------------------------------------------------------------
+// Fused multi-stage regions: one dispatch, several dependent passes.
+// ---------------------------------------------------------------------------
+
+/// A mutable slice shared across the stages of one fused region.
+///
+/// Fused stages are `Fn` closures shared by every worker, so they cannot
+/// capture `&mut` slices directly; `FusedSlice` erases the borrow into a
+/// raw pointer that workers re-slice per stage.  The fused-region contract
+/// makes this sound: every stage of a region is called with the **same**
+/// deterministic contiguous partition, so worker `w` touches the same
+/// index range in every stage, and a barrier separates consecutive stages.
+pub struct FusedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is delegated to the unsafe `slice`/`slice_mut` methods,
+// whose contract (disjoint ranges across concurrent workers, cross-range
+// reads only across a stage barrier) is exactly the data-race freedom
+// argument; `T: Send + Sync` keeps the underlying element type shareable.
+unsafe impl<T: Send + Sync> Sync for FusedSlice<'_, T> {}
+// SAFETY: the view is just a pointer + length over data the borrow keeps
+// alive for 'a; sending it to a pool worker is no different from sending
+// the `&mut [T]` it was built from.
+unsafe impl<T: Send> Send for FusedSlice<'_, T> {}
+
+impl<'a, T> FusedSlice<'a, T> {
+    /// Wrap a mutable slice for use inside fused stages.  The borrow is
+    /// held for `'a`, so the caller cannot touch `data` until the region
+    /// (and this view) is gone.
+    pub fn new(data: &'a mut [T]) -> FusedSlice<'a, T> {
+        FusedSlice { ptr: data.as_mut_ptr(), len: data.len(), _marker: PhantomData }
+    }
+
+    /// Length of the underlying slice.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the underlying slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable view of `range`.
+    ///
+    /// # Safety
+    ///
+    /// Within one fused region, ranges passed to `slice_mut` by
+    /// *concurrently executing* stage closures must be disjoint — in
+    /// practice: derive the range from the stage's own partition range
+    /// (identically in every stage), never from another worker's.
+    /// `range` must lie within `0..self.len()`.
+    // The &self -> &mut window is the whole point of the type: disjoint
+    // per-worker windows of one buffer, guarded by the contract above.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, range: Range<usize>) -> &mut [T] {
+        debug_assert!(range.start <= range.end && range.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.len())
+    }
+
+    /// Shared view of `range`.
+    ///
+    /// # Safety
+    ///
+    /// No concurrently executing stage closure may hold a mutable view
+    /// overlapping `range`.  Reading another worker's range is sound only
+    /// when a stage barrier separates the write from this read (the
+    /// barrier establishes the happens-before edge).  `range` must lie
+    /// within `0..self.len()`.
+    pub unsafe fn slice(&self, range: Range<usize>) -> &[T] {
+        debug_assert!(range.start <= range.end && range.end <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(range.start), range.len())
+    }
+}
+
+/// Reusable barrier separating the stages of a fused region, poisoned by
+/// a panicking worker so the surviving workers wake and bail out instead
+/// of deadlocking at the next stage boundary.
+struct StageBarrier {
+    state: Mutex<StageBarrierState>,
+    cv: Condvar,
+}
+
+struct StageBarrierState {
+    arrived: usize,
+    total: usize,
+    generation: u64,
+    poisoned: bool,
+}
+
+impl StageBarrier {
+    fn new(total: usize) -> StageBarrier {
+        StageBarrier {
+            state: Mutex::new(StageBarrierState {
+                arrived: 0,
+                total,
+                generation: 0,
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until all workers arrive.  Returns `false` when the barrier
+    /// was poisoned (a sibling worker panicked): the caller must run no
+    /// further stages.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.poisoned {
+            return false;
+        }
+        st.arrived += 1;
+        if st.arrived == st.total {
+            st.arrived = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+            return true;
+        }
+        let gen = st.generation;
+        while st.generation == gen && !st.poisoned {
+            st = self.cv.wait(st).unwrap();
+        }
+        !st.poisoned
+    }
+
+    /// Mark the region failed and wake every waiter.
+    fn poison(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.poisoned = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Poisons the barrier if dropped during unwinding — armed around each
+/// worker's stage loop, disarmed (forgotten) on normal completion.
+struct PoisonOnUnwind<'b>(&'b StageBarrier);
+
+impl Drop for PoisonOnUnwind<'_> {
+    fn drop(&mut self) {
+        self.0.poison();
+    }
+}
+
+/// Run `stages` dependent passes over the same chunked index space in
+/// **one** pool dispatch: `f(stage, range)` is called for `stage` in
+/// `0..stages`, every stage over the same deterministic contiguous
+/// partition of `0..n` (worker `w` gets the same range in every stage).
+/// A barrier separates consecutive stages, so stage `s + 1` may read
+/// anything stage `s` wrote — including other workers' ranges.
+///
+/// This is the fusion seam the per-layer pass structure collapses into:
+/// where the unfused code issued one dispatch per BLAS call or per
+/// elementwise map, a fused region pays one dispatch for the whole chain
+/// and keeps results bitwise-equal to the unfused path (same partition,
+/// same per-element arithmetic — see `docs/PARALLEL_RUNTIME.md`).
+///
+/// Panics in any stage propagate to the caller; sibling workers parked at
+/// a stage boundary are woken through the poisoned barrier and skip their
+/// remaining stages.  Nested calls (from inside another region) run all
+/// stages sequentially on the calling worker.
+pub fn parallel_regions(
+    n: usize,
+    stages: usize,
+    tune: Tuning,
+    f: impl Fn(usize, Range<usize>) + Sync,
+) {
+    note_region();
+    if stages == 0 || n == 0 {
+        return;
+    }
+    let workers = tune.workers(n);
+    if workers <= 1 {
+        for s in 0..stages {
+            f(s, 0..n);
+        }
+        return;
+    }
+    let ranges = partition(n, workers);
+    let barrier = StageBarrier::new(ranges.len());
+    run_workers(ranges.len(), |w| {
+        let guard = PoisonOnUnwind(&barrier);
+        for s in 0..stages {
+            if s > 0 && !barrier.wait() {
+                break;
+            }
+            f(s, ranges[w].clone());
+        }
+        std::mem::forget(guard);
+    });
+}
+
+/// Builder over [`parallel_regions`] for call sites whose stages are
+/// heterogeneous closures: chain [`stage`](FusedRegion::stage) calls and
+/// [`run`](FusedRegion::run) the whole sequence as one dispatch.
+///
+/// ```
+/// # use phast_caffe::ops::par::{FusedRegion, FusedSlice, Tuning};
+/// let mut data = vec![1.0f32; 64];
+/// let view = FusedSlice::new(&mut data);
+/// FusedRegion::new(64, Tuning::new(1))
+///     .stage(|r| unsafe { view.slice_mut(r).iter_mut().for_each(|v| *v += 1.0) })
+///     .stage(|r| unsafe { view.slice_mut(r).iter_mut().for_each(|v| *v *= 2.0) })
+///     .run();
+/// drop(view);
+/// assert_eq!(data[0], 4.0);
+/// ```
+pub struct FusedRegion<'a> {
+    n: usize,
+    tune: Tuning,
+    stages: Vec<Box<dyn Fn(Range<usize>) + Sync + 'a>>,
+}
+
+impl<'a> FusedRegion<'a> {
+    /// A fused region over the index space `0..n` with the given tuning.
+    pub fn new(n: usize, tune: Tuning) -> FusedRegion<'a> {
+        FusedRegion { n, tune, stages: Vec::new() }
+    }
+
+    /// Append a stage; it runs after a barrier behind the previous stage.
+    pub fn stage(mut self, f: impl Fn(Range<usize>) + Sync + 'a) -> FusedRegion<'a> {
+        self.stages.push(Box::new(f));
+        self
+    }
+
+    /// Execute all stages in one dispatch (see [`parallel_regions`]).
+    pub fn run(self) {
+        let stages = self.stages;
+        parallel_regions(self.n, stages.len(), self.tune, |s, r| (stages[s])(r));
+    }
+}
+
 /// The pre-pool dispatch: spawn one scoped thread per worker range, every
 /// call.  Kept **only** as the overhead baseline for the pool-vs-spawn
 /// microbench in `benches/threads_scaling.rs`; no kernel calls this.
 pub fn parallel_for_spawn(n: usize, tune: Tuning, f: impl Fn(Range<usize>) + Sync) {
+    note_region();
     let workers = tune.workers(n);
     if workers <= 1 {
         if n > 0 {
@@ -751,6 +1036,120 @@ mod tests {
             });
         });
         assert_eq!(hits.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn fused_stages_see_prior_stage_writes_across_workers() {
+        // Stage 1 reads the mirror of what stage 0 wrote — including slots
+        // owned by *other* workers — so this only passes if the barrier
+        // actually separates the stages.
+        let n = 257;
+        let mut a = vec![0usize; n];
+        let mut b = vec![0usize; n];
+        {
+            let av = FusedSlice::new(&mut a);
+            let bv = FusedSlice::new(&mut b);
+            with_threads(5, || {
+                parallel_regions(n, 2, Tuning::new(1), |stage, r| unsafe {
+                    match stage {
+                        0 => {
+                            let ab = av.slice_mut(r.clone());
+                            for (slot, i) in ab.iter_mut().zip(r) {
+                                *slot = i * 3 + 1;
+                            }
+                        }
+                        _ => {
+                            let bb = bv.slice_mut(r.clone());
+                            for (slot, i) in bb.iter_mut().zip(r) {
+                                // cross-worker read: the mirrored index
+                                *slot = av.slice(n - 1 - i..n - i)[0];
+                            }
+                        }
+                    }
+                });
+            });
+        }
+        for (i, &slot) in b.iter().enumerate() {
+            assert_eq!(slot, (n - 1 - i) * 3 + 1, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn fused_region_builder_runs_stages_in_order() {
+        let mut data = vec![1.0f32; 100];
+        {
+            let view = FusedSlice::new(&mut data);
+            with_threads(4, || {
+                FusedRegion::new(100, Tuning::new(1))
+                    .stage(|r| unsafe {
+                        view.slice_mut(r).iter_mut().for_each(|v| *v += 2.0);
+                    })
+                    .stage(|r| unsafe {
+                        view.slice_mut(r).iter_mut().for_each(|v| *v *= 10.0);
+                    })
+                    .run();
+            });
+        }
+        assert!(data.iter().all(|&v| v == 30.0), "stage order violated");
+    }
+
+    #[test]
+    fn fused_region_counts_as_one_region() {
+        with_threads(4, || {
+            // Warm so the comparison below is not polluted by pool growth.
+            parallel_regions(64, 3, Tuning::new(1), |_, _| {});
+            let before = region_count();
+            parallel_regions(64, 3, Tuning::new(1), |_, _| {});
+            assert_eq!(region_count() - before, 1, "fused region must count once");
+            let before = region_count();
+            parallel_for(64, Tuning::new(1), |_| {});
+            parallel_for(64, Tuning::new(1), |_| {});
+            parallel_for(64, Tuning::new(1), |_| {});
+            assert_eq!(region_count() - before, 3, "unfused calls count per call");
+        });
+    }
+
+    #[test]
+    fn fused_mid_stage_panic_propagates_and_pool_survives() {
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            with_threads(4, || {
+                parallel_regions(16, 3, Tuning::new(1), |stage, r| {
+                    if stage == 1 && r.contains(&0) {
+                        panic!("mid-sequence stage panic");
+                    }
+                });
+            });
+        }));
+        assert!(boom.is_err(), "stage panic must reach the dispatcher");
+        // Workers parked at the stage barrier were woken via poisoning and
+        // the pool still works.
+        let hits = AtomicUsize::new(0);
+        with_threads(4, || {
+            parallel_regions(16, 2, Tuning::new(1), |_, r| {
+                hits.fetch_add(r.len(), Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn nested_fused_region_serializes() {
+        let stage_runs = AtomicUsize::new(0);
+        with_threads(4, || {
+            parallel_for(8, Tuning::new(1), |_| {
+                assert!(in_parallel());
+                // Nested fusion must collapse to the serial path: every
+                // stage runs exactly once over the full range, in order.
+                let order = Mutex::new(Vec::new());
+                parallel_regions(100, 3, Tuning::new(1), |stage, r| {
+                    assert_eq!(r, 0..100, "nested stage must see the full range");
+                    order.lock().unwrap().push(stage);
+                    stage_runs.fetch_add(1, Ordering::Relaxed);
+                });
+                assert_eq!(*order.lock().unwrap(), vec![0, 1, 2]);
+            });
+        });
+        assert_eq!(stage_runs.load(Ordering::Relaxed), 8 * 3);
     }
 
     #[test]

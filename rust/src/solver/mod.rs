@@ -6,11 +6,44 @@ mod snapshot;
 
 pub use snapshot::{load_snapshot, save_snapshot};
 
+use std::sync::OnceLock;
+
 use anyhow::Result;
 
 use crate::net::Net;
 use crate::ops;
 use crate::proto::SolverConfig;
+
+/// How the solver issues its SGD update regions — the `PHAST_FUSE_STEP`
+/// knob.  All three modes are **bitwise equal** (same per-element
+/// arithmetic, element-independent), so the knob only moves dispatch
+/// count, never the training trajectory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepFusion {
+    /// Three BLAS-1 dispatches per blob (`axpy`/`axpby`/`axpy`) — the
+    /// pre-fusion reference path (`PHAST_FUSE_STEP=0`).
+    Unfused,
+    /// One fused three-stage dispatch per blob (the default).
+    PerBlob,
+    /// One fused dispatch for the whole step over a flattened view of all
+    /// parameter blobs (`PHAST_FUSE_STEP=1`).
+    Flat,
+}
+
+/// `PHAST_FUSE_STEP`, parsed once: `0`/`off`/`unfused` → [`StepFusion::Unfused`],
+/// `1`/`all`/`step`/`flat` → [`StepFusion::Flat`], anything else (including
+/// unset or `blob`) → [`StepFusion::PerBlob`].
+pub fn step_fusion() -> StepFusion {
+    static MODE: OnceLock<StepFusion> = OnceLock::new();
+    *MODE.get_or_init(|| match std::env::var("PHAST_FUSE_STEP") {
+        Ok(v) => match v.trim() {
+            "0" | "off" | "unfused" => StepFusion::Unfused,
+            "1" | "all" | "step" | "flat" => StepFusion::Flat,
+            _ => StepFusion::PerBlob,
+        },
+        Err(_) => StepFusion::PerBlob,
+    })
+}
 
 /// Training history entry.
 #[derive(Clone, Copy, Debug)]
@@ -28,6 +61,9 @@ pub struct Solver {
     history: Vec<Vec<f32>>,
     iter: usize,
     pub log: Vec<IterStat>,
+    /// Per-solver override of the process-wide [`step_fusion`] mode
+    /// (benches and the fused-vs-unfused property tests set this).
+    step_fusion: Option<StepFusion>,
 }
 
 impl Solver {
@@ -37,7 +73,13 @@ impl Solver {
             .iter()
             .map(|p| vec![0.0f32; p.count()])
             .collect();
-        Solver { config, net, history, iter: 0, log: vec![] }
+        Solver { config, net, history, iter: 0, log: vec![], step_fusion: None }
+    }
+
+    /// Force this solver's SGD-update fusion mode, overriding the
+    /// process-wide `PHAST_FUSE_STEP` knob (all modes are bitwise equal).
+    pub fn set_step_fusion(&mut self, mode: StepFusion) {
+        self.step_fusion = Some(mode);
     }
 
     pub fn iter(&self) -> usize {
@@ -65,7 +107,8 @@ impl Solver {
         let lr = self.lr();
         let momentum = self.config.momentum;
         let decay = self.config.weight_decay;
-        apply_sgd_update(self.net.params_mut(), &mut self.history, lr, momentum, decay);
+        let mode = self.step_fusion.unwrap_or_else(step_fusion);
+        apply_sgd_update_mode(self.net.params_mut(), &mut self.history, lr, momentum, decay, mode);
     }
 
     /// Run `n` iterations, logging every `display` steps via `log::info`.
@@ -127,6 +170,11 @@ impl Solver {
 /// kernels are bitwise thread-count invariant, so training trajectories
 /// do not depend on `PHAST_NUM_THREADS`.  Note Caffe semantics: the blob
 /// `diff` holds the *regularized* gradient after this call.
+///
+/// Region structure follows the process-wide [`step_fusion`] mode
+/// (`PHAST_FUSE_STEP`): by default each blob's three BLAS-1 calls run as
+/// **one** fused three-stage dispatch ([`ops::sgd_update_fused`]); see
+/// [`apply_sgd_update_mode`] to force a mode explicitly.
 pub fn apply_sgd_update(
     params: Vec<&mut crate::tensor::Blob>,
     history: &mut [Vec<f32>],
@@ -134,13 +182,52 @@ pub fn apply_sgd_update(
     momentum: f32,
     decay: f32,
 ) {
-    for (p, hist) in params.into_iter().zip(history.iter_mut()) {
-        let (data, diff) = p.data_mut_and_diff_mut();
-        let w = data.as_mut_slice();
-        let g = diff.as_mut_slice();
-        ops::axpy(decay, w, g);
-        ops::axpby(lr, g, momentum, hist);
-        ops::axpy(-1.0, hist, w);
+    apply_sgd_update_mode(params, history, lr, momentum, decay, step_fusion());
+}
+
+/// [`apply_sgd_update`] with an explicit fusion mode.  All modes are
+/// bitwise equal at every thread count; they differ only in how many
+/// parallel regions the step issues (3 per blob / 1 per blob / 1 total).
+pub fn apply_sgd_update_mode(
+    params: Vec<&mut crate::tensor::Blob>,
+    history: &mut [Vec<f32>],
+    lr: f32,
+    momentum: f32,
+    decay: f32,
+    mode: StepFusion,
+) {
+    match mode {
+        StepFusion::Unfused => {
+            for (p, hist) in params.into_iter().zip(history.iter_mut()) {
+                let (data, diff) = p.data_mut_and_diff_mut();
+                let w = data.as_mut_slice();
+                let g = diff.as_mut_slice();
+                ops::axpy(decay, w, g);
+                ops::axpby(lr, g, momentum, hist);
+                ops::axpy(-1.0, hist, w);
+            }
+        }
+        StepFusion::PerBlob => {
+            for (p, hist) in params.into_iter().zip(history.iter_mut()) {
+                let (data, diff) = p.data_mut_and_diff_mut();
+                ops::sgd_update_fused(
+                    data.as_mut_slice(),
+                    diff.as_mut_slice(),
+                    hist,
+                    lr,
+                    momentum,
+                    decay,
+                );
+            }
+        }
+        StepFusion::Flat => {
+            let mut views: Vec<ops::math::SgdParamView<'_>> = Vec::with_capacity(params.len());
+            for (p, hist) in params.into_iter().zip(history.iter_mut()) {
+                let (data, diff) = p.data_mut_and_diff_mut();
+                views.push((data.as_mut_slice(), diff.as_mut_slice(), hist.as_mut_slice()));
+            }
+            ops::sgd_update_fused_flat(views, lr, momentum, decay);
+        }
     }
 }
 

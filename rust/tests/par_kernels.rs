@@ -11,7 +11,7 @@ use phast_caffe::net::Net;
 use phast_caffe::ops::{self, gemm::Trans, im2col::Conv2dGeom, par, pool::Pool2dGeom};
 use phast_caffe::propcheck::{assert_close, forall, Rng};
 use phast_caffe::proto::{presets, LayerConfig, LayerType, NetConfig, SolverConfig};
-use phast_caffe::solver::{apply_sgd_update_slices, Solver};
+use phast_caffe::solver::{apply_sgd_update_slices, Solver, StepFusion};
 use phast_caffe::tensor::{Shape, Tensor};
 
 /// Thread counts every property sweeps: serial, two workers, and more
@@ -387,6 +387,115 @@ fn sgd_update_matches_serial_reference_at_all_thread_counts() {
             });
         }
     });
+}
+
+/// The fused solver step (one three-stage region per blob, or one flat
+/// region for the whole step) must be **bitwise equal** to the unfused
+/// three-call reference at every tested thread count — the ISSUE 3
+/// acceptance property.  At a fixed thread count the whole trajectory
+/// (forward, backward, update) is deterministic, so weights and momentum
+/// history must match exactly across fusion modes.
+#[test]
+fn fused_solver_step_bitwise_equals_unfused_at_all_thread_counts() {
+    fn run(threads: usize, mode: StepFusion, steps: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        par::with_threads(threads, || {
+            let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+            cfg.display = 0;
+            let net =
+                Net::from_config(NetConfig::from_text(presets::LENET_MNIST).unwrap(), 5).unwrap();
+            let mut s = Solver::new(cfg, net);
+            s.set_step_fusion(mode);
+            let mut losses = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                losses.push(s.step().unwrap());
+            }
+            let hist: Vec<f32> = s.history().iter().flat_map(|h| h.iter().copied()).collect();
+            let weights: Vec<f32> = s
+                .net
+                .params()
+                .into_iter()
+                .flat_map(|p| p.data().as_slice().to_vec())
+                .collect();
+            (losses, weights, hist)
+        })
+    }
+
+    for t in SWEEP {
+        let (l_ref, w_ref, h_ref) = run(t, StepFusion::Unfused, 3);
+        for mode in [StepFusion::PerBlob, StepFusion::Flat] {
+            let (l, w, h) = run(t, mode, 3);
+            assert_eq!(l_ref, l, "losses diverged under {mode:?} at {t} threads");
+            assert_eq!(w_ref, w, "weights diverged under {mode:?} at {t} threads");
+            assert_eq!(h_ref, h, "history diverged under {mode:?} at {t} threads");
+        }
+    }
+}
+
+/// A panic thrown from a mid-sequence fused stage must reach the caller
+/// (workers parked at the stage barrier are woken by poisoning), and the
+/// pool must stay usable afterwards.
+#[test]
+fn fused_stage_panic_propagates_from_mid_sequence() {
+    let boom = std::panic::catch_unwind(|| {
+        par::with_threads(4, || {
+            par::parallel_regions(32, 3, par::Tuning::new(1), |stage, r| {
+                if stage == 1 && r.contains(&17) {
+                    panic!("stage 1 failed");
+                }
+            });
+        });
+    });
+    assert!(boom.is_err(), "mid-sequence stage panic must propagate");
+    let hits = std::sync::atomic::AtomicUsize::new(0);
+    par::with_threads(4, || {
+        par::parallel_regions(32, 2, par::Tuning::new(1), |_, r| {
+            hits.fetch_add(r.len(), std::sync::atomic::Ordering::Relaxed);
+        });
+    });
+    assert_eq!(hits.load(std::sync::atomic::Ordering::Relaxed), 64, "pool unusable after panic");
+}
+
+/// Fused regions issued from inside another parallel region must collapse
+/// to the serial path: all stages run, in order, over the full index
+/// space, on the calling worker.
+#[test]
+fn nested_fusion_serializes() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let total_stage_runs = AtomicUsize::new(0);
+    par::with_threads(4, || {
+        par::parallel_for(8, par::Tuning::new(1), |_| {
+            assert!(par::in_parallel());
+            let order = std::sync::Mutex::new(Vec::new());
+            par::parallel_regions(50, 3, par::Tuning::new(1), |stage, r| {
+                assert_eq!(r, 0..50, "nested fused stage must cover the full range");
+                order.lock().unwrap().push(stage);
+                total_stage_runs.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(*order.lock().unwrap(), vec![0, 1, 2]);
+        });
+    });
+    assert_eq!(total_stage_runs.load(Ordering::Relaxed), 8 * 3);
+}
+
+/// Layer fusion (bias-add → ReLU in the producer's region) must leave the
+/// whole forward bitwise unchanged at every thread count.
+#[test]
+fn layer_fusion_invariant_to_thread_count() {
+    let want: Vec<f32> = par::with_threads(1, || {
+        let mut net = preset_net("mnist", 9).unwrap();
+        net.set_layer_fusion(false);
+        net.forward().unwrap();
+        net.blob("relu1").unwrap().data().as_slice().to_vec()
+    });
+    for t in SWEEP {
+        let got: Vec<f32> = par::with_threads(t, || {
+            let mut net = preset_net("mnist", 9).unwrap();
+            net.set_layer_fusion(true);
+            net.forward().unwrap();
+            net.blob("relu1").unwrap().data().as_slice().to_vec()
+        });
+        assert_eq!(want, got, "fused relu1 diverged at {t} threads");
+    }
 }
 
 /// Full solver steps are bitwise repeatable at a fixed thread count and

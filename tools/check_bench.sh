@@ -1,0 +1,132 @@
+#!/usr/bin/env bash
+# CI perf-regression gate: compare the merged bench record
+# (rust/BENCH_threads.json, written by `cargo bench --bench
+# threads_scaling` and `cargo bench --bench fusion`) against the
+# checked-in BENCH_baseline.json — and FAIL on regression instead of only
+# uploading artifacts.
+#
+# Gate design (see BENCH_baseline.json):
+#   * Region counts are deterministic (they depend only on the pass
+#     structure, never on machine speed), so they are gated hard: the
+#     fused solver step must keep its 3-to-1 dispatch collapse, and layer
+#     fusion must keep removing regions from the forward sweep.
+#   * Wall-clock-derived metrics are gated with a generous tolerance
+#     (baseline "tolerance", 1.5x) and, where possible, as within-run
+#     ratios (fused vs unfused on the same machine) so CI-runner speed
+#     differences cannot trip them.
+#
+# Run from the repo root: bash tools/check_bench.sh
+set -u
+cd "$(dirname "$0")/.."
+
+CURRENT=rust/BENCH_threads.json
+BASELINE=BENCH_baseline.json
+
+for f in "$CURRENT" "$BASELINE"; do
+  if [ ! -f "$f" ]; then
+    echo "MISSING FILE: $f (run both benches first: cargo bench --bench threads_scaling && cargo bench --bench fusion)"
+    exit 1
+  fi
+done
+
+if ! command -v python3 >/dev/null 2>&1; then
+  echo "WARNING: python3 not available; skipping bench gate"
+  exit 0
+fi
+
+python3 - "$CURRENT" "$BASELINE" <<'PY'
+import json
+import sys
+
+current_path, baseline_path = sys.argv[1], sys.argv[2]
+with open(current_path) as f:
+    cur = json.load(f)
+with open(baseline_path) as f:
+    base = json.load(f)
+
+tol = float(base.get("tolerance", 1.5))
+failures = []
+
+
+def get(record, section, key, label):
+    try:
+        return record[section][key]
+    except KeyError:
+        failures.append(f"{label} missing {section}.{key}")
+        return None
+
+
+# --- deterministic region-count gates (exact) ---------------------------
+for key in ("regions_unfused", "regions_fused_per_blob", "regions_flat"):
+    c = get(cur, "fused_sgd_step", key, "current")
+    b = get(base, "fused_sgd_step", key, "baseline")
+    if c is None or b is None:
+        continue
+    # unfused count dropping is fine; fused counts must not grow
+    if key != "regions_unfused" and c > b:
+        failures.append(
+            f"fused_sgd_step.{key} regressed: {c} regions vs baseline {b}"
+        )
+
+ratio = get(cur, "fused_sgd_step", "region_ratio", "current")
+if ratio is not None:
+    if ratio < 1.5:
+        failures.append(
+            f"fused_sgd_step.region_ratio {ratio} < 1.5: the fused step no "
+            "longer collapses dispatches"
+        )
+    b = get(base, "fused_sgd_step", "region_ratio", "baseline")
+    if b is not None and ratio < b / tol:
+        failures.append(
+            f"fused_sgd_step.region_ratio {ratio} below baseline {b}/{tol}"
+        )
+
+plain = get(cur, "fused_layers", "regions_plain", "current")
+fused = get(cur, "fused_layers", "regions_fused", "current")
+reduction = get(base, "fused_layers", "fused_region_reduction", "baseline")
+if None not in (plain, fused, reduction):
+    if plain - fused < reduction:
+        failures.append(
+            f"fused_layers: fusion removes {plain - fused} regions per "
+            f"forward (plain {plain}, fused {fused}); baseline requires >= {reduction}"
+        )
+
+# --- timing gates (within-run ratios, 1.5x tolerance) -------------------
+uf = get(cur, "fused_sgd_step", "unfused_us_per_step", "current")
+fu = get(cur, "fused_sgd_step", "fused_us_per_step", "current")
+if None not in (uf, fu) and fu > uf * tol:
+    failures.append(
+        f"fused_sgd_step slower than unfused beyond tolerance: "
+        f"fused {fu} us vs unfused {uf} us (x{tol})"
+    )
+
+sop = get(cur, "small_op_dispatch", "spawn_over_pool", "current")
+sop_base = get(base, "small_op_dispatch", "spawn_over_pool", "baseline")
+if None not in (sop, sop_base) and sop < sop_base / tol:
+    failures.append(
+        f"small_op_dispatch.spawn_over_pool {sop} below baseline "
+        f"{sop_base}/{tol}: pool dispatch overhead regressed"
+    )
+
+ms = get(cur, "scaling", "max_speedup", "current")
+ms_base = get(base, "scaling", "max_speedup", "baseline")
+if None not in (ms, ms_base) and ms < ms_base / tol:
+    failures.append(
+        f"scaling.max_speedup {ms} below baseline {ms_base}/{tol}"
+    )
+
+if failures:
+    print("bench gate FAILED:")
+    for f in failures:
+        print(f"  - {f}")
+    sys.exit(1)
+
+print("bench gate OK:")
+print(f"  fused_sgd_step: {cur['fused_sgd_step']['regions_unfused']} -> "
+      f"{cur['fused_sgd_step']['regions_fused_per_blob']} regions/step "
+      f"(ratio {cur['fused_sgd_step']['region_ratio']}), flat "
+      f"{cur['fused_sgd_step']['regions_flat']}")
+print(f"  fused_layers: {plain} -> {fused} regions/forward")
+print(f"  small_op_dispatch.spawn_over_pool: {sop}")
+print(f"  scaling.max_speedup: {ms}")
+PY

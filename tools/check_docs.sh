@@ -24,12 +24,14 @@ done
 [ "$fail" -ne 0 ] && exit 1
 
 # --- 1 & 2: knob names must match between docs and code -------------------
-# The tuning surface is PHAST_NUM_THREADS + the per-kernel *_GRAIN knobs;
-# other PHAST_* env vars (e.g. PHAST_ARTIFACTS, the artifact directory)
-# are out of scope.  Prose placeholders like PHAST_*_GRAIN don't match
-# the character class, so they are ignored naturally.
-docs_knobs=$(grep -ohE 'PHAST_([A-Z0-9]+_)*(GRAIN|THREADS)' README.md docs/PARALLEL_RUNTIME.md | sort -u)
-code_knobs=$(grep -rhoE '"PHAST_([A-Z0-9]+_)*(GRAIN|THREADS)"' rust/src | tr -d '"' | sort -u)
+# The tuning surface is PHAST_NUM_THREADS + the per-kernel *_GRAIN knobs +
+# the PHAST_FUSE_* fusion switches; other PHAST_* env vars (e.g.
+# PHAST_ARTIFACTS, the artifact directory) are out of scope.  Prose
+# placeholders like PHAST_*_GRAIN don't match the character class, so they
+# are ignored naturally.
+knob_re='PHAST_(([A-Z0-9]+_)*(GRAIN|THREADS)|FUSE_[A-Z0-9]+)'
+docs_knobs=$(grep -ohE "$knob_re" README.md docs/PARALLEL_RUNTIME.md | sort -u)
+code_knobs=$(grep -rhoE "\"$knob_re\"" rust/src | tr -d '"' | sort -u)
 
 for k in $docs_knobs; do
   if ! echo "$code_knobs" | grep -qx "$k"; then
