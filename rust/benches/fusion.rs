@@ -92,6 +92,40 @@ fn main() -> anyhow::Result<()> {
     println!("  cifar forward regions: plain {fwd_plain_regions}, fused {fwd_fused_regions}");
     println!("  cifar forward time:    plain {fwd_plain_ms:.2} ms, fused {fwd_fused_ms:.2} ms");
 
+    // Stage-barrier cost — the ROADMAP's `stage_unsynced` measure-first
+    // item: a trivial 3-stage fused region vs a trivial 1-stage region at
+    // the same width differ by exactly two stage-barrier crossings (the
+    // pool dispatch itself is identical), so half the difference is the
+    // per-stage barrier price a `stage_unsynced` variant could recover on
+    // pointwise chains like the SGD stages.
+    let workers = hw.max(2);
+    let bar_tune = par::Tuning { threads: workers, grain: 1 };
+    let sink = std::sync::atomic::AtomicUsize::new(0);
+    let body = |r: std::ops::Range<usize>| {
+        sink.fetch_add(r.end - r.start, std::sync::atomic::Ordering::Relaxed);
+    };
+    for _ in 0..16 {
+        par::parallel_for(workers, bar_tune, body);
+        par::parallel_regions(workers, 3, bar_tune, |_, r| body(r));
+    }
+    let bar_iters = 2000usize;
+    let t0 = Instant::now();
+    for _ in 0..bar_iters {
+        par::parallel_for(workers, bar_tune, body);
+    }
+    let single_us = t0.elapsed().as_secs_f64() * 1e6 / bar_iters as f64;
+    let t0 = Instant::now();
+    for _ in 0..bar_iters {
+        par::parallel_regions(workers, 3, bar_tune, |_, r| body(r));
+    }
+    let three_us = t0.elapsed().as_secs_f64() * 1e6 / bar_iters as f64;
+    std::hint::black_box(sink.load(std::sync::atomic::Ordering::Relaxed));
+    let barrier_us = ((three_us - single_us) / 2.0).max(0.0);
+    println!(
+        "  stage barrier ({workers} workers): 1-stage {single_us:.2} us, 3-stage {three_us:.2} us \
+         -> ~{barrier_us:.2} us per barrier"
+    );
+
     let mut sgd = String::from("{\n");
     let _ = writeln!(sgd, "    \"param_blobs\": {nblobs},");
     let _ = writeln!(sgd, "    \"iters\": {iters},");
@@ -113,10 +147,24 @@ fn main() -> anyhow::Result<()> {
     let _ = writeln!(layers, "    \"fused_ms_per_fwd\": {fwd_fused_ms:.3}");
     layers.push_str("  }");
 
+    let mut barrier = String::from("{\n");
+    let _ = writeln!(barrier, "    \"workers\": {workers},");
+    let _ = writeln!(barrier, "    \"iters\": {bar_iters},");
+    let _ = writeln!(barrier, "    \"single_stage_us\": {single_us:.3},");
+    let _ = writeln!(barrier, "    \"three_stage_us\": {three_us:.3},");
+    let _ = writeln!(barrier, "    \"barrier_us_per_stage\": {barrier_us:.3},");
+    let _ = writeln!(
+        barrier,
+        "    \"note\": \"stage_unsynced candidate (ROADMAP measure-first item): a barrier-free \
+         variant for pointwise stage chains would save ~2x barrier_us_per_stage per fused 3-stage \
+         region; act only if this rivals the pool's per-dispatch cost\""
+    );
+    barrier.push_str("  }");
+
     bench_json::merge_entries(
         std::path::Path::new("BENCH_threads.json"),
-        &[("fused_sgd_step", sgd), ("fused_layers", layers)],
+        &[("fused_sgd_step", sgd), ("fused_layers", layers), ("stage_barrier", barrier)],
     )?;
-    println!("\nmerged fused_sgd_step + fused_layers into BENCH_threads.json");
+    println!("\nmerged fused_sgd_step + fused_layers + stage_barrier into BENCH_threads.json");
     Ok(())
 }

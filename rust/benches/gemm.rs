@@ -1,0 +1,148 @@
+//! Bench: the packed register-tiled GeMM engine vs the pre-packing
+//! baseline (`gemm_unpacked`) on the Table-2-shaped products — LeNet's
+//! conv and ip dimensions, each with the transpose pattern its layer
+//! actually issues — plus the persistent-packing repack-rate metric.
+//!
+//! Entries merge-updated into `BENCH_threads.json` (keyed top-level
+//! entries via `metrics::bench_json`, coexisting with `threads_scaling`
+//! and `fusion`; `tools/check_bench.sh` gates the result against
+//! `BENCH_baseline.json`):
+//!
+//! * **`gemm_packed`** — per-shape GFLOP/s packed vs unpacked at 4
+//!   threads, the `packed_over_naive` ratio on the ip1 forward shape
+//!   (64×500×800, the hottest weight-transposing GeMM — gated `>= 1.0`),
+//!   and `packs_per_forward`: `PackedMat` repacks per LeNet forward with
+//!   frozen weights, which must be exactly **0** after the first forward
+//!   (gated exactly — the whole point of the version-stamped caches).
+//!
+//! `cargo bench --bench gemm`
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use phast_caffe::experiments::preset_net;
+use phast_caffe::metrics::bench_json;
+use phast_caffe::ops::{self, gemm::Trans, par};
+use phast_caffe::propcheck::Rng;
+
+/// Thread count for the GFLOP/s comparison (the acceptance shape is
+/// pinned at 4; oversubscribed runners still measure both engines under
+/// identical conditions, so the ratio stays meaningful).
+const THREADS: usize = 4;
+
+struct ShapeSpec {
+    name: &'static str,
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+}
+
+/// Mean GFLOP/s of `f`, whose one call performs `flops2` floating-point
+/// operations (2·m·n·k for a GeMM).  One warm call precedes timing.
+fn measure(mut f: impl FnMut(), flops2: f64, iters: usize) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per_call = t0.elapsed().as_secs_f64() / iters as f64;
+    flops2 / per_call / 1e9
+}
+
+fn main() -> anyhow::Result<()> {
+    // LeNet-MNIST (batch 64) GeMM shapes with their layer-true transpose
+    // patterns: ip forwards pay Trans::Yes on W (the per-iteration
+    // transpose the packed caches remove), conv samples are No/No, the
+    // ip1 weight gradient is Yes/No.
+    let shapes = [
+        ShapeSpec { name: "conv1_sample", ta: Trans::No, tb: Trans::No, m: 20, n: 576, k: 25 },
+        ShapeSpec { name: "conv2_sample", ta: Trans::No, tb: Trans::No, m: 50, n: 64, k: 500 },
+        ShapeSpec { name: "ip1_fwd", ta: Trans::No, tb: Trans::Yes, m: 64, n: 500, k: 800 },
+        ShapeSpec { name: "ip1_dw", ta: Trans::Yes, tb: Trans::No, m: 500, n: 800, k: 64 },
+        ShapeSpec { name: "ip2_fwd", ta: Trans::No, tb: Trans::Yes, m: 64, n: 10, k: 500 },
+    ];
+
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("gemm: packed engine vs unpacked baseline, {THREADS} threads ({hw} hw threads)");
+    println!("{:>14} {:>13} {:>15} {:>9}", "shape", "packed GF/s", "unpacked GF/s", "speedup");
+
+    let mut shape_rows = String::new();
+    let mut packed_over_naive = 0.0f64;
+    for (si, spec) in shapes.iter().enumerate() {
+        let mut rng = Rng::new(0x9e37 + si as u64);
+        let a = rng.normal_vec(spec.m * spec.k);
+        let b = rng.normal_vec(spec.k * spec.n);
+        let mut c = vec![0.0f32; spec.m * spec.n];
+        let flops2 = 2.0 * (spec.m * spec.n * spec.k) as f64;
+        let iters = ((2e8 / flops2) as usize).clamp(4, 400);
+
+        let packed = par::with_threads(THREADS, || {
+            measure(
+                || ops::gemm(spec.ta, spec.tb, spec.m, spec.n, spec.k, 1.0, &a, &b, 0.0, &mut c),
+                flops2,
+                iters,
+            )
+        });
+        let unpacked = par::with_threads(THREADS, || {
+            measure(
+                || {
+                    ops::gemm::gemm_unpacked(
+                        spec.ta, spec.tb, spec.m, spec.n, spec.k, 1.0, &a, &b, 0.0, &mut c,
+                    )
+                },
+                flops2,
+                iters,
+            )
+        });
+        std::hint::black_box(&c);
+        let speedup = packed / unpacked;
+        if spec.name == "ip1_fwd" {
+            packed_over_naive = speedup;
+        }
+        println!("{:>14} {packed:>13.2} {unpacked:>15.2} {speedup:>8.2}x", spec.name);
+        let comma = if si + 1 < shapes.len() { "," } else { "" };
+        let _ = writeln!(
+            shape_rows,
+            "      {{\"name\": \"{}\", \"m\": {}, \"n\": {}, \"k\": {}, \
+             \"packed_gflops\": {packed:.2}, \"unpacked_gflops\": {unpacked:.2}, \
+             \"speedup\": {speedup:.3}}}{comma}",
+            spec.name, spec.m, spec.n, spec.k
+        );
+    }
+
+    // Repack rate: after one cold forward (which packs every cached
+    // weight orientation once), further forwards with frozen weights
+    // must never repack — `packs_per_forward == 0` is the persistent-
+    // packing contract the baseline pins exactly.
+    let mut net = preset_net("mnist", 23)?;
+    net.forward()?;
+    let warm_packs = ops::gemm::repack_count();
+    let reps = 5u64;
+    for _ in 0..reps {
+        net.forward()?;
+    }
+    let packs_per_forward = (ops::gemm::repack_count() - warm_packs) as f64 / reps as f64;
+    println!(
+        "\npersistent packing: {warm_packs} cold pack(s), {packs_per_forward:.1} repacks/forward \
+         over {reps} frozen-weight forwards"
+    );
+
+    let mut entry = String::from("{\n");
+    let _ = writeln!(entry, "    \"threads\": {THREADS},");
+    let _ = writeln!(entry, "    \"shapes\": [");
+    entry.push_str(&shape_rows);
+    let _ = writeln!(entry, "    ],");
+    let _ = writeln!(entry, "    \"packed_over_naive\": {packed_over_naive:.3},");
+    let _ = writeln!(entry, "    \"cold_packs\": {warm_packs},");
+    let _ = writeln!(entry, "    \"packs_per_forward\": {packs_per_forward:.1}");
+    entry.push_str("  }");
+
+    bench_json::merge_entries(
+        std::path::Path::new("BENCH_threads.json"),
+        &[("gemm_packed", entry)],
+    )?;
+    println!("merged gemm_packed into BENCH_threads.json");
+    Ok(())
+}

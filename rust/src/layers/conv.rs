@@ -15,11 +15,21 @@
 //! (`Net::from_config`), `forward_fused_relu` computes the activation
 //! inside the same batch-parallel region — conv + bias + ReLU in one
 //! dispatch, bitwise-equal to the separate passes.
+//!
+//! The weight matrix is the GeMM **A** operand of every per-sample
+//! product, so the layer keeps it pre-packed in both orientations — W
+//! panels for the forward `W · cols` and Wᵀ panels for the backward
+//! `Wᵀ · dY` — as [`ops::PackedMat`] caches keyed by the blob's
+//! `data_version()`.  The packs are refreshed once on the dispatching
+//! thread before each batch-parallel region and shared read-only by
+//! every worker, replacing the old engine's per-sample transpose of W in
+//! backward (two transposed packs per sample) with one repack per solver
+//! step.
 
 use anyhow::{bail, Result};
 
 use crate::ops::im2col::Conv2dGeom;
-use crate::ops::{self, gemm::Trans, par};
+use crate::ops::{self, gemm::Trans, par, PackSide, PackedMat};
 use crate::propcheck::Rng;
 use crate::proto::LayerConfig;
 use crate::tensor::{Blob, Shape, Tensor};
@@ -41,6 +51,10 @@ pub struct ConvLayer {
     /// Persistent column scratch (C*kh*kw, OH*OW) for the single-worker
     /// paths (Caffe's `col_buffer_`); parallel workers allocate their own.
     cols: Vec<f32>,
+    /// W packed as GeMM A panels (forward), stamped by the weight blob.
+    packed_w: PackedMat,
+    /// Wᵀ packed as GeMM A panels (backward dcols), stamped likewise.
+    packed_wt: PackedMat,
     seed: u64,
 }
 
@@ -63,6 +77,8 @@ impl ConvLayer {
             oh: 0,
             ow: 0,
             cols: vec![],
+            packed_w: PackedMat::new(PackSide::A),
+            packed_wt: PackedMat::new(PackSide::A),
             seed,
         })
     }
@@ -89,9 +105,14 @@ impl ConvLayer {
     /// is identical to `forward` followed by `ops::leaky_relu`, so both
     /// paths are bitwise equal.
     fn forward_body(&mut self, x: &Tensor, top: &mut [f32], fused: Option<(&mut [f32], f32)>) {
+        // Refresh the shared W pack once, on this thread, before any
+        // dispatch; every per-sample GeMM below reads it in place.
+        let (cout, ckk) = (self.cfg.num_output, self.ckk());
+        let wv = self.params[0].data_version();
+        self.packed_w.ensure(self.params[0].data().as_slice(), Trans::No, cout, ckk, wv);
         let ctx = SampleCtx {
             xs: x.as_slice(),
-            wmat: self.params[0].data().as_slice(),
+            wpack: &self.packed_w,
             bias: self.params[1].data().as_slice(),
             cin: self.cin,
             h: self.h,
@@ -158,7 +179,9 @@ impl ConvLayer {
 /// with properly universal lifetimes instead of a closure.
 struct SampleCtx<'a> {
     xs: &'a [f32],
-    wmat: &'a [f32],
+    /// The shared pre-packed W panels (GeMM A operand), refreshed by the
+    /// dispatching thread before the region.
+    wpack: &'a PackedMat,
     bias: &'a [f32],
     cin: usize,
     h: usize,
@@ -182,7 +205,7 @@ fn run_sample(
 ) {
     let x = &ctx.xs[s * ctx.sample..(s + 1) * ctx.sample];
     ops::im2col(x, ctx.cin, ctx.h, ctx.w, ctx.g, cols);
-    ops::gemm(Trans::No, Trans::No, ctx.cout, ctx.ohw, ctx.ckk, 1.0, ctx.wmat, cols, 0.0, out);
+    ops::gemm_packed_a(ctx.cout, ctx.ohw, ctx.ckk, 1.0, ctx.wpack, cols, Trans::No, 0.0, out);
     for (c, b) in ctx.bias.iter().enumerate() {
         for v in &mut out[c * ctx.ohw..(c + 1) * ctx.ohw] {
             *v += b;
@@ -266,11 +289,15 @@ impl Layer for ConvLayer {
         let sample = self.cin * self.h * self.w;
         let (cin, h, w, g) = (self.cin, self.h, self.w, self.geom());
 
-        // Split borrows: weight *data* is read by every worker while the
-        // weight *diff* waits for the post-reduction merge — no clone.
+        // Refresh the shared Wᵀ panel cache on this thread (a no-op while
+        // the solver hasn't moved the weights), then borrow only the
+        // diffs — `diff_mut` leaves the data stamp alone, so gradient
+        // accumulation never invalidates the packs.
+        let wv = self.params[0].data_version();
+        self.packed_wt.ensure(self.params[0].data().as_slice(), Trans::Yes, ckk, cout, wv);
+        let wtp = &self.packed_wt;
         let (wblob, bblob) = self.params.split_at_mut(1);
-        let (wdata, wdiff) = wblob[0].data_and_diff_mut();
-        let wmat = wdata.as_slice();
+        let wdiff = wblob[0].diff_mut();
         let dys_all = dy.as_slice();
         let xs = x.as_slice();
         let dx = bottom_diffs[0].as_mut_slice();
@@ -292,7 +319,7 @@ impl Layer for ConvLayer {
                 for c in 0..cout {
                     db[c] += dys[c * ohw..(c + 1) * ohw].iter().sum::<f32>();
                 }
-                ops::gemm(Trans::Yes, Trans::No, ckk, ohw, cout, 1.0, wmat, dys, 0.0, &mut dcols);
+                ops::gemm_packed_a(ckk, ohw, cout, 1.0, wtp, dys, Trans::No, 0.0, &mut dcols);
                 ops::col2im(&dcols, cin, h, w, g, &mut dx[s * sample..(s + 1) * sample]);
             }
             return Ok(());
@@ -317,8 +344,8 @@ impl Layer for ConvLayer {
                 for c in 0..cout {
                     db_loc[c] += dys[c * ohw..(c + 1) * ohw].iter().sum::<f32>();
                 }
-                // dcols = W^T (CKK, Cout) * dY_s (Cout, OHW)
-                ops::gemm(Trans::Yes, Trans::No, ckk, ohw, cout, 1.0, wmat, dys, 0.0, &mut dcols);
+                // dcols = W^T (CKK, Cout) * dY_s (Cout, OHW), Wᵀ pre-packed
+                ops::gemm_packed_a(ckk, ohw, cout, 1.0, wtp, dys, Trans::No, 0.0, &mut dcols);
                 ops::col2im(
                     &dcols,
                     cin,

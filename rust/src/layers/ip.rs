@@ -3,10 +3,18 @@
 //! Forward: Y = X * W^T + 1·b^T (the `matrixPlusVectorRows` functor of
 //! Listing 1.2 is the bias loop in `forward`).  Backward: three GeMMs, the
 //! Caffe everything-is-a-GeMM trick.
+//!
+//! The weight matrix is constant across iterations (the solver moves it
+//! once per step), so the layer keeps it **pre-packed** for the GeMM
+//! engine in two orientations — Wᵀ panels for the forward `X · Wᵀ` and W
+//! panels for the backward `dY · W` — each cache keyed by the blob's
+//! `data_version()` stamp ([`ops::PackedMat`]).  The old engine
+//! re-transposed the full W on *every* forward; now a repack happens only
+//! when the stamp moves, i.e. once per solver step.
 
 use anyhow::{bail, Result};
 
-use crate::ops::{self, gemm::Trans, par};
+use crate::ops::{self, gemm::Trans, par, PackSide, PackedMat};
 use crate::propcheck::Rng;
 use crate::proto::LayerConfig;
 use crate::tensor::{Blob, Shape, Tensor};
@@ -26,11 +34,22 @@ pub struct IpLayer {
     params: Vec<Blob>, // [weight (Nout, K), bias (Nout,)]
     k: usize,
     seed: u64,
+    /// Wᵀ packed as GeMM B panels (forward), stamped by the weight blob.
+    packed_wt: PackedMat,
+    /// W packed as GeMM B panels (backward dX), stamped likewise.
+    packed_w: PackedMat,
 }
 
 impl IpLayer {
     pub fn new(cfg: LayerConfig, seed: u64) -> Self {
-        IpLayer { cfg, params: vec![], k: 0, seed }
+        IpLayer {
+            cfg,
+            params: vec![],
+            k: 0,
+            seed,
+            packed_wt: PackedMat::new(PackSide::B),
+            packed_w: PackedMat::new(PackSide::B),
+        }
     }
 }
 
@@ -61,11 +80,13 @@ impl Layer for IpLayer {
         let x = bottoms[0];
         let n = x.shape().num();
         let nout = self.cfg.num_output;
-        let w = self.params[0].data().as_slice();
+        // Repack Wᵀ only when the weight blob's stamp moved (solver step).
+        let wv = self.params[0].data_version();
+        self.packed_wt.ensure(self.params[0].data().as_slice(), Trans::Yes, nout, self.k, wv);
         let b = self.params[1].data().as_slice();
         let y = tops[0].as_mut_slice();
-        // Y = X (n, k) * W^T (k, nout)
-        ops::gemm(Trans::No, Trans::Yes, n, nout, self.k, 1.0, x.as_slice(), w, 0.0, y);
+        // Y = X (n, k) * W^T (k, nout), W^T pre-packed
+        ops::gemm_packed_b(n, nout, self.k, 1.0, x.as_slice(), Trans::No, &self.packed_wt, 0.0, y);
         // matrixPlusVectorRows
         for r in 0..n {
             for (yv, bv) in y[r * nout..(r + 1) * nout].iter_mut().zip(b) {
@@ -85,10 +106,11 @@ impl Layer for IpLayer {
         let x = bottoms[0];
         let n = x.shape().num();
         let nout = self.cfg.num_output;
-        let w = self.params[0].data().as_slice();
+        let wv = self.params[0].data_version();
+        self.packed_wt.ensure(self.params[0].data().as_slice(), Trans::Yes, nout, self.k, wv);
         let b = self.params[1].data().as_slice();
         let y = tops[0].as_mut_slice();
-        ops::gemm(Trans::No, Trans::Yes, n, nout, self.k, 1.0, x.as_slice(), w, 0.0, y);
+        ops::gemm_packed_b(n, nout, self.k, 1.0, x.as_slice(), Trans::No, &self.packed_wt, 0.0, y);
         // matrixPlusVectorRows fused with the following ReLU: one region
         // writes both the pre-activation top and the activation, instead
         // of a serial bias sweep plus a separate elementwise region.  The
@@ -126,12 +148,13 @@ impl Layer for IpLayer {
         let x = bottom_datas[0];
         let n = x.shape().num();
         let nout = self.cfg.num_output;
-        // Split borrows: weight data read-only next to its mutable diff —
-        // no per-call clone of the weight matrix.
+        // Keep the W panel cache current before borrowing the diffs; note
+        // `diff_mut` below deliberately leaves the data stamp alone, so
+        // gradient accumulation never invalidates the pack.
+        let wv = self.params[0].data_version();
+        self.packed_w.ensure(self.params[0].data().as_slice(), Trans::No, self.k, nout, wv);
         let (wblob, bblob) = self.params.split_at_mut(1);
-        let (wdata, wdiff) = wblob[0].data_and_diff_mut();
-        let w = wdata.as_slice();
-        let dw = wdiff.as_mut_slice();
+        let dw = wblob[0].diff_mut().as_mut_slice();
         let db = bblob[0].diff_mut().as_mut_slice();
         // dW += dY^T (nout, n) * X (n, k)  — parallel inside gemm
         ops::gemm(Trans::Yes, Trans::No, nout, self.k, n, 1.0, dy.as_slice(), x.as_slice(), 1.0, dw);
@@ -141,16 +164,15 @@ impl Layer for IpLayer {
                 *dbv += dyv;
             }
         }
-        // dX = dY (n, nout) * W (nout, k)  — parallel inside gemm
-        ops::gemm(
-            Trans::No,
-            Trans::No,
+        // dX = dY (n, nout) * W (nout, k), W pre-packed  — parallel inside gemm
+        ops::gemm_packed_b(
             n,
             self.k,
             nout,
             1.0,
             dy.as_slice(),
-            w,
+            Trans::No,
+            &self.packed_w,
             0.0,
             bottom_diffs[0].as_mut_slice(),
         );

@@ -1,26 +1,58 @@
-//! Blocked multi-threaded GeMM — the OpenBLAS stand-in of the native
+//! Packed register-tiled GeMM — the OpenBLAS stand-in of the native
 //! baseline (Table 2's "Caffe" rows run multi-threaded OpenBLAS, so the
-//! honest reproduction must be multi-core too).
+//! honest reproduction must close the gap the same way vendor BLAS does:
+//! explicit panel packing plus a register-resident microkernel).
 //!
-//! `C = alpha * op(A) * op(B) + beta * C`, f32, row-major storage.  The
-//! kernel blocks over K and N to keep the B panel in L1/L2 cache and lets
-//! LLVM auto-vectorize the inner j-loop (contiguous in both B and C).
-//! Transposed operands are handled by packing the transposed panel once —
-//! not by strided access in the hot loop.
+//! `C = alpha * op(A) * op(B) + beta * C`, f32, row-major storage.
 //!
-//! Parallelism ([`ops::par`](super::par)): C is split into contiguous
-//! M-row blocks, one pool worker per block; A and the packed B panel
-//! are shared read-only.  Because each row of C is computed with the
-//! identical k-ordering regardless of the split, the result is bitwise
-//! independent of the thread count.  Tuning knobs: `PHAST_NUM_THREADS`
-//! and `PHAST_GEMM_GRAIN` (minimum rows per worker).  Small products
-//! (`m*n*k < GEMM_PAR_MIN_FLOPS`) and GeMMs issued from inside another
-//! parallel region (e.g. per-sample conv GeMMs) stay serial.
+//! # Engine shape (BLIS-style)
+//!
+//! * **Microkernel** — an [`MR`]×[`NR`] tile of C is accumulated in a
+//!   register block across a whole K panel and written to C exactly once
+//!   per panel; the first K panel folds the `beta` scale into that write,
+//!   so there is no separate beta sweep over C.
+//! * **Packing** — A is packed into `MR`-row micro-panels and B into
+//!   `NR`-column micro-panels (k-major within a panel), so the
+//!   microkernel only ever reads unit-stride memory.  Transposed operands
+//!   are packed straight from their strided layout — never materialized
+//!   as a full transposed copy.  Pack scratch lives in reusable
+//!   thread-local buffers ([`par::with_pack_buf_a`] /
+//!   [`par::with_pack_buf_b`]): no per-call allocations.
+//! * **Blocking** — `MC`/`KC`/`NC` cache-blocking knobs, overridable via
+//!   `PHAST_GEMM_MC` / `PHAST_GEMM_KC` / `PHAST_GEMM_NC` (read once,
+//!   like every other PHAST knob; see [`blocking`]).
+//! * **Persistent weight packing** — [`PackedMat`] keeps an operand
+//!   packed across calls, keyed by a version stamp
+//!   (`Blob::data_version`): layers cache their constant weight panels
+//!   and repack only when the solver actually updates the weights,
+//!   instead of re-transposing W on every forward/backward
+//!   ([`gemm_packed_a`] / [`gemm_packed_b`]).  [`repack_count`] exposes a
+//!   per-thread repack tally (the `packs_per_forward` bench metric).
+//!
+//! # Parallelism and determinism
+//!
+//! The [`ops::par`](super::par) contract is unchanged: C splits into
+//! contiguous M-row blocks, one pool worker per block, A and the packed
+//! B panels shared read-only.  Every row of C is accumulated with the
+//! identical K ordering (K panels ascending, k ascending within a panel,
+//! one register accumulator per row) no matter which worker owns it or
+//! where tile boundaries fall, so results are **bitwise independent of
+//! the thread count**.  Small products (`m*n*k < GEMM_PAR_MIN_FLOPS`)
+//! and GeMMs issued from inside another parallel region (per-sample conv
+//! GeMMs) stay serial.  Tuning knobs: `PHAST_NUM_THREADS`,
+//! `PHAST_GEMM_GRAIN` (minimum rows per worker), and the blocking knobs
+//! above.
 //!
 //! `gemm_colmajor_b` consumes a column-major B panel, the layout OpenBLAS
 //! prefers; the PHAST boundary in `phast::` pays an explicit conversion to
 //! call it — reproducing the per-crossing transpose the paper blames for a
-//! large share of the partial-port slowdown (§4.3).
+//! large share of the partial-port slowdown (§4.3).  The old
+//! transpose-then-sweep engine survives as [`gemm_unpacked`], the
+//! comparison baseline for `benches/gemm.rs` (like `parallel_for_spawn`
+//! for the pool).
+
+use std::cell::Cell;
+use std::ops::Range;
 
 use super::par;
 
@@ -29,18 +61,426 @@ use super::par;
 pub enum Trans {
     /// Operand is used as stored (row-major, no transpose).
     No,
-    /// Operand is transposed before the product (packed once, not strided).
+    /// Operand is transposed before the product (packed from its strided
+    /// layout — never materialized as a full transposed copy).
     Yes,
 }
 
-const KC: usize = 256; // K-panel
-const NC: usize = 512; // N-panel (fits L1 with KC in L2)
+/// Microkernel tile height: rows of C accumulated per register block.
+pub const MR: usize = 4;
+/// Microkernel tile width: columns of C accumulated per register block.
+pub const NR: usize = 16;
 
 /// Minimum rows of C per worker (`PHAST_GEMM_GRAIN` overrides).
 static GEMM_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_GEMM_GRAIN", 8);
+/// M cache-block: rows of A kept hot per packed block (`PHAST_GEMM_MC`).
+static GEMM_MC: par::GrainKnob = par::GrainKnob::new("PHAST_GEMM_MC", 64);
+/// K cache-block: depth of one packed panel (`PHAST_GEMM_KC`).
+static GEMM_KC: par::GrainKnob = par::GrainKnob::new("PHAST_GEMM_KC", 256);
+/// N cache-block: B columns swept per A block (`PHAST_GEMM_NC`).
+static GEMM_NC: par::GrainKnob = par::GrainKnob::new("PHAST_GEMM_NC", 512);
 
-/// Below this many multiply-adds the spawn cost beats the speedup.
+/// Below this many multiply-adds the dispatch cost beats the speedup.
 const GEMM_PAR_MIN_FLOPS: usize = 1 << 17;
+
+thread_local! {
+    /// Packing events ([`PackedMat::ensure`] misses) on this thread.
+    static REPACKS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of [`PackedMat`] repacks performed by the calling thread so
+/// far.  Monotonic per thread (packing always happens on the thread that
+/// calls `ensure`, i.e. before any parallel dispatch), so benches and
+/// tests can diff it around a region without cross-test interference:
+/// `packs_per_forward` must be 0 on repeated forwards with frozen
+/// weights.
+pub fn repack_count() -> u64 {
+    REPACKS.with(Cell::get)
+}
+
+/// Cache-blocking parameters, resolved once from the env knobs.
+#[derive(Clone, Copy, Debug)]
+struct Blocking {
+    mc: usize,
+    kc: usize,
+    nc: usize,
+}
+
+fn blocking_params() -> Blocking {
+    Blocking {
+        // MC and NC are rounded down to whole micro-tiles so cache blocks
+        // never split a micro-panel.
+        mc: (GEMM_MC.get() / MR * MR).max(MR),
+        kc: GEMM_KC.get().max(1),
+        nc: (GEMM_NC.get() / NR * NR).max(NR),
+    }
+}
+
+/// The resolved `(MC, KC, NC)` cache-blocking triple after the
+/// `PHAST_GEMM_MC`/`PHAST_GEMM_KC`/`PHAST_GEMM_NC` env overrides (MC and
+/// NC rounded to whole `MR`/`NR` micro-tiles).  Blocking never changes
+/// results — only which K ordering is *shared* by every row (KC) and how
+/// panels are traversed (MC/NC) — so the knobs are safe to sweep.
+pub fn blocking() -> (usize, usize, usize) {
+    let b = blocking_params();
+    (b.mc, b.kc, b.nc)
+}
+
+/// Read-only view of `op(X)`: logical `(rows, cols)` over row-major
+/// storage, transposed when `trans` (stored `(cols, rows)`).
+#[derive(Clone, Copy)]
+struct View<'a> {
+    data: &'a [f32],
+    rows: usize,
+    cols: usize,
+    trans: bool,
+}
+
+impl View<'_> {
+    #[inline(always)]
+    fn at(&self, r: usize, c: usize) -> f32 {
+        if self.trans {
+            self.data[c * self.rows + r]
+        } else {
+            self.data[r * self.cols + c]
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Panel packing.
+// ---------------------------------------------------------------------------
+//
+// Full-operand pack layout (shared by the on-the-fly path and PackedMat):
+// K panels of height `kc` in ascending order; within a K panel, MR-row
+// (A) or NR-column (B) micro-panels in ascending order; within a
+// micro-panel, k-major (`buf[p * MR + r]` / `buf[p * NR + j]`), zero-
+// padded to the full MR/NR width at the ragged edge.  Because every K
+// panel except the last has exactly `kc_blk` rows, the offset of K panel
+// `p0` is simply `p0 * panels * width`.
+
+/// One MR-row micro-panel of op(A): rows `rbase..rbase+MR` (zero-padded
+/// past `a.rows`), cols `p0..p0+kc`, stored k-major into `dst`.
+fn pack_a_panel(a: View<'_>, rbase: usize, p0: usize, kc: usize, dst: &mut [f32]) {
+    debug_assert_eq!(dst.len(), kc * MR);
+    let rmax = MR.min(a.rows.saturating_sub(rbase));
+    for p in 0..kc {
+        let d = &mut dst[p * MR..(p + 1) * MR];
+        for (r, dv) in d[..rmax].iter_mut().enumerate() {
+            *dv = a.at(rbase + r, p0 + p);
+        }
+        for dv in &mut d[rmax..] {
+            *dv = 0.0;
+        }
+    }
+}
+
+/// One NR-column micro-panel of op(B): rows `p0..p0+kc`, cols
+/// `cbase..cbase+NR` (zero-padded past `b.cols`), stored k-major.
+fn pack_b_panel(b: View<'_>, p0: usize, kc: usize, cbase: usize, dst: &mut [f32]) {
+    debug_assert_eq!(dst.len(), kc * NR);
+    let cmax = NR.min(b.cols.saturating_sub(cbase));
+    for p in 0..kc {
+        let d = &mut dst[p * NR..(p + 1) * NR];
+        for (j, dv) in d[..cmax].iter_mut().enumerate() {
+            *dv = b.at(p0 + p, cbase + j);
+        }
+        for dv in &mut d[cmax..] {
+            *dv = 0.0;
+        }
+    }
+}
+
+/// Pack all of op(A) (`m` × `k`) into the full-operand layout.
+fn pack_a_full(a: View<'_>, m: usize, k: usize, kc_blk: usize, buf: &mut [f32]) {
+    let rt = m.div_ceil(MR);
+    let mut p0 = 0;
+    while p0 < k {
+        let kc = kc_blk.min(k - p0);
+        let koff = p0 * rt * MR;
+        for t in 0..rt {
+            pack_a_panel(a, t * MR, p0, kc, &mut buf[koff + t * kc * MR..koff + (t + 1) * kc * MR]);
+        }
+        p0 += kc;
+    }
+}
+
+/// Pack all of op(B) (`k` × `n`) into the full-operand layout.
+fn pack_b_full(b: View<'_>, k: usize, n: usize, kc_blk: usize, buf: &mut [f32]) {
+    let ct = n.div_ceil(NR);
+    let mut p0 = 0;
+    while p0 < k {
+        let kc = kc_blk.min(k - p0);
+        let koff = p0 * ct * NR;
+        for t in 0..ct {
+            pack_b_panel(b, p0, kc, t * NR, &mut buf[koff + t * kc * NR..koff + (t + 1) * kc * NR]);
+        }
+        p0 += kc;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Microkernel + tile writeback.
+// ---------------------------------------------------------------------------
+
+/// Accumulate one MR×NR tile over a K panel of depth `kc`: `acc` lives in
+/// registers for the whole panel (the point of the engine) and is only
+/// spilled by [`write_tile`].  Per accumulator slot the k ordering is
+/// ascending — identical for every row and every tile, which is what
+/// keeps results bitwise independent of the M partition.
+#[inline(always)]
+fn microkernel(apanel: &[f32], bpanel: &[f32], kc: usize, acc: &mut [[f32; NR]; MR]) {
+    *acc = [[0.0; NR]; MR];
+    for p in 0..kc {
+        let a = &apanel[p * MR..(p + 1) * MR];
+        let b = &bpanel[p * NR..(p + 1) * NR];
+        for (ar, accrow) in a.iter().zip(acc.iter_mut()) {
+            for (av, bv) in accrow.iter_mut().zip(b) {
+                *av += *ar * *bv;
+            }
+        }
+    }
+}
+
+/// How a K panel's contribution lands in C.
+#[derive(Clone, Copy)]
+enum CMode {
+    /// First K panel, `beta == 0`: overwrite (C may hold garbage/NaN).
+    Store,
+    /// First K panel, `beta != 0`: `c = beta * c + alpha * acc` — the
+    /// beta sweep folded into the first panel's writeback.
+    Scale(f32),
+    /// Later K panels: accumulate.
+    Accum,
+}
+
+/// Spill `acc` rows `rlo..rhi` / cols `cbase..cbase+ccnt` into the
+/// worker's C block (whose first row is absolute row `block_row0`).
+#[allow(clippy::too_many_arguments)]
+fn write_tile(
+    acc: &[[f32; NR]; MR],
+    c_block: &mut [f32],
+    n: usize,
+    block_row0: usize,
+    tile_row0: usize,
+    rlo: usize,
+    rhi: usize,
+    cbase: usize,
+    ccnt: usize,
+    alpha: f32,
+    mode: CMode,
+) {
+    for r in rlo..rhi {
+        let row = tile_row0 + r - block_row0;
+        let start = row * n + cbase;
+        let crow = &mut c_block[start..start + ccnt];
+        let arow = &acc[r][..ccnt];
+        match mode {
+            CMode::Store => {
+                for (cv, av) in crow.iter_mut().zip(arow) {
+                    *cv = alpha * *av;
+                }
+            }
+            CMode::Scale(beta) => {
+                for (cv, av) in crow.iter_mut().zip(arow) {
+                    *cv = beta * *cv + alpha * *av;
+                }
+            }
+            CMode::Accum => {
+                for (cv, av) in crow.iter_mut().zip(arow) {
+                    *cv += alpha * *av;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row-block kernel (one worker's share).
+// ---------------------------------------------------------------------------
+
+/// Where the packed A panels for a row block come from.
+#[derive(Clone, Copy)]
+enum ASource<'a> {
+    /// Pack on the fly from the raw operand into the worker's
+    /// thread-local buffer, one MC block at a time (micro-tile grid
+    /// anchored at each block's first row).
+    Raw(View<'a>),
+    /// Pre-packed full operand ([`PackedMat`]) on the global MR grid;
+    /// tiles straddling a worker boundary are computed in full but only
+    /// the worker's own rows are written (per-row math is position-
+    /// independent, so this costs a few duplicate flops, never changes a
+    /// result).
+    Packed(&'a [f32]),
+}
+
+/// Compute rows `rows` of C (the worker's contiguous block `c_block`)
+/// against the fully packed B in `bpack`.
+#[allow(clippy::too_many_arguments)]
+fn run_rows(
+    rows: Range<usize>,
+    c_block: &mut [f32],
+    a: ASource<'_>,
+    bpack: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    blk: Blocking,
+    alpha: f32,
+    beta: f32,
+) {
+    debug_assert!(!rows.is_empty());
+    debug_assert_eq!(c_block.len(), rows.len() * n);
+    let ct = n.div_ceil(NR);
+    let nc_panels = (blk.nc / NR).max(1);
+    let mut acc = [[0.0f32; NR]; MR];
+    let mut p0 = 0;
+    while p0 < k {
+        let kc = blk.kc.min(k - p0);
+        let mode = if p0 == 0 {
+            if beta == 0.0 {
+                CMode::Store
+            } else {
+                CMode::Scale(beta)
+            }
+        } else {
+            CMode::Accum
+        };
+        let b_koff = p0 * ct * NR;
+        match a {
+            ASource::Raw(av) => {
+                par::with_pack_buf_a(blk.mc.div_ceil(MR) * MR * kc, |abuf| {
+                    let mut i0 = rows.start;
+                    while i0 < rows.end {
+                        let mc = blk.mc.min(rows.end - i0);
+                        let tiles = mc.div_ceil(MR);
+                        for t in 0..tiles {
+                            pack_a_panel(
+                                av,
+                                i0 + t * MR,
+                                p0,
+                                kc,
+                                &mut abuf[t * kc * MR..(t + 1) * kc * MR],
+                            );
+                        }
+                        let mut tc0 = 0;
+                        while tc0 < ct {
+                            let tcnt = nc_panels.min(ct - tc0);
+                            for tc in tc0..tc0 + tcnt {
+                                let bpanel =
+                                    &bpack[b_koff + tc * kc * NR..b_koff + (tc + 1) * kc * NR];
+                                let cbase = tc * NR;
+                                let ccnt = NR.min(n - cbase);
+                                for t in 0..tiles {
+                                    microkernel(
+                                        &abuf[t * kc * MR..(t + 1) * kc * MR],
+                                        bpanel,
+                                        kc,
+                                        &mut acc,
+                                    );
+                                    let tile_row0 = i0 + t * MR;
+                                    let rhi = MR.min(rows.end - tile_row0);
+                                    write_tile(
+                                        &acc, c_block, n, rows.start, tile_row0, 0, rhi, cbase,
+                                        ccnt, alpha, mode,
+                                    );
+                                }
+                            }
+                            tc0 += tcnt;
+                        }
+                        i0 += mc;
+                    }
+                });
+            }
+            ASource::Packed(pbuf) => {
+                let rt = m.div_ceil(MR);
+                let a_koff = p0 * rt * MR;
+                let rt_lo = rows.start / MR;
+                let rt_hi = (rows.end - 1) / MR;
+                let mc_tiles = (blk.mc / MR).max(1);
+                let mut tg = rt_lo;
+                while tg <= rt_hi {
+                    let tg_end = (tg + mc_tiles - 1).min(rt_hi);
+                    let mut tc0 = 0;
+                    while tc0 < ct {
+                        let tcnt = nc_panels.min(ct - tc0);
+                        for tc in tc0..tc0 + tcnt {
+                            let bpanel = &bpack[b_koff + tc * kc * NR..b_koff + (tc + 1) * kc * NR];
+                            let cbase = tc * NR;
+                            let ccnt = NR.min(n - cbase);
+                            for t in tg..=tg_end {
+                                microkernel(
+                                    &pbuf[a_koff + t * kc * MR..a_koff + (t + 1) * kc * MR],
+                                    bpanel,
+                                    kc,
+                                    &mut acc,
+                                );
+                                let tile_row0 = t * MR;
+                                let rlo = rows.start.saturating_sub(tile_row0);
+                                let rhi = MR.min(rows.end - tile_row0);
+                                write_tile(
+                                    &acc, c_block, n, rows.start, tile_row0, rlo, rhi, cbase,
+                                    ccnt, alpha, mode,
+                                );
+                            }
+                        }
+                        tc0 += tcnt;
+                    }
+                    tg = tg_end + 1;
+                }
+            }
+        }
+        p0 += kc;
+    }
+}
+
+/// Serial-or-parallel dispatch over contiguous M-row blocks of C (the
+/// unchanged `ops::par` contract — see the module docs).
+#[allow(clippy::too_many_arguments)]
+fn dispatch(
+    a: ASource<'_>,
+    bpack: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    blk: Blocking,
+    alpha: f32,
+    beta: f32,
+    c: &mut [f32],
+) {
+    let tune = par::Tuning::new(GEMM_GRAIN.get());
+    if m * n * k >= GEMM_PAR_MIN_FLOPS && tune.workers(m) > 1 {
+        par::parallel_chunks_mut(c, n, tune, |rows, c_block| {
+            run_rows(rows, c_block, a, bpack, m, n, k, blk, alpha, beta);
+        });
+    } else {
+        run_rows(0..m, c, a, bpack, m, n, k, blk, alpha, beta);
+    }
+}
+
+/// Handle the degenerate shapes explicitly (the old `gemm_rows` silently
+/// computed 0 rows via `len / n.max(1)` for `n == 0`).  Returns `true`
+/// when the call is fully handled: `m == 0` / `n == 0` leave the empty C
+/// untouched; `k == 0` means no product terms exist, so C is only scaled
+/// by `beta` (zeroed for `beta == 0`, Caffe/BLAS semantics).
+fn degenerate(m: usize, n: usize, k: usize, beta: f32, c: &mut [f32]) -> bool {
+    if m == 0 || n == 0 {
+        return true;
+    }
+    if k == 0 {
+        if beta == 0.0 {
+            c.iter_mut().for_each(|v| *v = 0.0);
+        } else if beta != 1.0 {
+            c.iter_mut().for_each(|v| *v *= beta);
+        }
+        return true;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points.
+// ---------------------------------------------------------------------------
 
 /// C(m,n) = alpha * op(A)(m,k) * op(B)(k,n) + beta * C.
 ///
@@ -61,11 +501,240 @@ pub fn gemm(
     assert_eq!(c.len(), m * n, "C size");
     assert_eq!(a.len(), m * k, "A size");
     assert_eq!(b.len(), k * n, "B size");
+    if degenerate(m, n, k, beta, c) {
+        return;
+    }
+    let av = View { data: a, rows: m, cols: k, trans: matches!(ta, Trans::Yes) };
+    let bv = View { data: b, rows: k, cols: n, trans: matches!(tb, Trans::Yes) };
+    let blk = blocking_params();
+    let ct = n.div_ceil(NR);
+    par::with_pack_buf_b(k * ct * NR, |bbuf| {
+        pack_b_full(bv, k, n, blk.kc, bbuf);
+        dispatch(ASource::Raw(av), bbuf, m, n, k, blk, alpha, beta, c);
+    });
+}
+
+/// [`gemm`] with a pre-packed B operand: C = alpha * op(A) * B̂ + beta * C
+/// where `pb` holds op(B) packed by [`PackedMat::ensure`] (side
+/// [`PackSide::B`], dims `(k, n)`).  Skips all B packing — the
+/// `InnerProductLayer` weight path.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_b(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    pb: &PackedMat,
+    beta: f32,
+    c: &mut [f32],
+) {
+    assert_eq!(c.len(), m * n, "C size");
+    assert_eq!(a.len(), m * k, "A size");
+    assert!(matches!(pb.side, PackSide::B), "PackedMat packed for the wrong side");
+    assert!(pb.stamp.is_some(), "PackedMat::ensure never called");
+    assert_eq!((pb.k, pb.dim), (k, n), "PackedMat B dims");
+    if degenerate(m, n, k, beta, c) {
+        return;
+    }
+    let blk = blocking_params();
+    debug_assert_eq!(pb.kc, blk.kc, "KC changed after packing");
+    let av = View { data: a, rows: m, cols: k, trans: matches!(ta, Trans::Yes) };
+    let ct = n.div_ceil(NR);
+    dispatch(ASource::Raw(av), &pb.buf[..k * ct * NR], m, n, k, blk, alpha, beta, c);
+}
+
+/// [`gemm`] with a pre-packed A operand: C = alpha * Â * op(B) + beta * C
+/// where `pa` holds op(A) packed by [`PackedMat::ensure`] (side
+/// [`PackSide::A`], dims `(m, k)`).  Skips all A packing — the
+/// `ConvLayer` weight path (per-sample GeMMs reuse one shared pack).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_a(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    pa: &PackedMat,
+    b: &[f32],
+    tb: Trans,
+    beta: f32,
+    c: &mut [f32],
+) {
+    assert_eq!(c.len(), m * n, "C size");
+    assert_eq!(b.len(), k * n, "B size");
+    assert!(matches!(pa.side, PackSide::A), "PackedMat packed for the wrong side");
+    assert!(pa.stamp.is_some(), "PackedMat::ensure never called");
+    assert_eq!((pa.dim, pa.k), (m, k), "PackedMat A dims");
+    if degenerate(m, n, k, beta, c) {
+        return;
+    }
+    let blk = blocking_params();
+    debug_assert_eq!(pa.kc, blk.kc, "KC changed after packing");
+    let bv = View { data: b, rows: k, cols: n, trans: matches!(tb, Trans::Yes) };
+    let ct = n.div_ceil(NR);
+    let rt = m.div_ceil(MR);
+    par::with_pack_buf_b(k * ct * NR, |bbuf| {
+        pack_b_full(bv, k, n, blk.kc, bbuf);
+        dispatch(ASource::Packed(&pa.buf[..k * rt * MR]), bbuf, m, n, k, blk, alpha, beta, c);
+    });
+}
+
+/// Which operand slot a [`PackedMat`] is packed for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackSide {
+    /// The left operand: `MR`-row micro-panels ([`gemm_packed_a`]).
+    A,
+    /// The right operand: `NR`-column micro-panels ([`gemm_packed_b`]).
+    B,
+}
+
+/// A persistently packed GeMM operand with a version stamp.
+///
+/// Layers own one per (weight, orientation) pair: [`PackedMat::ensure`]
+/// is called with the source slice and the owning
+/// blob's `data_version()` before every use, and repacks **only when the
+/// stamp moved** (the solver updated the weights) or the shape/transpose
+/// changed.  The buffer is grown in place and never shrunk, so a cache
+/// hit is a handful of integer compares — turning the per-iteration
+/// weight transpose of the old engine into a once-per-solver-step cost
+/// shared by forward and backward.
+#[derive(Clone, Debug)]
+pub struct PackedMat {
+    side: PackSide,
+    trans: Trans,
+    /// Panel-axis extent: `m` for side A, `n` for side B.
+    dim: usize,
+    k: usize,
+    kc: usize,
+    stamp: Option<u64>,
+    buf: Vec<f32>,
+}
+
+impl PackedMat {
+    /// An empty (never packed) handle for the given operand side.
+    pub fn new(side: PackSide) -> PackedMat {
+        PackedMat { side, trans: Trans::No, dim: 0, k: 0, kc: 0, stamp: None, buf: Vec::new() }
+    }
+
+    /// True once [`PackedMat::ensure`] has packed something.
+    pub fn is_packed(&self) -> bool {
+        self.stamp.is_some()
+    }
+
+    /// Make the pack current for `src` at `version`: a no-op when the
+    /// stamp and shape already match (the hot path), a full repack
+    /// otherwise.  For side A, `src` is op(A) with logical dims
+    /// `(dim, k)` (stored transposed when `trans == Yes`); for side B,
+    /// op(B) with logical dims `(k, dim)`.  Returns `true` when a repack
+    /// happened (also counted in [`repack_count`]).
+    pub fn ensure(
+        &mut self,
+        src: &[f32],
+        trans: Trans,
+        dim: usize,
+        k: usize,
+        version: u64,
+    ) -> bool {
+        if self.stamp == Some(version) && (self.dim, self.k, self.trans) == (dim, k, trans) {
+            return false;
+        }
+        assert_eq!(src.len(), dim * k, "PackedMat source size");
+        let blk = blocking_params();
+        self.trans = trans;
+        self.dim = dim;
+        self.k = k;
+        self.kc = blk.kc;
+        let trans_flag = matches!(trans, Trans::Yes);
+        match self.side {
+            PackSide::A => {
+                let need = k * dim.div_ceil(MR) * MR;
+                if self.buf.len() < need {
+                    self.buf.resize(need, 0.0);
+                }
+                let view = View { data: src, rows: dim, cols: k, trans: trans_flag };
+                pack_a_full(view, dim, k, blk.kc, &mut self.buf[..need]);
+            }
+            PackSide::B => {
+                let need = k * dim.div_ceil(NR) * NR;
+                if self.buf.len() < need {
+                    self.buf.resize(need, 0.0);
+                }
+                let view = View { data: src, rows: k, cols: dim, trans: trans_flag };
+                pack_b_full(view, k, dim, blk.kc, &mut self.buf[..need]);
+            }
+        }
+        self.stamp = Some(version);
+        REPACKS.with(|c| c.set(c.get() + 1));
+        true
+    }
+}
+
+/// GeMM whose B operand is stored **column-major** (OpenBLAS-friendly).
+/// C(m,n) += A(m,k) * B_cm(k,n), with `b_cm[j*k + l] = B[l][j]`.
+/// The packed engine consumes the column-major panel directly (a
+/// column-major B is exactly a row-major (n,k) matrix = Bᵀ) — no
+/// intermediate transposed copy is materialized on the native side; the
+/// conversion the `phast::` boundary pays on top of this call is the
+/// *deliberate* §4.3 reproduction, not an engine cost.
+pub fn gemm_colmajor_b(m: usize, n: usize, k: usize, a: &[f32], b_cm: &[f32], c: &mut [f32]) {
+    assert_eq!(b_cm.len(), k * n);
+    gemm(Trans::No, Trans::Yes, m, n, k, 1.0, a, b_cm, 0.0, c);
+}
+
+/// Row-major transpose: input is (r, c), output (c, r).
+pub fn transpose(x: &[f32], r: usize, c: usize) -> Vec<f32> {
+    assert_eq!(x.len(), r * c);
+    let mut out = vec![0.0f32; r * c];
+    // Tile for cache friendliness.
+    const T: usize = 32;
+    for i0 in (0..r).step_by(T) {
+        for j0 in (0..c).step_by(T) {
+            for i in i0..(i0 + T).min(r) {
+                for j in j0..(j0 + T).min(c) {
+                    out[j * r + i] = x[i * c + j];
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// The pre-packing engine, kept as the bench baseline.
+// ---------------------------------------------------------------------------
+
+/// The PR 1–3 era engine: full-operand transpose for `Trans::Yes`
+/// (allocated per call), a separate beta sweep over C, and a blocked
+/// i-k-j kernel with no register tiling.  Kept **only** as the
+/// comparison baseline for `benches/gemm.rs` (the same role
+/// `parallel_for_spawn` plays for the pool); no layer calls this.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_unpacked(
+    ta: Trans,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    b: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    assert_eq!(c.len(), m * n, "C size");
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(b.len(), k * n, "B size");
 
     if beta == 0.0 {
         c.iter_mut().for_each(|v| *v = 0.0);
     } else if beta != 1.0 {
         c.iter_mut().for_each(|v| *v *= beta);
+    }
+    // Degenerate shapes: nothing to accumulate (and `gemm_rows` would
+    // divide by n) — the beta sweep above already produced the answer.
+    if m == 0 || n == 0 || k == 0 {
+        return;
     }
 
     // Pack transposed operands once so the kernel always reads row-major
@@ -87,9 +756,6 @@ pub fn gemm(
         }
     };
 
-    // One contiguous M-row block of C per worker; each block runs the
-    // identical blocked i-k-j kernel, so any thread count produces the
-    // same bits.
     let tune = par::Tuning::new(GEMM_GRAIN.get());
     if m * n * k >= GEMM_PAR_MIN_FLOPS && tune.workers(m) > 1 {
         par::parallel_chunks_mut(c, n, tune, |rows, c_block| {
@@ -100,8 +766,9 @@ pub fn gemm(
     }
 }
 
-/// Blocked i-k-j microkernel over the row block `c_block`, which holds
+/// Blocked i-k-j kernel over the row block `c_block`, which holds
 /// `c_block.len() / n` consecutive rows of C starting at `row0`.
+/// Callers guarantee `n > 0` (degenerate shapes return early above).
 #[allow(clippy::too_many_arguments)]
 fn gemm_rows(
     a_rm: &[f32],
@@ -112,7 +779,10 @@ fn gemm_rows(
     n: usize,
     c_block: &mut [f32],
 ) {
-    let rows = c_block.len() / n.max(1);
+    const KC: usize = 256;
+    const NC: usize = 512;
+    debug_assert!(n > 0, "degenerate n must be handled by the caller");
+    let rows = c_block.len() / n;
     for kb in (0..k).step_by(KC) {
         let kmax = (kb + KC).min(k);
         for nb in (0..n).step_by(NC) {
@@ -151,32 +821,6 @@ fn gemm_rows(
     }
 }
 
-/// GeMM whose B operand is stored **column-major** (OpenBLAS-friendly).
-/// C(m,n) += A(m,k) * B_cm(k,n), with `b_cm[j*k + l] = B[l][j]`.
-pub fn gemm_colmajor_b(m: usize, n: usize, k: usize, a: &[f32], b_cm: &[f32], c: &mut [f32]) {
-    assert_eq!(b_cm.len(), k * n);
-    // A column-major B is exactly a row-major (n,k) matrix = B^T.
-    gemm(Trans::No, Trans::Yes, m, n, k, 1.0, a, b_cm, 0.0, c);
-}
-
-/// Row-major transpose: input is (r, c), output (c, r).
-pub fn transpose(x: &[f32], r: usize, c: usize) -> Vec<f32> {
-    assert_eq!(x.len(), r * c);
-    let mut out = vec![0.0f32; r * c];
-    // Tile for cache friendliness.
-    const T: usize = 32;
-    for i0 in (0..r).step_by(T) {
-        for j0 in (0..c).step_by(T) {
-            for i in i0..(i0 + T).min(r) {
-                for j in j0..(j0 + T).min(c) {
-                    out[j * r + i] = x[i * c + j];
-                }
-            }
-        }
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +856,13 @@ mod tests {
         c
     }
 
+    const ALL_TRANS: [(Trans, Trans); 4] = [
+        (Trans::No, Trans::No),
+        (Trans::Yes, Trans::No),
+        (Trans::No, Trans::Yes),
+        (Trans::Yes, Trans::Yes),
+    ];
+
     #[test]
     fn matches_naive_all_transposes() {
         forall("gemm-vs-naive", 24, |rng: &mut Rng| {
@@ -220,18 +871,73 @@ mod tests {
             let k = rng.range(1, 65);
             let a = rng.normal_vec(m * k);
             let b = rng.normal_vec(k * n);
-            for (ta, tb) in [
-                (Trans::No, Trans::No),
-                (Trans::Yes, Trans::No),
-                (Trans::No, Trans::Yes),
-                (Trans::Yes, Trans::Yes),
-            ] {
+            for (ta, tb) in ALL_TRANS {
                 let mut c = vec![0.0f32; m * n];
                 gemm(ta, tb, m, n, k, 1.0, &a, &b, 0.0, &mut c);
                 let want = naive(ta, tb, m, n, k, &a, &b);
                 assert_close(&c, &want, 1e-4, 1e-4);
             }
         });
+    }
+
+    /// Shapes straddling every microkernel and blocking edge: m around
+    /// MR, n around NR, k around KC — ragged tiles, padded panels, and
+    /// multi-K-panel accumulation all get hit, in all four transpose
+    /// combos, against the triple-loop reference, at every supported
+    /// thread width (edge shapes stay serial by the flop threshold, so
+    /// the sweep additionally pins that the serial/parallel split never
+    /// changes an answer).
+    #[test]
+    fn matches_naive_at_tile_and_panel_edges() {
+        let (_, kc, _) = blocking();
+        let ms = [1, MR - 1, MR, MR + 1, 2 * MR + 1];
+        let ns = [1, NR - 1, NR, NR + 1, 2 * NR + 3];
+        let ks = [1, 2, kc - 1, kc, kc + 1];
+        let mut rng = Rng::new(0xedfe);
+        for &m in &ms {
+            for &n in &ns {
+                for &k in &ks {
+                    let a = rng.normal_vec(m * k);
+                    let b = rng.normal_vec(k * n);
+                    for (ta, tb) in ALL_TRANS {
+                        let mut want = naive(ta, tb, m, n, k, &a, &b);
+                        want.iter_mut().for_each(|v| *v += 0.5 * 0.25);
+                        let mut serial = Vec::new();
+                        for (i, threads) in [1usize, 2, 5, 16].into_iter().enumerate() {
+                            let mut c = vec![0.25f32; m * n];
+                            par::with_threads(threads, || {
+                                gemm(ta, tb, m, n, k, 1.0, &a, &b, 0.5, &mut c);
+                            });
+                            assert_close(&c, &want, 1e-3, 1e-4);
+                            if i == 0 {
+                                serial = c;
+                            } else {
+                                assert_eq!(serial, c, "edge shape diverged at {threads} threads");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_are_explicit() {
+        // m == 0 / n == 0: empty C, nothing to do (and nothing to panic on).
+        let mut empty: Vec<f32> = vec![];
+        gemm(Trans::No, Trans::No, 0, 5, 3, 1.0, &[], &[0.0; 15], 1.0, &mut empty);
+        gemm(Trans::No, Trans::No, 4, 0, 3, 1.0, &[0.0; 12], &[], 1.0, &mut empty);
+        gemm_unpacked(Trans::No, Trans::No, 0, 5, 3, 1.0, &[], &[0.0; 15], 1.0, &mut empty);
+        gemm_unpacked(Trans::No, Trans::No, 4, 0, 3, 1.0, &[0.0; 12], &[], 1.0, &mut empty);
+        // k == 0: C = beta * C for both engines.
+        for beta in [0.0f32, 0.5, 1.0] {
+            let mut c1 = vec![2.0f32; 6];
+            gemm(Trans::No, Trans::No, 2, 3, 0, 1.0, &[], &[], beta, &mut c1);
+            let mut c2 = vec![2.0f32; 6];
+            gemm_unpacked(Trans::No, Trans::No, 2, 3, 0, 1.0, &[], &[], beta, &mut c2);
+            assert_eq!(c1, vec![2.0 * beta; 6]);
+            assert_eq!(c1, c2);
+        }
     }
 
     #[test]
@@ -241,6 +947,81 @@ mod tests {
         let mut c = vec![10.0, 10.0, 10.0, 10.0];
         gemm(Trans::No, Trans::No, 2, 2, 2, 2.0, &a, &b, 0.5, &mut c);
         assert_eq!(c, vec![7.0, 9.0, 11.0, 13.0]);
+    }
+
+    #[test]
+    fn unpacked_baseline_matches_packed() {
+        forall("gemm-unpacked-vs-packed", 12, |rng: &mut Rng| {
+            let m = rng.range(1, 40);
+            let n = rng.range(1, 40);
+            let k = rng.range(1, 70);
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            for (ta, tb) in ALL_TRANS {
+                let mut c1 = vec![1.0f32; m * n];
+                gemm(ta, tb, m, n, k, 0.5, &a, &b, 2.0, &mut c1);
+                let mut c2 = vec![1.0f32; m * n];
+                gemm_unpacked(ta, tb, m, n, k, 0.5, &a, &b, 2.0, &mut c2);
+                assert_close(&c1, &c2, 1e-3, 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn packed_b_matches_raw_bitwise() {
+        forall("gemm-packed-b", 12, |rng: &mut Rng| {
+            let m = rng.range(1, 20);
+            let n = rng.range(1, 40);
+            let k = rng.range(1, 40);
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            for tb in [Trans::No, Trans::Yes] {
+                let mut want = vec![0.0f32; m * n];
+                gemm(Trans::No, tb, m, n, k, 1.0, &a, &b, 0.0, &mut want);
+                let mut pb = PackedMat::new(PackSide::B);
+                assert!(pb.ensure(&b, tb, n, k, 7));
+                let mut got = vec![0.0f32; m * n];
+                gemm_packed_b(m, n, k, 1.0, &a, Trans::No, &pb, 0.0, &mut got);
+                // Same packed layout, same per-row k order: bitwise equal.
+                assert_eq!(want, got);
+            }
+        });
+    }
+
+    #[test]
+    fn packed_a_matches_raw_bitwise() {
+        forall("gemm-packed-a", 12, |rng: &mut Rng| {
+            let m = rng.range(1, 40);
+            let n = rng.range(1, 40);
+            let k = rng.range(1, 40);
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            for ta in [Trans::No, Trans::Yes] {
+                let mut want = vec![0.0f32; m * n];
+                gemm(ta, Trans::No, m, n, k, 1.0, &a, &b, 0.0, &mut want);
+                let mut pa = PackedMat::new(PackSide::A);
+                assert!(pa.ensure(&a, ta, m, k, 3));
+                let mut got = vec![0.0f32; m * n];
+                gemm_packed_a(m, n, k, 1.0, &pa, &b, Trans::No, 0.0, &mut got);
+                assert_eq!(want, got);
+            }
+        });
+    }
+
+    #[test]
+    fn packed_mat_repacks_only_on_version_change() {
+        let src = vec![1.0f32; 6 * 8];
+        let mut p = PackedMat::new(PackSide::B);
+        let c0 = repack_count();
+        assert!(p.ensure(&src, Trans::No, 8, 6, 1), "first ensure must pack");
+        assert!(!p.ensure(&src, Trans::No, 8, 6, 1), "same stamp must hit the cache");
+        assert!(!p.ensure(&src, Trans::No, 8, 6, 1));
+        assert_eq!(repack_count() - c0, 1, "cache hits must not repack");
+        assert!(p.ensure(&src, Trans::No, 8, 6, 2), "stamp move must repack");
+        assert_eq!(repack_count() - c0, 2);
+        // Shape or orientation changes repack even at the same stamp.
+        assert!(p.ensure(&src, Trans::Yes, 6, 8, 2));
+        assert_eq!(repack_count() - c0, 3);
     }
 
     #[test]

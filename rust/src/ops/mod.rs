@@ -12,6 +12,9 @@
 //! [`par`] persistent-worker-pool runtime, tuned PHAST-style via
 //! `PHAST_NUM_THREADS` and per-kernel `PHAST_*_GRAIN` knobs — see
 //! `docs/PARALLEL_RUNTIME.md` for the full knob table and tuning guide.
+//! The GeMM is a BLIS-style packed register-tiled engine
+//! ([`gemm`](mod@gemm)) with persistent weight packing ([`PackedMat`])
+//! so layers never re-transpose constant weights per iteration.
 #![warn(missing_docs)]
 
 pub mod geometry;
@@ -23,7 +26,7 @@ pub mod activations;
 pub mod math;
 
 pub use geometry::{conv_geom, pool_geom, WindowGeom};
-pub use gemm::{gemm, gemm_colmajor_b, Trans};
+pub use gemm::{gemm, gemm_colmajor_b, gemm_packed_a, gemm_packed_b, PackSide, PackedMat, Trans};
 pub use im2col::{col2im, im2col};
 pub use pool::{
     avepool, avepool_batch, avepool_bwd, avepool_bwd_batch, maxpool, maxpool_batch,

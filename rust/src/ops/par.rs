@@ -70,7 +70,7 @@
 //! knob table, and a tuning walkthrough.
 
 use std::any::Any;
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::marker::PhantomData;
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -248,6 +248,53 @@ pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
         start += len;
     }
     out
+}
+
+// ---------------------------------------------------------------------------
+// Reusable per-thread pack buffers (the GeMM packing scratch).
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Per-thread A-panel pack scratch for the GeMM engine — grown on
+    /// demand, never shrunk, reused across every GeMM call this thread
+    /// issues (pool workers each own one, so panel packing never
+    /// allocates on the hot path).
+    static PACK_A_BUF: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread B-panel pack scratch (same lifecycle as `PACK_A_BUF`).
+    static PACK_B_BUF: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+fn with_buf<R>(
+    cell: &'static std::thread::LocalKey<RefCell<Vec<f32>>>,
+    len: usize,
+    f: impl FnOnce(&mut [f32]) -> R,
+) -> R {
+    cell.with(|c| {
+        let mut buf = c.borrow_mut();
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
+}
+
+/// Run `f` with this thread's reusable A-panel pack buffer, grown to at
+/// least `len` floats (contents unspecified — the caller packs before
+/// reading).  Re-entrant use of the *same* buffer on one thread panics
+/// (`RefCell`); the GeMM engine borrows the A buffer only inside a
+/// worker's row sweep and the B buffer only around a whole call, so the
+/// two never collide.
+pub fn with_pack_buf_a<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    with_buf(&PACK_A_BUF, len, f)
+}
+
+/// Run `f` with this thread's reusable B-panel pack buffer (see
+/// [`with_pack_buf_a`]).  The dispatching thread packs B once, then
+/// shares the filled buffer read-only with every pool worker for the
+/// duration of the parallel region — sound because the region joins
+/// before this call returns.
+pub fn with_pack_buf_b<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    with_buf(&PACK_B_BUF, len, f)
 }
 
 // ---------------------------------------------------------------------------

@@ -28,6 +28,14 @@ pub struct Blob {
     data: Tensor,
     diff: Tensor,
     state: SyncState,
+    /// Monotonic mutation counter for `data`: bumped by every mutable
+    /// access path ([`data_mut`](Blob::data_mut),
+    /// [`data_mut_and_diff_mut`](Blob::data_mut_and_diff_mut),
+    /// [`update`](Blob::update), [`reshape`](Blob::reshape)).  The GeMM
+    /// engine's `PackedMat` caches stamp this value when they pack a
+    /// weight matrix and repack only when it moves — which for parameter
+    /// blobs is once per solver step, not once per forward.
+    version: u64,
 }
 
 impl Blob {
@@ -37,12 +45,13 @@ impl Blob {
             data: Tensor::zeros(shape.clone()),
             diff: Tensor::zeros(shape),
             state: SyncState::HostOnly,
+            version: 0,
         }
     }
 
     pub fn from_data(name: impl Into<String>, data: Tensor) -> Self {
         let diff = Tensor::zeros(data.shape().clone());
-        Blob { name: name.into(), data, diff, state: SyncState::HostOnly }
+        Blob { name: name.into(), data, diff, state: SyncState::HostOnly, version: 0 }
     }
 
     pub fn name(&self) -> &str {
@@ -62,7 +71,16 @@ impl Blob {
     }
 
     pub fn data_mut(&mut self) -> &mut Tensor {
+        self.version += 1;
         &mut self.data
+    }
+
+    /// Current `data` mutation stamp (see the `version` field docs).
+    /// Conservative by design: every *potentially* mutating access bumps
+    /// it, so a matching stamp guarantees unchanged data, while an
+    /// unnecessary bump costs at most one spurious repack.
+    pub fn data_version(&self) -> u64 {
+        self.version
     }
 
     pub fn diff(&self) -> &Tensor {
@@ -84,6 +102,7 @@ impl Blob {
     /// folds weight decay into `diff` (Caffe regularizes in place) while
     /// also writing the updated weights into `data`.
     pub fn data_mut_and_diff_mut(&mut self) -> (&mut Tensor, &mut Tensor) {
+        self.version += 1;
         (&mut self.data, &mut self.diff)
     }
 
@@ -98,6 +117,7 @@ impl Blob {
     /// Caffe `Blob::Reshape` — keeps contents when the count is unchanged,
     /// reallocates otherwise.
     pub fn reshape(&mut self, shape: Shape) {
+        self.version += 1;
         if shape.count() == self.data.len() {
             self.data.reshape_in_place(shape.clone());
             self.diff.reshape_in_place(shape);
@@ -110,6 +130,7 @@ impl Blob {
     /// `W -= lr * dW` is done by the solver; this is Caffe's `Blob::Update`
     /// primitive `data -= diff`.
     pub fn update(&mut self) {
+        self.version += 1;
         for (d, g) in self.data.as_mut_slice().iter_mut().zip(self.diff.as_slice()) {
             *d -= g;
         }
@@ -140,6 +161,22 @@ mod tests {
         b.diff_mut().as_mut_slice().copy_from_slice(&[0.5, 0.5, 0.5]);
         b.update();
         assert_eq!(b.data().as_slice(), &[0.5, 1.5, 2.5]);
+    }
+
+    #[test]
+    fn data_version_tracks_mutation_paths() {
+        let mut b = Blob::new("w", Shape::new(&[2]));
+        let v0 = b.data_version();
+        let _ = b.data();
+        let _ = b.diff_mut();
+        b.zero_diff();
+        assert_eq!(b.data_version(), v0, "read-only / diff-only access must not bump");
+        b.data_mut();
+        assert_eq!(b.data_version(), v0 + 1);
+        b.data_mut_and_diff_mut();
+        b.update();
+        b.reshape(Shape::new(&[2]));
+        assert_eq!(b.data_version(), v0 + 4, "every data-mutating path must bump");
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! BLAS-1 solver update, and the persistent pool's reuse guarantee.
 
 use phast_caffe::experiments::preset_net;
-use phast_caffe::layers::{ConvLayer, Layer};
+use phast_caffe::layers::{ConvLayer, IpLayer, Layer};
 use phast_caffe::net::Net;
 use phast_caffe::ops::{self, gemm::Trans, im2col::Conv2dGeom, par, pool::Pool2dGeom};
 use phast_caffe::propcheck::{assert_close, forall, Rng};
@@ -52,6 +52,101 @@ fn gemm_invariant_to_thread_count() {
             }
         }
     });
+}
+
+/// The packed-engine entry points ([`ops::gemm_packed_a`] /
+/// [`ops::gemm_packed_b`]) must stay bitwise independent of the thread
+/// count *and* bitwise equal to the raw-operand engine: the pre-packed
+/// global micro-tile grid and the per-worker local grid accumulate every
+/// C row with the identical K ordering.
+#[test]
+fn packed_gemm_paths_invariant_to_thread_count() {
+    forall("par-gemm-packed", 6, |rng: &mut Rng| {
+        // Big enough that m*n*k always clears the parallel threshold, and
+        // deliberately not MR/NR-aligned so worker boundaries split tiles.
+        let m = rng.range(33, 64);
+        let n = rng.range(65, 96);
+        let k = rng.range(64, 96);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let mut pb = ops::PackedMat::new(ops::PackSide::B);
+        pb.ensure(&b, Trans::No, n, k, 1);
+        let mut pa = ops::PackedMat::new(ops::PackSide::A);
+        pa.ensure(&a, Trans::No, m, k, 1);
+
+        let mut raw = vec![0.25f32; m * n];
+        let mut want_b = vec![0.25f32; m * n];
+        let mut want_a = vec![0.25f32; m * n];
+        par::with_threads(1, || {
+            ops::gemm(Trans::No, Trans::No, m, n, k, 1.0, &a, &b, 0.5, &mut raw);
+            ops::gemm_packed_b(m, n, k, 1.0, &a, Trans::No, &pb, 0.5, &mut want_b);
+            ops::gemm_packed_a(m, n, k, 1.0, &pa, &b, Trans::No, 0.5, &mut want_a);
+        });
+        assert_eq!(raw, want_b, "packed-B path diverged from the raw engine");
+        assert_eq!(raw, want_a, "packed-A path diverged from the raw engine");
+
+        for t in [2usize, 5, 16] {
+            let mut got_b = vec![0.25f32; m * n];
+            let mut got_a = vec![0.25f32; m * n];
+            par::with_threads(t, || {
+                ops::gemm_packed_b(m, n, k, 1.0, &a, Trans::No, &pb, 0.5, &mut got_b);
+                ops::gemm_packed_a(m, n, k, 1.0, &pa, &b, Trans::No, 0.5, &mut got_a);
+            });
+            assert_eq!(want_b, got_b, "packed-B gemm diverged at {t} threads");
+            assert_eq!(want_a, got_a, "packed-A gemm diverged at {t} threads");
+        }
+    });
+}
+
+/// The layer-level pack caches: repeated forwards/backwards with frozen
+/// weights must never repack (the `packs_per_forward == 0` contract the
+/// gemm bench gates), and a single weight mutation must refresh each
+/// orientation exactly once.
+#[test]
+fn ip_weight_packs_cached_until_weights_move() {
+    let cfg = LayerConfig {
+        name: "ip".into(),
+        ltype: LayerType::InnerProduct,
+        bottoms: vec!["x".into()],
+        tops: vec!["y".into()],
+        num_output: 6,
+        ..Default::default()
+    };
+    let mut l = IpLayer::new(cfg, 5);
+    let in_shape = Shape::new(&[3, 7]);
+    let out_shape = l.setup(std::slice::from_ref(&in_shape)).unwrap().remove(0);
+    let mut rng = Rng::new(2024);
+    let x = Tensor::from_vec(in_shape.clone(), rng.normal_vec(in_shape.count()));
+    let dy = Tensor::from_vec(out_shape.clone(), rng.normal_vec(out_shape.count()));
+    let mut y = Tensor::zeros(out_shape.clone());
+    let mut dx = Tensor::zeros(in_shape.clone());
+
+    // Warm both caches (forward packs Wᵀ, backward packs W).
+    l.forward(&[&x], std::slice::from_mut(&mut y)).unwrap();
+    l.backward(&[&dy], &[&x], std::slice::from_mut(&mut dx)).unwrap();
+    let y_first = y.as_slice().to_vec();
+
+    let c0 = ops::gemm::repack_count();
+    for _ in 0..3 {
+        l.forward(&[&x], std::slice::from_mut(&mut y)).unwrap();
+        l.backward(&[&dy], &[&x], std::slice::from_mut(&mut dx)).unwrap();
+    }
+    assert_eq!(ops::gemm::repack_count(), c0, "frozen weights must hit the pack cache");
+    assert_eq!(y.as_slice(), &y_first[..], "cached packs must give identical results");
+
+    // One weight mutation -> exactly one repack per cached orientation.
+    l.params_mut()[0].data_mut().as_mut_slice()[0] += 1.0;
+    l.forward(&[&x], std::slice::from_mut(&mut y)).unwrap();
+    l.backward(&[&dy], &[&x], std::slice::from_mut(&mut dx)).unwrap();
+    assert_eq!(
+        ops::gemm::repack_count(),
+        c0 + 2,
+        "a stale pack must refresh once per orientation"
+    );
+    assert!(
+        y.as_slice() != &y_first[..],
+        "the refreshed pack must observe the mutated weights"
+    );
 }
 
 fn conv_cfg(cout: usize, k: usize, s: usize, p: usize) -> LayerConfig {

@@ -1,19 +1,24 @@
 #!/usr/bin/env bash
 # CI perf-regression gate: compare the merged bench record
 # (rust/BENCH_threads.json, written by `cargo bench --bench
-# threads_scaling` and `cargo bench --bench fusion`) against the
-# checked-in BENCH_baseline.json — and FAIL on regression instead of only
-# uploading artifacts.
+# threads_scaling`, `cargo bench --bench fusion`, and `cargo bench
+# --bench gemm`) against the checked-in BENCH_baseline.json — and FAIL on
+# regression instead of only uploading artifacts.
 #
 # Gate design (see BENCH_baseline.json):
 #   * Region counts are deterministic (they depend only on the pass
 #     structure, never on machine speed), so they are gated hard: the
 #     fused solver step must keep its 3-to-1 dispatch collapse, and layer
 #     fusion must keep removing regions from the forward sweep.
+#   * gemm_packed.packs_per_forward is likewise deterministic (pack-cache
+#     behaviour, not timing) and gated exactly at 0: frozen weights must
+#     never repack.
 #   * Wall-clock-derived metrics are gated with a generous tolerance
 #     (baseline "tolerance", 1.5x) and, where possible, as within-run
-#     ratios (fused vs unfused on the same machine) so CI-runner speed
-#     differences cannot trip them.
+#     ratios (fused vs unfused, packed vs unpacked on the same machine)
+#     so CI-runner speed differences cannot trip them.
+#     gemm_packed.packed_over_naive is a floor (>= baseline 1.0): the
+#     packed engine may never lose to the baseline engine it replaced.
 #
 # Run from the repo root: bash tools/check_bench.sh
 set -u
@@ -24,7 +29,7 @@ BASELINE=BENCH_baseline.json
 
 for f in "$CURRENT" "$BASELINE"; do
   if [ ! -f "$f" ]; then
-    echo "MISSING FILE: $f (run both benches first: cargo bench --bench threads_scaling && cargo bench --bench fusion)"
+    echo "MISSING FILE: $f (run the benches first: cargo bench --bench threads_scaling && cargo bench --bench fusion && cargo bench --bench gemm)"
     exit 1
   fi
 done
@@ -115,6 +120,26 @@ if None not in (ms, ms_base) and ms < ms_base / tol:
         f"scaling.max_speedup {ms} below baseline {ms_base}/{tol}"
     )
 
+# --- packed GeMM gates --------------------------------------------------
+# packs_per_forward is deterministic cache behaviour: pinned exactly.
+ppf = get(cur, "gemm_packed", "packs_per_forward", "current")
+ppf_base = get(base, "gemm_packed", "packs_per_forward", "baseline")
+if None not in (ppf, ppf_base) and ppf != ppf_base:
+    failures.append(
+        f"gemm_packed.packs_per_forward {ppf} != pinned {ppf_base}: "
+        "frozen weights are being repacked"
+    )
+# packed_over_naive is a within-run ratio: hard floor, no tolerance
+# division (the baseline 1.0 is already the generous bound; acceptance
+# on a quiet machine is ~1.5x on the ip1 shape).
+pon = get(cur, "gemm_packed", "packed_over_naive", "current")
+pon_base = get(base, "gemm_packed", "packed_over_naive", "baseline")
+if None not in (pon, pon_base) and pon < pon_base:
+    failures.append(
+        f"gemm_packed.packed_over_naive {pon} below floor {pon_base}: "
+        "the packed engine lost to the baseline it replaced"
+    )
+
 if failures:
     print("bench gate FAILED:")
     for f in failures:
@@ -129,4 +154,5 @@ print(f"  fused_sgd_step: {cur['fused_sgd_step']['regions_unfused']} -> "
 print(f"  fused_layers: {plain} -> {fused} regions/forward")
 print(f"  small_op_dispatch.spawn_over_pool: {sop}")
 print(f"  scaling.max_speedup: {ms}")
+print(f"  gemm_packed: packed_over_naive {pon}, packs_per_forward {ppf}")
 PY
