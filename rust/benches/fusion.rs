@@ -11,9 +11,15 @@
 //!   parameter blobs: the unfused path issues three BLAS-1 regions per
 //!   blob, the fused path one three-stage region per blob
 //!   (`region_ratio` = unfused/fused regions, the 3→1 collapse), and
-//!   `PHAST_FUSE_STEP`'s flat mode a single region for the whole step.
+//!   `PHAST_FUSE_STEP`'s flat mode a single region for the whole step;
+//!   plus the `stage_unsynced` route (`PHAST_FUSE_UNSYNC`) — same
+//!   structure, no inter-stage barriers.
 //! * **`fused_layers`** — full forward sweeps with the net's bias-add →
 //!   activation fusion plan on vs off.
+//! * **`fused_backward`** — LeNet backward sweeps at a pinned 4-thread
+//!   width: the fused conv gradient region (one dispatch: gemm stages +
+//!   col2im + deterministic merge) vs the dispatch-then-serial-merge
+//!   reference (`PHAST_FUSE_BWD`); region counts gated exactly.
 //!
 //! `cargo bench --bench fusion`
 
@@ -23,27 +29,57 @@ use std::time::Instant;
 use phast_caffe::experiments::preset_net;
 use phast_caffe::metrics::bench_json;
 use phast_caffe::ops::par;
-use phast_caffe::solver::{apply_sgd_update_mode, StepFusion};
+use phast_caffe::solver::{apply_sgd_update_sync, StepFusion, StepSync};
 
-/// Regions issued and mean µs per SGD update under `mode`.
+/// Regions issued and mean µs per SGD update under `mode` + `sync`.
 fn measure_update(
     net: &mut phast_caffe::net::Net,
     history: &mut [Vec<f32>],
     mode: StepFusion,
+    sync: StepSync,
     iters: usize,
 ) -> (u64, f64) {
     let (lr, momentum, decay) = (0.01f32, 0.9f32, 0.0005f32);
     // Warm once (grows the pool, faults in scratch).
-    apply_sgd_update_mode(net.params_mut(), history, lr, momentum, decay, mode);
+    apply_sgd_update_sync(net.params_mut(), history, lr, momentum, decay, mode, sync);
     let r0 = par::region_count();
-    apply_sgd_update_mode(net.params_mut(), history, lr, momentum, decay, mode);
+    apply_sgd_update_sync(net.params_mut(), history, lr, momentum, decay, mode, sync);
     let regions = par::region_count() - r0;
     let t0 = Instant::now();
     for _ in 0..iters {
-        apply_sgd_update_mode(net.params_mut(), history, lr, momentum, decay, mode);
+        apply_sgd_update_sync(net.params_mut(), history, lr, momentum, decay, mode, sync);
     }
     let us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
     (regions, us)
+}
+
+/// Regions issued and mean ms per LeNet backward sweep with the fused
+/// gradient regions on (one dispatch: gemm stages + col2im + merge) or
+/// off (dispatch + serial merge reference).  Runs at a pinned thread
+/// count so the region counts are machine-independent (they depend only
+/// on the pass structure and the serial/parallel thresholds at that
+/// width) and CI can gate them exactly.
+fn measure_backward(net: &mut phast_caffe::net::Net, fused: bool, iters: usize) -> (u64, f64) {
+    par::with_threads(4, || {
+        net.set_backward_fusion(fused);
+        // Pin the pack-cache mode identically in both arms (the explicit
+        // override also captures from this measurement's own forward, not
+        // lazily), so the A/B isolates the *fusion* effect — otherwise
+        // call ordering would hand the fused arm the packing win too.
+        net.set_backward_packing(true);
+        net.zero_param_diffs();
+        net.forward().expect("forward");
+        net.backward().expect("backward"); // warm
+        let r0 = par::region_count();
+        net.backward().expect("backward");
+        let regions = par::region_count() - r0;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            net.backward().expect("backward");
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        (regions, ms)
+    })
 }
 
 /// Regions issued and mean ms per forward sweep with layer fusion on/off.
@@ -75,13 +111,19 @@ fn main() -> anyhow::Result<()> {
     println!("fusion: LeNet-MNIST, {nblobs} param blobs, {hw} hw threads");
     let iters = 200usize;
     let (unfused_regions, unfused_us) =
-        measure_update(&mut net, &mut history, StepFusion::Unfused, iters);
+        measure_update(&mut net, &mut history, StepFusion::Unfused, StepSync::Barrier, iters);
     let (fused_regions, fused_us) =
-        measure_update(&mut net, &mut history, StepFusion::PerBlob, iters);
-    let (flat_regions, flat_us) = measure_update(&mut net, &mut history, StepFusion::Flat, iters);
+        measure_update(&mut net, &mut history, StepFusion::PerBlob, StepSync::Barrier, iters);
+    let (flat_regions, flat_us) =
+        measure_update(&mut net, &mut history, StepFusion::Flat, StepSync::Barrier, iters);
+    // stage_unsynced routing (ISSUE 5): same dispatch structure, no
+    // inter-stage barriers — the per-step saving is the barrier price the
+    // `stage_barrier` entry below measures, times two barriers per blob.
+    let (unsynced_regions, unsynced_us) =
+        measure_update(&mut net, &mut history, StepFusion::PerBlob, StepSync::Unsynced, iters);
     let region_ratio = unfused_regions as f64 / fused_regions.max(1) as f64;
-    println!("  sgd step regions: unfused {unfused_regions}, fused/blob {fused_regions}, flat {flat_regions}  ({region_ratio:.1}x fewer dispatches fused)");
-    println!("  sgd step time:    unfused {unfused_us:.1} us, fused/blob {fused_us:.1} us, flat {flat_us:.1} us");
+    println!("  sgd step regions: unfused {unfused_regions}, fused/blob {fused_regions}, flat {flat_regions}, unsynced/blob {unsynced_regions}  ({region_ratio:.1}x fewer dispatches fused)");
+    println!("  sgd step time:    unfused {unfused_us:.1} us, fused/blob {fused_us:.1} us, flat {flat_us:.1} us, unsynced/blob {unsynced_us:.1} us");
 
     // Layer fusion on CIFAR-quick: two conv→relu pairs in the plan, so
     // the fused forward issues measurably fewer regions per sweep.
@@ -92,12 +134,24 @@ fn main() -> anyhow::Result<()> {
     println!("  cifar forward regions: plain {fwd_plain_regions}, fused {fwd_fused_regions}");
     println!("  cifar forward time:    plain {fwd_plain_ms:.2} ms, fused {fwd_fused_ms:.2} ms");
 
-    // Stage-barrier cost — the ROADMAP's `stage_unsynced` measure-first
-    // item: a trivial 3-stage fused region vs a trivial 1-stage region at
-    // the same width differ by exactly two stage-barrier crossings (the
-    // pool dispatch itself is identical), so half the difference is the
-    // per-stage barrier price a `stage_unsynced` variant could recover on
-    // pointwise chains like the SGD stages.
+    // Backward fusion on LeNet: one two-stage region per conv layer
+    // (gradient work + deterministic merge) vs the reference dispatch
+    // plus serial merge — the region counts match by construction (the
+    // merge never was a dispatch), so the gate pins the fused count
+    // exactly and the win shows up as wall-clock.
+    let mut lenet_bwd = preset_net("mnist", 29)?;
+    let bwd_iters = 8usize;
+    let (bwd_ref_regions, bwd_ref_ms) = measure_backward(&mut lenet_bwd, false, bwd_iters);
+    let (bwd_fused_regions, bwd_fused_ms) = measure_backward(&mut lenet_bwd, true, bwd_iters);
+    println!("  lenet backward regions (4 threads): reference {bwd_ref_regions}, fused {bwd_fused_regions}");
+    println!("  lenet backward time:   reference {bwd_ref_ms:.2} ms, fused {bwd_fused_ms:.2} ms");
+
+    // Stage-barrier cost: a trivial 3-stage fused region vs a trivial
+    // 1-stage region at the same width differ by exactly two
+    // stage-barrier crossings (the pool dispatch itself is identical),
+    // so half the difference is the per-stage barrier price the
+    // `stage_unsynced` route (measured above as `unsynced_us_per_step`)
+    // recovers on pointwise chains like the SGD stages.
     let workers = hw.max(2);
     let bar_tune = par::Tuning { threads: workers, grain: 1 };
     let sink = std::sync::atomic::AtomicUsize::new(0);
@@ -132,11 +186,23 @@ fn main() -> anyhow::Result<()> {
     let _ = writeln!(sgd, "    \"regions_unfused\": {unfused_regions},");
     let _ = writeln!(sgd, "    \"regions_fused_per_blob\": {fused_regions},");
     let _ = writeln!(sgd, "    \"regions_flat\": {flat_regions},");
+    let _ = writeln!(sgd, "    \"regions_unsynced_per_blob\": {unsynced_regions},");
     let _ = writeln!(sgd, "    \"region_ratio\": {region_ratio:.2},");
     let _ = writeln!(sgd, "    \"unfused_us_per_step\": {unfused_us:.1},");
     let _ = writeln!(sgd, "    \"fused_us_per_step\": {fused_us:.1},");
-    let _ = writeln!(sgd, "    \"flat_us_per_step\": {flat_us:.1}");
+    let _ = writeln!(sgd, "    \"flat_us_per_step\": {flat_us:.1},");
+    let _ = writeln!(sgd, "    \"unsynced_us_per_step\": {unsynced_us:.1}");
     sgd.push_str("  }");
+
+    let mut bwd = String::from("{\n");
+    let _ = writeln!(bwd, "    \"net\": \"lenet-mnist\",");
+    let _ = writeln!(bwd, "    \"threads\": 4,");
+    let _ = writeln!(bwd, "    \"iters\": {bwd_iters},");
+    let _ = writeln!(bwd, "    \"regions_reference\": {bwd_ref_regions},");
+    let _ = writeln!(bwd, "    \"regions_fused\": {bwd_fused_regions},");
+    let _ = writeln!(bwd, "    \"reference_ms_per_bwd\": {bwd_ref_ms:.3},");
+    let _ = writeln!(bwd, "    \"fused_ms_per_bwd\": {bwd_fused_ms:.3}");
+    bwd.push_str("  }");
 
     let mut layers = String::from("{\n");
     let _ = writeln!(layers, "    \"net\": \"cifar10-quick\",");
@@ -155,16 +221,23 @@ fn main() -> anyhow::Result<()> {
     let _ = writeln!(barrier, "    \"barrier_us_per_stage\": {barrier_us:.3},");
     let _ = writeln!(
         barrier,
-        "    \"note\": \"stage_unsynced candidate (ROADMAP measure-first item): a barrier-free \
-         variant for pointwise stage chains would save ~2x barrier_us_per_stage per fused 3-stage \
-         region; act only if this rivals the pool's per-dispatch cost\""
+        "    \"note\": \"per-barrier price the stage_unsynced route (PHAST_FUSE_UNSYNC, default \
+         on) saves on pointwise chains: ~2x barrier_us_per_stage per fused 3-stage region; see \
+         fused_sgd_step.unsynced_us_per_step for the end-to-end effect\""
     );
     barrier.push_str("  }");
 
     bench_json::merge_entries(
         std::path::Path::new("BENCH_threads.json"),
-        &[("fused_sgd_step", sgd), ("fused_layers", layers), ("stage_barrier", barrier)],
+        &[
+            ("fused_sgd_step", sgd),
+            ("fused_layers", layers),
+            ("fused_backward", bwd),
+            ("stage_barrier", barrier),
+        ],
     )?;
-    println!("\nmerged fused_sgd_step + fused_layers + stage_barrier into BENCH_threads.json");
+    println!(
+        "\nmerged fused_sgd_step + fused_layers + fused_backward + stage_barrier into BENCH_threads.json"
+    );
     Ok(())
 }

@@ -11,9 +11,11 @@
 //! * **`gemm_packed`** — per-shape GFLOP/s packed vs unpacked at 4
 //!   threads, the `packed_over_naive` ratio on the ip1 forward shape
 //!   (64×500×800, the hottest weight-transposing GeMM — gated `>= 1.0`),
-//!   and `packs_per_forward`: `PackedMat` repacks per LeNet forward with
-//!   frozen weights, which must be exactly **0** after the first forward
-//!   (gated exactly — the whole point of the version-stamped caches).
+//!   and the repack rates: `packs_per_forward` / `packs_per_backward`,
+//!   `PackedMat` repacks per LeNet forward / backward sweep with frozen
+//!   weights, both of which must be exactly **0** after the first
+//!   iteration (gated exactly — the whole point of the version-stamped
+//!   weight caches plus the forward-captured im2col panels).
 //!
 //! `cargo bench --bench gemm`
 
@@ -129,6 +131,28 @@ fn main() -> anyhow::Result<()> {
          over {reps} frozen-weight forwards"
     );
 
+    // Backward repack rate: the gradient sweep must likewise never
+    // repack with frozen weights — the backward weight orientations are
+    // version-stamped caches and the conv `dW` GeMM consumes im2col
+    // panels captured by the forward pass (caller-managed, never counted
+    // as repacks) — `packs_per_backward == 0`, pinned exactly.
+    net.zero_param_diffs();
+    net.forward()?;
+    net.backward()?; // warm: packs the backward orientations once
+    let mut bwd_packs = 0u64;
+    for _ in 0..reps {
+        net.zero_param_diffs();
+        net.forward()?;
+        let before_bwd = ops::gemm::repack_count();
+        net.backward()?;
+        bwd_packs += ops::gemm::repack_count() - before_bwd;
+    }
+    let packs_per_backward = bwd_packs as f64 / reps as f64;
+    println!(
+        "persistent packing: {packs_per_backward:.1} repacks/backward over {reps} frozen-weight \
+         iterations"
+    );
+
     let mut entry = String::from("{\n");
     let _ = writeln!(entry, "    \"threads\": {THREADS},");
     let _ = writeln!(entry, "    \"shapes\": [");
@@ -136,7 +160,8 @@ fn main() -> anyhow::Result<()> {
     let _ = writeln!(entry, "    ],");
     let _ = writeln!(entry, "    \"packed_over_naive\": {packed_over_naive:.3},");
     let _ = writeln!(entry, "    \"cold_packs\": {warm_packs},");
-    let _ = writeln!(entry, "    \"packs_per_forward\": {packs_per_forward:.1}");
+    let _ = writeln!(entry, "    \"packs_per_forward\": {packs_per_forward:.1},");
+    let _ = writeln!(entry, "    \"packs_per_backward\": {packs_per_backward:.1}");
     entry.push_str("  }");
 
     bench_json::merge_entries(

@@ -4,12 +4,9 @@
 //! Forward and backward split the batch into contiguous sample ranges,
 //! one scoped worker each ([`ops::par`]); every worker owns its own
 //! column scratch (Caffe's shared `col_buffer_` becomes per-thread
-//! scratch, the refactor batch-parallelism forces).  Backward workers
-//! additionally accumulate into private `dW`/`db` buffers that are
-//! reduced in worker order afterwards — deterministic for a fixed thread
-//! count.  The per-sample GeMMs inside workers stay serial (nested
-//! regions collapse).  Knobs: `PHAST_NUM_THREADS` + `PHAST_CONV_GRAIN`
-//! (samples per worker).
+//! scratch, the refactor batch-parallelism forces).  The per-sample
+//! GeMMs inside workers stay serial (nested regions collapse).  Knobs:
+//! `PHAST_NUM_THREADS` + `PHAST_CONV_GRAIN` (samples per worker).
 //!
 //! When the net's fusion plan pairs this layer with an adjacent ReLU
 //! (`Net::from_config`), `forward_fused_relu` computes the activation
@@ -25,6 +22,46 @@
 //! every worker, replacing the old engine's per-sample transpose of W in
 //! backward (two transposed packs per sample) with one repack per solver
 //! step.
+//!
+//! # Fused backward (`PHAST_FUSE_BWD`, default on)
+//!
+//! The gradient sweep used to be dispatch-then-serial-merge: one
+//! batch-parallel region accumulating per-worker `dW`/`db` partials,
+//! then a serial worker-order merge on the dispatching thread.  By
+//! default it now runs as **one** two-stage fused region
+//! ([`par::parallel_regions`]): stage 0 is the per-sample gradient work
+//! (`dW` GeMM, `db` row sums, `Wᵀ·dY` GeMM, col2im into the disjoint
+//! `dX` planes), and stage 1 — after the region barrier — merges the
+//! partials with every worker owning a contiguous slice of `dW`
+//! elements, each element accumulated in worker order.  The per-element
+//! addition order is identical to the serial merge, so the fused
+//! backward is **bitwise equal** to the reference at any fixed thread
+//! count (across thread counts the partial grouping still moves, the
+//! usual tier-3 conv-reduction tolerance).
+//!
+//! # Persistent im2col packing (`PHAST_CONV_PACK`, default on)
+//!
+//! The backward `dW += dY · colsᵀ` was the one hot GeMM still packing
+//! its B operand per call (and Caffe re-runs im2col in backward to
+//! rebuild `cols` first).  The forward already materializes each
+//! sample's column buffer, so it now also captures the **packed** colsᵀ
+//! panels ([`ops::pack_b_slice`]) into a per-layer cache, stamped by the
+//! bottom buffer identity, batch size, and O(1) content sentinels
+//! (see `ColsPackCache` in this file).  Backward consumes the cache
+//! through [`ops::gemm_packed_b_slice`] — skipping both the im2col
+//! recompute and the per-call pack — and falls back to the
+//! recompute-and-pack reference whenever the best-effort stamp detects a
+//! mismatch (the binding contract stays the Caffe layer contract:
+//! backward consumes the bottoms of the immediately preceding forward).
+//! Under the env default the capture starts only after the layer's first
+//! backward, so inference-only forwards pay neither the pack nor the
+//! cache memory.  Packed panels are byte-identical to the ones
+//! the raw GeMM packs on the fly, so results are bitwise unchanged, and
+//! the capture never touches [`ops::gemm::repack_count`] (the
+//! `packs_per_forward` / `packs_per_backward` metrics stay pinned at 0
+//! for frozen weights).
+
+use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
 
@@ -38,6 +75,61 @@ use super::{xavier_fill, Layer};
 
 /// Minimum samples per worker (`PHAST_CONV_GRAIN` overrides).
 static CONV_GRAIN: par::GrainKnob = par::GrainKnob::new("PHAST_CONV_GRAIN", 1);
+
+/// `PHAST_FUSE_BWD`, parsed once: `0` selects the dispatch-then-serial-
+/// merge reference backward; anything else (or unset) the fused
+/// two-stage gradient region.  Both are bitwise equal at a fixed thread
+/// count.
+fn bwd_fusion_default() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| std::env::var("PHAST_FUSE_BWD").map(|v| v.trim() != "0").unwrap_or(true))
+}
+
+/// `PHAST_CONV_PACK`, parsed once: `0` disables the forward-pass capture
+/// of packed im2col panels for the backward `dW` product (backward then
+/// re-runs im2col and packs per call, the reference).  Both are bitwise
+/// equal.  Inference-only runs need no opt-out: under the env default
+/// the capture starts only after the layer's first backward.
+fn cols_pack_default() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| std::env::var("PHAST_CONV_PACK").map(|v| v.trim() != "0").unwrap_or(true))
+}
+
+/// Per-layer cache of packed colsᵀ panels (one [`ops::pack_b_slice`]
+/// block per sample), captured by the forward pass for the backward
+/// `dW += dY · colsᵀ` product.
+///
+/// Contract (the Caffe layer contract, made explicit): backward consumes
+/// the panels captured by the **immediately preceding forward** over the
+/// same bottoms.  The stamp — `n`, `per_sample`, source pointer + length,
+/// plus three content sentinels (first/middle/last element bit patterns)
+/// — is a best-effort guard that catches a *different* bottom tensor and
+/// the common in-place-rewrite cases (a reused buffer whose contents
+/// moved); on any mismatch backward falls back to the recompute path.
+/// `valid` is set only after a complete fill.
+#[derive(Default)]
+struct ColsPackCache {
+    buf: Vec<f32>,
+    per_sample: usize,
+    n: usize,
+    src_ptr: usize,
+    src_len: usize,
+    src_sentinels: [u32; 3],
+    valid: bool,
+}
+
+/// First/middle/last element bit patterns of `xs` — the O(1) content
+/// fingerprint the pack-cache stamp carries besides buffer identity.
+fn sentinels(xs: &[f32]) -> [u32; 3] {
+    if xs.is_empty() {
+        return [0; 3];
+    }
+    [
+        xs[0].to_bits(),
+        xs[xs.len() / 2].to_bits(),
+        xs[xs.len() - 1].to_bits(),
+    ]
+}
 
 pub struct ConvLayer {
     cfg: LayerConfig,
@@ -55,6 +147,26 @@ pub struct ConvLayer {
     packed_w: PackedMat,
     /// Wᵀ packed as GeMM A panels (backward dcols), stamped likewise.
     packed_wt: PackedMat,
+    /// Packed colsᵀ panels captured by forward for the backward dW GeMM.
+    cols_cache: ColsPackCache,
+    /// Persistent per-worker dW partial scratch for the fused backward
+    /// (grow-only; each worker zeroes its own slot inside stage 0, so
+    /// neither the allocation nor the memset runs serially per call).
+    bwd_dw_parts: Vec<f32>,
+    /// Persistent per-worker db partial scratch (same lifecycle).
+    bwd_db_parts: Vec<f32>,
+    /// Per-layer override of the `PHAST_FUSE_BWD` knob (tests/benches).
+    bwd_fused: Option<bool>,
+    /// Per-layer override of the `PHAST_CONV_PACK` knob (tests/benches).
+    bwd_packed: Option<bool>,
+    /// Set by the first backward pass.  Under the env default, forward
+    /// captures im2col packs only once this is true, so inference-only
+    /// workloads (never backward) pay neither the per-sample pack nor
+    /// the cache memory; the training loop pays one recompute backward
+    /// on its first iteration (bitwise-equal reference path) and hits
+    /// the cache from the second on.  An explicit
+    /// [`Layer::set_backward_packing`] override captures immediately.
+    seen_backward: bool,
     seed: u64,
 }
 
@@ -79,6 +191,12 @@ impl ConvLayer {
             cols: vec![],
             packed_w: PackedMat::new(PackSide::A),
             packed_wt: PackedMat::new(PackSide::A),
+            cols_cache: ColsPackCache::default(),
+            bwd_dw_parts: vec![],
+            bwd_db_parts: vec![],
+            bwd_fused: None,
+            bwd_packed: None,
+            seen_backward: false,
             seed,
         })
     }
@@ -98,18 +216,57 @@ impl ConvLayer {
         self.cin * self.cfg.kernel_size * self.cfg.kernel_size
     }
 
+    fn backward_fusion_enabled(&self) -> bool {
+        self.bwd_fused.unwrap_or_else(bwd_fusion_default)
+    }
+
+    fn backward_packing_enabled(&self) -> bool {
+        self.bwd_packed.unwrap_or_else(cols_pack_default)
+    }
+
+    /// Whether this forward should capture im2col packs: the knob must be
+    /// on, and — under the env default — the layer must actually be in a
+    /// training loop (a backward has run); an explicit per-layer override
+    /// captures from the first forward on.
+    fn capture_enabled(&self) -> bool {
+        self.backward_packing_enabled() && (self.bwd_packed.is_some() || self.seen_backward)
+    }
+
     /// Forward body shared by the plain and fused paths.  With
     /// `fused = Some((act, slope))` the leaky-ReLU of each just-computed
     /// output plane is written into `act` inside the **same** parallel
     /// region (one dispatch for conv + bias + activation); the arithmetic
     /// is identical to `forward` followed by `ops::leaky_relu`, so both
-    /// paths are bitwise equal.
+    /// paths are bitwise equal.  When backward packing is enabled, each
+    /// sample's colsᵀ panels are captured into the pack cache while the
+    /// column buffer is hot.
     fn forward_body(&mut self, x: &Tensor, top: &mut [f32], fused: Option<(&mut [f32], f32)>) {
         // Refresh the shared W pack once, on this thread, before any
         // dispatch; every per-sample GeMM below reads it in place.
         let (cout, ckk) = (self.cfg.num_output, self.ckk());
         let wv = self.params[0].data_version();
         self.packed_w.ensure(self.params[0].data().as_slice(), Trans::No, cout, ckk, wv);
+        let capture = self.capture_enabled();
+        let ohw = self.oh * self.ow;
+        let item = cout * ohw;
+        let n = top.len() / item.max(1);
+        let psz = ops::packed_b_len(ohw, ckk);
+
+        // Re-stamp the backward pack cache for this forward; it becomes
+        // valid only after the fill below completes.
+        self.cols_cache.valid = false;
+        if capture {
+            let need = n * psz;
+            if self.cols_cache.buf.len() < need {
+                self.cols_cache.buf.resize(need, 0.0);
+            }
+            self.cols_cache.per_sample = psz;
+            self.cols_cache.n = n;
+            self.cols_cache.src_ptr = x.as_slice().as_ptr() as usize;
+            self.cols_cache.src_len = x.as_slice().len();
+            self.cols_cache.src_sentinels = sentinels(x.as_slice());
+        }
+
         let ctx = SampleCtx {
             xs: x.as_slice(),
             wpack: &self.packed_w,
@@ -118,15 +275,14 @@ impl ConvLayer {
             h: self.h,
             w: self.w,
             g: self.geom(),
-            cout: self.cfg.num_output,
-            ohw: self.oh * self.ow,
-            ckk: self.ckk(),
+            cout,
+            ohw,
+            ckk,
             sample: self.cin * self.h * self.w,
         };
         let tune = par::Tuning::new(CONV_GRAIN.get());
-        let item = ctx.cout * ctx.ohw;
-        let n = top.len() / item;
-        let scratch = ctx.ckk * ctx.ohw;
+        let scratch = ckk * ohw;
+        let cache_buf = &mut self.cols_cache.buf;
 
         match fused {
             None => {
@@ -135,18 +291,34 @@ impl ConvLayer {
                 if tune.workers(n) <= 1 {
                     let cols = &mut self.cols;
                     for s in 0..n {
-                        run_sample(&ctx, s, cols, &mut top[s * item..(s + 1) * item], None);
+                        let pack = if capture {
+                            Some(&mut cache_buf[s * psz..(s + 1) * psz])
+                        } else {
+                            None
+                        };
+                        run_sample(&ctx, s, cols, &mut top[s * item..(s + 1) * item], None, pack);
                     }
-                    return;
+                } else {
+                    // One contiguous sample range per worker; each worker
+                    // owns its column scratch, allocated once for its whole
+                    // range, and writes only its own samples' cache slots.
+                    let cache = if capture {
+                        Some(par::FusedSlice::new(&mut cache_buf[..n * psz]))
+                    } else {
+                        None
+                    };
+                    par::parallel_chunks_mut(top, item, tune, |samples, block| {
+                        let mut cols = vec![0.0f32; scratch];
+                        for (bi, s) in samples.enumerate() {
+                            // SAFETY: sample s belongs to exactly one worker.
+                            let pack = cache
+                                .as_ref()
+                                .map(|v| unsafe { v.slice_mut(s * psz..(s + 1) * psz) });
+                            let out = &mut block[bi * item..(bi + 1) * item];
+                            run_sample(&ctx, s, &mut cols, out, None, pack);
+                        }
+                    });
                 }
-                // One contiguous sample range per worker; each worker owns
-                // its column scratch, allocated once for its whole range.
-                par::parallel_chunks_mut(top, item, tune, |samples, block| {
-                    let mut cols = vec![0.0f32; scratch];
-                    for (bi, s) in samples.enumerate() {
-                        run_sample(&ctx, s, &mut cols, &mut block[bi * item..(bi + 1) * item], None);
-                    }
-                });
             }
             Some((act, slope)) => {
                 debug_assert_eq!(act.len(), top.len());
@@ -155,22 +327,38 @@ impl ConvLayer {
                     for s in 0..n {
                         let (lo, hi) = (s * item, (s + 1) * item);
                         let a = &mut act[lo..hi];
-                        run_sample(&ctx, s, cols, &mut top[lo..hi], Some((a, slope)));
+                        let pack = if capture {
+                            Some(&mut cache_buf[s * psz..(s + 1) * psz])
+                        } else {
+                            None
+                        };
+                        run_sample(&ctx, s, cols, &mut top[lo..hi], Some((a, slope)), pack);
                     }
-                    return;
+                } else {
+                    // Same sample partition, two disjoint output streams: the
+                    // conv top and the fused activation — still one dispatch.
+                    let cache = if capture {
+                        Some(par::FusedSlice::new(&mut cache_buf[..n * psz]))
+                    } else {
+                        None
+                    };
+                    par::parallel_chunks2_mut(top, item, act, item, tune, |samples, block, ablock| {
+                        let mut cols = vec![0.0f32; scratch];
+                        for (bi, s) in samples.enumerate() {
+                            let (lo, hi) = (bi * item, (bi + 1) * item);
+                            let a = &mut ablock[lo..hi];
+                            // SAFETY: sample s belongs to exactly one worker.
+                            let pack = cache
+                                .as_ref()
+                                .map(|v| unsafe { v.slice_mut(s * psz..(s + 1) * psz) });
+                            let out = &mut block[lo..hi];
+                            run_sample(&ctx, s, &mut cols, out, Some((a, slope)), pack);
+                        }
+                    });
                 }
-                // Same sample partition, two disjoint output streams: the
-                // conv top and the fused activation — still one dispatch.
-                par::parallel_chunks2_mut(top, item, act, item, tune, |samples, block, ablock| {
-                    let mut cols = vec![0.0f32; scratch];
-                    for (bi, s) in samples.enumerate() {
-                        let (lo, hi) = (bi * item, (bi + 1) * item);
-                        let a = &mut ablock[lo..hi];
-                        run_sample(&ctx, s, &mut cols, &mut block[lo..hi], Some((a, slope)));
-                    }
-                });
             }
         }
+        self.cols_cache.valid = capture;
     }
 }
 
@@ -195,16 +383,23 @@ struct SampleCtx<'a> {
 
 /// One sample's im2col + GeMM + bias into `out`, then (fused path only)
 /// its leaky-ReLU into `act` — the same element order as the unfused
-/// forward followed by `ops::leaky_relu`, hence bitwise-equal.
+/// forward followed by `ops::leaky_relu`, hence bitwise-equal.  With
+/// `bwd_pack = Some(dst)`, the sample's colsᵀ panels are additionally
+/// packed into `dst` for the backward `dW` product (byte-identical to
+/// the panels backward's raw GeMM would pack on the fly).
 fn run_sample(
     ctx: &SampleCtx<'_>,
     s: usize,
     cols: &mut [f32],
     out: &mut [f32],
     act: Option<(&mut [f32], f32)>,
+    bwd_pack: Option<&mut [f32]>,
 ) {
     let x = &ctx.xs[s * ctx.sample..(s + 1) * ctx.sample];
     ops::im2col(x, ctx.cin, ctx.h, ctx.w, ctx.g, cols);
+    if let Some(dst) = bwd_pack {
+        ops::pack_b_slice(cols, Trans::Yes, ctx.ohw, ctx.ckk, dst);
+    }
     ops::gemm_packed_a(ctx.cout, ctx.ohw, ctx.ckk, 1.0, ctx.wpack, cols, Trans::No, 0.0, out);
     for (c, b) in ctx.bias.iter().enumerate() {
         for v in &mut out[c * ctx.ohw..(c + 1) * ctx.ohw] {
@@ -216,6 +411,58 @@ fn run_sample(
             *av = if *ov > 0.0 { *ov } else { slope * *ov };
         }
     }
+}
+
+/// Sample `s`'s captured pack from the cols cache, or `None` when the
+/// cache is not usable for this backward (fall back to recompute).
+fn cache_slice(cache_buf: &[f32], cache_ok: bool, psz: usize, s: usize) -> Option<&[f32]> {
+    if cache_ok {
+        Some(&cache_buf[s * psz..(s + 1) * psz])
+    } else {
+        None
+    }
+}
+
+/// One sample's gradient work shared by every backward path: `dW` GeMM
+/// (from the captured pack when available, else recompute im2col and let
+/// the raw GeMM pack on the fly — bitwise-identical panels either way),
+/// `db` row sums, the `Wᵀ·dY` product, and col2im into the sample's
+/// `dX` plane.
+#[allow(clippy::too_many_arguments)]
+fn backward_sample(
+    ctx: &SampleCtx<'_>,
+    wtp: &PackedMat,
+    cache: Option<&[f32]>,
+    s: usize,
+    dys: &[f32],
+    cols: &mut [f32],
+    dcols: &mut [f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    dx_plane: &mut [f32],
+) {
+    let (cout, ckk, ohw) = (ctx.cout, ctx.ckk, ctx.ohw);
+    match cache {
+        Some(pack) => {
+            // dW += dY_s (Cout, OHW) * colsᵀ (OHW, CKK), panels pre-packed
+            // by the forward pass.
+            ops::gemm_packed_b_slice(cout, ckk, ohw, 1.0, dys, Trans::No, pack, 1.0, dw);
+        }
+        None => {
+            // Recompute the column buffer (Caffe re-runs im2col in
+            // backward) and pack per call.
+            let x = &ctx.xs[s * ctx.sample..(s + 1) * ctx.sample];
+            ops::im2col(x, ctx.cin, ctx.h, ctx.w, ctx.g, cols);
+            ops::gemm(Trans::No, Trans::Yes, cout, ckk, ohw, 1.0, dys, cols, 1.0, dw);
+        }
+    }
+    // db += row sums of dY_s
+    for c in 0..cout {
+        db[c] += dys[c * ohw..(c + 1) * ohw].iter().sum::<f32>();
+    }
+    // dcols = W^T (CKK, Cout) * dY_s (Cout, OHW), Wᵀ pre-packed
+    ops::gemm_packed_a(ckk, ohw, cout, 1.0, wtp, dys, Trans::No, 0.0, dcols);
+    ops::col2im(dcols, ctx.cin, ctx.h, ctx.w, ctx.g, dx_plane);
 }
 
 impl Layer for ConvLayer {
@@ -253,6 +500,7 @@ impl Layer for ConvLayer {
             self.params = vec![weight, bias];
         }
         self.cols = vec![0.0; self.ckk() * self.oh * self.ow];
+        self.cols_cache = ColsPackCache::default();
         Ok(vec![Shape::nchw(bs.num(), cout, self.oh, self.ow)])
     }
 
@@ -276,6 +524,18 @@ impl Layer for ConvLayer {
         Ok(true)
     }
 
+    fn set_backward_fusion(&mut self, on: bool) {
+        self.bwd_fused = Some(on);
+    }
+
+    fn set_backward_packing(&mut self, on: bool) {
+        self.bwd_packed = Some(on);
+        self.cols_cache.valid = false;
+        if !on {
+            self.cols_cache.buf = Vec::new();
+        }
+    }
+
     fn backward(
         &mut self,
         top_diffs: &[&Tensor],
@@ -287,7 +547,11 @@ impl Layer for ConvLayer {
         let cout = self.cfg.num_output;
         let (ckk, ohw) = (self.ckk(), self.oh * self.ow);
         let sample = self.cin * self.h * self.w;
-        let (cin, h, w, g) = (self.cin, self.h, self.w, self.geom());
+        let fuse = self.backward_fusion_enabled();
+        // From now on, env-default forwards capture im2col packs (see
+        // `capture_enabled`); this first backward takes the recompute
+        // path with an unfilled cache, which is bitwise-equal.
+        self.seen_backward = true;
 
         // Refresh the shared Wᵀ panel cache on this thread (a no-op while
         // the solver hasn't moved the weights), then borrow only the
@@ -295,63 +559,186 @@ impl Layer for ConvLayer {
         // accumulation never invalidates the packs.
         let wv = self.params[0].data_version();
         self.packed_wt.ensure(self.params[0].data().as_slice(), Trans::Yes, ckk, cout, wv);
+
+        let xs = x.as_slice();
+        let dx = bottom_diffs[0].as_mut_slice();
+        let n = dx.len() / sample.max(1);
+        let psz = ops::packed_b_len(ohw, ckk);
+        // The forward-pass pack cache is consumed only when its stamp
+        // (buffer identity + content sentinels) matches the bottoms this
+        // backward was handed — see the `ColsPackCache` contract.
+        let cache_ok = self.cols_cache.valid
+            && self.cols_cache.n == n
+            && self.cols_cache.per_sample == psz
+            && self.cols_cache.src_ptr == xs.as_ptr() as usize
+            && self.cols_cache.src_len == xs.len()
+            && self.cols_cache.src_sentinels == sentinels(xs);
+        let cache_buf: &[f32] = if cache_ok { &self.cols_cache.buf[..n * psz] } else { &[] };
+
+        let ctx = SampleCtx {
+            xs,
+            wpack: &self.packed_w, // unused by backward_sample, kept for the shared ctx
+            bias: &[],
+            cin: self.cin,
+            h: self.h,
+            w: self.w,
+            g: self.geom(),
+            cout,
+            ohw,
+            ckk,
+            sample,
+        };
         let wtp = &self.packed_wt;
         let (wblob, bblob) = self.params.split_at_mut(1);
         let wdiff = wblob[0].diff_mut();
         let dys_all = dy.as_slice();
-        let xs = x.as_slice();
-        let dx = bottom_diffs[0].as_mut_slice();
         let tune = par::Tuning::new(CONV_GRAIN.get());
+        let workers = tune.workers(n);
 
         // Serial path (one worker): accumulate straight into the blob
         // diffs — no local dW/db, no merge pass, matching the seed's
         // serial cost profile.
-        let n = dx.len() / sample;
-        if tune.workers(n) <= 1 {
+        if workers <= 1 {
             let dw = wdiff.as_mut_slice();
             let db = bblob[0].diff_mut().as_mut_slice();
             let cols = &mut self.cols; // persistent scratch, like the seed
             let mut dcols = vec![0.0f32; ckk * ohw];
             for s in 0..n {
                 let dys = &dys_all[s * cout * ohw..(s + 1) * cout * ohw];
-                ops::im2col(&xs[s * sample..(s + 1) * sample], cin, h, w, g, cols);
-                ops::gemm(Trans::No, Trans::Yes, cout, ckk, ohw, 1.0, dys, cols, 1.0, dw);
-                for c in 0..cout {
-                    db[c] += dys[c * ohw..(c + 1) * ohw].iter().sum::<f32>();
-                }
-                ops::gemm_packed_a(ckk, ohw, cout, 1.0, wtp, dys, Trans::No, 0.0, &mut dcols);
-                ops::col2im(&dcols, cin, h, w, g, &mut dx[s * sample..(s + 1) * sample]);
+                backward_sample(
+                    &ctx,
+                    wtp,
+                    cache_slice(cache_buf, cache_ok, psz, s),
+                    s,
+                    dys,
+                    cols,
+                    &mut dcols,
+                    dw,
+                    db,
+                    &mut dx[s * sample..(s + 1) * sample],
+                );
             }
             return Ok(());
         }
 
-        // Each worker: private cols/dcols scratch + private dW/db
-        // accumulators over its contiguous sample range; dX planes are
-        // disjoint so they are written in place.
+        if fuse {
+            // Fused backward: one two-stage region.  Stage 0 — per-sample
+            // gradient work into per-worker dW/db partials and the
+            // disjoint dX planes; stage 1 (across the region barrier) —
+            // deterministic merge, each worker owning a contiguous slice
+            // of dW elements, every element accumulated in worker order
+            // (the exact addition order of the serial reference merge).
+            let dwlen = cout * ckk;
+            let sample_ranges = par::partition(n, workers);
+            let merge_ranges = par::partition(dwlen, workers);
+            // Persistent partial scratch: grown (rarely) here, but zeroed
+            // by each worker inside stage 0 — no serial memset per call.
+            let need_dw = workers * dwlen;
+            if self.bwd_dw_parts.len() < need_dw {
+                self.bwd_dw_parts.resize(need_dw, 0.0);
+            }
+            let need_db = workers * cout;
+            if self.bwd_db_parts.len() < need_db {
+                self.bwd_db_parts.resize(need_db, 0.0);
+            }
+            let dw = wdiff.as_mut_slice();
+            let db = bblob[0].diff_mut().as_mut_slice();
+            {
+                let dxv = par::FusedSlice::new(dx);
+                let dwpv = par::FusedSlice::new(&mut self.bwd_dw_parts[..need_dw]);
+                let dbpv = par::FusedSlice::new(&mut self.bwd_db_parts[..need_db]);
+                let dwv = par::FusedSlice::new(dw);
+                let dbv = par::FusedSlice::new(db);
+                let region_tune = par::Tuning { threads: workers, grain: 1 };
+                par::parallel_regions(workers, 2, region_tune, |stage, wr| {
+                    for wi in wr {
+                        if stage == 0 {
+                            // SAFETY: worker wi exclusively owns partial
+                            // slot wi and the dX planes of its samples.
+                            let dw_loc = unsafe { dwpv.slice_mut(wi * dwlen..(wi + 1) * dwlen) };
+                            let db_loc = unsafe { dbpv.slice_mut(wi * cout..(wi + 1) * cout) };
+                            // The scratch persists across calls: clear our
+                            // slot before accumulating into it.
+                            dw_loc.fill(0.0);
+                            db_loc.fill(0.0);
+                            let mut cols =
+                                if cache_ok { Vec::new() } else { vec![0.0f32; ckk * ohw] };
+                            let mut dcols = vec![0.0f32; ckk * ohw];
+                            for s in sample_ranges[wi].clone() {
+                                let dys = &dys_all[s * cout * ohw..(s + 1) * cout * ohw];
+                                let dx_plane =
+                                    unsafe { dxv.slice_mut(s * sample..(s + 1) * sample) };
+                                backward_sample(
+                                    &ctx,
+                                    wtp,
+                                    cache_slice(cache_buf, cache_ok, psz, s),
+                                    s,
+                                    dys,
+                                    &mut cols,
+                                    &mut dcols,
+                                    dw_loc,
+                                    db_loc,
+                                    dx_plane,
+                                );
+                            }
+                        } else {
+                            // SAFETY: cross-worker reads of the stage-0
+                            // partials are ordered by the region barrier;
+                            // merge ranges are disjoint per worker.
+                            let parts: Vec<&[f32]> = (0..workers)
+                                .map(|p| unsafe { dwpv.slice(p * dwlen..(p + 1) * dwlen) })
+                                .collect();
+                            let r = if wi < merge_ranges.len() {
+                                merge_ranges[wi].clone()
+                            } else {
+                                0..0
+                            };
+                            let dwm = unsafe { dwv.slice_mut(r.clone()) };
+                            for (off, d) in dwm.iter_mut().enumerate() {
+                                let i = r.start + off;
+                                let mut acc = *d;
+                                for p in &parts {
+                                    acc += p[i];
+                                }
+                                *d = acc;
+                            }
+                            if wi == 0 {
+                                let dbm = unsafe { dbv.slice_mut(0..cout) };
+                                for p in 0..workers {
+                                    let part = unsafe { dbpv.slice(p * cout..(p + 1) * cout) };
+                                    for (d, s) in dbm.iter_mut().zip(part) {
+                                        *d += s;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+            return Ok(());
+        }
+
+        // Reference backward (`PHAST_FUSE_BWD=0`): each worker collects
+        // private dW/db accumulators over its contiguous sample range
+        // (dX planes are disjoint so they are written in place), then the
+        // dispatching thread merges the partials serially in worker order.
         let partials = par::parallel_chunks_reduce(dx, sample, tune, |samples, dx_block| {
-            let mut cols = vec![0.0f32; ckk * ohw];
+            let mut cols = if cache_ok { Vec::new() } else { vec![0.0f32; ckk * ohw] };
             let mut dcols = vec![0.0f32; ckk * ohw];
             let mut dw_loc = vec![0.0f32; cout * ckk];
             let mut db_loc = vec![0.0f32; cout];
             for (bi, s) in samples.enumerate() {
                 let dys = &dys_all[s * cout * ohw..(s + 1) * cout * ohw];
-                // Recompute the column buffer (Caffe re-runs im2col in
-                // backward).
-                ops::im2col(&xs[s * sample..(s + 1) * sample], cin, h, w, g, &mut cols);
-                // dW += dY_s (Cout, OHW) * cols^T (OHW, CKK)
-                ops::gemm(Trans::No, Trans::Yes, cout, ckk, ohw, 1.0, dys, &cols, 1.0, &mut dw_loc);
-                // db += row sums of dY_s
-                for c in 0..cout {
-                    db_loc[c] += dys[c * ohw..(c + 1) * ohw].iter().sum::<f32>();
-                }
-                // dcols = W^T (CKK, Cout) * dY_s (Cout, OHW), Wᵀ pre-packed
-                ops::gemm_packed_a(ckk, ohw, cout, 1.0, wtp, dys, Trans::No, 0.0, &mut dcols);
-                ops::col2im(
-                    &dcols,
-                    cin,
-                    h,
-                    w,
-                    g,
+                backward_sample(
+                    &ctx,
+                    wtp,
+                    cache_slice(cache_buf, cache_ok, psz, s),
+                    s,
+                    dys,
+                    &mut cols,
+                    &mut dcols,
+                    &mut dw_loc,
+                    &mut db_loc,
                     &mut dx_block[bi * sample..(bi + 1) * sample],
                 );
             }
@@ -455,6 +842,92 @@ mod tests {
             let num = (lp - lm) / (2.0 * eps);
             assert!(close(num, ana, 2e-2, 2e-2), "dW[{idx}]: {num} vs {ana}");
         }
+    }
+
+    /// Backward with a stale pack cache (different bottoms than the last
+    /// forward) must fall back to the recompute path and produce the
+    /// gradients of the bottoms it was handed — bitwise equal to a layer
+    /// that never cached.
+    #[test]
+    fn stale_cols_cache_falls_back_to_recompute() {
+        let in_shape = Shape::nchw(2, 2, 6, 6);
+        let mut rng = Rng::new(31);
+        let x1 = Tensor::from_vec(in_shape.clone(), rng.normal_vec(in_shape.count()));
+        let x2 = Tensor::from_vec(in_shape.clone(), rng.normal_vec(in_shape.count()));
+
+        let mut cached = ConvLayer::new(conv_cfg(3, 3, 1, 1), 7).unwrap();
+        let out_shape = cached.setup(&[in_shape.clone()]).unwrap().remove(0);
+        cached.set_backward_packing(true);
+        let mut plain = ConvLayer::new(conv_cfg(3, 3, 1, 1), 7).unwrap();
+        plain.setup(&[in_shape.clone()]).unwrap();
+        plain.set_backward_packing(false);
+
+        let dy = Tensor::from_vec(out_shape.clone(), rng.normal_vec(out_shape.count()));
+        let mut y = Tensor::zeros(out_shape.clone());
+        // Forward on x1 fills the cache; backward on x2 must ignore it.
+        cached.forward(&[&x1], std::slice::from_mut(&mut y)).unwrap();
+        plain.forward(&[&x1], std::slice::from_mut(&mut y)).unwrap();
+        let mut dx_cached = Tensor::zeros(in_shape.clone());
+        let mut dx_plain = Tensor::zeros(in_shape.clone());
+        cached.backward(&[&dy], &[&x2], std::slice::from_mut(&mut dx_cached)).unwrap();
+        plain.backward(&[&dy], &[&x2], std::slice::from_mut(&mut dx_plain)).unwrap();
+        assert_eq!(dx_cached.as_slice(), dx_plain.as_slice(), "stale cache was consumed");
+        assert_eq!(
+            cached.params()[0].diff().as_slice(),
+            plain.params()[0].diff().as_slice(),
+            "stale cache perturbed dW"
+        );
+    }
+
+    /// Rewriting the bottom buffer **in place** (same pointer, new
+    /// contents) between forward and backward must also defeat the cache:
+    /// the content sentinels in the stamp catch what pointer identity
+    /// cannot.
+    #[test]
+    fn in_place_bottom_rewrite_invalidates_cache() {
+        let in_shape = Shape::nchw(2, 2, 6, 6);
+        let mut rng = Rng::new(91);
+        let mut x = Tensor::from_vec(in_shape.clone(), rng.normal_vec(in_shape.count()));
+
+        let mut cached = ConvLayer::new(conv_cfg(3, 3, 1, 1), 7).unwrap();
+        let out_shape = cached.setup(&[in_shape.clone()]).unwrap().remove(0);
+        cached.set_backward_packing(true);
+        let mut plain = ConvLayer::new(conv_cfg(3, 3, 1, 1), 7).unwrap();
+        plain.setup(&[in_shape.clone()]).unwrap();
+        plain.set_backward_packing(false);
+
+        let dy = Tensor::from_vec(out_shape.clone(), rng.normal_vec(out_shape.count()));
+        let mut y = Tensor::zeros(out_shape.clone());
+        cached.forward(&[&x], std::slice::from_mut(&mut y)).unwrap();
+        // Same buffer, new values: every sentinel element moves.
+        for v in x.as_mut_slice() {
+            *v += 1.0;
+        }
+        let mut dx_cached = Tensor::zeros(in_shape.clone());
+        let mut dx_plain = Tensor::zeros(in_shape.clone());
+        cached.backward(&[&dy], &[&x], std::slice::from_mut(&mut dx_cached)).unwrap();
+        plain.backward(&[&dy], &[&x], std::slice::from_mut(&mut dx_plain)).unwrap();
+        assert_eq!(
+            cached.params()[0].diff().as_slice(),
+            plain.params()[0].diff().as_slice(),
+            "stale in-place cache was consumed for dW"
+        );
+        assert_eq!(dx_cached.as_slice(), dx_plain.as_slice());
+    }
+
+    /// Backward without any prior forward (cache never filled) must work
+    /// via the recompute path.
+    #[test]
+    fn backward_without_forward_recomputes() {
+        let in_shape = Shape::nchw(2, 1, 5, 5);
+        let mut l = ConvLayer::new(conv_cfg(2, 3, 1, 0), 5).unwrap();
+        let out_shape = l.setup(&[in_shape.clone()]).unwrap().remove(0);
+        let mut rng = Rng::new(6);
+        let x = Tensor::from_vec(in_shape.clone(), rng.normal_vec(in_shape.count()));
+        let dy = Tensor::from_vec(out_shape.clone(), rng.normal_vec(out_shape.count()));
+        let mut dx = Tensor::zeros(in_shape.clone());
+        l.backward(&[&dy], &[&x], std::slice::from_mut(&mut dx)).unwrap();
+        assert!(l.params()[0].diff().l2() > 0.0);
     }
 
     #[test]

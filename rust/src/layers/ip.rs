@@ -158,12 +158,23 @@ impl Layer for IpLayer {
         let db = bblob[0].diff_mut().as_mut_slice();
         // dW += dY^T (nout, n) * X (n, k)  — parallel inside gemm
         ops::gemm(Trans::Yes, Trans::No, nout, self.k, n, 1.0, dy.as_slice(), x.as_slice(), 1.0, dw);
-        // db += column sums of dY
-        for r in 0..n {
-            for (dbv, dyv) in db.iter_mut().zip(&dy.as_slice()[r * nout..(r + 1) * nout]) {
-                *dbv += dyv;
+        // db += column sums of dY, column-parallel: every column's rows
+        // are summed in ascending order regardless of the split, so the
+        // result is bitwise equal to the serial row-major sweep at any
+        // thread count.  The grain is derived like the fused bias region's
+        // (PHAST_BIAS_GRAIN elements per worker), so tiny heads (ip2's
+        // 10 columns) stay serial where dispatch would dominate.
+        let dys = dy.as_slice();
+        let col_grain = BIAS_GRAIN.get().div_ceil(n.max(1));
+        par::parallel_chunks_mut(db, 1, par::Tuning::new(col_grain), |cols_r, dbb| {
+            for (bi, j) in cols_r.enumerate() {
+                let mut acc = dbb[bi];
+                for r in 0..n {
+                    acc += dys[r * nout + j];
+                }
+                dbb[bi] = acc;
             }
-        }
+        });
         // dX = dY (n, nout) * W (nout, k), W pre-packed  — parallel inside gemm
         ops::gemm_packed_b(
             n,
@@ -259,6 +270,30 @@ mod tests {
             l.params_mut()[0].data_mut().as_mut_slice()[idx] = orig;
             let num = (lp - lm) / (2.0 * eps);
             assert!(close(num, ana, 2e-2, 2e-2), "dW[{idx}]");
+        }
+    }
+
+    #[test]
+    fn backward_db_invariant_to_thread_count() {
+        // The column-parallel db reduction must match the serial sweep
+        // bitwise (each column's rows are summed in ascending order under
+        // any split).
+        let run = |threads: usize| -> Vec<f32> {
+            par::with_threads(threads, || {
+                let mut l = IpLayer::new(ip_cfg(5), 3);
+                let in_shape = Shape::new(&[7, 4]);
+                let out_shape = l.setup(std::slice::from_ref(&in_shape)).unwrap().remove(0);
+                let mut rng = Rng::new(55);
+                let x = Tensor::from_vec(in_shape.clone(), rng.normal_vec(in_shape.count()));
+                let dy = Tensor::from_vec(out_shape.clone(), rng.normal_vec(out_shape.count()));
+                let mut dx = Tensor::zeros(in_shape);
+                l.backward(&[&dy], &[&x], std::slice::from_mut(&mut dx)).unwrap();
+                l.params()[1].diff().as_slice().to_vec()
+            })
+        };
+        let want = run(1);
+        for t in [2usize, 5, 16] {
+            assert_eq!(want, run(t), "db diverged at {t} threads");
         }
     }
 

@@ -63,6 +63,18 @@ pub trait Layer {
         Ok(false)
     }
 
+    /// Force this layer's backward-fusion mode (fused gradient region vs
+    /// the dispatch-then-serial-merge reference), overriding the
+    /// process-wide `PHAST_FUSE_BWD` knob.  Both modes are bitwise equal
+    /// at a fixed thread count; layers without a fused backward ignore it.
+    fn set_backward_fusion(&mut self, _on: bool) {}
+
+    /// Force this layer's backward operand-packing mode (persistent
+    /// im2col panel capture vs per-call recompute+pack), overriding the
+    /// process-wide `PHAST_CONV_PACK` knob.  Both modes are bitwise
+    /// equal; layers without a pack cache ignore it.
+    fn set_backward_packing(&mut self, _on: bool) {}
+
     /// Learnable parameter blobs (weight, bias) — empty for stateless layers.
     fn params(&self) -> &[Blob] {
         &[]

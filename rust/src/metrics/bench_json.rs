@@ -119,18 +119,33 @@ fn scan_string(chars: &[char], at: usize) -> Option<(String, usize)> {
 /// back.  Raw values must be valid JSON (number, string, array, object).
 ///
 /// The write goes through a temp file + rename so a killed bench can
-/// never leave a truncated record behind, and non-empty existing content
-/// that parses to zero entries (i.e. a corrupt record about to be
-/// dropped) is reported on stderr instead of vanishing silently.
+/// never leave a truncated record behind.  A non-empty existing record
+/// that parses to **zero** entries is corrupt: its keyed history would
+/// silently vanish under the old clobber-and-continue behaviour, so it
+/// is now **renamed aside** (loudly, on stderr) to the first unused of
+/// `<path>.corrupt`, `<path>.corrupt-1`, … before the fresh record is
+/// written — nothing is ever dropped, including earlier preserved
+/// corruptions.  If even the rename fails, the merge errors out instead
+/// of overwriting the evidence.
 pub fn merge_entries(path: &Path, updates: &[(&str, String)]) -> std::io::Result<()> {
     let existing = std::fs::read_to_string(path).unwrap_or_else(|_| String::from("{}"));
     let mut entries = top_level_entries(&existing);
     let trimmed = existing.trim();
     if entries.is_empty() && !trimmed.is_empty() && trimmed != "{}" {
+        // First unused aside name, so repeated corruption never clobbers
+        // an earlier preserved record.
+        let mut aside = path.with_extension("json.corrupt");
+        let mut i = 0;
+        while aside.exists() {
+            i += 1;
+            aside = path.with_extension(format!("json.corrupt-{i}"));
+        }
         eprintln!(
-            "warning: {} held unparseable content; starting a fresh record",
-            path.display()
+            "error: {} held unparseable content; moving it aside to {} and starting a fresh record",
+            path.display(),
+            aside.display()
         );
+        std::fs::rename(path, &aside)?;
     }
     for (key, value) in updates {
         match entries.iter_mut().find(|(k, _)| k == key) {
@@ -188,6 +203,55 @@ mod tests {
         assert!(entries[0].1.contains("\"v\": 2"), "update not applied: {merged}");
         assert_eq!(entries[1].1, "[1, 2, 3]", "sibling entry clobbered: {merged}");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn malformed_record_is_renamed_aside_not_clobbered() {
+        let dir = std::env::temp_dir().join("phast_bench_json_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("merge.json");
+        let aside = path.with_extension("json.corrupt");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&aside);
+
+        // A corrupt (non-empty, zero-entry) record must survive as
+        // `<path>.corrupt` byte-for-byte, and the merge must still
+        // produce a fresh valid record.
+        let garbage = "]]]this was someone's bench history[[[";
+        std::fs::write(&path, garbage).unwrap();
+        merge_entries(&path, &[("fresh", "42".to_string())]).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&aside).unwrap(),
+            garbage,
+            "corrupt history must be preserved aside"
+        );
+        let merged = std::fs::read_to_string(&path).unwrap();
+        let entries = top_level_entries(&merged);
+        assert_eq!(entries, vec![("fresh".to_string(), "42".to_string())], "{merged}");
+
+        // A second corruption must not clobber the first preserved file:
+        // it lands on the next unused aside name.
+        let aside1 = path.with_extension("json.corrupt-1");
+        let _ = std::fs::remove_file(&aside1);
+        let garbage2 = "different garbage, also worth keeping";
+        std::fs::write(&path, garbage2).unwrap();
+        merge_entries(&path, &[("fresh", "43".to_string())]).unwrap();
+        assert_eq!(std::fs::read_to_string(&aside).unwrap(), garbage, "first aside clobbered");
+        assert_eq!(
+            std::fs::read_to_string(&aside1).unwrap(),
+            garbage2,
+            "second corruption must land on the next unused name"
+        );
+
+        // An empty or `{}` record is not corrupt: no rename happens.
+        let _ = std::fs::remove_file(&aside);
+        let _ = std::fs::remove_file(&aside1);
+        std::fs::write(&path, "{}").unwrap();
+        merge_entries(&path, &[("next", "1".to_string())]).unwrap();
+        assert!(!aside.exists(), "a well-formed empty record must not be moved aside");
+
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&aside);
     }
 
     #[test]

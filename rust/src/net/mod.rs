@@ -135,6 +135,25 @@ impl Net {
         self.layer_fusion = on;
     }
 
+    /// Force every layer's backward-fusion mode (fused gradient region vs
+    /// dispatch-then-serial-merge reference), overriding `PHAST_FUSE_BWD`.
+    /// Both modes are bitwise-equal at a fixed thread count; the toggle
+    /// exists for A/B benches and the equivalence tests.
+    pub fn set_backward_fusion(&mut self, on: bool) {
+        for l in &mut self.layers {
+            l.set_backward_fusion(on);
+        }
+    }
+
+    /// Force every layer's backward operand-packing mode (persistent
+    /// im2col panel capture vs per-call recompute+pack), overriding
+    /// `PHAST_CONV_PACK`.  Both modes are bitwise-equal.
+    pub fn set_backward_packing(&mut self, on: bool) {
+        for l in &mut self.layers {
+            l.set_backward_packing(on);
+        }
+    }
+
     /// The fusion plan as (producer, fused ReLU) layer-index pairs.
     pub fn fusion_plan(&self) -> Vec<(usize, usize)> {
         self.fused_relu

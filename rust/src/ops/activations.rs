@@ -55,7 +55,9 @@ pub fn leaky_relu_bwd(x: &[f32], dy: &[f32], alpha: f32, dx: &mut [f32]) {
 pub fn softmax(x: &[f32], n: usize, c: usize, p: &mut [f32]) {
     assert_eq!(x.len(), n * c);
     assert_eq!(p.len(), n * c);
-    if c == 0 {
+    // Degenerate shapes, explicit (mirrors the GeMM engine's m/n/k == 0
+    // handling): an empty batch or zero classes means no rows to map.
+    if n == 0 || c == 0 {
         return;
     }
     par::parallel_chunks_mut(p, c, par::Tuning::new(SOFTMAX_GRAIN.get()), |rows, pb| {
@@ -78,8 +80,15 @@ pub fn softmax(x: &[f32], n: usize, c: usize, p: &mut [f32]) {
 }
 
 /// SoftmaxWithLoss forward: mean cross-entropy + probabilities.
+///
+/// Degenerate shapes are explicit: an empty batch (`n == 0`) has a mean
+/// loss of 0 by convention (the old `loss / n` returned NaN), and a
+/// single class (`c == 1`) is always predicted perfectly (loss 0).
 pub fn softmax_xent(x: &[f32], labels: &[i32], n: usize, c: usize, p: &mut [f32]) -> f32 {
     softmax(x, n, c, p);
+    if n == 0 || c == 0 {
+        return 0.0;
+    }
     let mut loss = 0.0f32;
     for r in 0..n {
         let l = labels[r] as usize;
@@ -93,7 +102,9 @@ pub fn softmax_xent(x: &[f32], labels: &[i32], n: usize, c: usize, p: &mut [f32]
 pub fn softmax_xent_bwd(p: &[f32], labels: &[i32], n: usize, c: usize, dx: &mut [f32]) {
     assert_eq!(p.len(), n * c);
     assert_eq!(dx.len(), n * c);
-    if c == 0 {
+    // Empty batch or zero classes: nothing to scatter (and `1.0 / n`
+    // would be infinite for n == 0).
+    if n == 0 || c == 0 {
         return;
     }
     let inv = 1.0 / n as f32;
@@ -119,6 +130,12 @@ pub fn softmax_xent_bwd(p: &[f32], labels: &[i32], n: usize, c: usize, dx: &mut 
 pub fn accuracy(x: &[f32], labels: &[i32], n: usize, c: usize, top_k: usize) -> f32 {
     assert_eq!(x.len(), n * c);
     assert_eq!(labels.len(), n);
+    // Degenerate shapes, explicit: an empty batch has 0 hits out of 0
+    // rows (0.0 by convention, not the old `0 / 0` NaN), and zero
+    // classes leave no label to score.
+    if n == 0 || c == 0 {
+        return 0.0;
+    }
     let tune = par::Tuning::new(ACCURACY_GRAIN.get());
     let hits = par::parallel_reduce(
         n,
@@ -215,6 +232,38 @@ mod tests {
                 assert!(s.abs() < 1e-6, "row grad sum {s}");
             }
         });
+    }
+
+    #[test]
+    fn degenerate_shapes_are_explicit() {
+        // Batch 0: no rows, finite outputs (no NaN from the 1/n means),
+        // no panics.
+        let mut p: Vec<f32> = vec![];
+        softmax(&[], 0, 5, &mut p);
+        let loss = softmax_xent(&[], &[], 0, 5, &mut p);
+        assert_eq!(loss, 0.0, "empty-batch loss must be 0, not NaN");
+        let mut dx: Vec<f32> = vec![];
+        softmax_xent_bwd(&[], &[], 0, 5, &mut dx);
+        assert_eq!(accuracy(&[], &[], 0, 5, 1), 0.0, "empty-batch accuracy must be 0, not NaN");
+
+        // Zero classes: nothing to score, nothing to index.
+        softmax(&[], 3, 0, &mut p);
+        assert_eq!(softmax_xent(&[], &[0, 0, 0], 3, 0, &mut p), 0.0);
+        softmax_xent_bwd(&[], &[0, 0, 0], 3, 0, &mut dx);
+        assert_eq!(accuracy(&[], &[0, 0, 0], 3, 0, 1), 0.0);
+
+        // Single class: the softmax simplex is the point {1.0}, the loss
+        // is exactly 0, and accuracy is always a hit.
+        let x = [3.0f32, -1.0];
+        let mut p1 = [0.0f32; 2];
+        softmax(&x, 2, 1, &mut p1);
+        assert_eq!(p1, [1.0, 1.0]);
+        let loss = softmax_xent(&x, &[0, 0], 2, 1, &mut p1);
+        assert_eq!(loss, 0.0);
+        let mut g1 = [9.0f32; 2];
+        softmax_xent_bwd(&p1, &[0, 0], 2, 1, &mut g1);
+        assert_eq!(g1, [0.0, 0.0]);
+        assert_eq!(accuracy(&x, &[0, 0], 2, 1, 1), 1.0);
     }
 
     #[test]

@@ -580,6 +580,57 @@ pub fn gemm_packed_a(
     });
 }
 
+/// Floats needed to hold op(B) (`k` × `n`) in the packed panel layout
+/// ([`pack_b_slice`] / [`gemm_packed_b_slice`]): `NR`-column micro-panels,
+/// zero-padded at the ragged edge.
+pub fn packed_b_len(k: usize, n: usize) -> usize {
+    k * n.div_ceil(NR) * NR
+}
+
+/// Pack op(B) (logical `(k, n)`; stored `(n, k)` row-major when
+/// `trans == Yes`) into `dst` (length [`packed_b_len`]`(k, n)`), using the
+/// process-wide KC blocking — **byte-identical** to the panels the raw
+/// [`gemm`] entry point packs into its thread-local scratch, so a product
+/// fed through [`gemm_packed_b_slice`] is bitwise-equal to the on-the-fly
+/// path.  Unlike [`PackedMat::ensure`] this performs no version-stamp
+/// bookkeeping and does **not** count toward [`repack_count`]: it is the
+/// primitive for caller-managed pack caches whose source data changes
+/// every iteration (e.g. the conv layer's per-sample im2col panels,
+/// captured during forward for the backward `dW` product).
+pub fn pack_b_slice(src: &[f32], trans: Trans, k: usize, n: usize, dst: &mut [f32]) {
+    assert_eq!(src.len(), k * n, "pack_b_slice source size");
+    assert_eq!(dst.len(), packed_b_len(k, n), "pack_b_slice destination size");
+    let view = View { data: src, rows: k, cols: n, trans: matches!(trans, Trans::Yes) };
+    pack_b_full(view, k, n, blocking_params().kc, dst);
+}
+
+/// [`gemm`] whose B operand is a caller-held pre-packed panel slice
+/// (filled by [`pack_b_slice`] with the same `(k, n)`): C = alpha *
+/// op(A) * B̂ + beta * C.  Skips all B packing without the [`PackedMat`]
+/// stamp machinery — the conv backward's persistent im2col-pack path.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_b_slice(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    ta: Trans,
+    bpack: &[f32],
+    beta: f32,
+    c: &mut [f32],
+) {
+    assert_eq!(c.len(), m * n, "C size");
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(bpack.len(), packed_b_len(k, n), "packed B size");
+    if degenerate(m, n, k, beta, c) {
+        return;
+    }
+    let blk = blocking_params();
+    let av = View { data: a, rows: m, cols: k, trans: matches!(ta, Trans::Yes) };
+    dispatch(ASource::Raw(av), bpack, m, n, k, blk, alpha, beta, c);
+}
+
 /// Which operand slot a [`PackedMat`] is packed for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PackSide {
@@ -1006,6 +1057,36 @@ mod tests {
                 assert_eq!(want, got);
             }
         });
+    }
+
+    #[test]
+    fn packed_b_slice_matches_raw_bitwise() {
+        forall("gemm-packed-b-slice", 12, |rng: &mut Rng| {
+            let m = rng.range(1, 20);
+            let n = rng.range(1, 40);
+            let k = rng.range(1, 40);
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            for tb in [Trans::No, Trans::Yes] {
+                let mut want = vec![0.5f32; m * n];
+                gemm(Trans::No, tb, m, n, k, 1.0, &a, &b, 2.0, &mut want);
+                let mut bpack = vec![0.0f32; packed_b_len(k, n)];
+                pack_b_slice(&b, tb, k, n, &mut bpack);
+                let mut got = vec![0.5f32; m * n];
+                gemm_packed_b_slice(m, n, k, 1.0, &a, Trans::No, &bpack, 2.0, &mut got);
+                // Identical panel bytes, identical per-row K order.
+                assert_eq!(want, got);
+            }
+        });
+    }
+
+    #[test]
+    fn pack_b_slice_does_not_count_as_repack() {
+        let b = vec![1.0f32; 6 * 8];
+        let mut dst = vec![0.0f32; packed_b_len(6, 8)];
+        let c0 = repack_count();
+        pack_b_slice(&b, Trans::No, 6, 8, &mut dst);
+        assert_eq!(repack_count(), c0, "caller-managed packs must not move the repack metric");
     }
 
     #[test]

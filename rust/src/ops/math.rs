@@ -100,6 +100,35 @@ pub fn sgd_update_fused(
     momentum: f32,
     decay: f32,
 ) {
+    sgd_update_fused_impl(w, g, hist, lr, momentum, decay, false);
+}
+
+/// [`sgd_update_fused`] through [`par::parallel_regions_unsynced`]: the
+/// three stages are element-local (each touches only the worker's own
+/// range), so the inter-stage barrier is provably unnecessary and this
+/// is **bitwise equal** to the barrier path at every thread count — it
+/// only skips `2` barrier crossings per blob.  The barrier path stays
+/// the reference (`PHAST_FUSE_UNSYNC=0` restores it process-wide).
+pub fn sgd_update_fused_unsynced(
+    w: &mut [f32],
+    g: &mut [f32],
+    hist: &mut [f32],
+    lr: f32,
+    momentum: f32,
+    decay: f32,
+) {
+    sgd_update_fused_impl(w, g, hist, lr, momentum, decay, true);
+}
+
+fn sgd_update_fused_impl(
+    w: &mut [f32],
+    g: &mut [f32],
+    hist: &mut [f32],
+    lr: f32,
+    momentum: f32,
+    decay: f32,
+    unsync: bool,
+) {
     let n = w.len();
     assert_eq!(g.len(), n);
     assert_eq!(hist.len(), n);
@@ -107,21 +136,26 @@ pub fn sgd_update_fused(
     let wv = par::FusedSlice::new(w);
     let gv = par::FusedSlice::new(g);
     let hv = par::FusedSlice::new(hist);
-    par::parallel_regions(n, 3, tune, |stage, r| {
-        // SAFETY: every stage re-slices the worker's own partition range,
-        // so concurrent views are disjoint (the fused-region contract).
-        unsafe {
-            sgd_stage(
-                stage,
-                wv.slice_mut(r.clone()),
-                gv.slice_mut(r.clone()),
-                hv.slice_mut(r),
-                lr,
-                momentum,
-                decay,
-            );
-        }
-    });
+    // SAFETY: every stage re-slices the worker's own partition range, so
+    // concurrent views are disjoint (the fused-region contract).  No
+    // stage reads outside its own range, which is also what licenses the
+    // barrier-free variant.
+    let body = |stage: usize, r: std::ops::Range<usize>| unsafe {
+        sgd_stage(
+            stage,
+            wv.slice_mut(r.clone()),
+            gv.slice_mut(r.clone()),
+            hv.slice_mut(r),
+            lr,
+            momentum,
+            decay,
+        );
+    };
+    if unsync {
+        par::parallel_regions_unsynced(n, 3, tune, body);
+    } else {
+        par::parallel_regions(n, 3, tune, body);
+    }
 }
 
 /// One parameter blob's `(weights, gradient, history)` slices for the
@@ -135,6 +169,29 @@ pub type SgdParamView<'a> = (&'a mut [f32], &'a mut [f32], &'a mut [f32]);
 /// stage bodies as [`sgd_update_fused`], hence bitwise equal to both the
 /// per-blob fused path and the unfused three-call sequence.
 pub fn sgd_update_fused_flat(params: Vec<SgdParamView<'_>>, lr: f32, momentum: f32, decay: f32) {
+    sgd_update_fused_flat_impl(params, lr, momentum, decay, false);
+}
+
+/// [`sgd_update_fused_flat`] through [`par::parallel_regions_unsynced`]:
+/// a worker's global range maps to the same segment-local ranges in every
+/// stage and no stage reads outside them, so the chain is pointwise and
+/// bitwise equal to the barrier path (see [`sgd_update_fused_unsynced`]).
+pub fn sgd_update_fused_flat_unsynced(
+    params: Vec<SgdParamView<'_>>,
+    lr: f32,
+    momentum: f32,
+    decay: f32,
+) {
+    sgd_update_fused_flat_impl(params, lr, momentum, decay, true);
+}
+
+fn sgd_update_fused_flat_impl(
+    params: Vec<SgdParamView<'_>>,
+    lr: f32,
+    momentum: f32,
+    decay: f32,
+    unsync: bool,
+) {
     struct Seg<'a> {
         start: usize,
         end: usize,
@@ -158,7 +215,7 @@ pub fn sgd_update_fused_flat(params: Vec<SgdParamView<'_>>, lr: f32, momentum: f
         total += n;
     }
     let tune = par::Tuning::new(AXPY_GRAIN.get());
-    par::parallel_regions(total, 3, tune, |stage, r| {
+    let body = |stage: usize, r: std::ops::Range<usize>| {
         for seg in &segs {
             let lo = r.start.max(seg.start);
             let hi = r.end.min(seg.end);
@@ -180,7 +237,12 @@ pub fn sgd_update_fused_flat(params: Vec<SgdParamView<'_>>, lr: f32, momentum: f
                 );
             }
         }
-    });
+    };
+    if unsync {
+        par::parallel_regions_unsynced(total, 3, tune, body);
+    } else {
+        par::parallel_regions(total, 3, tune, body);
+    }
 }
 
 #[cfg(test)]
@@ -257,6 +319,42 @@ mod tests {
             assert_eq!(w_ref, wf, "flat weights diverged at {t} threads");
             assert_eq!(g_ref, gf, "flat grads diverged at {t} threads");
             assert_eq!(h_ref, hf, "flat history diverged at {t} threads");
+        }
+    }
+
+    #[test]
+    fn unsynced_sgd_matches_barrier_path_bitwise() {
+        use crate::propcheck::Rng;
+        let mut rng = Rng::new(131);
+        let n = 60_000; // longer than the grain so the region really splits
+        let w0 = rng.normal_vec(n);
+        let g0 = rng.normal_vec(n);
+        let h0 = rng.normal_vec(n);
+        let (lr, momentum, decay) = (0.01f32, 0.9f32, 0.0005f32);
+        for t in [1usize, 2, 5, 16] {
+            let (mut w_bar, mut g_bar, mut h_bar) = (w0.clone(), g0.clone(), h0.clone());
+            par::with_threads(t, || {
+                sgd_update_fused(&mut w_bar, &mut g_bar, &mut h_bar, lr, momentum, decay);
+            });
+            let (mut w, mut g, mut h) = (w0.clone(), g0.clone(), h0.clone());
+            par::with_threads(t, || {
+                sgd_update_fused_unsynced(&mut w, &mut g, &mut h, lr, momentum, decay);
+            });
+            assert_eq!(w_bar, w, "unsynced weights diverged at {t} threads");
+            assert_eq!(g_bar, g, "unsynced grads diverged at {t} threads");
+            assert_eq!(h_bar, h, "unsynced history diverged at {t} threads");
+
+            let (mut wf, mut gf, mut hf) = (w0.clone(), g0.clone(), h0.clone());
+            let cut = n / 3 + 11;
+            par::with_threads(t, || {
+                let (wa, wb) = wf.split_at_mut(cut);
+                let (ga, gb) = gf.split_at_mut(cut);
+                let (ha, hb) = hf.split_at_mut(cut);
+                let views = vec![(wa, ga, ha), (wb, gb, hb)];
+                sgd_update_fused_flat_unsynced(views, lr, momentum, decay);
+            });
+            assert_eq!(w_bar, wf, "unsynced flat weights diverged at {t} threads");
+            assert_eq!(h_bar, hf, "unsynced flat history diverged at {t} threads");
         }
     }
 

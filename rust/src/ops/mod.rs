@@ -26,7 +26,10 @@ pub mod activations;
 pub mod math;
 
 pub use geometry::{conv_geom, pool_geom, WindowGeom};
-pub use gemm::{gemm, gemm_colmajor_b, gemm_packed_a, gemm_packed_b, PackSide, PackedMat, Trans};
+pub use gemm::{
+    gemm, gemm_colmajor_b, gemm_packed_a, gemm_packed_b, gemm_packed_b_slice, pack_b_slice,
+    packed_b_len, PackSide, PackedMat, Trans,
+};
 pub use im2col::{col2im, im2col};
 pub use pool::{
     avepool, avepool_batch, avepool_bwd, avepool_bwd_batch, maxpool, maxpool_batch,
@@ -35,4 +38,7 @@ pub use pool::{
 pub use activations::{
     accuracy, leaky_relu, leaky_relu_bwd, softmax, softmax_xent, softmax_xent_bwd,
 };
-pub use math::{axpy, axpby, scal, sgd_update_fused, sgd_update_fused_flat};
+pub use math::{
+    axpy, axpby, scal, sgd_update_fused, sgd_update_fused_flat, sgd_update_fused_flat_unsynced,
+    sgd_update_fused_unsynced,
+};

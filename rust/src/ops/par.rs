@@ -834,6 +834,51 @@ pub fn parallel_regions(
     });
 }
 
+/// [`parallel_regions`] **without** the inter-stage barrier: worker `w`
+/// runs every stage back-to-back over its own range, in one dispatch.
+///
+/// The saved cost is exactly `stages - 1` barrier crossings per region
+/// (the `stage_barrier` entry `benches/fusion.rs` records measures that
+/// price).  In exchange the cross-worker happens-before edge between
+/// stages is gone, so this variant is only correct for **pointwise**
+/// stage chains: every stage must read and write *only* the worker's own
+/// partition range (the SGD regularize → momentum → update chain is the
+/// canonical example — each stage is element-local, so worker `w` never
+/// needs another worker's stage-`s` results).  A chain where stage
+/// `s + 1` reads outside its own range (anything [`FusedSlice::slice`]'s
+/// cross-range contract would cover) **must** stay on
+/// [`parallel_regions`]; using this variant there is a data race.
+///
+/// Because each worker's per-element arithmetic and stage order are
+/// unchanged, results for a contract-respecting chain are **bitwise
+/// equal** to the barrier path at every thread count.  Counts as one
+/// region in [`region_count`]; panics propagate through the pool latch
+/// as usual (no barrier exists to poison); nested calls serialize.
+pub fn parallel_regions_unsynced(
+    n: usize,
+    stages: usize,
+    tune: Tuning,
+    f: impl Fn(usize, Range<usize>) + Sync,
+) {
+    note_region();
+    if stages == 0 || n == 0 {
+        return;
+    }
+    let workers = tune.workers(n);
+    if workers <= 1 {
+        for s in 0..stages {
+            f(s, 0..n);
+        }
+        return;
+    }
+    let ranges = partition(n, workers);
+    run_workers(ranges.len(), |w| {
+        for s in 0..stages {
+            f(s, ranges[w].clone());
+        }
+    });
+}
+
 /// Builder over [`parallel_regions`] for call sites whose stages are
 /// heterogeneous closures: chain [`stage`](FusedRegion::stage) calls and
 /// [`run`](FusedRegion::run) the whole sequence as one dispatch.
@@ -871,6 +916,14 @@ impl<'a> FusedRegion<'a> {
     pub fn run(self) {
         let stages = self.stages;
         parallel_regions(self.n, stages.len(), self.tune, |s, r| (stages[s])(r));
+    }
+
+    /// Execute all stages in one dispatch with **no** inter-stage barrier
+    /// — only sound for pointwise stage chains; see
+    /// [`parallel_regions_unsynced`] for the contract.
+    pub fn run_unsynced(self) {
+        let stages = self.stages;
+        parallel_regions_unsynced(self.n, stages.len(), self.tune, |s, r| (stages[s])(r));
     }
 }
 
@@ -1122,6 +1175,80 @@ mod tests {
     }
 
     #[test]
+    fn unsynced_region_matches_barrier_region_on_pointwise_chain() {
+        // A pointwise 3-stage chain (each stage touches only its own
+        // range) must produce identical results with and without the
+        // inter-stage barrier, count as one region, and keep per-worker
+        // stage order.
+        let n = 10_007;
+        let mut barrier = vec![1.0f32; n];
+        let mut unsync = vec![1.0f32; n];
+        with_threads(5, || {
+            {
+                let v = FusedSlice::new(&mut barrier);
+                parallel_regions(n, 3, Tuning::new(1), |s, r| unsafe {
+                    let b = v.slice_mut(r);
+                    match s {
+                        0 => b.iter_mut().for_each(|x| *x += 3.0),
+                        1 => b.iter_mut().for_each(|x| *x *= 0.5),
+                        _ => b.iter_mut().for_each(|x| *x -= 1.0),
+                    }
+                });
+            }
+            let before = region_count();
+            {
+                let v = FusedSlice::new(&mut unsync);
+                parallel_regions_unsynced(n, 3, Tuning::new(1), |s, r| unsafe {
+                    let b = v.slice_mut(r);
+                    match s {
+                        0 => b.iter_mut().for_each(|x| *x += 3.0),
+                        1 => b.iter_mut().for_each(|x| *x *= 0.5),
+                        _ => b.iter_mut().for_each(|x| *x -= 1.0),
+                    }
+                });
+            }
+            assert_eq!(region_count() - before, 1, "unsynced region must count once");
+        });
+        assert_eq!(barrier, unsync, "unsynced pointwise chain diverged from the barrier path");
+    }
+
+    #[test]
+    fn unsynced_region_panic_propagates_and_pool_survives() {
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            with_threads(4, || {
+                parallel_regions_unsynced(16, 3, Tuning::new(1), |stage, r| {
+                    if stage == 2 && r.contains(&15) {
+                        panic!("unsynced stage panic");
+                    }
+                });
+            });
+        }));
+        assert!(boom.is_err(), "unsynced stage panic must reach the dispatcher");
+        let hits = AtomicUsize::new(0);
+        with_threads(4, || {
+            parallel_regions_unsynced(16, 2, Tuning::new(1), |_, r| {
+                hits.fetch_add(r.len(), Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn nested_unsynced_region_serializes() {
+        let stage_runs = AtomicU64::new(0);
+        with_threads(4, || {
+            parallel_for(4, Tuning::new(1), |_| {
+                assert!(in_parallel());
+                parallel_regions_unsynced(100, 2, Tuning::new(1), |_, r| {
+                    assert_eq!(r, 0..100, "nested unsynced stage must see the full range");
+                    stage_runs.fetch_add(1, Ordering::Relaxed);
+                });
+            });
+        });
+        assert_eq!(stage_runs.load(Ordering::Relaxed), 4 * 2);
+    }
+
+    #[test]
     fn fused_region_builder_runs_stages_in_order() {
         let mut data = vec![1.0f32; 100];
         {
@@ -1138,6 +1265,30 @@ mod tests {
             });
         }
         assert!(data.iter().all(|&v| v == 30.0), "stage order violated");
+    }
+
+    #[test]
+    fn fused_region_builder_unsynced_matches_barrier_on_pointwise_chain() {
+        // The builder's barrier-free execution path: a pointwise chain
+        // must produce the same result as `run()`, per worker in stage
+        // order, counting as one region.
+        let mut data = vec![1.0f32; 100];
+        {
+            let view = FusedSlice::new(&mut data);
+            with_threads(4, || {
+                let before = region_count();
+                FusedRegion::new(100, Tuning::new(1))
+                    .stage(|r| unsafe {
+                        view.slice_mut(r).iter_mut().for_each(|v| *v += 2.0);
+                    })
+                    .stage(|r| unsafe {
+                        view.slice_mut(r).iter_mut().for_each(|v| *v *= 10.0);
+                    })
+                    .run_unsynced();
+                assert_eq!(region_count() - before, 1, "unsynced builder must count once");
+            });
+        }
+        assert!(data.iter().all(|&v| v == 30.0), "unsynced stage order violated");
     }
 
     #[test]

@@ -126,6 +126,14 @@ pub fn maxpool_batch(
     assert_eq!(x.len(), n * c * h * w);
     assert_eq!(out.len(), n * c * oh * ow);
     assert_eq!(arg.len(), out.len());
+    // Degenerate batch, explicit (mirrors the GeMM engine's m/n/k == 0
+    // handling): zero planes means nothing to pool.  The chunked
+    // dispatch below would also no-op on the empty outputs (the item
+    // length is a plane, `oh*ow`, which geometry keeps positive); the
+    // early return makes the contract visible instead of implicit.
+    if n * c == 0 {
+        return;
+    }
     let tune = par::Tuning::new(POOL_GRAIN.get());
     par::parallel_chunks2_mut(out, oh * ow, arg, oh * ow, tune, |planes, ob, ab| {
         for (bi, plane) in planes.enumerate() {
@@ -219,6 +227,11 @@ pub fn maxpool_bwd_batch(
     assert_eq!(dy.len(), n * c * oh * ow);
     assert_eq!(arg.len(), dy.len());
     assert_eq!(dx.len(), n * c * h * w);
+    // Zero planes: no windows routed anything, so there is no gradient
+    // to scatter (explicit; the empty dispatch would also no-op).
+    if n * c == 0 {
+        return;
+    }
     let tune = par::Tuning::new(POOL_GRAIN.get());
     par::parallel_chunks_mut(dx, h * w, tune, |planes, db| {
         for (bi, plane) in planes.enumerate() {
@@ -315,6 +328,10 @@ pub fn avepool_batch(
     let (oh, ow) = (gh.out, gw.out);
     assert_eq!(x.len(), n * c * h * w);
     assert_eq!(out.len(), n * c * oh * ow);
+    // Zero planes: nothing to pool (see `maxpool_batch`).
+    if n * c == 0 {
+        return;
+    }
     let tune = par::Tuning::new(POOL_GRAIN.get());
     par::parallel_chunks_mut(out, oh * ow, tune, |planes, ob| {
         for (bi, plane) in planes.enumerate() {
@@ -398,6 +415,10 @@ pub fn avepool_bwd_batch(
     let (oh, ow) = (gh.out, gw.out);
     assert_eq!(dy.len(), n * c * oh * ow);
     assert_eq!(dx.len(), n * c * h * w);
+    // Zero planes: no gradient to spread (see `maxpool_bwd_batch`).
+    if n * c == 0 {
+        return;
+    }
     let tune = par::Tuning::new(POOL_GRAIN.get());
     par::parallel_chunks_mut(dx, h * w, tune, |planes, db| {
         for (bi, plane) in planes.enumerate() {
@@ -495,6 +516,29 @@ mod tests {
             let sdy: f32 = dy.iter().sum();
             assert!(close(sdx, sdy, 1e-4, 1e-4));
         });
+    }
+
+    #[test]
+    fn degenerate_batches_are_explicit() {
+        // Zero planes (batch 0 or zero channels): every batch op must be
+        // a no-op, never a panic from a zero-length dispatch item.
+        let g = geom(2, 2, 0);
+        let mut out: Vec<f32> = vec![];
+        let mut arg: Vec<i32> = vec![];
+        let mut dx: Vec<f32> = vec![];
+        for (n, c) in [(0usize, 3usize), (3, 0), (0, 0)] {
+            maxpool_batch(&[], n, c, 4, 4, g, &mut out, &mut arg);
+            maxpool_bwd_batch(&[], &[], n, c, 4, 4, g, &mut dx);
+            avepool_batch(&[], n, c, 4, 4, g, &mut out);
+            avepool_bwd_batch(&[], n, c, 4, 4, g, &mut dx);
+        }
+        // A degenerate batch around a live one: the live samples still
+        // compute (the early return is n*c == 0 only).
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let mut out1 = vec![0.0f32; 1];
+        let mut arg1 = vec![0i32; 1];
+        maxpool_batch(&x, 1, 1, 2, 2, g, &mut out1, &mut arg1);
+        assert_eq!(out1, vec![4.0]);
     }
 
     #[test]

@@ -45,6 +45,36 @@ pub fn step_fusion() -> StepFusion {
     })
 }
 
+/// Whether the fused SGD stages are separated by barriers — the
+/// `PHAST_FUSE_UNSYNC` knob.  The SGD chain is element-local in every
+/// stage, so both settings are **bitwise equal** at every thread count;
+/// the knob only removes two barrier crossings per fused region (the
+/// `stage_barrier` price `benches/fusion.rs` measures).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepSync {
+    /// Inter-stage barriers, [`ops::sgd_update_fused`] — the reference
+    /// path (`PHAST_FUSE_UNSYNC=0`).
+    Barrier,
+    /// Barrier-free, [`ops::sgd_update_fused_unsynced`] (the default):
+    /// sound because every SGD stage touches only the worker's own range.
+    Unsynced,
+}
+
+/// `PHAST_FUSE_UNSYNC`, parsed once: `0`/`off`/`barrier` →
+/// [`StepSync::Barrier`], anything else (including unset) →
+/// [`StepSync::Unsynced`].  Only consulted for the fused modes; the
+/// unfused reference has no stages to (un)synchronize.
+pub fn step_sync() -> StepSync {
+    static MODE: OnceLock<StepSync> = OnceLock::new();
+    *MODE.get_or_init(|| match std::env::var("PHAST_FUSE_UNSYNC") {
+        Ok(v) => match v.trim() {
+            "0" | "off" | "barrier" => StepSync::Barrier,
+            _ => StepSync::Unsynced,
+        },
+        Err(_) => StepSync::Unsynced,
+    })
+}
+
 /// Training history entry.
 #[derive(Clone, Copy, Debug)]
 pub struct IterStat {
@@ -64,6 +94,9 @@ pub struct Solver {
     /// Per-solver override of the process-wide [`step_fusion`] mode
     /// (benches and the fused-vs-unfused property tests set this).
     step_fusion: Option<StepFusion>,
+    /// Per-solver override of the process-wide [`step_sync`] mode
+    /// (the unsynced-vs-barrier property tests set this).
+    step_sync: Option<StepSync>,
 }
 
 impl Solver {
@@ -73,13 +106,20 @@ impl Solver {
             .iter()
             .map(|p| vec![0.0f32; p.count()])
             .collect();
-        Solver { config, net, history, iter: 0, log: vec![], step_fusion: None }
+        Solver { config, net, history, iter: 0, log: vec![], step_fusion: None, step_sync: None }
     }
 
     /// Force this solver's SGD-update fusion mode, overriding the
     /// process-wide `PHAST_FUSE_STEP` knob (all modes are bitwise equal).
     pub fn set_step_fusion(&mut self, mode: StepFusion) {
         self.step_fusion = Some(mode);
+    }
+
+    /// Force this solver's fused-stage synchronization mode, overriding
+    /// the process-wide `PHAST_FUSE_UNSYNC` knob (both modes are bitwise
+    /// equal — the SGD stages are element-local).
+    pub fn set_step_sync(&mut self, sync: StepSync) {
+        self.step_sync = Some(sync);
     }
 
     pub fn iter(&self) -> usize {
@@ -108,7 +148,16 @@ impl Solver {
         let momentum = self.config.momentum;
         let decay = self.config.weight_decay;
         let mode = self.step_fusion.unwrap_or_else(step_fusion);
-        apply_sgd_update_mode(self.net.params_mut(), &mut self.history, lr, momentum, decay, mode);
+        let sync = self.step_sync.unwrap_or_else(step_sync);
+        apply_sgd_update_sync(
+            self.net.params_mut(),
+            &mut self.history,
+            lr,
+            momentum,
+            decay,
+            mode,
+            sync,
+        );
     }
 
     /// Run `n` iterations, logging every `display` steps via `log::info`.
@@ -188,6 +237,7 @@ pub fn apply_sgd_update(
 /// [`apply_sgd_update`] with an explicit fusion mode.  All modes are
 /// bitwise equal at every thread count; they differ only in how many
 /// parallel regions the step issues (3 per blob / 1 per blob / 1 total).
+/// Stage synchronization follows the process-wide [`step_sync`] knob.
 pub fn apply_sgd_update_mode(
     params: Vec<&mut crate::tensor::Blob>,
     history: &mut [Vec<f32>],
@@ -195,6 +245,21 @@ pub fn apply_sgd_update_mode(
     momentum: f32,
     decay: f32,
     mode: StepFusion,
+) {
+    apply_sgd_update_sync(params, history, lr, momentum, decay, mode, step_sync());
+}
+
+/// [`apply_sgd_update_mode`] with an explicit stage-synchronization mode
+/// (barrier vs unsynced — bitwise equal, see [`StepSync`]).  `sync` is
+/// ignored by [`StepFusion::Unfused`], which has no fused stages.
+pub fn apply_sgd_update_sync(
+    params: Vec<&mut crate::tensor::Blob>,
+    history: &mut [Vec<f32>],
+    lr: f32,
+    momentum: f32,
+    decay: f32,
+    mode: StepFusion,
+    sync: StepSync,
 ) {
     match mode {
         StepFusion::Unfused => {
@@ -208,16 +273,13 @@ pub fn apply_sgd_update_mode(
             }
         }
         StepFusion::PerBlob => {
+            let update: fn(&mut [f32], &mut [f32], &mut [f32], f32, f32, f32) = match sync {
+                StepSync::Barrier => ops::sgd_update_fused,
+                StepSync::Unsynced => ops::sgd_update_fused_unsynced,
+            };
             for (p, hist) in params.into_iter().zip(history.iter_mut()) {
                 let (data, diff) = p.data_mut_and_diff_mut();
-                ops::sgd_update_fused(
-                    data.as_mut_slice(),
-                    diff.as_mut_slice(),
-                    hist,
-                    lr,
-                    momentum,
-                    decay,
-                );
+                update(data.as_mut_slice(), diff.as_mut_slice(), hist, lr, momentum, decay);
             }
         }
         StepFusion::Flat => {
@@ -226,7 +288,12 @@ pub fn apply_sgd_update_mode(
                 let (data, diff) = p.data_mut_and_diff_mut();
                 views.push((data.as_mut_slice(), diff.as_mut_slice(), hist.as_mut_slice()));
             }
-            ops::sgd_update_fused_flat(views, lr, momentum, decay);
+            match sync {
+                StepSync::Barrier => ops::sgd_update_fused_flat(views, lr, momentum, decay),
+                StepSync::Unsynced => {
+                    ops::sgd_update_fused_flat_unsynced(views, lr, momentum, decay)
+                }
+            }
         }
     }
 }

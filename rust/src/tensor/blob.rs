@@ -31,7 +31,9 @@ pub struct Blob {
     /// Monotonic mutation counter for `data`: bumped by every mutable
     /// access path ([`data_mut`](Blob::data_mut),
     /// [`data_mut_and_diff_mut`](Blob::data_mut_and_diff_mut),
-    /// [`update`](Blob::update), [`reshape`](Blob::reshape)).  The GeMM
+    /// [`update`](Blob::update), and count-changing
+    /// [`reshape`](Blob::reshape) — a same-count reshape preserves the
+    /// buffer and deliberately does not bump).  The GeMM
     /// engine's `PackedMat` caches stamp this value when they pack a
     /// weight matrix and repack only when it moves — which for parameter
     /// blobs is once per solver step, not once per forward.
@@ -116,12 +118,19 @@ impl Blob {
 
     /// Caffe `Blob::Reshape` — keeps contents when the count is unchanged,
     /// reallocates otherwise.
+    ///
+    /// The `data_version` stamp is bumped **only** when the underlying
+    /// buffer is replaced: a same-count reshape preserves every value, so
+    /// the stamp stays put and `PackedMat` weight caches keyed on it are
+    /// not needlessly invalidated (a pack is additionally keyed on its
+    /// logical dims, so a consumer that derives different dims from the
+    /// new shape still repacks).
     pub fn reshape(&mut self, shape: Shape) {
-        self.version += 1;
         if shape.count() == self.data.len() {
             self.data.reshape_in_place(shape.clone());
             self.diff.reshape_in_place(shape);
         } else {
+            self.version += 1;
             self.data = Tensor::zeros(shape.clone());
             self.diff = Tensor::zeros(shape);
         }
@@ -175,8 +184,14 @@ mod tests {
         assert_eq!(b.data_version(), v0 + 1);
         b.data_mut_and_diff_mut();
         b.update();
+        // A same-count reshape preserves the buffer, so it deliberately
+        // does NOT bump (was `v0 + 4` when reshape bumped unconditionally,
+        // which needlessly invalidated PackedMat weight caches).
         b.reshape(Shape::new(&[2]));
-        assert_eq!(b.data_version(), v0 + 4, "every data-mutating path must bump");
+        assert_eq!(b.data_version(), v0 + 3, "buffer-preserving reshape must not bump");
+        // A count-changing reshape replaces the buffer and must bump.
+        b.reshape(Shape::new(&[5]));
+        assert_eq!(b.data_version(), v0 + 4, "every data-replacing path must bump");
     }
 
     #[test]

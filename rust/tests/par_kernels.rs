@@ -11,7 +11,7 @@ use phast_caffe::net::Net;
 use phast_caffe::ops::{self, gemm::Trans, im2col::Conv2dGeom, par, pool::Pool2dGeom};
 use phast_caffe::propcheck::{assert_close, forall, Rng};
 use phast_caffe::proto::{presets, LayerConfig, LayerType, NetConfig, SolverConfig};
-use phast_caffe::solver::{apply_sgd_update_slices, Solver, StepFusion};
+use phast_caffe::solver::{apply_sgd_update_slices, Solver, StepFusion, StepSync};
 use phast_caffe::tensor::{Shape, Tensor};
 
 /// Thread counts every property sweeps: serial, two workers, and more
@@ -187,6 +187,120 @@ fn conv_fwd_bwd(
             layer.params()[1].diff().as_slice().to_vec(),
         )
     })
+}
+
+/// One conv forward+backward under explicit backward modes; returns
+/// (y, dx, dw, db).
+#[allow(clippy::too_many_arguments)]
+fn conv_fwd_bwd_mode(
+    threads: usize,
+    cfg: &LayerConfig,
+    in_shape: &Shape,
+    x: &Tensor,
+    dy_seed: u64,
+    bwd_fused: bool,
+    bwd_packed: bool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    par::with_threads(threads, || {
+        let mut layer = ConvLayer::new(cfg.clone(), 42).unwrap();
+        let out_shape = layer.setup(std::slice::from_ref(in_shape)).unwrap().remove(0);
+        layer.set_backward_fusion(bwd_fused);
+        layer.set_backward_packing(bwd_packed);
+        let mut y = Tensor::zeros(out_shape.clone());
+        layer.forward(&[x], std::slice::from_mut(&mut y)).unwrap();
+        let mut rng = Rng::new(dy_seed);
+        let dy = Tensor::from_vec(out_shape.clone(), rng.normal_vec(out_shape.count()));
+        let mut dx = Tensor::zeros(in_shape.clone());
+        layer.backward(&[&dy], &[x], std::slice::from_mut(&mut dx)).unwrap();
+        (
+            y.as_slice().to_vec(),
+            dx.as_slice().to_vec(),
+            layer.params()[0].diff().as_slice().to_vec(),
+            layer.params()[1].diff().as_slice().to_vec(),
+        )
+    })
+}
+
+/// The fused backward region (gemm stages + col2im + merge stage) and
+/// the persistent im2col pack must both be **bitwise equal** to the
+/// dispatch-then-serial-merge / recompute-and-pack reference at every
+/// fixed thread count — the ISSUE 5 acceptance property.
+#[test]
+fn conv_backward_modes_bitwise_equal_at_fixed_thread_count() {
+    forall("par-conv-bwd-modes", 4, |rng: &mut Rng| {
+        let n = rng.range(2, 9); // batch: the parallel axis
+        let cin = rng.range(1, 3);
+        let h = rng.range(5, 10);
+        let w = rng.range(5, 10);
+        let k = rng.range(1, 3);
+        let cout = rng.range(1, 4);
+        let cfg = conv_cfg(cout, k, 1, rng.range(0, k - 1));
+        let in_shape = Shape::nchw(n, cin, h, w);
+        let x = Tensor::from_vec(in_shape.clone(), rng.normal_vec(in_shape.count()));
+        let dy_seed = rng.next_u64();
+
+        for t in SWEEP {
+            let reference = conv_fwd_bwd_mode(t, &cfg, &in_shape, &x, dy_seed, false, false);
+            for (fused, packed) in [(true, false), (false, true), (true, true)] {
+                let got = conv_fwd_bwd_mode(t, &cfg, &in_shape, &x, dy_seed, fused, packed);
+                assert_eq!(
+                    reference, got,
+                    "conv backward diverged at {t} threads (fused={fused}, packed={packed})"
+                );
+            }
+        }
+    });
+}
+
+/// The fused conv backward must execute as exactly **one** top-level
+/// parallel region — gemm stages, col2im, and the deterministic dW/db
+/// merge all inside a single dispatch (the reference path paid one
+/// dispatch plus a serial merge on the caller).
+#[test]
+fn conv_backward_is_one_fused_region() {
+    par::with_threads(4, || {
+        let cfg = conv_cfg(3, 3, 1, 1);
+        let in_shape = Shape::nchw(8, 2, 7, 7);
+        let mut layer = ConvLayer::new(cfg, 13).unwrap();
+        let out_shape = layer.setup(std::slice::from_ref(&in_shape)).unwrap().remove(0);
+        layer.set_backward_fusion(true);
+        let mut rng = Rng::new(77);
+        let x = Tensor::from_vec(in_shape.clone(), rng.normal_vec(in_shape.count()));
+        let dy = Tensor::from_vec(out_shape.clone(), rng.normal_vec(out_shape.count()));
+        let mut y = Tensor::zeros(out_shape.clone());
+        layer.forward(&[&x], std::slice::from_mut(&mut y)).unwrap();
+        let mut dx = Tensor::zeros(in_shape.clone());
+        // Warm (first backward also packs the Wᵀ cache).
+        layer.backward(&[&dy], &[&x], std::slice::from_mut(&mut dx)).unwrap();
+        let r0 = par::region_count();
+        layer.backward(&[&dy], &[&x], std::slice::from_mut(&mut dx)).unwrap();
+        assert_eq!(par::region_count() - r0, 1, "fused conv backward must be one dispatch");
+    });
+}
+
+/// With frozen weights, repeated forward+backward sweeps over a whole
+/// net must never repack a `PackedMat` — the `packs_per_backward == 0`
+/// contract the gemm bench gates (the forward-captured im2col panels do
+/// not count: they are caller-managed, not stamped packs).
+#[test]
+fn frozen_weight_backward_never_repacks() {
+    let mut net = preset_net("mnist", 11).unwrap();
+    net.zero_param_diffs();
+    net.forward().unwrap();
+    net.backward().unwrap(); // warm: packs every cached orientation once
+    let c0 = ops::gemm::repack_count();
+    for _ in 0..3 {
+        net.zero_param_diffs();
+        net.forward().unwrap();
+        let before_bwd = ops::gemm::repack_count();
+        net.backward().unwrap();
+        assert_eq!(
+            ops::gemm::repack_count(),
+            before_bwd,
+            "backward repacked with frozen weights"
+        );
+    }
+    assert_eq!(ops::gemm::repack_count(), c0, "frozen weights were repacked");
 }
 
 #[test]
@@ -522,6 +636,45 @@ fn fused_solver_step_bitwise_equals_unfused_at_all_thread_counts() {
             assert_eq!(l_ref, l, "losses diverged under {mode:?} at {t} threads");
             assert_eq!(w_ref, w, "weights diverged under {mode:?} at {t} threads");
             assert_eq!(h_ref, h, "history diverged under {mode:?} at {t} threads");
+        }
+    }
+}
+
+/// The `stage_unsynced` SGD route (no inter-stage barrier — sound
+/// because every SGD stage is element-local) must leave whole training
+/// trajectories **bitwise equal** to the barrier path, per fused mode,
+/// at every tested thread count.
+#[test]
+fn unsynced_solver_step_bitwise_equals_barrier_at_all_thread_counts() {
+    fn run(threads: usize, mode: StepFusion, sync: StepSync, steps: usize) -> (Vec<f32>, Vec<f32>) {
+        par::with_threads(threads, || {
+            let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+            cfg.display = 0;
+            let net =
+                Net::from_config(NetConfig::from_text(presets::LENET_MNIST).unwrap(), 5).unwrap();
+            let mut s = Solver::new(cfg, net);
+            s.set_step_fusion(mode);
+            s.set_step_sync(sync);
+            let mut losses = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                losses.push(s.step().unwrap());
+            }
+            let weights: Vec<f32> = s
+                .net
+                .params()
+                .into_iter()
+                .flat_map(|p| p.data().as_slice().to_vec())
+                .collect();
+            (losses, weights)
+        })
+    }
+
+    for t in SWEEP {
+        for mode in [StepFusion::PerBlob, StepFusion::Flat] {
+            let (l_bar, w_bar) = run(t, mode, StepSync::Barrier, 3);
+            let (l_un, w_un) = run(t, mode, StepSync::Unsynced, 3);
+            assert_eq!(l_bar, l_un, "losses diverged unsynced under {mode:?} at {t} threads");
+            assert_eq!(w_bar, w_un, "weights diverged unsynced under {mode:?} at {t} threads");
         }
     }
 }

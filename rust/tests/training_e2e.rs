@@ -2,10 +2,12 @@
 //! the synthetic datasets, in every backend.
 
 use phast_caffe::experiments::{preset_net, sample_batch};
+use phast_caffe::net::Net;
+use phast_caffe::ops::par;
 use phast_caffe::phast::FusedRunner;
-use phast_caffe::proto::{presets, SolverConfig};
+use phast_caffe::proto::{presets, NetConfig, SolverConfig};
 use phast_caffe::runtime::Engine;
-use phast_caffe::solver::{smooth_losses, Solver};
+use phast_caffe::solver::{smooth_losses, Solver, StepSync};
 
 /// Native LeNet reaches high train accuracy quickly on the synthetic
 /// digits (they are separable by design).
@@ -71,6 +73,64 @@ fn native_cifar_loss_decreases() {
     let head: f32 = losses[..3].iter().sum::<f32>() / 3.0;
     let tail: f32 = losses[9..].iter().sum::<f32>() / 3.0;
     assert!(tail < head, "{losses:?}");
+}
+
+/// The fused backward (gemm stages + col2im + merge in one region), the
+/// persistent im2col packing, and the barrier-free SGD stages must each
+/// leave the whole LeNet training trajectory **bitwise unchanged** at
+/// every tested thread count — the ISSUE 5 acceptance pin.  The
+/// reference is the pre-fusion configuration: dispatch-then-serial-merge
+/// backward, recompute-and-pack `dW` GeMM, barrier-separated SGD stages.
+#[test]
+fn backward_and_step_modes_keep_training_bitwise() {
+    fn run(
+        threads: usize,
+        bwd_fused: bool,
+        bwd_packed: bool,
+        sync: StepSync,
+        steps: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        par::with_threads(threads, || {
+            let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+            cfg.display = 0;
+            let mut net =
+                Net::from_config(NetConfig::from_text(presets::LENET_MNIST).unwrap(), 21).unwrap();
+            net.set_backward_fusion(bwd_fused);
+            net.set_backward_packing(bwd_packed);
+            let mut solver = Solver::new(cfg, net);
+            solver.set_step_sync(sync);
+            let mut losses = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                losses.push(solver.step().unwrap());
+            }
+            let weights: Vec<f32> = solver
+                .net
+                .params()
+                .into_iter()
+                .flat_map(|p| p.data().as_slice().to_vec())
+                .collect();
+            (losses, weights)
+        })
+    }
+
+    for threads in [1usize, 2, 5, 16] {
+        let (l_ref, w_ref) = run(threads, false, false, StepSync::Barrier, 3);
+        for (fused, packed, sync) in [
+            (true, true, StepSync::Unsynced), // the default configuration
+            (true, false, StepSync::Barrier), // fusion alone
+            (false, true, StepSync::Unsynced), // packing + unsync alone
+        ] {
+            let (l, w) = run(threads, fused, packed, sync, 3);
+            assert_eq!(
+                l_ref, l,
+                "losses diverged at {threads} threads (fused={fused}, packed={packed}, {sync:?})"
+            );
+            assert_eq!(
+                w_ref, w,
+                "weights diverged at {threads} threads (fused={fused}, packed={packed}, {sync:?})"
+            );
+        }
+    }
 }
 
 /// Native training is bitwise deterministic for a fixed seed.

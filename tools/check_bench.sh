@@ -10,9 +10,13 @@
 #     structure, never on machine speed), so they are gated hard: the
 #     fused solver step must keep its 3-to-1 dispatch collapse, and layer
 #     fusion must keep removing regions from the forward sweep.
-#   * gemm_packed.packs_per_forward is likewise deterministic (pack-cache
-#     behaviour, not timing) and gated exactly at 0: frozen weights must
-#     never repack.
+#   * gemm_packed.packs_per_forward / .packs_per_backward are likewise
+#     deterministic (pack-cache behaviour, not timing) and gated exactly
+#     at 0: frozen weights must never repack, in either sweep direction.
+#   * fused_backward region counts run at a pinned 4-thread width, so
+#     they too are machine-independent: the fused gradient sweep must
+#     never issue more dispatches than the pinned baseline (or than the
+#     reference path measured in the same run).
 #   * Wall-clock-derived metrics are gated with a generous tolerance
 #     (baseline "tolerance", 1.5x) and, where possible, as within-run
 #     ratios (fused vs unfused, packed vs unpacked on the same machine)
@@ -96,6 +100,24 @@ if None not in (plain, fused, reduction):
             f"forward (plain {plain}, fused {fused}); baseline requires >= {reduction}"
         )
 
+# Backward regions are deterministic at the bench's pinned 4-thread
+# width: the fused backward (one region per conv layer, merge inside)
+# must never issue more dispatches than the baseline pins, nor more than
+# the reference path measured in the same run.
+bwd_fused = get(cur, "fused_backward", "regions_fused", "current")
+bwd_ref = get(cur, "fused_backward", "regions_reference", "current")
+for key, val in (("regions_fused", bwd_fused), ("regions_reference", bwd_ref)):
+    b = get(base, "fused_backward", key, "baseline")
+    if None not in (val, b) and val > b:
+        failures.append(
+            f"fused_backward.{key} regressed: {val} regions vs baseline {b}"
+        )
+if None not in (bwd_fused, bwd_ref) and bwd_fused > bwd_ref:
+    failures.append(
+        f"fused_backward: the fused sweep issues more regions ({bwd_fused}) "
+        f"than the reference ({bwd_ref})"
+    )
+
 # --- timing gates (within-run ratios, 1.5x tolerance) -------------------
 uf = get(cur, "fused_sgd_step", "unfused_us_per_step", "current")
 fu = get(cur, "fused_sgd_step", "fused_us_per_step", "current")
@@ -103,6 +125,14 @@ if None not in (uf, fu) and fu > uf * tol:
     failures.append(
         f"fused_sgd_step slower than unfused beyond tolerance: "
         f"fused {fu} us vs unfused {uf} us (x{tol})"
+    )
+
+bwd_fused_ms = get(cur, "fused_backward", "fused_ms_per_bwd", "current")
+bwd_ref_ms = get(cur, "fused_backward", "reference_ms_per_bwd", "current")
+if None not in (bwd_fused_ms, bwd_ref_ms) and bwd_fused_ms > bwd_ref_ms * tol:
+    failures.append(
+        f"fused_backward slower than reference beyond tolerance: "
+        f"fused {bwd_fused_ms} ms vs reference {bwd_ref_ms} ms (x{tol})"
     )
 
 sop = get(cur, "small_op_dispatch", "spawn_over_pool", "current")
@@ -121,14 +151,17 @@ if None not in (ms, ms_base) and ms < ms_base / tol:
     )
 
 # --- packed GeMM gates --------------------------------------------------
-# packs_per_forward is deterministic cache behaviour: pinned exactly.
+# packs_per_forward / packs_per_backward are deterministic cache
+# behaviour: pinned exactly.
+for key in ("packs_per_forward", "packs_per_backward"):
+    pp = get(cur, "gemm_packed", key, "current")
+    pp_base = get(base, "gemm_packed", key, "baseline")
+    if None not in (pp, pp_base) and pp != pp_base:
+        failures.append(
+            f"gemm_packed.{key} {pp} != pinned {pp_base}: "
+            "frozen weights are being repacked"
+        )
 ppf = get(cur, "gemm_packed", "packs_per_forward", "current")
-ppf_base = get(base, "gemm_packed", "packs_per_forward", "baseline")
-if None not in (ppf, ppf_base) and ppf != ppf_base:
-    failures.append(
-        f"gemm_packed.packs_per_forward {ppf} != pinned {ppf_base}: "
-        "frozen weights are being repacked"
-    )
 # packed_over_naive is a within-run ratio: hard floor, no tolerance
 # division (the baseline 1.0 is already the generous bound; acceptance
 # on a quiet machine is ~1.5x on the ip1 shape).
@@ -152,7 +185,10 @@ print(f"  fused_sgd_step: {cur['fused_sgd_step']['regions_unfused']} -> "
       f"(ratio {cur['fused_sgd_step']['region_ratio']}), flat "
       f"{cur['fused_sgd_step']['regions_flat']}")
 print(f"  fused_layers: {plain} -> {fused} regions/forward")
+print(f"  fused_backward: reference {bwd_ref} / fused {bwd_fused} regions/backward "
+      f"({bwd_ref_ms} -> {bwd_fused_ms} ms)")
 print(f"  small_op_dispatch.spawn_over_pool: {sop}")
 print(f"  scaling.max_speedup: {ms}")
-print(f"  gemm_packed: packed_over_naive {pon}, packs_per_forward {ppf}")
+print(f"  gemm_packed: packed_over_naive {pon}, packs_per_forward {ppf}, "
+      f"packs_per_backward {cur['gemm_packed'].get('packs_per_backward')}")
 PY

@@ -25,12 +25,13 @@ done
 
 # --- 1 & 2: knob names must match between docs and code -------------------
 # The tuning surface is PHAST_NUM_THREADS + the per-kernel *_GRAIN knobs +
-# the PHAST_FUSE_* fusion switches + the GeMM cache-blocking knobs
-# PHAST_GEMM_{MC,KC,NC}; other PHAST_* env vars (e.g. PHAST_ARTIFACTS,
-# the artifact directory) are out of scope.  Prose placeholders like
-# PHAST_*_GRAIN don't match the character class, so they are ignored
-# naturally.
-knob_re='PHAST_(([A-Z0-9]+_)*(GRAIN|THREADS)|FUSE_[A-Z0-9]+|GEMM_(MC|KC|NC))'
+# the PHAST_FUSE_* fusion switches (step/layers/backward/unsync) + the
+# GeMM cache-blocking knobs PHAST_GEMM_{MC,KC,NC} + the *_PACK persistent
+# packing switches (PHAST_CONV_PACK); other PHAST_* env vars (e.g.
+# PHAST_ARTIFACTS, the artifact directory) are out of scope.  Prose
+# placeholders like PHAST_*_GRAIN don't match the character class, so
+# they are ignored naturally.
+knob_re='PHAST_(([A-Z0-9]+_)*(GRAIN|THREADS|PACK)|FUSE_[A-Z0-9]+|GEMM_(MC|KC|NC))'
 docs_knobs=$(grep -ohE "$knob_re" README.md docs/PARALLEL_RUNTIME.md | sort -u)
 code_knobs=$(grep -rhoE "\"$knob_re\"" rust/src | tr -d '"' | sort -u)
 
