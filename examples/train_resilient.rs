@@ -1,0 +1,93 @@
+//! Fault-tolerant training driver: LeNet / synthetic-MNIST under
+//! [`TrainDriver`] — periodic crash-safe checkpoints, automatic resume
+//! from the newest valid snapshot, and rollback recovery for worker
+//! panics and non-finite losses (see `docs/FAULT_TOLERANCE.md`).
+//!
+//! ```sh
+//! PHAST_SNAPSHOT_DIR=/tmp/lenet_ckpt cargo run --release --example train_resilient -- 60
+//! ```
+//!
+//! Arguments: an optional iteration count (default 60) and an optional
+//! `--budget N` (rollbacks absorbed before aborting; default 2 —
+//! `--budget 0` makes any recoverable fault fatal, which is how the CI
+//! kill-and-resume job simulates a crashing process).  Checkpoint policy
+//! comes from `PHAST_SNAPSHOT_EVERY` / `PHAST_SNAPSHOT_KEEP` /
+//! `PHAST_SNAPSHOT_DIR`; faults are injected via `PHAST_FAULT`.
+//!
+//! The run ends with two machine-checkable lines:
+//!
+//! ```text
+//! final_iter=60
+//! final_weights_hash=0x1a2b3c4d
+//! ```
+//!
+//! Training is bitwise deterministic at a fixed thread count, so a
+//! crashed-and-resumed run must print the same `final_weights_hash` as an
+//! uninterrupted one — the property the CI job asserts.
+
+use phast_caffe::net::Net;
+use phast_caffe::proto::{presets, NetConfig, SolverConfig};
+use phast_caffe::solver::{crc32, DriverConfig, Solver, TrainDriver};
+
+const DEFAULT_ITERS: usize = 60;
+
+fn main() -> anyhow::Result<()> {
+    let mut iters = DEFAULT_ITERS;
+    let mut budget = 2usize;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        if arg == "--budget" {
+            let v = args
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("--budget needs a value"))?;
+            budget = v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad --budget value '{v}': {e}"))?;
+        } else {
+            iters = arg
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad iteration count argument '{arg}': {e}"))?;
+        }
+    }
+
+    let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER)?;
+    cfg.display = 0;
+    cfg.max_iter = iters;
+    let net = Net::from_config(NetConfig::from_text(presets::LENET_MNIST)?, 42)?;
+    let solver = Solver::new(cfg, net);
+
+    let mut dcfg = DriverConfig::from_env("target/snapshots");
+    dcfg.recover_budget = budget;
+    println!(
+        "== resilient training: LeNet / synthetic-MNIST, {iters} iters ==\n\
+         checkpoints: every {} iters, keep {}, dir {:?}, recovery budget {budget}",
+        dcfg.snapshot_every, dcfg.keep, dcfg.dir
+    );
+
+    let mut driver = TrainDriver::new(solver, dcfg);
+    match driver.resume()? {
+        Some(path) => println!("resumed from {path:?} at iter {}", driver.solver.iter()),
+        None => println!("no usable snapshot found: starting fresh"),
+    }
+
+    driver.run(iters)?;
+
+    let last = driver.solver.log.last().map(|e| e.loss).unwrap_or(f32::NAN);
+    println!(
+        "done: iter {}, last loss {last:.4}, rollbacks absorbed {}",
+        driver.solver.iter(),
+        driver.rollbacks()
+    );
+
+    // Deterministic fingerprint of the final parameters, for the CI
+    // kill-and-resume equality check.
+    let mut bytes = Vec::new();
+    for p in driver.solver.net.params() {
+        for v in p.data().as_slice() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    println!("final_iter={}", driver.solver.iter());
+    println!("final_weights_hash={:#010x}", crc32(&bytes));
+    Ok(())
+}

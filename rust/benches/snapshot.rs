@@ -1,0 +1,100 @@
+//! Bench: crash-safe snapshot cost — what the fault-tolerance layer
+//! charges per checkpoint (serialize + fsync + atomic rename) and per
+//! restore (read + CRC verify + apply), plus the deterministic
+//! roundtrip-exactness flag the CI gate pins.
+//!
+//! Entries merge-updated into `BENCH_threads.json` under the `snapshot`
+//! key (see `metrics::bench_json`; `tools/check_bench.sh` gates them
+//! against `BENCH_baseline.json`):
+//!
+//! * `param_blobs` / `snapshot_bytes` — deterministic shape of the LeNet
+//!   snapshot (gated as exact count / size ceiling);
+//! * `roundtrip_exact` — 1 iff a save → load roundtrip restores every
+//!   parameter, momentum entry, the iteration counter, and the data
+//!   cursors **bitwise** (gated exactly at 1);
+//! * `snapshot_save_ms` / `snapshot_restore_ms` — mean wall-clock per
+//!   checkpoint and per restore (gated with the generous timing
+//!   tolerance: fsync cost varies wildly across CI runners).
+//!
+//! `cargo bench --bench snapshot`
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use phast_caffe::metrics::bench_json;
+use phast_caffe::net::Net;
+use phast_caffe::proto::{presets, NetConfig, SolverConfig};
+use phast_caffe::solver::{load_snapshot, save_snapshot, Solver};
+
+fn lenet_solver() -> anyhow::Result<Solver> {
+    let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER)?;
+    cfg.display = 0;
+    let net = Net::from_config(NetConfig::from_text(presets::LENET_MNIST)?, 33)?;
+    Ok(Solver::new(cfg, net))
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("phast_caffe_snap_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("bench.pcss");
+
+    // A trained-for-a-few-steps solver, so the snapshot carries real
+    // weights, momentum, and a mid-epoch data cursor.
+    let mut a = lenet_solver()?;
+    for _ in 0..3 {
+        a.step()?;
+    }
+    let nblobs = a.net.params().len();
+
+    // Warm once (creates the file; later saves measure the steady state:
+    // serialize + write + fsync + rename over an existing snapshot).
+    save_snapshot(&mut a, &path)?;
+    let bytes = std::fs::metadata(&path)?.len();
+
+    let save_iters = 10usize;
+    let t0 = Instant::now();
+    for _ in 0..save_iters {
+        save_snapshot(&mut a, &path)?;
+    }
+    let save_ms = t0.elapsed().as_secs_f64() * 1e3 / save_iters as f64;
+
+    let mut b = lenet_solver()?;
+    load_snapshot(&mut b, &path)?; // warm
+    let restore_iters = 10usize;
+    let t0 = Instant::now();
+    for _ in 0..restore_iters {
+        load_snapshot(&mut b, &path)?;
+    }
+    let restore_ms = t0.elapsed().as_secs_f64() * 1e3 / restore_iters as f64;
+
+    // Bitwise roundtrip check: every float, the iteration counter, and
+    // the data cursors must come back exactly.
+    let mut exact = b.iter() == a.iter() && b.net.data_cursors() == a.net.data_cursors();
+    for (pa, pb) in a.net.params_mut().iter().zip(b.net.params_mut().iter()) {
+        exact &= pa.data().as_slice() == pb.data().as_slice();
+    }
+    for (ha, hb) in a.history().iter().zip(b.history().iter()) {
+        exact &= ha == hb;
+    }
+    let roundtrip_exact = usize::from(exact);
+
+    println!("snapshot: LeNet-MNIST, {nblobs} param blobs, {bytes} bytes on disk");
+    println!("  save (serialize + fsync + rename): {save_ms:.2} ms over {save_iters} iters");
+    println!("  restore (read + CRC + apply):      {restore_ms:.2} ms over {restore_iters} iters");
+    println!("  roundtrip bitwise exact:           {roundtrip_exact}");
+
+    let mut entry = String::from("{\n");
+    let _ = writeln!(entry, "    \"net\": \"lenet-mnist\",");
+    let _ = writeln!(entry, "    \"param_blobs\": {nblobs},");
+    let _ = writeln!(entry, "    \"snapshot_bytes\": {bytes},");
+    let _ = writeln!(entry, "    \"save_iters\": {save_iters},");
+    let _ = writeln!(entry, "    \"snapshot_save_ms\": {save_ms:.3},");
+    let _ = writeln!(entry, "    \"snapshot_restore_ms\": {restore_ms:.3},");
+    let _ = writeln!(entry, "    \"roundtrip_exact\": {roundtrip_exact}");
+    entry.push_str("  }");
+
+    bench_json::merge_entries(std::path::Path::new("BENCH_threads.json"), &[("snapshot", entry)])?;
+    println!("\nmerged snapshot into BENCH_threads.json");
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

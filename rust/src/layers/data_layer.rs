@@ -81,6 +81,14 @@ impl Layer for DataLayer {
     fn needs_backward(&self) -> bool {
         false
     }
+
+    fn data_cursor(&self) -> Option<(usize, usize)> {
+        Some(self.iter.cursor())
+    }
+
+    fn seek_data(&mut self, epoch: usize, pos: usize) {
+        self.iter.seek(epoch, pos);
+    }
 }
 
 #[cfg(test)]

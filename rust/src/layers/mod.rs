@@ -75,6 +75,18 @@ pub trait Layer {
     /// equal; layers without a pack cache ignore it.
     fn set_backward_packing(&mut self, _on: bool) {}
 
+    /// Data-pipeline cursor `(epoch, position-in-epoch)` for layers that
+    /// own a restorable input stream (the Data layer); `None` for every
+    /// other layer.  Snapshots record these so a resumed run replays the
+    /// exact batch sequence an uninterrupted run would see.
+    fn data_cursor(&self) -> Option<(usize, usize)> {
+        None
+    }
+
+    /// Seek the layer's data pipeline to `(epoch, pos)` (see
+    /// [`data_cursor`](Layer::data_cursor)); no-op for layers without one.
+    fn seek_data(&mut self, _epoch: usize, _pos: usize) {}
+
     /// Learnable parameter blobs (weight, bias) — empty for stateless layers.
     fn params(&self) -> &[Blob] {
         &[]

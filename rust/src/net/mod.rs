@@ -338,6 +338,32 @@ impl Net {
             .filter(|&i| self.layers[i].ltype() == t)
             .collect()
     }
+
+    /// Data-pipeline cursors `(epoch, position)` of every restorable
+    /// data layer, in layer order — recorded in snapshots so resume can
+    /// replay the exact batch sequence.
+    pub fn data_cursors(&self) -> Vec<(usize, usize)> {
+        self.layers.iter().filter_map(|l| l.data_cursor()).collect()
+    }
+
+    /// Seek the restorable data layers to `cursors` (one entry per
+    /// cursor-bearing layer, in the same order [`Net::data_cursors`]
+    /// reports them).
+    pub fn seek_data_cursors(&mut self, cursors: &[(usize, usize)]) -> Result<()> {
+        let mut it = cursors.iter();
+        for l in &mut self.layers {
+            if l.data_cursor().is_some() {
+                let &(epoch, pos) = it
+                    .next()
+                    .context("snapshot has fewer data cursors than the net has data layers")?;
+                l.seek_data(epoch, pos);
+            }
+        }
+        if it.next().is_some() {
+            bail!("snapshot has more data cursors than the net has data layers");
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,374 @@
+//! Deterministic fault injection — the test harness for the
+//! fault-tolerance layer (crash-safe snapshots, exact resume, the
+//! self-healing pool, and the divergence watchdog).
+//!
+//! Faults are described by the `PHAST_FAULT` environment variable (or
+//! scoped programmatically via [`with_faults`]) as a comma-separated list
+//! of rules:
+//!
+//! ```text
+//! kind@site[=N | :K]
+//! ```
+//!
+//! * `kind` — what breaks: `worker_panic` (a pool worker panics inside a
+//!   parallel region), `io_error` (an injected `std::io` error), `nan`
+//!   (the value at the site is replaced with `NaN`).
+//! * `site` — where: `iter` (solver iterations; the event value is the
+//!   iteration number), `snapshot_save` / `snapshot_load` (snapshot IO
+//!   attempts), `loss` (the solver's per-step loss).
+//! * `=N` — fire exactly once, the first time the site's event value
+//!   reaches `N` (for `iter` the value is the iteration number; for
+//!   counter sites it is the 1-based occurrence count).
+//! * `:K` — fire on every occurrence while the event value is `< K`
+//!   (`iter`) or `<= K` (counter sites): "the first K attempts fail".
+//! * neither — fire on every occurrence.
+//!
+//! Examples (the ISSUE grammar): `worker_panic@iter=7`,
+//! `io_error@snapshot_save:2`, `nan@loss=12`.
+//!
+//! The plan is **off by default and zero-cost when disabled**: every
+//! check first reads one thread-local flag and returns immediately when
+//! no plan is installed.  All state is thread-local — rules are armed and
+//! consumed on the thread driving training (the dispatching thread), even
+//! when the injected panic itself executes inside a pool worker — so
+//! concurrently running tests cannot see each other's faults.
+
+use std::cell::{Cell, RefCell};
+
+/// What an injected fault does at its site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FaultKind {
+    /// Panic inside a parallel region (in a pool worker when the region
+    /// dispatches, on the calling thread when it runs serial).
+    WorkerPanic,
+    /// Return an injected `std::io::Error` from the site.
+    IoError,
+    /// Replace the site's value with `f32::NAN`.
+    Nan,
+}
+
+/// One parsed `kind@site[=N|:K]` rule with its firing state.
+#[derive(Clone, Debug)]
+struct Rule {
+    kind: FaultKind,
+    site: String,
+    /// `=N`: fire once when the event value first reaches `N`.
+    at: Option<u64>,
+    /// `:K`: fire while the event value is below/at `K`.
+    first: Option<u64>,
+    /// Times this rule has fired so far.
+    fired: u64,
+    /// Occurrences observed at counter sites (1-based).
+    seen: u64,
+}
+
+impl Rule {
+    /// Decide whether the rule fires for `value` (an iteration number or
+    /// a 1-based occurrence count) and record the outcome.
+    fn fire_at(&mut self, value: u64, inclusive: bool) -> bool {
+        let hit = match (self.at, self.first) {
+            (Some(n), _) => value == n && self.fired == 0,
+            (_, Some(k)) => {
+                if inclusive {
+                    value <= k
+                } else {
+                    value < k
+                }
+            }
+            (None, None) => true,
+        };
+        if hit {
+            self.fired += 1;
+        }
+        hit
+    }
+}
+
+thread_local! {
+    /// Fast-path flag: `true` only while a non-empty plan is installed.
+    static ACTIVE: Cell<bool> = const { Cell::new(false) };
+    /// Whether this thread has initialized its plan from `PHAST_FAULT`.
+    static INITIALIZED: Cell<bool> = const { Cell::new(false) };
+    /// The installed fault plan, if any.
+    static PLAN: RefCell<Vec<Rule>> = const { RefCell::new(Vec::new()) };
+    /// A pending worker panic armed by [`begin_iter`], consumed by the
+    /// next parallel region (`ops::par`).
+    static PANIC_ARMED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Parse one `kind@site[=N|:K]` rule; `Err` carries the reason.
+fn parse_rule(spec: &str) -> Result<Rule, String> {
+    let (kind_s, rest) = spec
+        .split_once('@')
+        .ok_or_else(|| format!("'{spec}': expected kind@site"))?;
+    let kind = match kind_s.trim() {
+        "worker_panic" => FaultKind::WorkerPanic,
+        "io_error" => FaultKind::IoError,
+        "nan" => FaultKind::Nan,
+        other => return Err(format!("unknown fault kind '{other}'")),
+    };
+    let (site, at, first) = if let Some((s, n)) = rest.split_once('=') {
+        let n: u64 = n
+            .trim()
+            .parse()
+            .map_err(|_| format!("'{spec}': bad =N value"))?;
+        (s, Some(n), None)
+    } else if let Some((s, k)) = rest.split_once(':') {
+        let k: u64 = k
+            .trim()
+            .parse()
+            .map_err(|_| format!("'{spec}': bad :K value"))?;
+        (s, None, Some(k))
+    } else {
+        (rest, None, None)
+    };
+    let site = site.trim();
+    if site.is_empty() {
+        return Err(format!("'{spec}': empty site"));
+    }
+    Ok(Rule {
+        kind,
+        site: site.to_string(),
+        at,
+        first,
+        fired: 0,
+        seen: 0,
+    })
+}
+
+/// Parse a full comma-separated `PHAST_FAULT` plan, skipping (and
+/// reporting) malformed rules.
+fn parse_plan(spec: &str) -> Vec<Rule> {
+    let mut rules = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match parse_rule(part) {
+            Ok(r) => rules.push(r),
+            Err(e) => eprintln!("PHAST_FAULT: ignoring malformed rule {e}"),
+        }
+    }
+    rules
+}
+
+/// Lazily install this thread's plan from `PHAST_FAULT`, once per thread.
+fn ensure_init() {
+    if INITIALIZED.with(|c| c.get()) {
+        return;
+    }
+    INITIALIZED.with(|c| c.set(true));
+    if let Ok(spec) = std::env::var("PHAST_FAULT") {
+        let rules = parse_plan(&spec);
+        ACTIVE.with(|c| c.set(!rules.is_empty()));
+        PLAN.with(|p| *p.borrow_mut() = rules);
+    }
+}
+
+/// Run `f` over this thread's fault plan.
+fn with_plan<R>(f: impl FnOnce(&mut Vec<Rule>) -> R) -> R {
+    PLAN.with(|p| f(&mut p.borrow_mut()))
+}
+
+/// Whether a fault plan is installed on this thread (the `PHAST_FAULT`
+/// env var or a [`with_faults`] scope).
+pub fn enabled() -> bool {
+    ensure_init();
+    ACTIVE.with(|c| c.get())
+}
+
+/// Install `spec` as this thread's fault plan for the duration of `f`,
+/// then restore the previous plan — the scoped test API ([`PHAST_FAULT`
+/// is read once per thread](self), so tests cannot use the env var).
+pub fn with_faults<R>(spec: &str, f: impl FnOnce() -> R) -> R {
+    struct Restore {
+        plan: Vec<Rule>,
+        active: bool,
+        initialized: bool,
+        armed: bool,
+    }
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            PLAN.with(|p| *p.borrow_mut() = std::mem::take(&mut self.plan));
+            ACTIVE.with(|c| c.set(self.active));
+            INITIALIZED.with(|c| c.set(self.initialized));
+            PANIC_ARMED.with(|c| c.set(self.armed));
+        }
+    }
+    let rules = parse_plan(spec);
+    let restore = Restore {
+        plan: PLAN.with(|p| std::mem::replace(&mut p.borrow_mut(), rules)),
+        active: ACTIVE.with(|c| c.replace(true)),
+        initialized: INITIALIZED.with(|c| c.replace(true)),
+        armed: PANIC_ARMED.with(|c| c.replace(false)),
+    };
+    let out = f();
+    drop(restore);
+    out
+}
+
+/// Announce a solver iteration.  Arms a pending worker panic when a
+/// `worker_panic@iter` rule fires for `iter`; the panic is consumed by
+/// the next parallel region (see `ops::par`).  No-op when disabled.
+pub fn begin_iter(iter: u64) {
+    if !enabled() {
+        return;
+    }
+    let arm = with_plan(|rules| {
+        rules
+            .iter_mut()
+            .filter(|r| r.kind == FaultKind::WorkerPanic && r.site == "iter")
+            .any(|r| r.fire_at(iter, false))
+    });
+    if arm {
+        PANIC_ARMED.with(|c| c.set(true));
+    }
+}
+
+/// Consume a pending worker panic armed by [`begin_iter`].  Called by
+/// the parallel runtime at region entry; one thread-local read when
+/// nothing is armed.
+pub fn take_worker_panic() -> bool {
+    PANIC_ARMED.with(|c| {
+        if c.get() {
+            c.set(false);
+            true
+        } else {
+            false
+        }
+    })
+}
+
+/// Whether a worker panic is armed but not yet consumed (introspection
+/// for tests).
+pub fn worker_panic_armed() -> bool {
+    PANIC_ARMED.with(|c| c.get())
+}
+
+/// Fault check for an IO site (`snapshot_save`, `snapshot_load`):
+/// returns the injected error when an `io_error@site` rule fires for
+/// this occurrence.  No-op when disabled.
+pub fn check_io(site: &str) -> std::io::Result<()> {
+    if !enabled() {
+        return Ok(());
+    }
+    let fire = with_plan(|rules| {
+        let mut fire = false;
+        for r in rules
+            .iter_mut()
+            .filter(|r| r.kind == FaultKind::IoError && r.site == site)
+        {
+            r.seen += 1;
+            let occurrence = r.seen;
+            if r.fire_at(occurrence, true) {
+                fire = true;
+            }
+        }
+        fire
+    });
+    if fire {
+        return Err(std::io::Error::other(format!(
+            "injected io_error at {site} (PHAST_FAULT)"
+        )));
+    }
+    Ok(())
+}
+
+/// Fault check for a value site (`loss`): returns `f32::NAN` in place of
+/// `value` when a `nan@site` rule fires for this occurrence.  No-op when
+/// disabled.
+pub fn corrupt_value(site: &str, value: f32) -> f32 {
+    if !enabled() {
+        return value;
+    }
+    let fire = with_plan(|rules| {
+        let mut fire = false;
+        for r in rules
+            .iter_mut()
+            .filter(|r| r.kind == FaultKind::Nan && r.site == site)
+        {
+            r.seen += 1;
+            let occurrence = r.seen;
+            if r.fire_at(occurrence, true) {
+                fire = true;
+            }
+        }
+        fire
+    });
+    if fire {
+        f32::NAN
+    } else {
+        value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default_and_zero_armed() {
+        // No PHAST_FAULT in the test environment: everything passes
+        // through untouched.
+        assert!(!take_worker_panic());
+        assert!(check_io("snapshot_save").is_ok());
+        assert_eq!(corrupt_value("loss", 1.5), 1.5);
+    }
+
+    #[test]
+    fn iter_rule_fires_exactly_once() {
+        with_faults("worker_panic@iter=3", || {
+            begin_iter(0);
+            assert!(!take_worker_panic());
+            begin_iter(3);
+            assert!(take_worker_panic());
+            assert!(!take_worker_panic(), "consumed");
+            begin_iter(3); // replay after rollback: must not re-fire
+            assert!(!take_worker_panic());
+        });
+    }
+
+    #[test]
+    fn io_rule_first_k_occurrences() {
+        with_faults("io_error@snapshot_save:2", || {
+            assert!(check_io("snapshot_save").is_err());
+            assert!(check_io("snapshot_save").is_err());
+            assert!(check_io("snapshot_save").is_ok());
+            // other sites untouched
+            assert!(check_io("snapshot_load").is_ok());
+        });
+    }
+
+    #[test]
+    fn nan_rule_hits_exact_occurrence() {
+        with_faults("nan@loss=2", || {
+            assert_eq!(corrupt_value("loss", 0.5), 0.5);
+            assert!(corrupt_value("loss", 0.5).is_nan());
+            assert_eq!(corrupt_value("loss", 0.5), 0.5);
+        });
+    }
+
+    #[test]
+    fn malformed_rules_are_skipped() {
+        with_faults("bogus, worker_panic@, nan@loss=x, io_error@snapshot_load", || {
+            // only the well-formed always-fire rule survives
+            assert!(check_io("snapshot_load").is_err());
+            assert!(!take_worker_panic());
+        });
+    }
+
+    #[test]
+    fn with_faults_restores_previous_plan() {
+        with_faults("nan@loss", || {
+            assert!(corrupt_value("loss", 1.0).is_nan());
+            with_faults("io_error@snapshot_save", || {
+                // inner scope replaces the plan entirely
+                assert_eq!(corrupt_value("loss", 1.0), 1.0);
+                assert!(check_io("snapshot_save").is_err());
+            });
+            assert!(corrupt_value("loss", 1.0).is_nan());
+        });
+        assert_eq!(corrupt_value("loss", 1.0), 1.0);
+    }
+}

@@ -17,6 +17,7 @@
 //! so layers never re-transpose constant weights per iteration.
 #![warn(missing_docs)]
 
+pub mod fault;
 pub mod geometry;
 pub mod par;
 pub mod gemm;

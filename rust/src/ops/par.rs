@@ -230,9 +230,19 @@ pub fn region_count() -> u64 {
 }
 
 /// Count one region entry unless we are nested inside a worker.
+///
+/// Also the serial-mode seam for injected worker panics: at one thread no
+/// region ever dispatches to the pool, so an armed
+/// `PHAST_FAULT=worker_panic` fires here, on the calling thread, at the
+/// next region entry (the parallel case fires inside a pool worker — see
+/// [`run_workers`]).  Costs one thread-local read when nothing is armed.
 fn note_region() {
     if !in_parallel() {
         REGIONS.with(|c| c.set(c.get() + 1));
+        if super::fault::worker_panic_armed() && num_threads() <= 1 {
+            super::fault::take_worker_panic();
+            panic!("injected worker_panic (PHAST_FAULT)");
+        }
     }
 }
 
@@ -365,17 +375,41 @@ unsafe fn call_closure<F: Fn(usize) + Sync>(data: *const (), index: usize) {
     f(index);
 }
 
+/// The no-op job body used by [`pool_heal`]'s liveness pings.
+unsafe fn noop_call(_data: *const (), _index: usize) {}
+
 fn worker_loop(rx: Receiver<Job>) {
     // Pool workers only ever run inside a parallel region: nested
     // parallel entry points they hit must collapse to serial.
     IN_PARALLEL.with(|c| c.set(true));
     while let Ok(job) = rx.recv() {
+        // A null data pointer is the exit sentinel ([`kill_pool_workers`]):
+        // drop the receiver *first* so that once the killer's latch
+        // releases, sends into this slot fail deterministically.
+        if job.data.is_null() {
+            let latch = job.latch;
+            drop(rx);
+            // SAFETY: the killer is parked in `Latch::wait` until we
+            // arrive, keeping the latch alive.
+            unsafe { (*latch).arrive(None) };
+            return;
+        }
         // SAFETY: see `Job` — the dispatcher is parked in `Latch::wait`
         // until we arrive below, keeping both pointees alive.
         let latch = unsafe { &*job.latch };
         let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, job.index) }));
         latch.arrive(result.err());
     }
+}
+
+/// Spawn one parked pool worker and return its job channel.
+fn spawn_worker(id: usize) -> Sender<Job> {
+    let (tx, rx) = channel::<Job>();
+    std::thread::Builder::new()
+        .name(format!("phast-par-{id}"))
+        .spawn(move || worker_loop(rx))
+        .expect("failed to spawn pool worker");
+    tx
 }
 
 /// The process-wide pool: one channel per parked worker, grown on demand
@@ -390,6 +424,9 @@ struct Pool {
     senders: Mutex<Vec<Sender<Job>>>,
     spawned: AtomicUsize,
     rr: AtomicUsize,
+    /// Workers respawned after dying (self-healing metric; the slot count
+    /// [`pool_size`] reports is unaffected by respawns).
+    respawned: AtomicUsize,
 }
 
 static POOL: OnceLock<Pool> = OnceLock::new();
@@ -400,12 +437,15 @@ impl Pool {
             senders: Mutex::new(Vec::new()),
             spawned: AtomicUsize::new(0),
             rr: AtomicUsize::new(0),
+            respawned: AtomicUsize::new(0),
         })
     }
 
     /// Hand `job(i)` for `i in 0..helpers` to `helpers` distinct workers
     /// (round-robin over the whole pool), spawning any that do not exist
-    /// yet.
+    /// yet.  A dead slot (worker lost to [`kill_pool_workers`] or an
+    /// escaped panic) is respawned in place and the job re-sent: dispatch
+    /// always leaves the pool in a dispatchable state instead of wedging.
     fn dispatch(
         &self,
         helpers: usize,
@@ -415,13 +455,8 @@ impl Pool {
     ) {
         let mut senders = self.senders.lock().unwrap();
         while senders.len() < helpers {
-            let (tx, rx) = channel::<Job>();
             let id = senders.len();
-            std::thread::Builder::new()
-                .name(format!("phast-par-{id}"))
-                .spawn(move || worker_loop(rx))
-                .expect("failed to spawn pool worker");
-            senders.push(tx);
+            senders.push(spawn_worker(id));
             self.spawned.fetch_add(1, Ordering::Relaxed);
         }
         let total = senders.len();
@@ -430,8 +465,18 @@ impl Pool {
             // The job carries logical worker index i + 1 (the dispatching
             // thread itself is worker 0); which pool thread runs it does
             // not affect the result, only load spread.
-            let job = Job { data, call, latch, index: i + 1 };
-            senders[(start + i) % total].send(job).expect("pool worker channel closed");
+            let slot = (start + i) % total;
+            let mut job = Job { data, call, latch, index: i + 1 };
+            loop {
+                match senders[slot].send(job) {
+                    Ok(()) => break,
+                    Err(std::sync::mpsc::SendError(returned)) => {
+                        senders[slot] = spawn_worker(slot);
+                        self.respawned.fetch_add(1, Ordering::Relaxed);
+                        job = returned;
+                    }
+                }
+            }
         }
     }
 }
@@ -446,11 +491,94 @@ pub fn pool_size() -> usize {
     }
 }
 
+/// Number of pool workers respawned after death (the self-healing
+/// metric: 0 in a process that never lost a worker).  Respawns replace a
+/// dead slot in place, so [`pool_size`] is unaffected.
+pub fn pool_respawns() -> usize {
+    match POOL.get() {
+        Some(p) => p.respawned.load(Ordering::Relaxed),
+        None => 0,
+    }
+}
+
+/// Verify every pool worker is alive (one no-op ping per slot) and
+/// respawn any dead ones.  Recovery paths (e.g. the train driver after a
+/// caught worker panic) call this to restore the pool to a dispatchable
+/// state eagerly instead of paying the heal on the next dispatch.
+/// Returns the number of workers respawned.
+pub fn pool_heal() -> usize {
+    let Some(pool) = POOL.get() else { return 0 };
+    let mut senders = pool.senders.lock().unwrap();
+    let mut healed = 0;
+    for id in 0..senders.len() {
+        let latch = Latch::new(1);
+        let job = Job { data: &() as *const (), call: noop_call, latch: &latch, index: 0 };
+        match senders[id].send(job) {
+            Ok(()) => {
+                let _ = latch.wait();
+            }
+            Err(_) => {
+                senders[id] = spawn_worker(id);
+                pool.respawned.fetch_add(1, Ordering::Relaxed);
+                healed += 1;
+            }
+        }
+    }
+    healed
+}
+
+/// Fault-injection hook: make up to `n` pool workers exit their loops
+/// (dead channels), as if lost to an escaped panic — the failure mode
+/// the self-healing dispatch and [`pool_heal`] recover from.  Blocks
+/// until the targeted workers have actually exited, so a subsequent
+/// send into their slots fails deterministically.  Returns how many
+/// workers were killed.
+pub fn kill_pool_workers(n: usize) -> usize {
+    let Some(pool) = POOL.get() else { return 0 };
+    let targets: Vec<Sender<Job>> = {
+        let senders = pool.senders.lock().unwrap();
+        senders.iter().take(n).cloned().collect()
+    };
+    if targets.is_empty() {
+        return 0;
+    }
+    let latch = Latch::new(targets.len());
+    let mut killed = 0;
+    for tx in &targets {
+        let job = Job { data: std::ptr::null(), call: noop_call, latch: &latch, index: 0 };
+        match tx.send(job) {
+            Ok(()) => killed += 1,
+            // Already dead: arrive on its behalf so the latch releases.
+            Err(_) => latch.arrive(None),
+        }
+    }
+    let _ = latch.wait();
+    killed
+}
+
 /// Run `f(worker_index)` for every index in `0..workers`: indices
 /// `1..workers` on parked pool workers, index 0 on the calling thread.
 /// Returns only after all indices have finished; re-raises the caller's
 /// own panic first, then the first worker panic.
+///
+/// Consumes a pending injected worker panic (`PHAST_FAULT=worker_panic`,
+/// armed via [`super::fault::begin_iter`]): the designated last worker
+/// panics instead of running its share, exercising the real pool panic
+/// path (latch carry, barrier poison, dispatcher re-raise).
 fn run_workers<F: Fn(usize) + Sync>(workers: usize, f: F) {
+    if super::fault::take_worker_panic() {
+        let target = workers.saturating_sub(1);
+        return run_workers_impl(workers, move |w| {
+            if w == target {
+                panic!("injected worker_panic (PHAST_FAULT)");
+            }
+            f(w)
+        });
+    }
+    run_workers_impl(workers, f)
+}
+
+fn run_workers_impl<F: Fn(usize) + Sync>(workers: usize, f: F) {
     if workers <= 1 {
         f(0);
         return;

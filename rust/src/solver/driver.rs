@@ -1,0 +1,294 @@
+//! `TrainDriver` — the fault-tolerant training loop around
+//! [`Solver::solve`]'s step cycle: periodic crash-safe checkpoints, exact
+//! resume from the newest valid snapshot, worker-panic recovery through
+//! the self-healing pool, and a divergence watchdog that rolls non-finite
+//! losses back to the last good snapshot under a bounded retry budget.
+//!
+//! The contract (verified in `tests/training_e2e.rs` and CI): a run that
+//! crashes — or recovers in-process — and resumes from a snapshot
+//! finishes **bitwise-identical** to an uninterrupted run at the same
+//! thread count, because a snapshot captures everything the trajectory
+//! depends on: parameters, momentum history, the iteration counter, and
+//! the data-pipeline cursors.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::ops::par;
+
+use super::{snapshot, Solver};
+
+/// Policy knobs for [`TrainDriver`]; [`DriverConfig::from_env`] reads the
+/// `PHAST_SNAPSHOT_*` environment (see `docs/FAULT_TOLERANCE.md`).
+#[derive(Clone, Debug)]
+pub struct DriverConfig {
+    /// Snapshot every N completed iterations (0 disables checkpointing,
+    /// and with it rollback recovery).  Default 50.
+    pub snapshot_every: usize,
+    /// Keep the newest K checkpoints (0 = keep all).  Default 3.
+    pub keep: usize,
+    /// Checkpoint directory.
+    pub dir: PathBuf,
+    /// How many rollbacks (worker panic or non-finite loss) the driver
+    /// absorbs before aborting with full context.  Default 2.
+    pub recover_budget: usize,
+}
+
+impl DriverConfig {
+    /// Defaults with an explicit checkpoint directory.
+    pub fn new(dir: impl Into<PathBuf>) -> DriverConfig {
+        DriverConfig { snapshot_every: 50, keep: 3, dir: dir.into(), recover_budget: 2 }
+    }
+
+    /// Read the `PHAST_SNAPSHOT_EVERY` / `PHAST_SNAPSHOT_KEEP` /
+    /// `PHAST_SNAPSHOT_DIR` knobs, falling back to `default_dir` and the
+    /// [`DriverConfig::new`] defaults.
+    pub fn from_env(default_dir: &str) -> DriverConfig {
+        fn num(var: &str, default: usize) -> usize {
+            std::env::var(var)
+                .ok()
+                .and_then(|v| v.trim().parse().ok())
+                .unwrap_or(default)
+        }
+        let dir = std::env::var("PHAST_SNAPSHOT_DIR").unwrap_or_else(|_| default_dir.to_string());
+        DriverConfig {
+            snapshot_every: num("PHAST_SNAPSHOT_EVERY", 50),
+            keep: num("PHAST_SNAPSHOT_KEEP", 3),
+            dir: PathBuf::from(dir),
+            recover_budget: 2,
+        }
+    }
+}
+
+/// Render a caught panic payload for error context.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Crash-safe wrapper around a [`Solver`]: see the module docs.
+pub struct TrainDriver {
+    /// The wrapped solver (public so callers can inspect weights/losses).
+    pub solver: Solver,
+    cfg: DriverConfig,
+    rollbacks: usize,
+}
+
+impl TrainDriver {
+    /// Wrap `solver` under `cfg`'s checkpoint/recovery policy.
+    pub fn new(solver: Solver, cfg: DriverConfig) -> TrainDriver {
+        TrainDriver { solver, cfg, rollbacks: 0 }
+    }
+
+    /// Rollbacks absorbed so far (worker panics + divergence).
+    pub fn rollbacks(&self) -> usize {
+        self.rollbacks
+    }
+
+    /// The checkpoint directory in use.
+    pub fn dir(&self) -> &Path {
+        &self.cfg.dir
+    }
+
+    /// Resume from the newest valid snapshot in the checkpoint directory,
+    /// if one exists: corrupt or truncated candidates are skipped loudly
+    /// and the next older one is tried.  Returns the path restored from,
+    /// or `None` for a fresh start.
+    pub fn resume(&mut self) -> Result<Option<PathBuf>> {
+        snapshot::find_latest_valid(&mut self.solver, &self.cfg.dir)
+    }
+
+    /// Save a rotated checkpoint at the current iteration.
+    pub fn checkpoint(&mut self) -> Result<PathBuf> {
+        snapshot::save_checkpoint(&mut self.solver, &self.cfg.dir, self.cfg.keep)
+    }
+
+    /// Roll back to the newest valid snapshot after `cause`, consuming
+    /// one unit of the recovery budget; aborts with full context when the
+    /// budget is exhausted or no snapshot can be loaded.
+    fn rollback(&mut self, cause: &str) -> Result<()> {
+        if self.rollbacks >= self.cfg.recover_budget {
+            bail!(
+                "training aborted: {cause}; recovery budget exhausted \
+                 ({} rollback(s) used of {}), snapshots in {:?}",
+                self.rollbacks,
+                self.cfg.recover_budget,
+                self.cfg.dir
+            );
+        }
+        self.rollbacks += 1;
+        let loaded = snapshot::find_latest_valid(&mut self.solver, &self.cfg.dir)
+            .with_context(|| format!("rolling back after: {cause}"))?;
+        let Some(path) = loaded else {
+            bail!("training aborted: {cause}; no valid snapshot in {:?} to roll back to", self.cfg.dir);
+        };
+        // Drop log entries past the restored iteration so the replayed
+        // stretch does not appear twice in the loss curve.
+        let restored = self.solver.iter();
+        self.solver.log.retain(|e| e.iter < restored);
+        eprintln!(
+            "WARNING: recovered from {cause}: rolled back to {path:?} (iter {restored}, \
+             rollback {}/{})",
+            self.rollbacks, self.cfg.recover_budget
+        );
+        Ok(())
+    }
+
+    /// Train until the solver reaches `total_iters`, checkpointing every
+    /// `snapshot_every` completed iterations (plus once at iteration 0,
+    /// so rollback always has a floor, and once at the end).
+    ///
+    /// Recovery: a worker panic during a step is caught, the pool is
+    /// verified/healed ([`par::pool_heal`]), and the run rolls back to
+    /// the newest valid snapshot; a non-finite loss triggers the same
+    /// rollback.  Either path consumes recovery budget and the run aborts
+    /// with full context when it is exhausted.
+    pub fn run(&mut self, total_iters: usize) -> Result<()> {
+        let snapshotting = self.cfg.snapshot_every > 0;
+        if snapshotting && self.solver.iter() == 0 {
+            self.checkpoint().context("initial checkpoint")?;
+        }
+        while self.solver.iter() < total_iters {
+            let at = self.solver.iter();
+            let outcome = catch_unwind(AssertUnwindSafe(|| self.solver.step()));
+            match outcome {
+                Err(payload) => {
+                    let healed = par::pool_heal();
+                    let msg = panic_message(payload.as_ref());
+                    if !snapshotting {
+                        bail!(
+                            "worker panic at iter {at} ({msg}); checkpointing disabled, \
+                             cannot roll back (pool healed: {healed} worker(s) respawned)"
+                        );
+                    }
+                    self.rollback(&format!(
+                        "worker panic at iter {at} ({msg}); pool healed \
+                         ({healed} worker(s) respawned)"
+                    ))?;
+                }
+                Ok(Err(e)) => {
+                    return Err(e.context(format!("solver step failed at iter {at}")));
+                }
+                Ok(Ok(loss)) if !loss.is_finite() => {
+                    if !snapshotting {
+                        bail!(
+                            "non-finite loss {loss} at iter {at}; checkpointing disabled, \
+                             cannot roll back"
+                        );
+                    }
+                    self.rollback(&format!("non-finite loss {loss} at iter {at}"))?;
+                }
+                Ok(Ok(_)) => {
+                    let done = self.solver.iter();
+                    if snapshotting
+                        && (done % self.cfg.snapshot_every == 0 || done == total_iters)
+                    {
+                        self.checkpoint()
+                            .with_context(|| format!("checkpoint at iter {done}"))?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Net;
+    use crate::ops::fault;
+    use crate::proto::{presets, NetConfig, SolverConfig};
+
+    fn solver() -> Solver {
+        let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+        cfg.display = 0;
+        let net =
+            Net::from_config(NetConfig::from_text(presets::LENET_MNIST).unwrap(), 7).unwrap();
+        Solver::new(cfg, net)
+    }
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("phast_caffe_driver_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn final_weights(s: &Solver) -> Vec<f32> {
+        s.net
+            .params()
+            .into_iter()
+            .flat_map(|p| p.data().as_slice().to_vec())
+            .collect()
+    }
+
+    #[test]
+    fn driver_trains_and_checkpoints() {
+        let dir = fresh_dir("plain");
+        let mut cfg = DriverConfig::new(&dir);
+        cfg.snapshot_every = 3;
+        cfg.keep = 2;
+        let mut d = TrainDriver::new(solver(), cfg);
+        d.run(7).unwrap();
+        assert_eq!(d.solver.iter(), 7);
+        // iter 0 + 3 + 6 + final 7, pruned to the newest 2.
+        let latest = std::fs::read_to_string(dir.join("LATEST")).unwrap();
+        assert_eq!(latest.trim(), "snap_00000007.pcss");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nan_watchdog_rolls_back_and_matches_reference() {
+        let dir_ref = fresh_dir("nanref");
+        let mut cfg = DriverConfig::new(&dir_ref);
+        cfg.snapshot_every = 4;
+        let mut reference = TrainDriver::new(solver(), cfg.clone());
+        reference.run(10).unwrap();
+
+        let dir_f = fresh_dir("nanrun");
+        cfg.dir.clone_from(&dir_f);
+        let mut faulty = TrainDriver::new(solver(), cfg);
+        fault::with_faults("nan@loss=7", || faulty.run(10)).unwrap();
+        assert_eq!(faulty.rollbacks(), 1);
+        assert_eq!(final_weights(&reference.solver), final_weights(&faulty.solver));
+        assert_eq!(
+            reference.solver.log.iter().map(|e| e.loss).collect::<Vec<_>>(),
+            faulty.solver.log.iter().map(|e| e.loss).collect::<Vec<_>>(),
+        );
+        std::fs::remove_dir_all(&dir_ref).ok();
+        std::fs::remove_dir_all(&dir_f).ok();
+    }
+
+    #[test]
+    fn persistent_divergence_exhausts_budget_with_context() {
+        let dir = fresh_dir("budget");
+        let mut cfg = DriverConfig::new(&dir);
+        cfg.snapshot_every = 2;
+        cfg.recover_budget = 2;
+        let mut d = TrainDriver::new(solver(), cfg);
+        // Every loss is NaN: rollback can never help.
+        let err = fault::with_faults("nan@loss", || d.run(8)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("recovery budget exhausted"), "{msg}");
+        assert!(msg.contains("non-finite loss"), "{msg}");
+        assert_eq!(d.rollbacks(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn from_env_defaults() {
+        // No PHAST_SNAPSHOT_* in the test environment.
+        let cfg = DriverConfig::from_env("snapdir");
+        assert_eq!(cfg.snapshot_every, 50);
+        assert_eq!(cfg.keep, 3);
+        assert_eq!(cfg.dir, PathBuf::from("snapdir"));
+    }
+}

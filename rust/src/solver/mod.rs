@@ -2,9 +2,13 @@
 //! test intervals, snapshots.  Drives either the native net or (through
 //! `phast::PortedNet`) the partially/fully ported ones.
 
+mod driver;
 mod snapshot;
 
-pub use snapshot::{load_snapshot, save_snapshot};
+pub use driver::{DriverConfig, TrainDriver};
+pub use snapshot::{
+    crc32, find_latest_valid, load_snapshot, save_checkpoint, save_snapshot, snapshot_path,
+};
 
 use std::sync::OnceLock;
 
@@ -133,8 +137,10 @@ impl Solver {
 
     /// One iteration: forward, backward, SGD update.  Returns the loss.
     pub fn step(&mut self) -> Result<f32> {
+        ops::fault::begin_iter(self.iter as u64);
         self.net.zero_param_diffs();
         let loss = self.net.forward()?.unwrap_or(0.0);
+        let loss = ops::fault::corrupt_value("loss", loss);
         self.net.backward()?;
         self.apply_update();
         let lr = self.lr();
@@ -160,12 +166,12 @@ impl Solver {
         );
     }
 
-    /// Run `n` iterations, logging every `display` steps via `log::info`.
+    /// Run `n` iterations, printing progress every `display` steps.
     pub fn solve(&mut self, n: usize) -> Result<()> {
         for _ in 0..n {
             let loss = self.step()?;
             if self.config.display > 0 && self.iter % self.config.display == 0 {
-                log::info!("iter {} loss {:.4} lr {:.5}", self.iter, loss, self.lr());
+                println!("iter {} loss {:.4} lr {:.5}", self.iter, loss, self.lr());
             }
         }
         Ok(())

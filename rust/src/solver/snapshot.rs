@@ -1,116 +1,448 @@
-//! Snapshot save/restore — Caffe's `.caffemodel`/`.solverstate` analog in
-//! one little-endian binary file: params + momentum history + iteration.
+//! Crash-safe snapshot save/restore — Caffe's `.caffemodel`/`.solverstate`
+//! analog, hardened for fault-tolerant training (see
+//! `docs/FAULT_TOLERANCE.md`).
+//!
+//! # Format v2
+//!
+//! One little-endian binary file:
+//!
+//! ```text
+//! "PCSS" | version: u32 = 2
+//! section META: tag "META" | payload_len u64 | payload | crc32 u32
+//!   payload: iter u64 | ncursors u32 | ncursors × (epoch u64, pos u64)
+//! section PARM: tag "PARM" | payload_len u64 | payload | crc32 u32
+//!   payload: nparams u32 | per param:
+//!     name_len u32 | name | count u64 | count × f32 data | count × f32 hist
+//! ```
+//!
+//! Every section payload carries a CRC-32 (IEEE), so truncation and
+//! bit-rot are detected loudly instead of loading silently corrupted
+//! weights.  The META cursors are the data-pipeline positions
+//! ([`crate::net::Net::data_cursors`]) that make resume **exact**: a
+//! restored run replays the same batch sequence an uninterrupted run
+//! would have seen.  Version-1 files (no sections, no CRC, no cursors)
+//! still load.
+//!
+//! # Durability
+//!
+//! [`save_snapshot`] writes a temp file in the target directory, flushes
+//! and fsyncs it, then atomically renames over the destination — a crash
+//! mid-save can never clobber the previous good snapshot.  Transient IO
+//! errors are retried with exponential backoff (`PHAST_SNAPSHOT_RETRY`
+//! attempts, default 3).  [`save_checkpoint`] layers rotation on top:
+//! `snap_<iter>.pcss` naming, a `LATEST` pointer file, and keep-last-K
+//! pruning.  [`find_latest_valid`] walks the directory newest-first and
+//! skips corrupt or truncated snapshots loudly.
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
 
 use anyhow::{bail, Context, Result};
+
+use crate::ops::fault;
 
 use super::Solver;
 
 const MAGIC: &[u8; 4] = b"PCSS";
-const VERSION: u32 = 1;
+const VERSION_V1: u32 = 1;
+const VERSION_V2: u32 = 2;
+const TAG_META: &[u8; 4] = b"META";
+const TAG_PARM: &[u8; 4] = b"PARM";
 
-/// Serialize solver state (params, momentum, iter) to `path`.
-pub fn save_snapshot(solver: &mut Solver, path: &Path) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir).ok();
+/// CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`), table-driven.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
     }
-    let iter = solver.iter();
-    let hist_flat: Vec<Vec<f32>> = solver.history().to_vec();
-    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&(iter as u64).to_le_bytes())?;
+    !crc
+}
+
+/// Append `xs` to `out` as little-endian bytes — one buffer extension per
+/// slice, not one write per value.
+fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    let start = out.len();
+    out.resize(start + xs.len() * 4, 0);
+    for (chunk, v) in out[start..].chunks_exact_mut(4).zip(xs) {
+        chunk.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Append one `tag | len | payload | crc32` section.
+fn push_section(out: &mut Vec<u8>, tag: &[u8; 4], payload: &[u8]) {
+    out.extend_from_slice(tag);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+}
+
+/// Serialize the solver (params, momentum, iter, data cursors) as a v2
+/// snapshot byte image.
+fn serialize_v2(solver: &mut Solver) -> Vec<u8> {
+    let iter = solver.iter() as u64;
+    let cursors = solver.net.data_cursors();
+    let hist: Vec<Vec<f32>> = solver.history().to_vec();
+
+    let mut meta = Vec::with_capacity(12 + cursors.len() * 16);
+    meta.extend_from_slice(&iter.to_le_bytes());
+    meta.extend_from_slice(&(cursors.len() as u32).to_le_bytes());
+    for &(epoch, pos) in &cursors {
+        meta.extend_from_slice(&(epoch as u64).to_le_bytes());
+        meta.extend_from_slice(&(pos as u64).to_le_bytes());
+    }
+
     let params = solver.net.params_mut();
-    w.write_all(&(params.len() as u32).to_le_bytes())?;
-    for (p, h) in params.iter().zip(&hist_flat) {
+    let payload_guess: usize = params.iter().map(|p| 24 + p.count() * 8).sum();
+    let mut parm = Vec::with_capacity(4 + payload_guess);
+    parm.extend_from_slice(&(params.len() as u32).to_le_bytes());
+    for (p, h) in params.iter().zip(&hist) {
         let name = p.name().as_bytes();
-        w.write_all(&(name.len() as u32).to_le_bytes())?;
-        w.write_all(name)?;
-        w.write_all(&(p.count() as u64).to_le_bytes())?;
-        for v in p.data().as_slice() {
-            w.write_all(&v.to_le_bytes())?;
-        }
-        for v in h {
-            w.write_all(&v.to_le_bytes())?;
+        parm.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        parm.extend_from_slice(name);
+        parm.extend_from_slice(&(p.count() as u64).to_le_bytes());
+        push_f32s(&mut parm, p.data().as_slice());
+        push_f32s(&mut parm, h);
+    }
+
+    let mut out = Vec::with_capacity(8 + meta.len() + parm.len() + 32);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION_V2.to_le_bytes());
+    push_section(&mut out, TAG_META, &meta);
+    push_section(&mut out, TAG_PARM, &parm);
+    out
+}
+
+/// `PHAST_SNAPSHOT_RETRY`: total save attempts before giving up
+/// (default 3, minimum 1).  Read per call so tests and long-running
+/// drivers see updates.
+fn snapshot_retries() -> usize {
+    std::env::var("PHAST_SNAPSHOT_RETRY")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(3)
+}
+
+/// One crash-safe save attempt: temp file + flush + fsync + atomic
+/// rename.  A crash at any point leaves either the old snapshot or the
+/// new one — never a torn file at `path`.
+fn try_save(bytes: &[u8], path: &Path) -> Result<()> {
+    fault::check_io("snapshot_save").context("snapshot save IO")?;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| format!("create dir {dir:?}"))?;
         }
     }
-    w.flush()?;
+    let tmp = path.with_extension("pcss.tmp");
+    {
+        let mut f = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        f.write_all(bytes).with_context(|| format!("write {tmp:?}"))?;
+        f.flush()?;
+        f.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
     Ok(())
 }
 
-/// Restore solver state saved by [`save_snapshot`].  Parameter names and
-/// sizes must match the current net.
-pub fn load_snapshot(solver: &mut Solver, path: &Path) -> Result<()> {
-    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
-    let mut m4 = [0u8; 4];
-    r.read_exact(&mut m4)?;
-    if &m4 != MAGIC {
-        bail!("{path:?} is not a phast-caffe snapshot");
+/// Serialize solver state (params, momentum, iter, data cursors) to
+/// `path` in format v2: atomically (temp + fsync + rename) and with
+/// bounded retry-with-backoff on transient IO errors.
+pub fn save_snapshot(solver: &mut Solver, path: &Path) -> Result<()> {
+    let bytes = serialize_v2(solver);
+    let attempts = snapshot_retries();
+    let mut delay = std::time::Duration::from_millis(5);
+    for attempt in 1..=attempts {
+        match try_save(&bytes, path) {
+            Ok(()) => return Ok(()),
+            Err(e) if attempt < attempts => {
+                eprintln!(
+                    "WARNING: snapshot save attempt {attempt}/{attempts} to {path:?} \
+                     failed ({e:#}); retrying in {delay:?}"
+                );
+                std::thread::sleep(delay);
+                delay *= 2;
+            }
+            Err(e) => {
+                return Err(e.context(format!(
+                    "saving snapshot to {path:?} failed after {attempts} attempt(s)"
+                )))
+            }
+        }
     }
-    r.read_exact(&mut m4)?;
-    if u32::from_le_bytes(m4) != VERSION {
-        bail!("unsupported snapshot version");
-    }
-    let mut u8buf = [0u8; 8];
-    r.read_exact(&mut u8buf)?;
-    let iter = u64::from_le_bytes(u8buf) as usize;
-    r.read_exact(&mut m4)?;
-    let nparams = u32::from_le_bytes(m4) as usize;
+    unreachable!("retry loop returns on success or final error");
+}
 
-    // Collect into temporaries first to avoid holding borrows.
-    let mut entries: Vec<(String, Vec<f32>, Vec<f32>)> = Vec::with_capacity(nparams);
-    for _ in 0..nparams {
-        r.read_exact(&mut m4)?;
-        let nlen = u32::from_le_bytes(m4) as usize;
-        let mut nbuf = vec![0u8; nlen];
-        r.read_exact(&mut nbuf)?;
-        let name = String::from_utf8(nbuf)?;
-        r.read_exact(&mut u8buf)?;
-        let count = u64::from_le_bytes(u8buf) as usize;
-        let mut data = vec![0f32; count];
-        let mut hist = vec![0f32; count];
-        let mut fbuf = vec![0u8; count * 4];
-        r.read_exact(&mut fbuf)?;
-        for (d, ch) in data.iter_mut().zip(fbuf.chunks_exact(4)) {
-            *d = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+/// Checkpoint path for an iteration: `dir/snap_<iter, zero-padded>.pcss`
+/// (zero-padding keeps lexicographic order == iteration order).
+pub fn snapshot_path(dir: &Path, iter: usize) -> PathBuf {
+    dir.join(format!("snap_{iter:08}.pcss"))
+}
+
+/// List `snap_*.pcss` files in `dir`, sorted oldest-first (empty when
+/// the directory does not exist).
+fn list_snapshots(dir: &Path) -> Vec<PathBuf> {
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return Vec::new();
+    };
+    let mut snaps: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("snap_") && n.ends_with(".pcss"))
+        })
+        .collect();
+    snaps.sort();
+    snaps
+}
+
+/// Save a rotated checkpoint for the solver's current iteration into
+/// `dir`: [`save_snapshot`] to `snap_<iter>.pcss`, update the `LATEST`
+/// pointer file, and prune all but the newest `keep` snapshots
+/// (`keep == 0` keeps everything).  Returns the checkpoint path.
+pub fn save_checkpoint(solver: &mut Solver, dir: &Path, keep: usize) -> Result<PathBuf> {
+    let path = snapshot_path(dir, solver.iter());
+    save_snapshot(solver, &path)?;
+    let name = path.file_name().expect("snapshot path has a file name");
+    std::fs::write(dir.join("LATEST"), format!("{}\n", name.to_string_lossy()))
+        .with_context(|| format!("writing LATEST pointer in {dir:?}"))?;
+    if keep > 0 {
+        let snaps = list_snapshots(dir);
+        for old in snaps.iter().take(snaps.len().saturating_sub(keep)) {
+            if let Err(e) = std::fs::remove_file(old) {
+                // Pruning is best-effort: a failed unlink must not abort
+                // training after a durable snapshot already landed.
+                eprintln!("WARNING: could not prune old snapshot {old:?}: {e}");
+            }
         }
-        r.read_exact(&mut fbuf)?;
-        for (d, ch) in hist.iter_mut().zip(fbuf.chunks_exact(4)) {
-            *d = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+    }
+    Ok(path)
+}
+
+/// Bounds-checked little-endian reader over a snapshot byte image: every
+/// decode error is a contextual `Err`, never a panic.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.buf.len() - self.pos {
+            bail!(
+                "truncated snapshot: wanted {n} bytes at offset {}, file has {}",
+                self.pos,
+                self.buf.len()
+            );
         }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32s(&mut self, count: usize) -> Result<Vec<f32>> {
+        let nbytes = count
+            .checked_mul(4)
+            .with_context(|| format!("implausible f32 count {count} (corrupt length field)"))?;
+        let b = self.take(nbytes)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Read one `tag | len | payload | crc` section, verifying the tag
+    /// and the payload CRC.
+    fn section(&mut self, tag: &[u8; 4]) -> Result<Reader<'a>> {
+        let got = self.take(4)?;
+        if got != tag.as_slice() {
+            bail!(
+                "expected {} section, found {:?}",
+                String::from_utf8_lossy(tag),
+                String::from_utf8_lossy(got)
+            );
+        }
+        let len = self.u64()? as usize;
+        let payload = self
+            .take(len)
+            .with_context(|| format!("{} section body", String::from_utf8_lossy(tag)))?;
+        let want = self.u32()?;
+        let have = crc32(payload);
+        if have != want {
+            bail!(
+                "CRC mismatch in {} section: stored {want:#010x}, computed {have:#010x} \
+                 (snapshot is corrupt)",
+                String::from_utf8_lossy(tag)
+            );
+        }
+        Ok(Reader { buf: payload, pos: 0 })
+    }
+}
+
+/// A fully parsed snapshot, not yet applied to any solver.
+struct Parsed {
+    iter: usize,
+    cursors: Vec<(usize, usize)>,
+    /// (name, data, momentum history) per parameter blob.
+    entries: Vec<(String, Vec<f32>, Vec<f32>)>,
+}
+
+/// Parse the shared per-param entry list (identical layout in v1 and the
+/// v2 PARM payload).
+fn parse_entries(r: &mut Reader<'_>) -> Result<Vec<(String, Vec<f32>, Vec<f32>)>> {
+    let nparams = r.u32()? as usize;
+    let mut entries = Vec::with_capacity(nparams.min(1024));
+    for i in 0..nparams {
+        let nlen = r.u32()? as usize;
+        let nbuf = r.take(nlen).with_context(|| format!("param {i} name"))?;
+        let name = String::from_utf8(nbuf.to_vec())
+            .with_context(|| format!("param {i} name is not UTF-8"))?;
+        let count = r.u64()? as usize;
+        let data = r.f32s(count).with_context(|| format!("param '{name}' data"))?;
+        let hist = r.f32s(count).with_context(|| format!("param '{name}' history"))?;
         entries.push((name, data, hist));
     }
+    Ok(entries)
+}
 
+fn parse_snapshot(bytes: &[u8], path: &Path) -> Result<Parsed> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let magic = r.take(4)?;
+    if magic != MAGIC.as_slice() {
+        bail!("{path:?} is not a phast-caffe snapshot");
+    }
+    let version = r.u32()?;
+    match version {
+        VERSION_V1 => {
+            // v1: unsectioned, unchecksummed, no data cursors.
+            let iter = r.u64()? as usize;
+            let entries = parse_entries(&mut r)?;
+            Ok(Parsed { iter, cursors: Vec::new(), entries })
+        }
+        VERSION_V2 => {
+            let mut meta = r.section(TAG_META)?;
+            let iter = meta.u64()? as usize;
+            let ncursors = meta.u32()? as usize;
+            let mut cursors = Vec::with_capacity(ncursors.min(64));
+            for _ in 0..ncursors {
+                let epoch = meta.u64()? as usize;
+                let pos = meta.u64()? as usize;
+                cursors.push((epoch, pos));
+            }
+            let mut parm = r.section(TAG_PARM)?;
+            let entries = parse_entries(&mut parm)?;
+            Ok(Parsed { iter, cursors, entries })
+        }
+        v => bail!("unsupported snapshot version {v} (this build reads 1 and 2)"),
+    }
+}
+
+/// Restore solver state saved by [`save_snapshot`] (format v2, with the
+/// data-pipeline cursors) or by the v1 writer (params + history + iter
+/// only).  Parameter names and sizes must match the current net; the
+/// whole file is parsed and validated **before** any solver state is
+/// mutated, so a corrupt snapshot never leaves a partial load behind.
+pub fn load_snapshot(solver: &mut Solver, path: &Path) -> Result<()> {
+    fault::check_io("snapshot_load").context("snapshot load IO")?;
+    let bytes = std::fs::read(path).with_context(|| format!("open {path:?}"))?;
+    let parsed =
+        parse_snapshot(&bytes, path).with_context(|| format!("parsing snapshot {path:?}"))?;
+
+    // Validate everything against the net before touching any state.
+    if !parsed.cursors.is_empty() {
+        let ndata = solver.net.data_cursors().len();
+        if parsed.cursors.len() != ndata {
+            bail!(
+                "snapshot has {} data cursor(s), net has {} data layer(s)",
+                parsed.cursors.len(),
+                ndata
+            );
+        }
+    }
     {
         let params = solver.net.params_mut();
-        if params.len() != entries.len() {
+        if params.len() != parsed.entries.len() {
             bail!(
                 "snapshot has {} params, net has {}",
-                entries.len(),
+                parsed.entries.len(),
                 params.len()
             );
         }
-        for (p, (name, data, _)) in params.into_iter().zip(&entries) {
+        for (p, (name, data, _)) in params.iter().zip(&parsed.entries) {
             if p.name() != name {
                 bail!("param name mismatch: snapshot '{}' vs net '{}'", name, p.name());
             }
             if p.count() != data.len() {
-                bail!("param '{}' size mismatch", name);
+                bail!(
+                    "param '{}' size mismatch: snapshot {} vs net {}",
+                    name,
+                    data.len(),
+                    p.count()
+                );
             }
+        }
+    }
+
+    // All checks passed: apply atomically from the parsed image.
+    {
+        let params = solver.net.params_mut();
+        for (p, (_, data, _)) in params.into_iter().zip(&parsed.entries) {
             p.data_mut().as_mut_slice().copy_from_slice(data);
         }
     }
     {
         let hist = solver.history_mut();
-        for (h, (_, _, hdata)) in hist.iter_mut().zip(&entries) {
+        for (h, (_, _, hdata)) in hist.iter_mut().zip(&parsed.entries) {
             h.copy_from_slice(hdata);
         }
     }
-    solver.set_iter(iter);
+    if !parsed.cursors.is_empty() {
+        solver.net.seek_data_cursors(&parsed.cursors)?;
+    }
+    solver.set_iter(parsed.iter);
     Ok(())
+}
+
+/// Discover and load the newest **valid** snapshot in `dir`: candidates
+/// are tried newest-first, and corrupt/truncated/mismatched ones are
+/// skipped loudly (a warning per skip).  Returns the path loaded, or
+/// `None` when the directory holds no loadable snapshot (including when
+/// it does not exist yet).
+pub fn find_latest_valid(solver: &mut Solver, dir: &Path) -> Result<Option<PathBuf>> {
+    let snaps = list_snapshots(dir);
+    for path in snaps.iter().rev() {
+        match load_snapshot(solver, path) {
+            Ok(()) => return Ok(Some(path.clone())),
+            Err(e) => {
+                eprintln!("WARNING: skipping invalid snapshot {path:?}: {e:#}");
+            }
+        }
+    }
+    Ok(None)
 }
 
 #[cfg(test)]
@@ -127,10 +459,35 @@ mod tests {
         Solver::new(cfg, net)
     }
 
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("phast_caffe_snap_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// The legacy v1 writer, kept verbatim for back-compat testing.
+    fn write_v1(solver: &mut Solver, path: &Path) {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION_V1.to_le_bytes());
+        out.extend_from_slice(&(solver.iter() as u64).to_le_bytes());
+        let hist = solver.history().to_vec();
+        let params = solver.net.params_mut();
+        out.extend_from_slice(&(params.len() as u32).to_le_bytes());
+        for (p, h) in params.iter().zip(&hist) {
+            let name = p.name().as_bytes();
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name);
+            out.extend_from_slice(&(p.count() as u64).to_le_bytes());
+            push_f32s(&mut out, p.data().as_slice());
+            push_f32s(&mut out, h);
+        }
+        std::fs::write(path, out).unwrap();
+    }
+
     #[test]
     fn snapshot_roundtrip_resumes_identically() {
-        let dir = std::env::temp_dir().join("phast_caffe_snap_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("roundtrip");
         let path = dir.join("state.pcss");
 
         let mut a = solver();
@@ -145,11 +502,13 @@ mod tests {
             .map(|p| p.data().as_slice().to_vec())
             .collect();
         let hist_at_save = a.history().to_vec();
+        let cursors_at_save = a.net.data_cursors();
         a.step().unwrap(); // mutate further; snapshot must be unaffected
 
         let mut b = solver();
         load_snapshot(&mut b, &path).unwrap();
         assert_eq!(b.iter(), 3);
+        assert_eq!(b.net.data_cursors(), cursors_at_save);
         for (p, want) in b.net.params_mut().iter().zip(&params_at_save) {
             assert_eq!(p.data().as_slice(), want.as_slice());
         }
@@ -164,12 +523,246 @@ mod tests {
 
     #[test]
     fn rejects_foreign_file() {
-        let dir = std::env::temp_dir().join("phast_caffe_snap_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("foreign");
         let path = dir.join("bogus.pcss");
         std::fs::write(&path, b"nope").unwrap();
         let mut s = solver();
         assert!(load_snapshot(&mut s, &path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_snapshot_still_loads() {
+        let dir = tmp_dir("v1");
+        let path = dir.join("legacy.pcss");
+        let mut a = solver();
+        for _ in 0..2 {
+            a.step().unwrap();
+        }
+        write_v1(&mut a, &path);
+        let want: Vec<Vec<f32>> = a
+            .net
+            .params_mut()
+            .iter()
+            .map(|p| p.data().as_slice().to_vec())
+            .collect();
+        let mut b = solver();
+        load_snapshot(&mut b, &path).unwrap();
+        assert_eq!(b.iter(), 2);
+        for (p, w) in b.net.params_mut().iter().zip(&want) {
+            assert_eq!(p.data().as_slice(), w.as_slice());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_files_fail_loudly_never_panic() {
+        let dir = tmp_dir("trunc");
+        let path = dir.join("full.pcss");
+        let mut a = solver();
+        a.step().unwrap();
+        save_snapshot(&mut a, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let cut_path = dir.join("cut.pcss");
+        // Cut at a spread of offsets including every structural boundary
+        // early in the file.
+        let mut cuts: Vec<usize> = (0..64).collect();
+        let step = (bytes.len() / 13).max(1);
+        cuts.extend((64..bytes.len()).step_by(step));
+        cuts.push(bytes.len() - 1);
+        for cut in cuts {
+            std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+            let mut s = solver();
+            let err = load_snapshot(&mut s, &cut_path)
+                .expect_err(&format!("truncation at {cut} must fail"));
+            // Contextual: the error chain names the file.
+            assert!(format!("{err:#}").contains("cut.pcss"), "error lacks context: {err:#}");
+        }
+        std::fs::remove_file(&cut_path).ok();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bit_flips_are_detected() {
+        let dir = tmp_dir("flip");
+        let path = dir.join("full.pcss");
+        let mut a = solver();
+        a.step().unwrap();
+        save_snapshot(&mut a, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let flip_path = dir.join("flip.pcss");
+        let step = (bytes.len() / 29).max(1);
+        for off in (0..bytes.len()).step_by(step) {
+            let mut corrupted = bytes.clone();
+            corrupted[off] ^= 0x40;
+            std::fs::write(&flip_path, &corrupted).unwrap();
+            let mut s = solver();
+            assert!(
+                load_snapshot(&mut s, &flip_path).is_err(),
+                "bit flip at offset {off} loaded silently"
+            );
+        }
+        std::fs::remove_file(&flip_path).ok();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_magic_and_version_rejected() {
+        let dir = tmp_dir("magic");
+        let path = dir.join("full.pcss");
+        let mut a = solver();
+        save_snapshot(&mut a, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+
+        let mut wrong_magic = bytes.clone();
+        wrong_magic[0] = b'X';
+        let p = dir.join("wm.pcss");
+        std::fs::write(&p, &wrong_magic).unwrap();
+        let err = load_snapshot(&mut solver(), &p).unwrap_err();
+        assert!(format!("{err:#}").contains("not a phast-caffe snapshot"), "{err:#}");
+
+        let mut wrong_version = bytes.clone();
+        wrong_version[4] = 99;
+        std::fs::write(&p, &wrong_version).unwrap();
+        let err = load_snapshot(&mut solver(), &p).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported snapshot version"), "{err:#}");
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn name_and_size_mismatch_rejected_without_partial_load() {
+        // A CIFAR snapshot must not load into a LeNet solver — and the
+        // LeNet solver's params must be untouched after the failed load.
+        let dir = tmp_dir("mismatch");
+        let path = dir.join("cifar.pcss");
+        let mut cfg = SolverConfig::from_text(presets::CIFAR_SOLVER).unwrap();
+        cfg.display = 0;
+        let net =
+            Net::from_config(NetConfig::from_text(presets::CIFAR10_QUICK).unwrap(), 1).unwrap();
+        let mut cifar = Solver::new(cfg, net);
+        save_snapshot(&mut cifar, &path).unwrap();
+
+        let mut lenet = solver();
+        let before: Vec<Vec<f32>> = lenet
+            .net
+            .params_mut()
+            .iter()
+            .map(|p| p.data().as_slice().to_vec())
+            .collect();
+        let iter_before = lenet.iter();
+        assert!(load_snapshot(&mut lenet, &path).is_err());
+        let after: Vec<Vec<f32>> = lenet
+            .net
+            .params_mut()
+            .iter()
+            .map(|p| p.data().as_slice().to_vec())
+            .collect();
+        assert_eq!(before, after, "failed load mutated solver params");
+        assert_eq!(lenet.iter(), iter_before);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_over_existing_snapshot() {
+        let dir = tmp_dir("atomic");
+        let path = dir.join("state.pcss");
+        let mut a = solver();
+        a.step().unwrap();
+        save_snapshot(&mut a, &path).unwrap();
+        let first = std::fs::read(&path).unwrap();
+        a.step().unwrap();
+        save_snapshot(&mut a, &path).unwrap();
+        let second = std::fs::read(&path).unwrap();
+        assert_ne!(first, second, "second save must replace the first");
+        // No temp-file litter after a successful save.
+        assert!(!path.with_extension("pcss.tmp").exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn io_error_injection_exhausts_retries_then_succeeds() {
+        let dir = tmp_dir("retry");
+        let path = dir.join("state.pcss");
+        let mut a = solver();
+        // Default budget is 3 attempts: the first two injected failures
+        // are retried away.
+        fault::with_faults("io_error@snapshot_save:2", || {
+            save_snapshot(&mut a, &path).unwrap();
+        });
+        assert!(path.exists());
+        // 3+ injected failures exhaust the budget and surface the error.
+        let path2 = dir.join("state2.pcss");
+        fault::with_faults("io_error@snapshot_save:99", || {
+            let err = save_snapshot(&mut a, &path2).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("injected io_error"), "{msg}");
+            assert!(msg.contains("attempt"), "{msg}");
+        });
+        assert!(!path2.exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_rotation_keeps_last_k_and_latest_pointer() {
+        let dir = tmp_dir("rotate");
+        // Fresh dir per run: clear stale snaps from previous test runs.
+        for p in list_snapshots(&dir) {
+            std::fs::remove_file(p).ok();
+        }
+        let mut a = solver();
+        for want_iter in [1usize, 2, 3, 4, 5] {
+            a.step().unwrap();
+            save_checkpoint(&mut a, &dir, 3).unwrap();
+            assert_eq!(a.iter(), want_iter);
+        }
+        let snaps = list_snapshots(&dir);
+        assert_eq!(snaps.len(), 3, "rotation keeps exactly K: {snaps:?}");
+        let names: Vec<String> = snaps
+            .iter()
+            .map(|p| p.file_name().unwrap().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, ["snap_00000003.pcss", "snap_00000004.pcss", "snap_00000005.pcss"]);
+        let latest = std::fs::read_to_string(dir.join("LATEST")).unwrap();
+        assert_eq!(latest.trim(), "snap_00000005.pcss");
+    }
+
+    #[test]
+    fn find_latest_valid_skips_corrupt_newest() {
+        let dir = tmp_dir("fallback");
+        for p in list_snapshots(&dir) {
+            std::fs::remove_file(p).ok();
+        }
+        let mut a = solver();
+        a.step().unwrap();
+        save_checkpoint(&mut a, &dir, 0).unwrap(); // snap_00000001
+        let good_params: Vec<Vec<f32>> = a
+            .net
+            .params_mut()
+            .iter()
+            .map(|p| p.data().as_slice().to_vec())
+            .collect();
+        a.step().unwrap();
+        let newest = save_checkpoint(&mut a, &dir, 0).unwrap(); // snap_00000002
+        // Corrupt the newest in the middle of the PARM payload.
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&newest, &bytes).unwrap();
+
+        let mut b = solver();
+        let loaded = find_latest_valid(&mut b, &dir).unwrap();
+        assert_eq!(
+            loaded.as_deref().and_then(|p| p.file_name()),
+            Some(std::ffi::OsStr::new("snap_00000001.pcss")),
+            "must fall back to the previous valid snapshot"
+        );
+        assert_eq!(b.iter(), 1);
+        for (p, w) in b.net.params_mut().iter().zip(&good_params) {
+            assert_eq!(p.data().as_slice(), w.as_slice());
+        }
+        // Empty/missing dir: no snapshot, no error.
+        let mut c = solver();
+        assert!(find_latest_valid(&mut c, &dir.join("does_not_exist")).unwrap().is_none());
     }
 }

@@ -1,0 +1,184 @@
+//! Fault-tolerance integration tests: the self-healing worker pool,
+//! injected worker panics at several thread counts, and driver-level
+//! rollback recovery (see `docs/FAULT_TOLERANCE.md`).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use phast_caffe::net::Net;
+use phast_caffe::ops::{fault, par};
+use phast_caffe::proto::{presets, NetConfig, SolverConfig};
+use phast_caffe::solver::{DriverConfig, Solver, TrainDriver};
+
+/// Serialize every test in this binary: a worker kill in flight can
+/// strand a job another test dispatched concurrently into the same slot
+/// (the exit sentinel drains in FIFO order, jobs queued behind it are
+/// lost), and the pool-size/respawn assertions need exclusive ownership
+/// of the process-wide pool counters.
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn pool_lock() -> std::sync::MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("phast_caffe_ft_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn lenet_solver() -> Solver {
+    let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+    cfg.display = 0;
+    let net = Net::from_config(NetConfig::from_text(presets::LENET_MNIST).unwrap(), 21).unwrap();
+    Solver::new(cfg, net)
+}
+
+fn final_weights(s: &Solver) -> Vec<f32> {
+    s.net
+        .params()
+        .into_iter()
+        .flat_map(|p| p.data().as_slice().to_vec())
+        .collect()
+}
+
+/// A two-stage fused region whose result is checked against the serial
+/// expectation — the "next dispatch completes bitwise-correct" probe.
+fn assert_pool_dispatches_correctly(threads: usize) {
+    let n = 777;
+    let mut got = vec![0u64; n];
+    {
+        let view = par::FusedSlice::new(&mut got);
+        par::with_threads(threads, || {
+            par::parallel_regions(n, 2, par::Tuning::new(1), |stage, r| unsafe {
+                let block = view.slice_mut(r.clone());
+                match stage {
+                    0 => {
+                        for (slot, i) in block.iter_mut().zip(r) {
+                            *slot = i as u64 + 1;
+                        }
+                    }
+                    _ => {
+                        for slot in block.iter_mut() {
+                            *slot *= 3;
+                        }
+                    }
+                }
+            });
+        });
+    }
+    let want: Vec<u64> = (0..n).map(|i| (i as u64 + 1) * 3).collect();
+    assert_eq!(got, want, "pool produced a wrong result at {threads} threads");
+}
+
+#[test]
+fn killed_workers_are_respawned_by_dispatch() {
+    let _g = pool_lock();
+    // Warm the pool to a known minimum size.
+    par::with_threads(6, || par::parallel_for(64, par::Tuning::new(1), |_| {}));
+    let size = par::pool_size();
+    assert!(size >= 5, "pool did not warm: {size}");
+
+    let killed = par::kill_pool_workers(2);
+    assert_eq!(killed, 2);
+    let respawns_before = par::pool_respawns();
+
+    // A dispatch wide enough to touch every slot must respawn the two
+    // dead ones in place and still compute the right answer.
+    par::with_threads(size + 1, || {
+        par::parallel_for(4 * (size + 1), par::Tuning::new(1), |_| {});
+    });
+    assert_eq!(par::pool_respawns(), respawns_before + 2, "dead slots not respawned");
+    assert_eq!(par::pool_size(), size, "respawns must not change the slot count");
+    assert_pool_dispatches_correctly(size + 1);
+}
+
+#[test]
+fn pool_heal_revives_a_fully_killed_pool() {
+    let _g = pool_lock();
+    par::with_threads(4, || par::parallel_for(64, par::Tuning::new(1), |_| {}));
+    let size = par::pool_size();
+    assert!(size >= 3, "pool did not warm: {size}");
+
+    let killed = par::kill_pool_workers(size);
+    assert_eq!(killed, size, "every worker should accept the exit sentinel");
+    let healed = par::pool_heal();
+    assert_eq!(healed, size, "heal must respawn every killed worker");
+    assert_eq!(par::pool_size(), size);
+    // A healthy pool heals as a no-op.
+    assert_eq!(par::pool_heal(), 0);
+    assert_pool_dispatches_correctly(4);
+}
+
+#[test]
+fn injected_worker_panic_recovers_at_all_thread_counts() {
+    let _g = pool_lock();
+    for threads in [1usize, 2, 5, 16] {
+        par::with_threads(threads, || {
+            fault::with_faults("worker_panic@iter=0", || {
+                fault::begin_iter(0);
+                assert!(fault::worker_panic_armed(), "threads={threads}: arm failed");
+                let boom = catch_unwind(AssertUnwindSafe(|| {
+                    par::parallel_for(1024, par::Tuning::new(1), |_| {});
+                }));
+                assert!(boom.is_err(), "threads={threads}: injected panic must surface");
+                assert!(
+                    !fault::worker_panic_armed(),
+                    "threads={threads}: panic must be consumed"
+                );
+            });
+        });
+        // The pool must come back without a heal: next dispatch is
+        // bitwise-correct, no deadlock, no lost workers.
+        assert_pool_dispatches_correctly(threads);
+    }
+}
+
+#[test]
+fn driver_rolls_back_injected_worker_panic_to_a_clean_trajectory() {
+    let _g = pool_lock();
+    for threads in [1usize, 4] {
+        par::with_threads(threads, || {
+            let dir_ref = fresh_dir(&format!("panref{threads}"));
+            let mut cfg = DriverConfig::new(&dir_ref);
+            cfg.snapshot_every = 4;
+            cfg.recover_budget = 2;
+            let mut reference = TrainDriver::new(lenet_solver(), cfg.clone());
+            reference.run(10).unwrap();
+
+            let dir = fresh_dir(&format!("panic{threads}"));
+            cfg.dir.clone_from(&dir);
+            let mut faulty = TrainDriver::new(lenet_solver(), cfg);
+            fault::with_faults("worker_panic@iter=7", || faulty.run(10)).unwrap();
+            assert_eq!(faulty.rollbacks(), 1, "threads={threads}");
+            assert_eq!(
+                final_weights(&reference.solver),
+                final_weights(&faulty.solver),
+                "threads={threads}: recovered run diverged from the clean one"
+            );
+            std::fs::remove_dir_all(&dir_ref).ok();
+            std::fs::remove_dir_all(&dir).ok();
+        });
+    }
+}
+
+#[test]
+fn driver_aborts_with_context_when_panics_exhaust_the_budget() {
+    let _g = pool_lock();
+    let dir = fresh_dir("panbudget");
+    let mut cfg = DriverConfig::new(&dir);
+    cfg.snapshot_every = 2;
+    cfg.recover_budget = 1;
+    let mut d = TrainDriver::new(lenet_solver(), cfg);
+    // Every iteration panics: rollback can never help.
+    let err = fault::with_faults("worker_panic@iter", || d.run(6)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("recovery budget exhausted"), "{msg}");
+    assert!(msg.contains("worker panic"), "{msg}");
+    assert_eq!(d.rollbacks(), 1);
+    // The failed run must not leave the pool wedged.
+    assert_pool_dispatches_correctly(4);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,13 +1,15 @@
 //! End-to-end training integration tests: the full stack must *learn* on
 //! the synthetic datasets, in every backend.
 
+use std::path::{Path, PathBuf};
+
 use phast_caffe::experiments::{preset_net, sample_batch};
 use phast_caffe::net::Net;
-use phast_caffe::ops::par;
+use phast_caffe::ops::{fault, par};
 use phast_caffe::phast::FusedRunner;
 use phast_caffe::proto::{presets, NetConfig, SolverConfig};
 use phast_caffe::runtime::Engine;
-use phast_caffe::solver::{smooth_losses, Solver, StepSync};
+use phast_caffe::solver::{smooth_losses, DriverConfig, Solver, StepSync, TrainDriver};
 
 /// Native LeNet reaches high train accuracy quickly on the synthetic
 /// digits (they are separable by design).
@@ -131,6 +133,111 @@ fn backward_and_step_modes_keep_training_bitwise() {
             );
         }
     }
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("phast_caffe_e2e_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// A LeNet [`TrainDriver`] checkpointing every 4 iterations into `dir`
+/// (keeping every snapshot, so fallback cases have a predecessor) with
+/// the given recovery budget.  Seed fixed so every driver built here
+/// trains the identical trajectory.
+fn lenet_driver(dir: &Path, recover_budget: usize) -> TrainDriver {
+    let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+    cfg.display = 0;
+    let net = Net::from_config(NetConfig::from_text(presets::LENET_MNIST).unwrap(), 21).unwrap();
+    let mut dc = DriverConfig::new(dir);
+    dc.snapshot_every = 4;
+    dc.keep = 0;
+    dc.recover_budget = recover_budget;
+    TrainDriver::new(Solver::new(cfg, net), dc)
+}
+
+fn driver_weights(d: &TrainDriver) -> Vec<f32> {
+    d.solver
+        .net
+        .params()
+        .into_iter()
+        .flat_map(|p| p.data().as_slice().to_vec())
+        .collect()
+}
+
+/// The ISSUE 6 acceptance pin: a run killed mid-training (injected worker
+/// panic, zero recovery budget — the in-process stand-in for a dying
+/// process) and resumed from its newest snapshot must finish **bitwise
+/// identical** to an uninterrupted run at the same thread count.
+#[test]
+fn crash_and_resume_is_bitwise_identical() {
+    for threads in [1usize, 4] {
+        par::with_threads(threads, || {
+            let dir_ref = fresh_dir(&format!("ref{threads}"));
+            let mut reference = lenet_driver(&dir_ref, 0);
+            reference.run(12).unwrap();
+
+            let dir = fresh_dir(&format!("crash{threads}"));
+            let mut crashing = lenet_driver(&dir, 0);
+            let err = fault::with_faults("worker_panic@iter=7", || crashing.run(12))
+                .expect_err("zero budget must abort on the injected panic");
+            assert!(format!("{err:#}").contains("worker panic"), "{err:#}");
+            drop(crashing);
+
+            // "Restart the process": a fresh solver discovers the newest
+            // valid snapshot (iter 4 — the panic hit at 7) and continues.
+            let mut resumed = lenet_driver(&dir, 0);
+            let loaded = resumed.resume().unwrap().expect("crash run left snapshots");
+            assert!(loaded.ends_with("snap_00000004.pcss"), "loaded {loaded:?}");
+            assert_eq!(resumed.solver.iter(), 4);
+            resumed.run(12).unwrap();
+
+            assert_eq!(
+                driver_weights(&reference),
+                driver_weights(&resumed),
+                "threads={threads}: resumed weights diverged from the uninterrupted run"
+            );
+            std::fs::remove_dir_all(&dir_ref).ok();
+            std::fs::remove_dir_all(&dir).ok();
+        });
+    }
+}
+
+/// When the newest snapshot is corrupt, resume must skip it loudly and
+/// fall back to the previous valid one — and still converge to the exact
+/// uninterrupted trajectory.
+#[test]
+fn resume_skips_corrupt_latest_snapshot_and_stays_bitwise() {
+    par::with_threads(2, || {
+        let dir_ref = fresh_dir("fbref");
+        let mut reference = lenet_driver(&dir_ref, 0);
+        reference.run(12).unwrap();
+
+        let dir = fresh_dir("fbcrash");
+        let mut crashing = lenet_driver(&dir, 0);
+        fault::with_faults("worker_panic@iter=7", || crashing.run(12)).unwrap_err();
+        drop(crashing);
+
+        // Bit-rot the newest snapshot (iter 4); the iter-0 one survives.
+        let newest = dir.join("snap_00000004.pcss");
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&newest, &bytes).unwrap();
+
+        let mut resumed = lenet_driver(&dir, 0);
+        let loaded = resumed.resume().unwrap().expect("the iter-0 snapshot is still valid");
+        assert!(loaded.ends_with("snap_00000000.pcss"), "loaded {loaded:?}");
+        resumed.run(12).unwrap();
+        assert_eq!(
+            driver_weights(&reference),
+            driver_weights(&resumed),
+            "fallback resume diverged from the uninterrupted run"
+        );
+        std::fs::remove_dir_all(&dir_ref).ok();
+        std::fs::remove_dir_all(&dir).ok();
+    });
 }
 
 /// Native training is bitwise deterministic for a fixed seed.

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # CI perf-regression gate: compare the merged bench record
 # (rust/BENCH_threads.json, written by `cargo bench --bench
-# threads_scaling`, `cargo bench --bench fusion`, and `cargo bench
-# --bench gemm`) against the checked-in BENCH_baseline.json — and FAIL on
-# regression instead of only uploading artifacts.
+# threads_scaling`, `cargo bench --bench fusion`, `cargo bench --bench
+# gemm`, and `cargo bench --bench snapshot`) against the checked-in
+# BENCH_baseline.json — and FAIL on regression instead of only uploading
+# artifacts.
 #
 # Gate design (see BENCH_baseline.json):
 #   * Region counts are deterministic (they depend only on the pass
@@ -23,6 +24,11 @@
 #     so CI-runner speed differences cannot trip them.
 #     gemm_packed.packed_over_naive is a floor (>= baseline 1.0): the
 #     packed engine may never lose to the baseline engine it replaced.
+#   * snapshot.param_blobs and snapshot.roundtrip_exact are deterministic
+#     (LeNet has a fixed blob count; a save->load roundtrip must restore
+#     the solver bitwise) and gated exactly; snapshot_bytes is a size
+#     ceiling; the save/restore timings get the timing tolerance (fsync
+#     cost varies wildly across CI runners).
 #
 # Run from the repo root: bash tools/check_bench.sh
 set -u
@@ -33,7 +39,7 @@ BASELINE=BENCH_baseline.json
 
 for f in "$CURRENT" "$BASELINE"; do
   if [ ! -f "$f" ]; then
-    echo "MISSING FILE: $f (run the benches first: cargo bench --bench threads_scaling && cargo bench --bench fusion && cargo bench --bench gemm)"
+    echo "MISSING FILE: $f (run the benches first: cargo bench --bench threads_scaling && cargo bench --bench fusion && cargo bench --bench gemm && cargo bench --bench snapshot)"
     exit 1
   fi
 done
@@ -173,6 +179,47 @@ if None not in (pon, pon_base) and pon < pon_base:
         "the packed engine lost to the baseline it replaced"
     )
 
+# --- snapshot gates -----------------------------------------------------
+# Blob count and roundtrip exactness are deterministic: pinned exactly.
+# The roundtrip gate is the bench-level face of the crash-safety pin —
+# a snapshot that does not restore the solver bitwise breaks exact
+# resume.
+snap_blobs = get(cur, "snapshot", "param_blobs", "current")
+snap_blobs_base = get(base, "snapshot", "param_blobs", "baseline")
+if None not in (snap_blobs, snap_blobs_base) and snap_blobs != snap_blobs_base:
+    failures.append(
+        f"snapshot.param_blobs {snap_blobs} != pinned {snap_blobs_base}: "
+        "the snapshot no longer covers every parameter blob"
+    )
+snap_exact = get(cur, "snapshot", "roundtrip_exact", "current")
+snap_exact_base = get(base, "snapshot", "roundtrip_exact", "baseline")
+if None not in (snap_exact, snap_exact_base) and snap_exact != snap_exact_base:
+    failures.append(
+        f"snapshot.roundtrip_exact {snap_exact} != pinned {snap_exact_base}: "
+        "save->load no longer restores the solver bitwise"
+    )
+snap_bytes = get(cur, "snapshot", "snapshot_bytes", "current")
+snap_bytes_base = get(base, "snapshot", "snapshot_bytes", "baseline")
+if None not in (snap_bytes, snap_bytes_base) and snap_bytes > snap_bytes_base:
+    failures.append(
+        f"snapshot.snapshot_bytes {snap_bytes} above ceiling {snap_bytes_base}: "
+        "the snapshot format bloated"
+    )
+snap_save = get(cur, "snapshot", "snapshot_save_ms", "current")
+snap_save_base = get(base, "snapshot", "snapshot_save_ms", "baseline")
+if None not in (snap_save, snap_save_base) and snap_save > snap_save_base * tol:
+    failures.append(
+        f"snapshot.snapshot_save_ms {snap_save} above baseline "
+        f"{snap_save_base} x{tol}"
+    )
+snap_restore = get(cur, "snapshot", "snapshot_restore_ms", "current")
+snap_restore_base = get(base, "snapshot", "snapshot_restore_ms", "baseline")
+if None not in (snap_restore, snap_restore_base) and snap_restore > snap_restore_base * tol:
+    failures.append(
+        f"snapshot.snapshot_restore_ms {snap_restore} above baseline "
+        f"{snap_restore_base} x{tol}"
+    )
+
 if failures:
     print("bench gate FAILED:")
     for f in failures:
@@ -191,4 +238,7 @@ print(f"  small_op_dispatch.spawn_over_pool: {sop}")
 print(f"  scaling.max_speedup: {ms}")
 print(f"  gemm_packed: packed_over_naive {pon}, packs_per_forward {ppf}, "
       f"packs_per_backward {cur['gemm_packed'].get('packs_per_backward')}")
+print(f"  snapshot: {snap_blobs} blobs, {snap_bytes} bytes, "
+      f"save {snap_save} ms / restore {snap_restore} ms, "
+      f"roundtrip_exact {snap_exact}")
 PY
