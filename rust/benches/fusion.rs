@@ -20,6 +20,12 @@
 //!   width: the fused conv gradient region (one dispatch: gemm stages +
 //!   col2im + deterministic merge) vs the dispatch-then-serial-merge
 //!   reference (`PHAST_FUSE_BWD`); region counts gated exactly.
+//! * **`planned_backward`** — the graph-level execution plan
+//!   (`PHAST_PLAN`) vs the per-layer schedule at the same pinned width:
+//!   the planned sweep fuses each pool scatter into its conv's gradient
+//!   region and reports the plan's analytic scratch-arena peak
+//!   (`peak_scratch_bytes`); planned region count and the scratch
+//!   ceiling gated exactly.
 //!
 //! `cargo bench --bench fusion`
 
@@ -61,11 +67,40 @@ fn measure_update(
 /// width) and CI can gate them exactly.
 fn measure_backward(net: &mut phast_caffe::net::Net, fused: bool, iters: usize) -> (u64, f64) {
     par::with_threads(4, || {
+        // Pin the pre-planner schedule: this entry measures the per-layer
+        // fusion knob alone; the graph-level plan gets its own entry
+        // (`planned_backward`) below.
+        net.set_plan(false);
         net.set_backward_fusion(fused);
         // Pin the pack-cache mode identically in both arms (the explicit
         // override also captures from this measurement's own forward, not
         // lazily), so the A/B isolates the *fusion* effect — otherwise
         // call ordering would hand the fused arm the packing win too.
+        net.set_backward_packing(true);
+        net.zero_param_diffs();
+        net.forward().expect("forward");
+        net.backward().expect("backward"); // warm
+        let r0 = par::region_count();
+        net.backward().expect("backward");
+        let regions = par::region_count() - r0;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            net.backward().expect("backward");
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        (regions, ms)
+    })
+}
+
+/// Regions issued and mean ms per LeNet backward sweep with the
+/// graph-level execution plan (`PHAST_PLAN`) on or off, backward fusion
+/// on in both arms: the plan's own win over the per-layer schedule is
+/// the fused pool→conv backward region (two pool dispatches absorbed on
+/// LeNet) plus the shared scratch arena.
+fn measure_planned(net: &mut phast_caffe::net::Net, plan: bool, iters: usize) -> (u64, f64) {
+    par::with_threads(4, || {
+        net.set_plan(plan);
+        net.set_backward_fusion(true);
         net.set_backward_packing(true);
         net.zero_param_diffs();
         net.forward().expect("forward");
@@ -146,6 +181,19 @@ fn main() -> anyhow::Result<()> {
     println!("  lenet backward regions (4 threads): reference {bwd_ref_regions}, fused {bwd_fused_regions}");
     println!("  lenet backward time:   reference {bwd_ref_ms:.2} ms, fused {bwd_fused_ms:.2} ms");
 
+    // Graph-level plan on LeNet: the planned backward fuses each pool
+    // scatter into its conv's gradient region (12 -> 10 dispatches) and
+    // carves the fused regions' scratch from the shared arena, whose
+    // peak the plan prices analytically at the pinned 4-thread width.
+    let mut lenet_plan = preset_net("mnist", 31)?;
+    let (plan_off_regions, plan_off_ms) = measure_planned(&mut lenet_plan, false, bwd_iters);
+    let (plan_on_regions, plan_on_ms) = measure_planned(&mut lenet_plan, true, bwd_iters);
+    let peak_scratch = lenet_plan.plan().peak_scratch_bytes(4);
+    let grow_scratch = lenet_plan.plan().grow_only_scratch_bytes(4);
+    println!("  lenet planned backward regions (4 threads): unplanned {plan_off_regions}, planned {plan_on_regions}");
+    println!("  lenet planned backward time:   unplanned {plan_off_ms:.2} ms, planned {plan_on_ms:.2} ms");
+    println!("  lenet plan scratch @4 workers: peak {peak_scratch} bytes (grow-only {grow_scratch})");
+
     // Stage-barrier cost: a trivial 3-stage fused region vs a trivial
     // 1-stage region at the same width differ by exactly two
     // stage-barrier crossings (the pool dispatch itself is identical),
@@ -204,6 +252,18 @@ fn main() -> anyhow::Result<()> {
     let _ = writeln!(bwd, "    \"fused_ms_per_bwd\": {bwd_fused_ms:.3}");
     bwd.push_str("  }");
 
+    let mut planned = String::from("{\n");
+    let _ = writeln!(planned, "    \"net\": \"lenet-mnist\",");
+    let _ = writeln!(planned, "    \"threads\": 4,");
+    let _ = writeln!(planned, "    \"iters\": {bwd_iters},");
+    let _ = writeln!(planned, "    \"regions_planned\": {plan_on_regions},");
+    let _ = writeln!(planned, "    \"regions_unplanned\": {plan_off_regions},");
+    let _ = writeln!(planned, "    \"planned_ms_per_bwd\": {plan_on_ms:.3},");
+    let _ = writeln!(planned, "    \"unplanned_ms_per_bwd\": {plan_off_ms:.3},");
+    let _ = writeln!(planned, "    \"peak_scratch_bytes\": {peak_scratch},");
+    let _ = writeln!(planned, "    \"grow_only_scratch_bytes\": {grow_scratch}");
+    planned.push_str("  }");
+
     let mut layers = String::from("{\n");
     let _ = writeln!(layers, "    \"net\": \"cifar10-quick\",");
     let _ = writeln!(layers, "    \"iters\": {fwd_iters},");
@@ -233,11 +293,12 @@ fn main() -> anyhow::Result<()> {
             ("fused_sgd_step", sgd),
             ("fused_layers", layers),
             ("fused_backward", bwd),
+            ("planned_backward", planned),
             ("stage_barrier", barrier),
         ],
     )?;
     println!(
-        "\nmerged fused_sgd_step + fused_layers + fused_backward + stage_barrier into BENCH_threads.json"
+        "\nmerged fused_sgd_step + fused_layers + fused_backward + planned_backward + stage_barrier into BENCH_threads.json"
     );
     Ok(())
 }

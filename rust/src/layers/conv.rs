@@ -360,6 +360,207 @@ impl ConvLayer {
         }
         self.cols_cache.valid = capture;
     }
+
+    /// The planner's fused pool→conv backward (plan rule R2): the
+    /// adjacent pooling layer's gradient scatter and this layer's whole
+    /// gradient sweep in **one** three-stage region —
+    ///
+    /// * stage 0: scatter `dy_pool` through `pg` into `mid` (the conv's
+    ///   top diff), workers owning contiguous (sample, channel) plane
+    ///   ranges; the stage barrier orders these writes before stage 1,
+    ///   where a worker's samples may span planes another worker wrote;
+    /// * stage 1: the per-sample conv gradient work of the fused
+    ///   backward (dW GeMM, db row sums, Wᵀ·dY, col2im into disjoint
+    ///   `dx` planes) reading `mid`, partials per worker;
+    /// * stage 2: the deterministic worker-order merge.
+    ///
+    /// Stages 1–2 are arithmetic- and partition-identical to the
+    /// two-stage fused [`Layer::backward`], and stage 0 is per-plane
+    /// identical to the batched pool backward, so the fused pair is
+    /// bitwise-equal to the separate passes at any fixed thread count.
+    ///
+    /// Per-worker partials and column scratch are carved from `ext` —
+    /// the plan's shared arena slot — instead of per-layer buffers.
+    /// Returns `Ok(false)` without touching anything when this call
+    /// must fall back to the separate per-layer passes: at one worker
+    /// (the serial conv backward accumulates directly into the blob
+    /// diffs, a different — also bitwise-pinned — path) or with the
+    /// backward-fusion knob off (the reference path is the contract).
+    pub(crate) fn backward_fused_pool(
+        &mut self,
+        pg: &super::PoolBwdCtx<'_>,
+        dy_pool: &[f32],
+        mid: &mut [f32],
+        x: &[f32],
+        dx: &mut [f32],
+        ext: &mut Vec<f32>,
+    ) -> Result<bool> {
+        let cout = self.cfg.num_output;
+        let (ckk, ohw) = (self.ckk(), self.oh * self.ow);
+        let sample = self.cin * self.h * self.w;
+        let n = dx.len() / sample.max(1);
+        let tune = par::Tuning::new(CONV_GRAIN.get());
+        let workers = tune.workers(n);
+        if workers <= 1 || !self.backward_fusion_enabled() {
+            return Ok(false);
+        }
+        debug_assert_eq!(pg.c, cout);
+        debug_assert_eq!(pg.h * pg.w, ohw);
+        let pohw = pg.oh * pg.ow;
+        debug_assert_eq!(dy_pool.len(), n * cout * pohw);
+        debug_assert_eq!(mid.len(), n * cout * ohw);
+        self.seen_backward = true;
+
+        let wv = self.params[0].data_version();
+        self.packed_wt.ensure(self.params[0].data().as_slice(), Trans::Yes, ckk, cout, wv);
+        let psz = ops::packed_b_len(ohw, ckk);
+        let cache_ok = self.cols_cache.valid
+            && self.cols_cache.n == n
+            && self.cols_cache.per_sample == psz
+            && self.cols_cache.src_ptr == x.as_ptr() as usize
+            && self.cols_cache.src_len == x.len()
+            && self.cols_cache.src_sentinels == sentinels(x);
+        let cache_buf: &[f32] = if cache_ok { &self.cols_cache.buf[..n * psz] } else { &[] };
+
+        let ctx = SampleCtx {
+            xs: x,
+            wpack: &self.packed_w, // unused by backward_sample, kept for the shared ctx
+            bias: &[],
+            cin: self.cin,
+            h: self.h,
+            w: self.w,
+            g: self.geom(),
+            cout,
+            ohw,
+            ckk,
+            sample,
+        };
+        let wtp = &self.packed_wt;
+        let (wblob, bblob) = self.params.split_at_mut(1);
+        let dw = wblob[0].diff_mut().as_mut_slice();
+        let db = bblob[0].diff_mut().as_mut_slice();
+
+        let dwlen = cout * ckk;
+        let plane_ranges = par::partition(n * cout, workers);
+        let sample_ranges = par::partition(n, workers);
+        let merge_ranges = par::partition(dwlen, workers);
+        // Arena layout: [dW parts | db parts | dcols | cols], each a
+        // per-worker segment.  Grow-only, shared across every fused conv
+        // backward assigned this slot; each worker zeroes/overwrites its
+        // own windows, so stale contents from another layer are inert.
+        let need = workers * (dwlen + cout + 2 * ckk * ohw);
+        if ext.len() < need {
+            ext.resize(need, 0.0);
+        }
+        let (dwp, rest) = ext[..need].split_at_mut(workers * dwlen);
+        let (dbp, rest) = rest.split_at_mut(workers * cout);
+        let (dcols_buf, cols_buf) = rest.split_at_mut(workers * ckk * ohw);
+        {
+            let midv = par::FusedSlice::new(mid);
+            let dxv = par::FusedSlice::new(dx);
+            let dwpv = par::FusedSlice::new(dwp);
+            let dbpv = par::FusedSlice::new(dbp);
+            let dcolsv = par::FusedSlice::new(dcols_buf);
+            let colsv = par::FusedSlice::new(cols_buf);
+            let dwv = par::FusedSlice::new(dw);
+            let dbv = par::FusedSlice::new(db);
+            let region_tune = par::Tuning { threads: workers, grain: 1 };
+            par::parallel_regions(workers, 3, region_tune, |stage, wr| {
+                for wi in wr {
+                    match stage {
+                        0 => {
+                            // SAFETY: worker wi exclusively owns its
+                            // contiguous range of mid planes.
+                            for p in plane_ranges[wi].clone() {
+                                let dst = unsafe { midv.slice_mut(p * ohw..(p + 1) * ohw) };
+                                let dyp = &dy_pool[p * pohw..(p + 1) * pohw];
+                                match pg.method {
+                                    crate::proto::PoolMethod::Max => ops::maxpool_bwd_plane(
+                                        dyp,
+                                        &pg.arg[p * pohw..(p + 1) * pohw],
+                                        pg.h,
+                                        pg.w,
+                                        pg.g,
+                                        pg.oh,
+                                        pg.ow,
+                                        dst,
+                                    ),
+                                    crate::proto::PoolMethod::Ave => ops::avepool_bwd_plane(
+                                        dyp, pg.h, pg.w, pg.g, pg.oh, pg.ow, dst,
+                                    ),
+                                }
+                            }
+                        }
+                        1 => {
+                            // SAFETY: worker wi exclusively owns partial
+                            // slot wi, its scratch windows, and the dX
+                            // planes of its samples; reads of mid planes
+                            // written by other workers in stage 0 are
+                            // ordered by the region barrier.
+                            let dw_loc = unsafe { dwpv.slice_mut(wi * dwlen..(wi + 1) * dwlen) };
+                            let db_loc = unsafe { dbpv.slice_mut(wi * cout..(wi + 1) * cout) };
+                            dw_loc.fill(0.0);
+                            db_loc.fill(0.0);
+                            let dcols =
+                                unsafe { dcolsv.slice_mut(wi * ckk * ohw..(wi + 1) * ckk * ohw) };
+                            let cols =
+                                unsafe { colsv.slice_mut(wi * ckk * ohw..(wi + 1) * ckk * ohw) };
+                            for s in sample_ranges[wi].clone() {
+                                let dys =
+                                    unsafe { midv.slice(s * cout * ohw..(s + 1) * cout * ohw) };
+                                let dx_plane =
+                                    unsafe { dxv.slice_mut(s * sample..(s + 1) * sample) };
+                                backward_sample(
+                                    &ctx,
+                                    wtp,
+                                    cache_slice(cache_buf, cache_ok, psz, s),
+                                    s,
+                                    dys,
+                                    cols,
+                                    dcols,
+                                    dw_loc,
+                                    db_loc,
+                                    dx_plane,
+                                );
+                            }
+                        }
+                        _ => {
+                            // SAFETY: cross-worker reads of the stage-1
+                            // partials are ordered by the region barrier;
+                            // merge ranges are disjoint per worker.
+                            let parts: Vec<&[f32]> = (0..workers)
+                                .map(|p| unsafe { dwpv.slice(p * dwlen..(p + 1) * dwlen) })
+                                .collect();
+                            let r = if wi < merge_ranges.len() {
+                                merge_ranges[wi].clone()
+                            } else {
+                                0..0
+                            };
+                            let dwm = unsafe { dwv.slice_mut(r.clone()) };
+                            for (off, d) in dwm.iter_mut().enumerate() {
+                                let i = r.start + off;
+                                let mut acc = *d;
+                                for p in &parts {
+                                    acc += p[i];
+                                }
+                                *d = acc;
+                            }
+                            if wi == 0 {
+                                let dbm = unsafe { dbv.slice_mut(0..cout) };
+                                for p in 0..workers {
+                                    let part = unsafe { dbpv.slice(p * cout..(p + 1) * cout) };
+                                    for (d, s) in dbm.iter_mut().zip(part) {
+                                        *d += s;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        Ok(true)
+    }
 }
 
 /// Borrowed per-forward invariants for [`run_sample`] (weights, bias,
@@ -468,6 +669,14 @@ fn backward_sample(
 impl Layer for ConvLayer {
     fn config(&self) -> &LayerConfig {
         &self.cfg
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
     }
 
     fn setup(&mut self, bottom_shapes: &[Shape]) -> Result<Vec<Shape>> {

@@ -15,6 +15,7 @@ pub use conv::ConvLayer;
 pub use data_layer::DataLayer;
 pub use ip::IpLayer;
 pub use pool::PoolLayer;
+pub(crate) use pool::PoolBwdCtx;
 pub use relu::ReluLayer;
 pub use softmax::{SoftmaxLayer, SoftmaxLossLayer};
 
@@ -94,6 +95,19 @@ pub trait Layer {
 
     fn params_mut(&mut self) -> &mut [Blob] {
         &mut []
+    }
+
+    /// Concrete-type access for planner-driven execution paths that pair
+    /// specific layers inside one fused region (the plan's pool→conv
+    /// backward node).  Layers that participate return `Some(self)`;
+    /// the default keeps every other layer opaque.
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
+
+    /// Mutable counterpart of [`as_any`](Layer::as_any).
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        None
     }
 
     /// Whether this layer produces a loss (drives backward seeding).

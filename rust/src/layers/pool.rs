@@ -43,11 +43,53 @@ impl PoolLayer {
     pub fn argmax(&self) -> &[i32] {
         &self.arg
     }
+
+    /// Everything the planner's fused pool→conv backward region needs to
+    /// scatter this layer's gradient per (sample, channel) plane: method,
+    /// recorded phases, input geometry (= the producing conv's output
+    /// grid) and the pooled output grid.
+    pub(crate) fn bwd_ctx(&self) -> PoolBwdCtx<'_> {
+        PoolBwdCtx {
+            method: self.cfg.pool,
+            arg: &self.arg,
+            c: self.c,
+            h: self.h,
+            w: self.w,
+            oh: self.oh,
+            ow: self.ow,
+            g: self.geom(),
+        }
+    }
+}
+
+/// Borrowed backward context of a [`PoolLayer`], consumed by the fused
+/// pool→conv backward region (`ConvLayer::backward_fused_pool`).
+pub(crate) struct PoolBwdCtx<'a> {
+    pub method: PoolMethod,
+    /// Argmax phases (MAX only; ignored for AVE).
+    pub arg: &'a [i32],
+    /// Input channels = the conv's output channels.
+    pub c: usize,
+    /// Input plane height/width = the conv's output grid.
+    pub h: usize,
+    pub w: usize,
+    /// Pooled output grid.
+    pub oh: usize,
+    pub ow: usize,
+    pub g: Pool2dGeom,
 }
 
 impl Layer for PoolLayer {
     fn config(&self) -> &LayerConfig {
         &self.cfg
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
     }
 
     fn setup(&mut self, bottom_shapes: &[Shape]) -> Result<Vec<Shape>> {

@@ -1,5 +1,16 @@
 //! The Net: a DAG of layers over a named blob store, with forward/backward
 //! sweeps and per-layer timing — Caffe's `Net<float>`, Fig. 1 of the paper.
+//!
+//! Scheduling is decided once, at [`Net::from_config`] time, by the
+//! graph-level [`plan::Plan`]: a region-graph IR whose nodes are
+//! fused-region descriptions and whose edges are blob dependencies.  By
+//! default (`PHAST_PLAN`, on) the forward/backward sweeps walk the
+//! plan's schedules — which subsume the pre-planner pairwise fusion and
+//! add the fused pool→conv backward region with arena-shared scratch;
+//! with the knob off the sweeps run the original hard-coded paths, the
+//! bitwise reference every planned schedule is pinned against.
+
+pub mod plan;
 
 use std::collections::HashMap;
 use std::sync::OnceLock;
@@ -7,10 +18,12 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::layers::{create_layer, Layer};
+use crate::layers::{create_layer, ConvLayer, Layer, PoolLayer};
 use crate::metrics::Metrics;
 use crate::proto::{LayerType, NetConfig};
 use crate::tensor::{Blob, Shape, Tensor};
+
+pub use plan::Plan;
 
 /// `PHAST_FUSE_LAYERS`, parsed once: `0` disables the elementwise layer
 /// fusion plan (bias-add → activation in one region); anything else, or
@@ -18,6 +31,20 @@ use crate::tensor::{Blob, Shape, Tensor};
 fn layer_fusion_default() -> bool {
     static ON: OnceLock<bool> = OnceLock::new();
     *ON.get_or_init(|| std::env::var("PHAST_FUSE_LAYERS").map(|v| v.trim() != "0").unwrap_or(true))
+}
+
+/// `PHAST_PLAN`, parsed once: `0` or `off` selects the pre-planner
+/// hard-coded execution paths (the bitwise reference); anything else, or
+/// unset, drives both sweeps through the plan's schedules.
+/// [`Net::set_plan`] overrides per net.  The plan itself is always
+/// built — the knob only selects which executor walks the net.
+fn plan_default() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        std::env::var("PHAST_PLAN")
+            .map(|v| !matches!(v.trim(), "0" | "off"))
+            .unwrap_or(true)
+    })
 }
 
 /// A fully set-up network.
@@ -36,6 +63,14 @@ pub struct Net {
     fused_relu: Vec<Option<usize>>,
     /// Runtime toggle for the plan (`PHAST_FUSE_LAYERS`, default on).
     layer_fusion: bool,
+    /// The region-graph execution plan (always built; see `plan_on`).
+    plan: plan::Plan,
+    /// Runtime selector between the planned executors and the
+    /// pre-planner reference paths (`PHAST_PLAN`, default on).
+    plan_on: bool,
+    /// Shared scratch arena the planned backward carves fused-region
+    /// worker windows from (one slot per `Plan::arena_slots`).
+    arena: plan::ScratchArena,
     pub metrics: Metrics,
 }
 
@@ -92,29 +127,20 @@ impl Net {
             top_ids.push(tids);
             layers.push(layer);
         }
-        // Fusion plan: a Convolution/InnerProduct layer immediately
-        // followed by a ReLU that consumes exactly its single top gets the
-        // activation computed inside its own forward region (bias-add →
-        // activation, one dispatch).  The ReLU's top blob is still fully
-        // written, so downstream consumers and the backward sweep are
-        // unaffected, and results are bitwise-equal to the unfused pass.
+        // Build the region-graph plan (see `plan::Plan`).  Rule R1 — a
+        // Convolution/InnerProduct layer immediately followed by a ReLU
+        // that consumes exactly its single top gets the activation
+        // computed inside its own forward region — subsumes the old
+        // inline detection here and adds the explicit fan-out gate: a
+        // producer top consumed by more than one layer never fuses.
+        // The `fused_relu` table is derived from the plan so the legacy
+        // executor (`PHAST_PLAN=off`) follows the identical pairing.
+        let plan = plan::Plan::build(&config, &layers, &blobs, &bottom_ids, &top_ids);
         let mut fused_relu: Vec<Option<usize>> = vec![None; layers.len()];
-        for li in 0..layers.len().saturating_sub(1) {
-            let ri = li + 1;
-            if !matches!(layers[li].ltype(), LayerType::Convolution | LayerType::InnerProduct) {
-                continue;
-            }
-            if layers[ri].ltype() != LayerType::ReLU {
-                continue;
-            }
-            if config.layers[li].tops.len() == 1
-                && config.layers[ri].bottoms.len() == 1
-                && config.layers[ri].tops.len() == 1
-                && config.layers[ri].bottoms[0] == config.layers[li].tops[0]
-            {
-                fused_relu[li] = Some(ri);
-            }
+        for (li, ri) in plan.fused_relu_pairs() {
+            fused_relu[li] = Some(ri);
         }
+        let arena = plan::ScratchArena::new(plan.arena_slots());
         Ok(Net {
             config,
             layers,
@@ -124,8 +150,29 @@ impl Net {
             top_ids,
             fused_relu,
             layer_fusion: layer_fusion_default(),
+            plan,
+            plan_on: plan_default(),
+            arena,
             metrics: Metrics::new(),
         })
+    }
+
+    /// The region-graph execution plan built at construction time.
+    pub fn plan(&self) -> &plan::Plan {
+        &self.plan
+    }
+
+    /// Select between the planned executors and the pre-planner
+    /// reference paths at runtime (overrides `PHAST_PLAN`; both are
+    /// bitwise-equal at a fixed thread count — the toggle exists for
+    /// A/B benches and the conformance tests).
+    pub fn set_plan(&mut self, on: bool) {
+        self.plan_on = on;
+    }
+
+    /// Whether the planned executors drive the sweeps.
+    pub fn plan_enabled(&self) -> bool {
+        self.plan_on
     }
 
     /// Enable/disable the elementwise layer-fusion plan at runtime
@@ -262,8 +309,14 @@ impl Net {
     /// Full forward sweep (records per-layer timings).  Returns the loss if
     /// a loss layer is present.  Fusion-planned (producer, ReLU) pairs run
     /// as one region; the ReLU's timer is recorded as zero so per-layer
-    /// reports keep a row per configured layer.
+    /// reports keep a row per configured layer.  With the plan enabled
+    /// the sweep walks the plan's forward schedule; the legacy while-loop
+    /// below is the `PHAST_PLAN=off` reference — both paths are
+    /// bitwise-equal (the plan's R1 pairs *are* the `fused_relu` table).
     pub fn forward(&mut self) -> Result<Option<f32>> {
+        if self.plan_on {
+            return self.forward_planned();
+        }
         let mut loss = None;
         let mut li = 0;
         while li < self.layers.len() {
@@ -295,8 +348,74 @@ impl Net {
         Ok(loss)
     }
 
-    /// Full backward sweep (loss layers seed their own gradients).
+    /// Planned forward: walk the plan's forward schedule.  A `FusedRelu`
+    /// node decays to two per-layer steps when layer fusion is toggled
+    /// off or the producer declines to fuse, so every knob combination
+    /// stays bitwise-comparable to the legacy executor.
+    fn forward_planned(&mut self) -> Result<Option<f32>> {
+        let mut loss = None;
+        let steps = self.plan.fwd.clone();
+        for step in steps {
+            match step {
+                plan::FwdStep::FusedRelu(li, ri) if self.layer_fusion => {
+                    let t0 = Instant::now();
+                    let fused = self.forward_layer_fused(li, ri)?;
+                    if !fused {
+                        self.forward_layer(li)?;
+                    }
+                    let name = format!("fwd.{}", self.layers[li].name());
+                    self.metrics.record(&name, t0.elapsed());
+                    loss = self.loss_of(li).or(loss);
+                    if fused {
+                        let rname = format!("fwd.{}", self.layers[ri].name());
+                        self.metrics.record(&rname, std::time::Duration::ZERO);
+                    } else {
+                        let t0 = Instant::now();
+                        self.forward_layer(ri)?;
+                        let rname = format!("fwd.{}", self.layers[ri].name());
+                        self.metrics.record(&rname, t0.elapsed());
+                        loss = self.loss_of(ri).or(loss);
+                    }
+                }
+                plan::FwdStep::FusedRelu(li, ri) => {
+                    for l in [li, ri] {
+                        let t0 = Instant::now();
+                        self.forward_layer(l)?;
+                        let name = format!("fwd.{}", self.layers[l].name());
+                        self.metrics.record(&name, t0.elapsed());
+                        loss = self.loss_of(l).or(loss);
+                    }
+                }
+                plan::FwdStep::Layer(li) => {
+                    let t0 = Instant::now();
+                    self.forward_layer(li)?;
+                    let name = format!("fwd.{}", self.layers[li].name());
+                    self.metrics.record(&name, t0.elapsed());
+                    loss = self.loss_of(li).or(loss);
+                }
+            }
+        }
+        Ok(loss)
+    }
+
+    /// The loss value layer `li` just produced, if it is a loss layer.
+    fn loss_of(&self, li: usize) -> Option<f32> {
+        if self.layers[li].is_loss() {
+            let tid = self.top_ids[li][0];
+            Some(self.blobs[tid].data().as_slice()[0])
+        } else {
+            None
+        }
+    }
+
+    /// Full backward sweep (loss layers seed their own gradients).  With
+    /// the plan enabled the sweep walks the plan's backward schedule
+    /// (fused pool→conv nodes run as one region); the plain reverse loop
+    /// is the `PHAST_PLAN=off` reference.
     pub fn backward(&mut self) -> Result<()> {
+        if self.plan_on {
+            return self.backward_planned();
+        }
         for li in (0..self.layers.len()).rev() {
             let t0 = Instant::now();
             self.backward_layer(li)?;
@@ -304,6 +423,99 @@ impl Net {
             self.metrics.record(&name, t0.elapsed());
         }
         Ok(())
+    }
+
+    /// Planned backward: walk the plan's backward schedule.  A
+    /// `FusedPoolConv` node decays to the two per-layer steps when the
+    /// conv declines the fused region (single worker, or the
+    /// backward-fusion knob off) — keeping every knob × thread-count
+    /// combination bitwise-equal to the legacy executor.  When the node
+    /// does fuse, the pool's timer is recorded as zero (mirroring the
+    /// forward fusion convention) so per-layer reports keep their rows.
+    fn backward_planned(&mut self) -> Result<()> {
+        let steps = self.plan.bwd.clone();
+        for step in steps {
+            match step {
+                plan::BwdStep::Layer(li) => {
+                    let t0 = Instant::now();
+                    self.backward_layer(li)?;
+                    let name = format!("bwd.{}", self.layers[li].name());
+                    self.metrics.record(&name, t0.elapsed());
+                }
+                plan::BwdStep::FusedPoolConv { conv, pool } => {
+                    let t0 = Instant::now();
+                    let fused = self.backward_fused_pool_conv(conv, pool)?;
+                    if fused {
+                        let pname = format!("bwd.{}", self.layers[pool].name());
+                        self.metrics.record(&pname, std::time::Duration::ZERO);
+                        let cname = format!("bwd.{}", self.layers[conv].name());
+                        self.metrics.record(&cname, t0.elapsed());
+                    } else {
+                        for l in [pool, conv] {
+                            let t0 = Instant::now();
+                            self.backward_layer(l)?;
+                            let name = format!("bwd.{}", self.layers[l].name());
+                            self.metrics.record(&name, t0.elapsed());
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the plan's fused pool→conv backward node: pool scatter, conv
+    /// gradient work, and partial merge in one three-stage region, with
+    /// per-worker scratch carved from the plan's shared arena slot.
+    /// Returns false when the node must decay to separate per-layer
+    /// steps (see `ConvLayer::backward_fused_pool`).
+    fn backward_fused_pool_conv(&mut self, ci: usize, pi: usize) -> Result<bool> {
+        let slot = match self.plan.bwd_arena_slot(ci) {
+            Some(s) => s,
+            None => return Ok(false),
+        };
+        let mid_id = self.top_ids[ci][0]; // conv top = pool bottom
+        let ptop_id = self.top_ids[pi][0];
+        let cb_id = self.bottom_ids[ci][0];
+        let mut mid_diff =
+            std::mem::replace(self.blobs[mid_id].diff_mut(), Tensor::zeros(Shape::new(&[0])));
+        let mut dx =
+            std::mem::replace(self.blobs[cb_id].diff_mut(), Tensor::zeros(Shape::new(&[0])));
+        let result = {
+            let blobs = &self.blobs;
+            let layers = &mut self.layers;
+            let arena = &mut self.arena;
+            let dy_pool = blobs[ptop_id].diff().as_slice();
+            let x = blobs[cb_id].data().as_slice();
+            let (head, tail) = layers.split_at_mut(pi);
+            let conv = head[ci].as_any_mut().and_then(|a| a.downcast_mut::<ConvLayer>());
+            let pool = tail[0].as_any().and_then(|a| a.downcast_ref::<PoolLayer>());
+            match (conv, pool) {
+                (Some(conv), Some(pool)) => {
+                    let pg = pool.bwd_ctx();
+                    conv.backward_fused_pool(
+                        &pg,
+                        dy_pool,
+                        mid_diff.as_mut_slice(),
+                        x,
+                        dx.as_mut_slice(),
+                        arena.slot_vec_mut(slot),
+                    )
+                }
+                // A non-conv/pool pair can only mean the plan and the
+                // layer vec disagree; decay to the per-layer steps.
+                _ => Ok(false),
+            }
+        };
+        *self.blobs[mid_id].diff_mut() = mid_diff;
+        *self.blobs[cb_id].diff_mut() = dx;
+        result.with_context(|| {
+            format!(
+                "fused backward of '{}'+'{}'",
+                self.layers[pi].name(),
+                self.layers[ci].name()
+            )
+        })
     }
 
     /// Zero all parameter gradients (start of an iteration).

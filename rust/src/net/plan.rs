@@ -1,0 +1,693 @@
+//! Graph-level execution planner: a region-graph IR built once at
+//! [`Net::from_config`](super::Net::from_config) time.
+//!
+//! Nodes ([`RegionNode`]) are fused-region descriptions — which layers
+//! run in the region, its stage list, barrier points, and index space —
+//! and edges are blob dependencies (each node's `inputs`/`outputs` name
+//! the blobs it reads and writes).  A [`Plan`] carries two schedules
+//! (forward [`FwdStep`]s and backward [`BwdStep`]s) that the net's
+//! executors walk, plus a scratch model ([`ScratchReq`]) assigning every
+//! planner-managed buffer a live range on the unified forward+backward
+//! timeline and an arena slot, so buffers with non-overlapping live
+//! ranges share storage instead of growing per layer.
+//!
+//! # Plan rules
+//!
+//! * **R1 (fused forward activation)** — a Convolution/InnerProduct
+//!   layer immediately followed by a ReLU consuming exactly its single
+//!   top fuses the activation into the producer's own parallel region
+//!   (the pre-planner `Net::from_config` pairing, now a plan rule).
+//! * **R2 (fused pool→conv backward)** — a Convolution immediately
+//!   followed by a Pooling layer consuming exactly its single top runs
+//!   both backwards as **one** three-stage region: pool scatter into the
+//!   conv's top diff, per-sample conv gradient work, deterministic
+//!   partial merge.
+//! * **R3 (no fusion across fan-out)** — both rules require the
+//!   producer's top to have exactly **one** consumer.  A top consumed by
+//!   more than one layer is a fan-out edge: fusing across it would bake
+//!   one consumer's schedule into the producer while other consumers
+//!   still need the blob, so the planner models the restriction
+//!   explicitly instead of relying on implicit adjacency.
+//! * **Skip nodes** — layers whose backward is a no-op (Data, Accuracy)
+//!   appear in the backward schedule as zero-region skip nodes so the
+//!   timeline still has one position per layer.
+//!
+//! # Scratch model
+//!
+//! Two request classes:
+//!
+//! * `<conv>.panels` — the packed-colsᵀ capture cache
+//!   (`PHAST_CONV_PACK`), live from the layer's forward node to its
+//!   backward node.  Panel ranges of distinct conv layers nest (an inner
+//!   layer's forward→backward span sits inside an outer one's), so they
+//!   can never share storage; they are `resident` (layer-owned) slots,
+//!   modeled for lifetime accounting and the peak metric.
+//! * `<conv>.bwd` — the fused pool→conv backward bundle: per-worker
+//!   dW/db partials plus the per-worker column/dcolumn scratch, live
+//!   only during that layer's backward node.  These ranges never overlap
+//!   across layers, so greedy interval coloring packs them into shared
+//!   `arena` slots (one allocation serves every fused conv backward in
+//!   the net), and the region carves per-worker windows from the slot
+//!   instead of allocating per call.
+//!
+//! The serial single-worker column buffer (`ConvLayer::cols`) stays out
+//! of the model: planned execution falls back to the per-layer reference
+//! paths at one worker, where that buffer is the seed's cost profile.
+//!
+//! [`Plan::describe`] renders all of this as a stable text format pinned
+//! by golden files in `tests/plan.rs` — a planner change shows up as a
+//! reviewed golden diff, not a silent schedule change.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use crate::layers::Layer;
+use crate::ops;
+use crate::proto::{LayerType, NetConfig};
+use crate::tensor::Blob;
+
+/// One forward schedule entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FwdStep {
+    /// Run layer `li`'s own forward.
+    Layer(usize),
+    /// Run layer `li`'s forward with ReLU layer `ri` fused in (rule R1).
+    FusedRelu(usize, usize),
+}
+
+/// One backward schedule entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BwdStep {
+    /// Run layer `li`'s own backward (a no-op for skip layers).
+    Layer(usize),
+    /// Run pool layer `pi`'s and conv layer `ci`'s backwards as one
+    /// three-stage region (rule R2).
+    FusedPoolConv { conv: usize, pool: usize },
+}
+
+/// Node kinds of the region graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    /// A single layer's own pass.
+    Layer,
+    /// A backward no-op (Data/Accuracy): zero regions.
+    Skip,
+    /// Rule R1: producer + ReLU in the producer's forward region.
+    FusedRelu,
+    /// Rule R2: pool scatter + conv gradient + merge, one region.
+    FusedPoolConv,
+}
+
+/// A fused-region description: the layers it runs, its stages and
+/// barrier points, the index space the workers partition, and the blobs
+/// it reads (`inputs`) and writes (`outputs`) — the graph's edges.
+#[derive(Clone, Debug)]
+pub struct RegionNode {
+    /// Timeline id: `F<i>` for forward nodes, `B<i>` for backward.
+    pub id: String,
+    pub kind: NodeKind,
+    /// Layer indices executed by this node, in execution order.
+    pub layers: Vec<usize>,
+    /// Human label, e.g. `conv1` or `pool2+conv2`.
+    pub label: String,
+    /// Blob names read (for backward nodes: `d:<name>` diffs).
+    pub inputs: Vec<String>,
+    /// Blob names written.
+    pub outputs: Vec<String>,
+    /// Stage labels inside the fused region (empty for plain nodes —
+    /// their internal structure belongs to the layer, not the plan).
+    pub stages: Vec<&'static str>,
+    /// Stage-barrier crossings inside the region.
+    pub barriers: usize,
+    /// Index space the region partitions across workers.
+    pub index_space: &'static str,
+    /// Predicted pool dispatches for this node in the backward sweep at
+    /// the parallel width (>= 2 workers, default knobs); `None` for
+    /// forward nodes, whose counts are layer-internal.
+    pub regions: Option<u64>,
+}
+
+/// A planner-managed scratch buffer: symbolic size (a fixed part plus a
+/// per-worker part) and an inclusive live range on the unified
+/// forward+backward timeline.
+#[derive(Clone, Debug)]
+pub struct ScratchReq {
+    /// `<layer>.panels` or `<layer>.bwd`.
+    pub key: String,
+    /// Owning layer index.
+    pub layer: usize,
+    /// Resident (layer-owned, lifetime modeled only) vs arena (shared
+    /// slot the planned executor actually carves workers' windows from).
+    pub resident: bool,
+    /// Slot id within its domain (resident slots are unique per request
+    /// by construction; arena slots are shared across disjoint ranges).
+    pub slot: usize,
+    /// Worker-count-independent float count.
+    pub fixed_floats: usize,
+    /// Floats per worker (scales with the region's worker count).
+    pub per_worker_floats: usize,
+    /// Inclusive live range: timeline positions of the first and last
+    /// node that touch the buffer.
+    pub live: (usize, usize),
+}
+
+impl ScratchReq {
+    /// Concrete float count at `workers` workers.
+    pub fn floats(&self, workers: usize) -> usize {
+        self.fixed_floats + self.per_worker_floats * workers
+    }
+}
+
+/// The shared scratch arena the planned backward carves fused-region
+/// worker windows from — one grow-only buffer per arena slot.
+pub struct ScratchArena {
+    slots: Vec<Vec<f32>>,
+}
+
+impl ScratchArena {
+    pub fn new(slots: usize) -> ScratchArena {
+        ScratchArena { slots: (0..slots).map(|_| Vec::new()).collect() }
+    }
+
+    /// The grow-only backing vector of slot `i` (regions resize it to
+    /// their need; capacity is never given back, like the per-layer
+    /// scratch it replaces).
+    pub fn slot_vec_mut(&mut self, i: usize) -> &mut Vec<f32> {
+        &mut self.slots[i]
+    }
+
+    /// Bytes actually held across all slots (the measured counterpart of
+    /// [`Plan::peak_scratch_bytes`]).
+    pub fn held_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.capacity() * std::mem::size_of::<f32>()).sum()
+    }
+}
+
+/// The region-graph plan for one net.
+pub struct Plan {
+    net: String,
+    /// Forward schedule, in execution order.
+    pub fwd: Vec<FwdStep>,
+    /// Backward schedule, in execution order (reverse layer order).
+    pub bwd: Vec<BwdStep>,
+    /// Region nodes: all forward nodes, then all backward nodes — index
+    /// into this vec is the unified timeline position.
+    pub nodes: Vec<RegionNode>,
+    /// Number of forward nodes (backward nodes start here).
+    pub fwd_nodes: usize,
+    /// Scratch requests, in layer order (panels before bundle per layer).
+    pub scratch: Vec<ScratchReq>,
+    /// Arena slot count (resident slots are layer-owned).
+    arena_slots: usize,
+    /// conv layer index -> arena slot of its `.bwd` bundle.
+    bwd_slot: HashMap<usize, usize>,
+}
+
+impl Plan {
+    /// Build the plan from the configured, set-up net.
+    pub fn build(
+        config: &NetConfig,
+        layers: &[Box<dyn Layer>],
+        blobs: &[Blob],
+        bottom_ids: &[Vec<usize>],
+        top_ids: &[Vec<usize>],
+    ) -> Plan {
+        let nl = layers.len();
+        // Blob fan-out: how many layers consume each top (rule R3).
+        let mut consumers: HashMap<&str, usize> = HashMap::new();
+        for lc in &config.layers {
+            for b in &lc.bottoms {
+                *consumers.entry(b.as_str()).or_insert(0) += 1;
+            }
+        }
+        let single_consumer =
+            |top: &str| consumers.get(top).copied().unwrap_or(0) == 1;
+
+        // Rule R1: producer -> ReLU forward fusion (with the fan-out gate).
+        let mut fused_relu: Vec<Option<usize>> = vec![None; nl];
+        for li in 0..nl.saturating_sub(1) {
+            let ri = li + 1;
+            if !matches!(layers[li].ltype(), LayerType::Convolution | LayerType::InnerProduct) {
+                continue;
+            }
+            if layers[ri].ltype() != LayerType::ReLU {
+                continue;
+            }
+            if config.layers[li].tops.len() == 1
+                && config.layers[ri].bottoms.len() == 1
+                && config.layers[ri].tops.len() == 1
+                && config.layers[ri].bottoms[0] == config.layers[li].tops[0]
+                && single_consumer(&config.layers[li].tops[0])
+            {
+                fused_relu[li] = Some(ri);
+            }
+        }
+
+        // Rule R2: conv -> pool backward fusion (same fan-out gate).
+        let mut pool_of_conv: Vec<Option<usize>> = vec![None; nl];
+        let mut conv_of_pool: Vec<Option<usize>> = vec![None; nl];
+        for ci in 0..nl.saturating_sub(1) {
+            let pi = ci + 1;
+            if layers[ci].ltype() != LayerType::Convolution
+                || layers[pi].ltype() != LayerType::Pooling
+            {
+                continue;
+            }
+            if config.layers[ci].tops.len() == 1
+                && config.layers[pi].bottoms.len() == 1
+                && config.layers[pi].tops.len() == 1
+                && config.layers[pi].bottoms[0] == config.layers[ci].tops[0]
+                && single_consumer(&config.layers[ci].tops[0])
+            {
+                pool_of_conv[ci] = Some(pi);
+                conv_of_pool[pi] = Some(ci);
+            }
+        }
+
+        // Forward schedule + nodes.
+        let mut fwd = Vec::new();
+        let mut nodes = Vec::new();
+        let mut li = 0;
+        while li < nl {
+            let id = format!("F{}", fwd.len());
+            if let Some(ri) = fused_relu[li] {
+                fwd.push(FwdStep::FusedRelu(li, ri));
+                let (stages, index_space) = match layers[li].ltype() {
+                    // conv + bias + relu in one batch-parallel dispatch
+                    LayerType::Convolution => {
+                        (vec!["im2col+gemm+bias+relu"], "samples")
+                    }
+                    // gemm region, then the bias+relu chunk region
+                    _ => (vec!["gemm", "bias+relu"], "rows"),
+                };
+                nodes.push(RegionNode {
+                    id,
+                    kind: NodeKind::FusedRelu,
+                    layers: vec![li, ri],
+                    label: format!("{}+{}", config.layers[li].name, config.layers[ri].name),
+                    inputs: config.layers[li].bottoms.clone(),
+                    outputs: config.layers[li]
+                        .tops
+                        .iter()
+                        .chain(config.layers[ri].tops.iter())
+                        .cloned()
+                        .collect(),
+                    stages,
+                    barriers: 0,
+                    index_space,
+                    regions: None,
+                });
+                li = ri + 1;
+            } else {
+                fwd.push(FwdStep::Layer(li));
+                nodes.push(RegionNode {
+                    id,
+                    kind: NodeKind::Layer,
+                    layers: vec![li],
+                    label: config.layers[li].name.clone(),
+                    inputs: config.layers[li].bottoms.clone(),
+                    outputs: config.layers[li].tops.clone(),
+                    stages: vec![],
+                    barriers: 0,
+                    index_space: "",
+                    regions: None,
+                });
+                li += 1;
+            }
+        }
+        let fwd_nodes = nodes.len();
+
+        // Backward schedule + nodes (reverse layer order).
+        let mut bwd = Vec::new();
+        let mut li = nl;
+        while li > 0 {
+            li -= 1;
+            let id = format!("B{}", bwd.len());
+            if let Some(ci) = conv_of_pool[li] {
+                // One region: pool scatter | conv gradient | merge.  The
+                // conv layer (ci = li-1) is consumed by this node.
+                bwd.push(BwdStep::FusedPoolConv { conv: ci, pool: li });
+                let d = |s: &String| format!("d:{s}");
+                nodes.push(RegionNode {
+                    id,
+                    kind: NodeKind::FusedPoolConv,
+                    layers: vec![li, ci],
+                    label: format!("{}+{}", config.layers[li].name, config.layers[ci].name),
+                    inputs: config.layers[li].tops.iter().map(d).collect(),
+                    outputs: config.layers[ci]
+                        .tops
+                        .iter()
+                        .chain(config.layers[ci].bottoms.iter())
+                        .map(d)
+                        .chain(std::iter::once(format!("dW:{}", config.layers[ci].name)))
+                        .collect(),
+                    stages: vec!["pool-scatter", "conv-grad", "merge"],
+                    barriers: 2,
+                    index_space: "workers",
+                    regions: Some(1),
+                });
+                li = ci; // skip the conv (decremented at loop top)
+            } else if pool_of_conv[li].is_some() {
+                // Unreachable by construction (the pool node above eats
+                // its conv), kept for clarity if schedules ever reorder.
+                unreachable!("conv {li} fused into a pool node must be skipped");
+            } else {
+                bwd.push(BwdStep::Layer(li));
+                let skip = !layers[li].needs_backward();
+                let d = |s: &String| format!("d:{s}");
+                nodes.push(RegionNode {
+                    id,
+                    kind: if skip { NodeKind::Skip } else { NodeKind::Layer },
+                    layers: vec![li],
+                    label: config.layers[li].name.clone(),
+                    inputs: if skip {
+                        vec![]
+                    } else {
+                        config.layers[li].tops.iter().map(d).collect()
+                    },
+                    outputs: if skip {
+                        vec![]
+                    } else {
+                        config.layers[li].bottoms.iter().map(d).collect()
+                    },
+                    stages: vec![],
+                    barriers: 0,
+                    index_space: "",
+                    regions: Some(if skip {
+                        0
+                    } else {
+                        let t = blobs[top_ids[li][0]].shape();
+                        let b = blobs[bottom_ids[li][0]].shape();
+                        let batch = t.num().max(1);
+                        backward_regions_of(
+                            layers[li].ltype(),
+                            batch,
+                            t.count() / batch,
+                            b.count() / b.num().max(1),
+                        )
+                    }),
+                });
+            }
+        }
+
+        // Scratch model: timeline position of each layer's fwd/bwd node.
+        let node_pos = |layer: usize| -> (usize, usize) {
+            let f = nodes[..fwd_nodes]
+                .iter()
+                .position(|n| n.layers.contains(&layer))
+                .expect("every layer has a forward node");
+            let b = nodes[fwd_nodes..]
+                .iter()
+                .position(|n| n.layers.contains(&layer))
+                .expect("every layer has a backward node");
+            (f, fwd_nodes + b)
+        };
+        let mut scratch: Vec<ScratchReq> = Vec::new();
+        let mut resident_slots = 0usize;
+        let mut arena: Vec<Vec<(usize, usize)>> = Vec::new(); // slot -> live ranges
+        let mut bwd_slot = HashMap::new();
+        for ci in 0..nl {
+            if layers[ci].ltype() != LayerType::Convolution {
+                continue;
+            }
+            let name = &config.layers[ci].name;
+            let bshape = blobs[bottom_ids[ci][0]].shape();
+            let tshape = blobs[top_ids[ci][0]].shape();
+            let (n, cout) = (tshape.num(), tshape.channels());
+            let ohw = tshape.height() * tshape.width();
+            let k = config.layers[ci].kernel_size;
+            let ckk = bshape.channels() * k * k;
+            let (fpos, bpos) = node_pos(ci);
+            // Packed-colsᵀ panels: captured by forward, consumed by this
+            // layer's backward — live across everything in between, so
+            // panel ranges nest and never share (resident).
+            scratch.push(ScratchReq {
+                key: format!("{name}.panels"),
+                layer: ci,
+                resident: true,
+                slot: resident_slots,
+                fixed_floats: n * ops::packed_b_len(ohw, ckk),
+                per_worker_floats: 0,
+                live: (fpos, bpos),
+            });
+            resident_slots += 1;
+            // Fused pool→conv backward bundle: per-worker dW/db partials
+            // + column/dcolumn scratch, live only in this backward node —
+            // greedy interval coloring onto shared arena slots.
+            if pool_of_conv[ci].is_some() {
+                let live = (bpos, bpos);
+                let slot = arena
+                    .iter()
+                    .position(|ranges| {
+                        ranges.iter().all(|&(a, b)| live.1 < a || b < live.0)
+                    })
+                    .unwrap_or_else(|| {
+                        arena.push(Vec::new());
+                        arena.len() - 1
+                    });
+                arena[slot].push(live);
+                bwd_slot.insert(ci, slot);
+                scratch.push(ScratchReq {
+                    key: format!("{name}.bwd"),
+                    layer: ci,
+                    resident: false,
+                    slot,
+                    fixed_floats: 0,
+                    per_worker_floats: cout * ckk + cout + 2 * ckk * ohw,
+                    live,
+                });
+            }
+        }
+
+        Plan {
+            net: config.name.clone(),
+            fwd,
+            bwd,
+            nodes,
+            fwd_nodes,
+            scratch,
+            arena_slots: arena.len(),
+            bwd_slot,
+        }
+    }
+
+    /// (producer, fused ReLU) pairs of rule R1 — what the pre-planner
+    /// `fused_relu` detection produced, now derived from the plan.
+    pub fn fused_relu_pairs(&self) -> Vec<(usize, usize)> {
+        self.fwd
+            .iter()
+            .filter_map(|s| match *s {
+                FwdStep::FusedRelu(li, ri) => Some((li, ri)),
+                FwdStep::Layer(_) => None,
+            })
+            .collect()
+    }
+
+    /// (pool, conv) pairs of rule R2, in backward execution order.
+    pub fn fused_pool_conv_pairs(&self) -> Vec<(usize, usize)> {
+        self.bwd
+            .iter()
+            .filter_map(|s| match *s {
+                BwdStep::FusedPoolConv { conv, pool } => Some((pool, conv)),
+                BwdStep::Layer(_) => None,
+            })
+            .collect()
+    }
+
+    /// Arena slot of conv layer `ci`'s fused-backward bundle.
+    pub fn bwd_arena_slot(&self, ci: usize) -> Option<usize> {
+        self.bwd_slot.get(&ci).copied()
+    }
+
+    /// Number of shared arena slots the executor must allocate.
+    pub fn arena_slots(&self) -> usize {
+        self.arena_slots
+    }
+
+    /// Predicted pool dispatches for one backward sweep at the parallel
+    /// width (every layer at >= 2 workers, default knobs) — the number
+    /// `tests/plan.rs` pins against the measured `par::region_count()`.
+    pub fn predicted_backward_regions(&self) -> u64 {
+        self.nodes[self.fwd_nodes..]
+            .iter()
+            .map(|n| n.regions.unwrap_or(0))
+            .sum()
+    }
+
+    /// Peak scratch floats at `workers` workers: every resident buffer
+    /// (their live ranges nest) plus the **max** request per shared
+    /// arena slot — what planned execution actually holds.
+    pub fn peak_scratch_floats(&self, workers: usize) -> usize {
+        let resident: usize = self
+            .scratch
+            .iter()
+            .filter(|r| r.resident)
+            .map(|r| r.floats(workers))
+            .sum();
+        let arena: usize = (0..self.arena_slots)
+            .map(|s| {
+                self.scratch
+                    .iter()
+                    .filter(|r| !r.resident && r.slot == s)
+                    .map(|r| r.floats(workers))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .sum();
+        resident + arena
+    }
+
+    /// The per-layer grow-only total the arena replaces: every request
+    /// gets its own buffer (the pre-planner behaviour).
+    pub fn grow_only_scratch_floats(&self, workers: usize) -> usize {
+        self.scratch.iter().map(|r| r.floats(workers)).sum()
+    }
+
+    /// [`Plan::peak_scratch_floats`] in bytes.
+    pub fn peak_scratch_bytes(&self, workers: usize) -> usize {
+        self.peak_scratch_floats(workers) * std::mem::size_of::<f32>()
+    }
+
+    /// [`Plan::grow_only_scratch_floats`] in bytes.
+    pub fn grow_only_scratch_bytes(&self, workers: usize) -> usize {
+        self.grow_only_scratch_floats(workers) * std::mem::size_of::<f32>()
+    }
+
+    /// Timeline id (`F<i>`/`B<i>`) of timeline position `pos`.
+    fn pos_id(&self, pos: usize) -> &str {
+        &self.nodes[pos].id
+    }
+
+    /// Stable text rendering of the plan, pinned by the golden files in
+    /// `tests/plan.rs`.  Everything printed is a function of the net
+    /// config and blob shapes only — never of thread count, machine, or
+    /// knob state — except worker-scaled scratch sizes, which stay
+    /// symbolic (`W*<floats>`); the one concrete peak line pins W=4, the
+    /// width the benches and region-conformance tests run at.
+    pub fn describe(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "plan net={} layers={}", self.net, self.layer_count());
+        let _ = writeln!(s, "forward:");
+        for n in &self.nodes[..self.fwd_nodes] {
+            let _ = write!(
+                s,
+                "  {} {} {} [{}] -> [{}]",
+                n.id,
+                kind_str(n.kind),
+                n.label,
+                n.inputs.join(" "),
+                n.outputs.join(" ")
+            );
+            if !n.stages.is_empty() {
+                let _ = write!(
+                    s,
+                    " index={} stages=[{}] barriers={}",
+                    n.index_space,
+                    n.stages.join("|"),
+                    n.barriers
+                );
+            }
+            let _ = writeln!(s);
+        }
+        let _ = writeln!(s, "backward:");
+        for n in &self.nodes[self.fwd_nodes..] {
+            let _ = write!(s, "  {} {} {}", n.id, kind_str(n.kind), n.label);
+            if n.kind != NodeKind::Skip {
+                let _ = write!(s, " [{}] -> [{}]", n.inputs.join(" "), n.outputs.join(" "));
+            }
+            if !n.stages.is_empty() {
+                let _ = write!(
+                    s,
+                    " index={} stages=[{}] barriers={}",
+                    n.index_space,
+                    n.stages.join("|"),
+                    n.barriers
+                );
+            }
+            if let Some(r) = n.regions {
+                let _ = write!(s, " regions={r}");
+            }
+            let _ = writeln!(s);
+        }
+        let _ = writeln!(s, "scratch:");
+        for r in &self.scratch {
+            let domain = if r.resident {
+                format!("resident:r{}", r.slot)
+            } else {
+                format!("arena:a{}", r.slot)
+            };
+            let floats = match (r.fixed_floats, r.per_worker_floats) {
+                (f, 0) => format!("{f}"),
+                (0, w) => format!("W*{w}"),
+                (f, w) => format!("{f}+W*{w}"),
+            };
+            let _ = writeln!(
+                s,
+                "  {} {} floats={} live={}..{}",
+                r.key,
+                domain,
+                floats,
+                self.pos_id(r.live.0),
+                self.pos_id(r.live.1)
+            );
+        }
+        let _ = writeln!(
+            s,
+            "predicted backward regions (threads >= 2): {}",
+            self.predicted_backward_regions()
+        );
+        let _ = writeln!(
+            s,
+            "peak scratch floats @W=4: {} (grow-only {})",
+            self.peak_scratch_floats(4),
+            self.grow_only_scratch_floats(4)
+        );
+        s
+    }
+
+    fn layer_count(&self) -> usize {
+        self.nodes[..self.fwd_nodes].iter().map(|n| n.layers.len()).sum()
+    }
+}
+
+fn kind_str(k: NodeKind) -> &'static str {
+    match k {
+        NodeKind::Layer => "layer",
+        NodeKind::Skip => "skip",
+        NodeKind::FusedRelu => "fused-relu",
+        NodeKind::FusedPoolConv => "fused-pool-conv",
+    }
+}
+
+/// Pool dispatches one layer's backward issues at the parallel width
+/// (>= 2 workers, default knobs): the structural counts the conformance
+/// tests pin against the measured [`crate::ops::par::region_count`].
+/// Conv's fused gradient region is 1 dispatch; pointwise layers, pooling
+/// and the loss each issue one chunked region (counted even when the
+/// chunking falls back to serial — dispatch accounting is per entry
+/// call); InnerProduct issues its `db` chunk plus the `dW`/`dX` GeMMs,
+/// which dispatch only above the engine's flops floor
+/// ([`ops::gemm::GEMM_PAR_MIN_FLOPS`]) with more than one grain of C
+/// rows — tiny heads (CIFAR's 10-way `ip2`) stay serial, and the plan
+/// predicts that from the blob shapes.
+fn backward_regions_of(lt: LayerType, batch: usize, nout: usize, nin: usize) -> u64 {
+    match lt {
+        LayerType::Convolution => 1,
+        LayerType::InnerProduct => {
+            let flops = batch * nout * nin;
+            let gemm = |rows: usize| -> u64 {
+                u64::from(
+                    flops >= ops::gemm::GEMM_PAR_MIN_FLOPS && rows > ops::gemm::gemm_grain(),
+                )
+            };
+            // db chunk + dW GeMM (C rows = nout) + dX GeMM (C rows = batch)
+            1 + gemm(nout) + gemm(batch)
+        }
+        LayerType::Pooling => 1,
+        LayerType::ReLU => 1,
+        // Standalone SoftMax backward is a serial Jacobian loop.
+        LayerType::SoftMax => 0,
+        LayerType::SoftMaxWithLoss => 1,
+        LayerType::Data | LayerType::Accuracy => 0,
+    }
+}

@@ -81,7 +81,15 @@ static GEMM_KC: par::GrainKnob = par::GrainKnob::new("PHAST_GEMM_KC", 256);
 static GEMM_NC: par::GrainKnob = par::GrainKnob::new("PHAST_GEMM_NC", 512);
 
 /// Below this many multiply-adds the dispatch cost beats the speedup.
-const GEMM_PAR_MIN_FLOPS: usize = 1 << 17;
+/// Public so the execution planner can predict which GeMMs dispatch a
+/// parallel region (`net::plan`'s backward region counts).
+pub const GEMM_PAR_MIN_FLOPS: usize = 1 << 17;
+
+/// The resolved row grain (`PHAST_GEMM_GRAIN`, default 8) — exposed for
+/// the planner's dispatch prediction alongside [`GEMM_PAR_MIN_FLOPS`].
+pub fn gemm_grain() -> usize {
+    GEMM_GRAIN.get()
+}
 
 thread_local! {
     /// Packing events ([`PackedMat::ensure`] misses) on this thread.

@@ -33,8 +33,8 @@ pub use gemm::{
 };
 pub use im2col::{col2im, im2col};
 pub use pool::{
-    avepool, avepool_batch, avepool_bwd, avepool_bwd_batch, maxpool, maxpool_batch,
-    maxpool_bwd, maxpool_bwd_batch,
+    avepool, avepool_batch, avepool_bwd, avepool_bwd_batch, avepool_bwd_plane, maxpool,
+    maxpool_batch, maxpool_bwd, maxpool_bwd_batch, maxpool_bwd_plane,
 };
 pub use activations::{
     accuracy, leaky_relu, leaky_relu_bwd, softmax, softmax_xent, softmax_xent_bwd,

@@ -178,6 +178,30 @@ fn maxpool_bwd_channel(
     }
 }
 
+/// Public per-plane entry of the max-pool gradient scatter: zeroes the
+/// `dx` plane, then routes `dy` through the recorded phases — for fused
+/// regions that interleave the scatter of individual (sample, channel)
+/// planes with a consumer's gradient work (the planner's pool→conv
+/// backward node), where the batch-level dispatch above would nest.
+/// Identical arithmetic to the plane loop inside
+/// [`maxpool_bwd_batch`], so any partition of planes is bitwise-equal.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_bwd_plane(
+    dy: &[f32],
+    arg: &[i32],
+    h: usize,
+    w: usize,
+    g: Pool2dGeom,
+    oh: usize,
+    ow: usize,
+    dx: &mut [f32],
+) {
+    debug_assert_eq!(dy.len(), oh * ow);
+    debug_assert_eq!(arg.len(), oh * ow);
+    debug_assert_eq!(dx.len(), h * w);
+    maxpool_bwd_channel(dy, arg, h, w, g, oh, ow, dx);
+}
+
 /// Route pooled gradients back through the recorded argmax phases —
 /// the serial per-sample reference.
 #[allow(clippy::too_many_arguments)]
@@ -377,6 +401,23 @@ fn avepool_bwd_channel(
             }
         }
     }
+}
+
+/// Public per-plane entry of the average-pool gradient spread (see
+/// [`maxpool_bwd_plane`] for the fused-region rationale).
+#[allow(clippy::too_many_arguments)]
+pub fn avepool_bwd_plane(
+    dy: &[f32],
+    h: usize,
+    w: usize,
+    g: Pool2dGeom,
+    oh: usize,
+    ow: usize,
+    dx: &mut [f32],
+) {
+    debug_assert_eq!(dy.len(), oh * ow);
+    debug_assert_eq!(dx.len(), h * w);
+    avepool_bwd_channel(dy, h, w, g, oh, ow, dx);
 }
 
 /// Backward of [`avepool`] — the serial per-sample reference.

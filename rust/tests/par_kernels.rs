@@ -825,3 +825,46 @@ fn oversubscribed_threads_still_correct() {
     assert_close(&dw1, &dw16, 1e-4, 1e-4);
     assert_close(&db1, &db16, 1e-4, 1e-4);
 }
+
+/// The planner's fused pool→conv backward region (`PHAST_PLAN=on`) must
+/// produce bitwise-identical per-kernel outputs to the unplanned
+/// per-layer reference at every fixed thread count: the pool scatter is
+/// zero-then-scatter per plane (partitioning-invariant), and the conv
+/// gradient + merge stages reuse the reference fused backward's exact
+/// partitioning and worker-order accumulation.
+#[test]
+fn planned_pool_conv_backward_kernels_bitwise_equal_unplanned() {
+    for t in SWEEP {
+        par::with_threads(t, || {
+            let mut on = preset_net("mnist", 17).unwrap();
+            on.set_plan(true);
+            let mut off = preset_net("mnist", 17).unwrap();
+            off.set_plan(false);
+            for net in [&mut on, &mut off] {
+                net.set_backward_fusion(true);
+                net.zero_param_diffs();
+                net.forward().unwrap();
+                net.backward().unwrap();
+            }
+            // The kernels the fused region replaces: pool backward's
+            // scatter target (conv top diff), conv dX, and conv dW/db.
+            for blob in ["conv1", "conv2", "pool1", "pool2", "data"] {
+                assert_eq!(
+                    on.blob(blob).unwrap().diff().as_slice(),
+                    off.blob(blob).unwrap().diff().as_slice(),
+                    "d:{blob} diverged from the unplanned reference at {t} threads"
+                );
+            }
+            let (pa, pb) = (on.params(), off.params());
+            assert_eq!(pa.len(), pb.len());
+            for (a, b) in pa.iter().zip(&pb) {
+                assert_eq!(
+                    a.diff().as_slice(),
+                    b.diff().as_slice(),
+                    "param '{}' grad diverged at {t} threads",
+                    a.name()
+                );
+            }
+        });
+    }
+}

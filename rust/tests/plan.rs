@@ -1,0 +1,354 @@
+//! Plan-conformance suite: pins the graph-level execution planner
+//! (`net::plan`) — golden `Plan::describe()` dumps for every preset,
+//! region-graph structure (fusion spans, barrier points, arena
+//! assignments), predicted-vs-measured backward region counts, the
+//! scratch-arena lifetime invariants, the fan-out fusion gate, and
+//! bitwise equality of planned vs unplanned execution across thread
+//! counts.
+//!
+//! Golden files live in `tests/golden/plan_<net>.txt`; after an
+//! intentional planner change, regenerate with
+//! `PHAST_UPDATE_GOLDEN=1 cargo test --test plan` and review the diff.
+
+use phast_caffe::net::plan::{BwdStep, NodeKind};
+use phast_caffe::net::Net;
+use phast_caffe::ops::par;
+use phast_caffe::proto::{presets, NetConfig};
+
+/// Thread counts the bitwise matrix sweeps: serial, two workers, more
+/// workers than cores, and heavy oversubscription.
+const SWEEP: [usize; 4] = [1, 2, 5, 16];
+
+fn preset(src: &str, seed: u64) -> Net {
+    Net::from_config(NetConfig::from_text(src).unwrap(), seed).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Golden plan dumps
+// ---------------------------------------------------------------------------
+
+fn check_golden(src: &str, name: &str, golden: &str) {
+    let net = preset(src, 1);
+    let got = net.plan().describe();
+    if std::env::var("PHAST_UPDATE_GOLDEN").is_ok() {
+        std::fs::write(format!("tests/golden/plan_{name}.txt"), &got).unwrap();
+        return;
+    }
+    assert_eq!(
+        got, golden,
+        "plan for '{name}' diverged from its golden dump — if the planner \
+         change is intentional, regenerate with PHAST_UPDATE_GOLDEN=1 and \
+         review the diff"
+    );
+}
+
+#[test]
+fn golden_plan_lenet() {
+    check_golden(
+        presets::LENET_MNIST,
+        "lenet-mnist",
+        include_str!("golden/plan_lenet-mnist.txt"),
+    );
+}
+
+#[test]
+fn golden_plan_cifar() {
+    check_golden(
+        presets::CIFAR10_QUICK,
+        "cifar10-quick",
+        include_str!("golden/plan_cifar10-quick.txt"),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Region-graph structure
+// ---------------------------------------------------------------------------
+
+fn kind_count(net: &Net, kind: NodeKind) -> usize {
+    net.plan().nodes.iter().filter(|n| n.kind == kind).count()
+}
+
+#[test]
+fn lenet_plan_structure() {
+    let net = preset(presets::LENET_MNIST, 1);
+    let plan = net.plan();
+    // Both conv→pool pairs fuse backward; ip1→relu1 fuses forward.
+    assert_eq!(kind_count(&net, NodeKind::FusedPoolConv), 2);
+    assert_eq!(kind_count(&net, NodeKind::FusedRelu), 1);
+    assert_eq!(plan.fused_relu_pairs(), vec![(5, 6)]);
+    // Backward execution order: pool2+conv2 first, then pool1+conv1.
+    assert_eq!(plan.fused_pool_conv_pairs(), vec![(4, 3), (2, 1)]);
+    // Every fused pool→conv region crosses exactly its two stage barriers.
+    for n in &plan.nodes {
+        if n.kind == NodeKind::FusedPoolConv {
+            assert_eq!(n.barriers, 2, "node {}", n.id);
+            assert_eq!(n.stages, ["pool-scatter", "conv-grad", "merge"]);
+            assert_eq!(n.regions, Some(1));
+        }
+    }
+    // Disjoint backward live ranges ⇒ both bundles share one arena slot.
+    assert_eq!(plan.arena_slots(), 1);
+    assert_eq!(plan.bwd_arena_slot(1), Some(0));
+    assert_eq!(plan.bwd_arena_slot(3), Some(0));
+    assert_eq!(plan.bwd_arena_slot(5), None, "ip1 owns no conv bundle");
+    assert_eq!(plan.predicted_backward_regions(), 10);
+}
+
+#[test]
+fn cifar_plan_structure() {
+    let net = preset(presets::CIFAR10_QUICK, 2);
+    let plan = net.plan();
+    // Only conv1→pool1 is adjacent with a single consumer; conv2/conv3
+    // are followed by their ReLUs instead (forward-fused).
+    assert_eq!(kind_count(&net, NodeKind::FusedPoolConv), 1);
+    assert_eq!(kind_count(&net, NodeKind::FusedRelu), 2);
+    assert_eq!(plan.fused_relu_pairs(), vec![(4, 5), (7, 8)]);
+    assert_eq!(plan.fused_pool_conv_pairs(), vec![(2, 1)]);
+    assert_eq!(plan.arena_slots(), 1);
+    assert_eq!(plan.bwd_arena_slot(1), Some(0));
+    assert_eq!(plan.bwd_arena_slot(4), None);
+    assert_eq!(plan.bwd_arena_slot(7), None);
+}
+
+// ---------------------------------------------------------------------------
+// Scratch-arena lifetime invariants
+// ---------------------------------------------------------------------------
+
+/// Same arena slot ⇒ disjoint live ranges; resident slots are unique.
+/// Holds for every preset's plan by construction of the interval
+/// coloring — this is the property the sharing correctness rests on.
+#[test]
+fn arena_slot_sharing_implies_disjoint_live_ranges() {
+    for src in [presets::LENET_MNIST, presets::CIFAR10_QUICK] {
+        let net = preset(src, 3);
+        let scratch = &net.plan().scratch;
+        let mut resident_slots = std::collections::HashSet::new();
+        for (i, a) in scratch.iter().enumerate() {
+            assert!(a.live.0 <= a.live.1, "{}: inverted live range", a.key);
+            if a.resident {
+                assert!(resident_slots.insert(a.slot), "{}: resident slot reused", a.key);
+                continue;
+            }
+            for b in scratch.iter().skip(i + 1) {
+                if b.resident || a.slot != b.slot {
+                    continue;
+                }
+                let disjoint = a.live.1 < b.live.0 || b.live.1 < a.live.0;
+                assert!(
+                    disjoint,
+                    "{} and {} share arena slot a{} with overlapping live ranges \
+                     {:?} / {:?}",
+                    a.key, b.key, a.slot, a.live, b.live
+                );
+            }
+        }
+    }
+}
+
+/// The arena's peak must never exceed the per-layer grow-only total it
+/// replaces, and on LeNet (two fused conv backwards sharing one slot)
+/// it must be strictly smaller.
+#[test]
+fn peak_scratch_below_grow_only_total() {
+    for src in [presets::LENET_MNIST, presets::CIFAR10_QUICK] {
+        let net = preset(src, 4);
+        for w in [1usize, 2, 4, 16] {
+            let peak = net.plan().peak_scratch_floats(w);
+            let grow = net.plan().grow_only_scratch_floats(w);
+            assert!(peak <= grow, "peak {peak} > grow-only {grow} at {w} workers");
+        }
+    }
+    let net = preset(presets::LENET_MNIST, 4);
+    for w in [2usize, 4, 16] {
+        assert!(
+            net.plan().peak_scratch_floats(w) < net.plan().grow_only_scratch_floats(w),
+            "LeNet's shared slot must beat grow-only at {w} workers"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Predicted vs measured backward regions
+// ---------------------------------------------------------------------------
+
+/// One warmed backward sweep's dispatch count at 4 threads.
+fn measured_backward_regions(net: &mut Net) -> u64 {
+    net.zero_param_diffs();
+    net.forward().unwrap();
+    net.backward().unwrap(); // warm: Wᵀ packs, scratch growth
+    let r0 = par::region_count();
+    net.backward().unwrap();
+    par::region_count() - r0
+}
+
+#[test]
+fn predicted_backward_regions_match_measured() {
+    par::with_threads(4, || {
+        for src in [presets::LENET_MNIST, presets::CIFAR10_QUICK] {
+            let mut net = preset(src, 5);
+            net.set_plan(true);
+            net.set_backward_fusion(true);
+            let predicted = net.plan().predicted_backward_regions();
+            let measured = measured_backward_regions(&mut net);
+            assert_eq!(
+                predicted, measured,
+                "plan for '{}' predicted {predicted} backward regions, measured \
+                 {measured}",
+                net.config().name
+            );
+        }
+    });
+}
+
+/// The planned schedule must beat the pre-planner backward on LeNet:
+/// both conv backwards absorb their pool's scatter (12 → 10 dispatches).
+#[test]
+fn planned_backward_fuses_pool_into_conv() {
+    par::with_threads(4, || {
+        let mut planned = preset(presets::LENET_MNIST, 6);
+        planned.set_plan(true);
+        planned.set_backward_fusion(true);
+        let mut unplanned = preset(presets::LENET_MNIST, 6);
+        unplanned.set_plan(false);
+        unplanned.set_backward_fusion(true);
+        let p = measured_backward_regions(&mut planned);
+        let u = measured_backward_regions(&mut unplanned);
+        assert_eq!(u, 12, "pre-planner LeNet backward regions moved");
+        assert_eq!(p, 10, "planned LeNet backward regions moved");
+        assert!(p < u, "planned backward must dispatch fewer regions");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fan-out gate (rule R3)
+// ---------------------------------------------------------------------------
+
+/// A conv top consumed by two layers is a fan-out edge: neither the
+/// forward ReLU fusion nor the backward pool fusion may fire across it,
+/// even when the candidate consumer is adjacent.
+#[test]
+fn fan_out_edge_blocks_fusion() {
+    // Adjacent ReLU, but conv1 also feeds pool1 → no R1.
+    let relu_fanout = r#"
+        name: "fanout-relu"
+        layer { name: "data" type: "Data" top: "data" top: "label"
+                data_param { source: "synthetic-mnist" batch_size: 8 } }
+        layer { name: "conv1" type: "Convolution" bottom: "data" top: "conv1"
+                convolution_param { num_output: 4 kernel_size: 3 stride: 1 } }
+        layer { name: "relu1" type: "ReLU" bottom: "conv1" top: "relu1" }
+        layer { name: "pool1" type: "Pooling" bottom: "conv1" top: "pool1"
+                pooling_param { pool: MAX kernel_size: 2 stride: 2 } }
+    "#;
+    // Adjacent pool, but conv1 also feeds relu1 → no R2.
+    let pool_fanout = r#"
+        name: "fanout-pool"
+        layer { name: "data" type: "Data" top: "data" top: "label"
+                data_param { source: "synthetic-mnist" batch_size: 8 } }
+        layer { name: "conv1" type: "Convolution" bottom: "data" top: "conv1"
+                convolution_param { num_output: 4 kernel_size: 3 stride: 1 } }
+        layer { name: "pool1" type: "Pooling" bottom: "conv1" top: "pool1"
+                pooling_param { pool: MAX kernel_size: 2 stride: 2 } }
+        layer { name: "relu1" type: "ReLU" bottom: "conv1" top: "relu1" }
+    "#;
+    for src in [relu_fanout, pool_fanout] {
+        let net = preset(src, 9);
+        assert!(net.fusion_plan().is_empty(), "{}: R1 across fan-out", net.config().name);
+        assert!(
+            net.plan().fused_pool_conv_pairs().is_empty(),
+            "{}: R2 across fan-out",
+            net.config().name
+        );
+        assert_eq!(kind_count(&net, NodeKind::FusedRelu), 0);
+        assert_eq!(kind_count(&net, NodeKind::FusedPoolConv), 0);
+        // Every backward step is a per-layer step.
+        for s in &net.plan().bwd {
+            assert!(matches!(s, BwdStep::Layer(_)));
+        }
+        // The planned executor must run the two-consumer topology.
+        par::with_threads(2, || {
+            let mut net = preset(src, 9);
+            net.set_plan(true);
+            net.forward().unwrap();
+            net.backward().unwrap();
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Planned vs unplanned bitwise equality
+// ---------------------------------------------------------------------------
+
+/// Everything the sweeps write: all blob datas + diffs and all param
+/// diffs, snapshotted for comparison.
+fn net_state(net: &Net) -> Vec<(String, Vec<f32>, Vec<f32>)> {
+    let mut out = Vec::new();
+    let names: Vec<String> = net.blob_names().map(str::to_string).collect();
+    for name in names {
+        let b = net.blob(&name).unwrap();
+        out.push((name, b.data().as_slice().to_vec(), b.diff().as_slice().to_vec()));
+    }
+    for p in net.params() {
+        out.push((p.name().to_string(), vec![], p.diff().as_slice().to_vec()));
+    }
+    out
+}
+
+/// One forward+backward under the planned executors must be bitwise
+/// identical to the pre-planner reference at every thread count — the
+/// `PHAST_PLAN` contract the training-trajectory tests extend to whole
+/// SGD runs.
+#[test]
+fn planned_execution_bitwise_equals_unplanned() {
+    for src in [presets::LENET_MNIST, presets::CIFAR10_QUICK] {
+        for t in SWEEP {
+            par::with_threads(t, || {
+                let mut on = preset(src, 7);
+                on.set_plan(true);
+                let mut off = preset(src, 7);
+                off.set_plan(false);
+                on.zero_param_diffs();
+                off.zero_param_diffs();
+                let loss_on = on.forward().unwrap();
+                let loss_off = off.forward().unwrap();
+                assert_eq!(loss_on, loss_off, "loss diverged at {t} threads");
+                on.backward().unwrap();
+                off.backward().unwrap();
+                let a = net_state(&on);
+                let b = net_state(&off);
+                assert_eq!(a.len(), b.len());
+                for ((name, da, fa), (_, db, fb)) in a.iter().zip(&b) {
+                    assert_eq!(da, db, "'{name}' data diverged at {t} threads");
+                    assert_eq!(fa, fb, "'{name}' diff diverged at {t} threads");
+                }
+            });
+        }
+    }
+}
+
+/// The planned executors must also respect the *other* fusion knobs:
+/// with backward fusion forced off the fused pool→conv node decays to
+/// the reference per-layer steps, bitwise-equal to the unplanned sweep
+/// under the same knob.
+#[test]
+fn planned_decays_bitwise_when_backward_fusion_off() {
+    par::with_threads(4, || {
+        let mut on = preset(presets::LENET_MNIST, 8);
+        on.set_plan(true);
+        on.set_backward_fusion(false);
+        let mut off = preset(presets::LENET_MNIST, 8);
+        off.set_plan(false);
+        off.set_backward_fusion(false);
+        on.zero_param_diffs();
+        off.zero_param_diffs();
+        on.forward().unwrap();
+        off.forward().unwrap();
+        on.backward().unwrap();
+        off.backward().unwrap();
+        let a = net_state(&on);
+        let b = net_state(&off);
+        for ((name, da, fa), (_, db, fb)) in a.iter().zip(&b) {
+            assert_eq!(da, db, "'{name}' data diverged");
+            assert_eq!(fa, fb, "'{name}' diff diverged");
+        }
+    });
+}

@@ -251,3 +251,75 @@ fn training_is_deterministic() {
     };
     assert_eq!(run(), run());
 }
+
+/// `PHAST_PLAN` joins the bitwise matrix: the planned executors (fused
+/// forward regions, the fused pool→conv backward, the shared scratch
+/// arena) must leave the whole LeNet training trajectory bitwise
+/// unchanged at every tested thread count.
+#[test]
+fn planned_training_trajectory_bitwise_equals_unplanned() {
+    fn run(threads: usize, plan: bool, steps: usize) -> (Vec<f32>, Vec<f32>) {
+        par::with_threads(threads, || {
+            let mut cfg = SolverConfig::from_text(presets::LENET_SOLVER).unwrap();
+            cfg.display = 0;
+            let mut net =
+                Net::from_config(NetConfig::from_text(presets::LENET_MNIST).unwrap(), 21).unwrap();
+            net.set_plan(plan);
+            let mut solver = Solver::new(cfg, net);
+            let mut losses = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                losses.push(solver.step().unwrap());
+            }
+            let weights: Vec<f32> = solver
+                .net
+                .params()
+                .into_iter()
+                .flat_map(|p| p.data().as_slice().to_vec())
+                .collect();
+            (losses, weights)
+        })
+    }
+
+    for threads in [1usize, 2, 5, 16] {
+        let (l_off, w_off) = run(threads, false, 3);
+        let (l_on, w_on) = run(threads, true, 3);
+        assert_eq!(l_off, l_on, "losses diverged under PHAST_PLAN at {threads} threads");
+        assert_eq!(w_off, w_on, "weights diverged under PHAST_PLAN at {threads} threads");
+    }
+}
+
+/// TrainDriver snapshots must stay plan-agnostic: a run crashed under the
+/// planned executors and resumed with the plan disabled (the knob toggled
+/// across the restart boundary) must finish bitwise identical to an
+/// uninterrupted unplanned run — the snapshot format carries weights and
+/// solver state only, never schedule state.
+#[test]
+fn snapshots_are_plan_agnostic_across_resume() {
+    par::with_threads(4, || {
+        let dir_ref = fresh_dir("planref");
+        let mut reference = lenet_driver(&dir_ref, 0);
+        reference.solver.net.set_plan(false);
+        reference.run(12).unwrap();
+
+        let dir = fresh_dir("plancrash");
+        let mut crashing = lenet_driver(&dir, 0);
+        crashing.solver.net.set_plan(true);
+        fault::with_faults("worker_panic@iter=7", || crashing.run(12))
+            .expect_err("zero budget must abort on the injected panic");
+        drop(crashing);
+
+        let mut resumed = lenet_driver(&dir, 0);
+        resumed.solver.net.set_plan(false);
+        let loaded = resumed.resume().unwrap().expect("crash run left snapshots");
+        assert!(loaded.ends_with("snap_00000004.pcss"), "loaded {loaded:?}");
+        resumed.run(12).unwrap();
+
+        assert_eq!(
+            driver_weights(&reference),
+            driver_weights(&resumed),
+            "resume with the plan toggled diverged from the unplanned run"
+        );
+        std::fs::remove_dir_all(&dir_ref).ok();
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}

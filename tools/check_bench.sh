@@ -18,6 +18,11 @@
 #     they too are machine-independent: the fused gradient sweep must
 #     never issue more dispatches than the pinned baseline (or than the
 #     reference path measured in the same run).
+#   * planned_backward pins the graph-level plan (PHAST_PLAN) at the same
+#     width: the planned region count is gated exactly (a schedule change
+#     must come with a baseline update), it must stay strictly below the
+#     unplanned count from the same run, and the plan's analytic
+#     scratch-arena peak is a hard byte ceiling.
 #   * Wall-clock-derived metrics are gated with a generous tolerance
 #     (baseline "tolerance", 1.5x) and, where possible, as within-run
 #     ratios (fused vs unfused, packed vs unpacked on the same machine)
@@ -122,6 +127,40 @@ if None not in (bwd_fused, bwd_ref) and bwd_fused > bwd_ref:
     failures.append(
         f"fused_backward: the fused sweep issues more regions ({bwd_fused}) "
         f"than the reference ({bwd_ref})"
+    )
+
+# The graph-level plan runs at the same pinned width, so its region
+# count is deterministic too: pinned EXACTLY (10 on LeNet — losing the
+# pool->conv merge or adding dispatches both count as regressions), and
+# it must stay strictly below the unplanned per-layer schedule measured
+# in the same run.  The scratch-arena peak is analytic (a function of
+# blob shapes and the worker count only): gated as a hard ceiling.
+plan_on = get(cur, "planned_backward", "regions_planned", "current")
+plan_base = get(base, "planned_backward", "regions_planned", "baseline")
+if None not in (plan_on, plan_base) and plan_on != plan_base:
+    failures.append(
+        f"planned_backward.regions_planned {plan_on} != pinned {plan_base}: "
+        "the planned schedule changed without a baseline update"
+    )
+plan_off = get(cur, "planned_backward", "regions_unplanned", "current")
+if None not in (plan_on, plan_off) and plan_on >= plan_off:
+    failures.append(
+        f"planned_backward: the planned sweep ({plan_on} regions) no longer "
+        f"beats the per-layer schedule ({plan_off} regions)"
+    )
+peak = get(cur, "planned_backward", "peak_scratch_bytes", "current")
+peak_base = get(base, "planned_backward", "peak_scratch_bytes", "baseline")
+if None not in (peak, peak_base) and peak > peak_base:
+    failures.append(
+        f"planned_backward.peak_scratch_bytes {peak} above ceiling "
+        f"{peak_base}: the scratch arena stopped sharing"
+    )
+plan_ms = get(cur, "planned_backward", "planned_ms_per_bwd", "current")
+unplan_ms = get(cur, "planned_backward", "unplanned_ms_per_bwd", "current")
+if None not in (plan_ms, unplan_ms) and plan_ms > unplan_ms * tol:
+    failures.append(
+        f"planned_backward slower than unplanned beyond tolerance: "
+        f"planned {plan_ms} ms vs unplanned {unplan_ms} ms (x{tol})"
     )
 
 # --- timing gates (within-run ratios, 1.5x tolerance) -------------------
@@ -234,6 +273,8 @@ print(f"  fused_sgd_step: {cur['fused_sgd_step']['regions_unfused']} -> "
 print(f"  fused_layers: {plain} -> {fused} regions/forward")
 print(f"  fused_backward: reference {bwd_ref} / fused {bwd_fused} regions/backward "
       f"({bwd_ref_ms} -> {bwd_fused_ms} ms)")
+print(f"  planned_backward: unplanned {plan_off} -> planned {plan_on} regions/backward "
+      f"({unplan_ms} -> {plan_ms} ms), scratch peak {peak} bytes")
 print(f"  small_op_dispatch.spawn_over_pool: {sop}")
 print(f"  scaling.max_speedup: {ms}")
 print(f"  gemm_packed: packed_over_naive {pon}, packs_per_forward {ppf}, "

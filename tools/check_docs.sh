@@ -29,11 +29,11 @@ done
 # GeMM cache-blocking knobs PHAST_GEMM_{MC,KC,NC} + the *_PACK persistent
 # packing switches (PHAST_CONV_PACK) + the fault-tolerance surface
 # (PHAST_FAULT fault injection and the PHAST_SNAPSHOT_* checkpoint
-# policy knobs); other PHAST_* env vars (e.g. PHAST_ARTIFACTS, the
-# artifact directory) are out of scope.  Prose placeholders like
-# PHAST_*_GRAIN don't match the character class, so they are ignored
-# naturally.
-knob_re='PHAST_(([A-Z0-9]+_)*(GRAIN|THREADS|PACK)|FUSE_[A-Z0-9]+|GEMM_(MC|KC|NC)|FAULT|SNAPSHOT_[A-Z0-9]+)'
+# policy knobs) + the PHAST_PLAN graph-level planner switch; other
+# PHAST_* env vars (e.g. PHAST_ARTIFACTS, the artifact directory) are
+# out of scope.  Prose placeholders like PHAST_*_GRAIN don't match the
+# character class, so they are ignored naturally.
+knob_re='PHAST_(([A-Z0-9]+_)*(GRAIN|THREADS|PACK)|FUSE_[A-Z0-9]+|GEMM_(MC|KC|NC)|FAULT|PLAN|SNAPSHOT_[A-Z0-9]+)'
 docs_knobs=$(grep -ohE "$knob_re" README.md docs/PARALLEL_RUNTIME.md | sort -u)
 code_knobs=$(grep -rhoE "\"$knob_re\"" rust/src | tr -d '"' | sort -u)
 
