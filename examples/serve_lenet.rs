@@ -1,0 +1,140 @@
+//! Serving driver: LeNet / synthetic-MNIST behind the async inference
+//! engine — bounded intake queue, deadline-aware dynamic batching, and
+//! zero-copy response views (see `docs/SERVING.md`).
+//!
+//! ```sh
+//! PHAST_SERVE_BATCH=8 cargo run --release --example serve_lenet -- 32
+//! ```
+//!
+//! Arguments: an optional request count (default 32).  Engine knobs come
+//! from `PHAST_SERVE_BATCH` / `PHAST_SERVE_DELAY_US` /
+//! `PHAST_SERVE_QUEUE`; set `PHAST_SNAPSHOT_DIR` to serve the newest
+//! valid `.pcss` checkpoint from that directory (hot-reload capable)
+//! instead of seed weights.
+//!
+//! Every response is checked **bitwise** against a single-request
+//! reference forward of the same input on an identically constructed
+//! model — however the batcher coalesced the requests.  The run ends
+//! with machine-checkable lines:
+//!
+//! ```text
+//! served=32
+//! mismatches=0
+//! batches=7
+//! steady_repacks=0
+//! argmax_hash=0x1a2b3c4d
+//! ```
+//!
+//! `argmax_hash` is a CRC32 over the predicted class of every request in
+//! submission order; it is a pure function of the weights and the
+//! deterministic synthetic inputs, so the CI smoke job asserts it is
+//! identical across `PHAST_NUM_THREADS` settings.  The process exits
+//! nonzero on any mismatch or failed request.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use phast_caffe::runtime::{Model, ModelRegistry, ServeConfig, ServeEngine, SubmitError};
+use phast_caffe::solver::crc32;
+
+const SAMPLE_IN: usize = 28 * 28;
+const DEFAULT_REQUESTS: usize = 32;
+
+/// Deterministic synthetic input sample (splitmix64 over the seed).
+fn sample(seed: u64) -> Vec<f32> {
+    let mut x = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+    (0..SAMPLE_IN)
+        .map(|_| {
+            x ^= x >> 30;
+            x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            x ^= x >> 27;
+            ((x >> 40) as f32) / ((1u64 << 24) as f32)
+        })
+        .collect()
+}
+
+fn build_model(batch: usize) -> anyhow::Result<Model> {
+    let mut m = Model::lenet(batch, 42)?;
+    if let Ok(dir) = std::env::var("PHAST_SNAPSHOT_DIR") {
+        match m.load_latest(std::path::Path::new(&dir))? {
+            Some(p) => println!("loaded snapshot {p:?}"),
+            None => println!("no valid snapshot in {dir:?}: serving seed weights"),
+        }
+    }
+    Ok(m)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = match std::env::args().nth(1) {
+        Some(arg) => arg
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad request count argument '{arg}': {e}"))?,
+        None => DEFAULT_REQUESTS,
+    };
+
+    let cfg = ServeConfig::from_env();
+    println!(
+        "== serving: LeNet / synthetic-MNIST, {n} requests ==\n\
+         max_batch {}, max_delay {}us, queue {}",
+        cfg.max_batch, cfg.max_delay_us, cfg.queue_cap
+    );
+
+    // Single-request references from an identically constructed model —
+    // the bitwise yardstick for whatever batches the engine forms.
+    let mut reference = build_model(cfg.max_batch)?;
+    let width = reference.sample_out();
+    let inputs: Vec<Vec<f32>> = (0..n).map(|i| sample(7000 + i as u64)).collect();
+    let refs: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| Ok(reference.forward_batch(x, 1)?.as_slice()[..width].to_vec()))
+        .collect::<anyhow::Result<_>>()?;
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_fixed("lenet", build_model(cfg.max_batch)?);
+    let engine = ServeEngine::start(Arc::clone(&registry), "lenet", cfg)?;
+
+    // Submit everything up front (QueueFull is backpressure: retry), then
+    // collect — this is what actually exercises the batcher's coalescing.
+    let t0 = Instant::now();
+    let mut pendings = Vec::with_capacity(n);
+    for x in &inputs {
+        let p = loop {
+            match engine.submit(x.clone()) {
+                Ok(p) => break p,
+                Err(SubmitError::QueueFull) => std::thread::yield_now(),
+                Err(e) => return Err(e.into()),
+            }
+        };
+        pendings.push(p);
+    }
+    let mut mismatches = 0usize;
+    let mut argmaxes = Vec::with_capacity(n);
+    for (i, p) in pendings.into_iter().enumerate() {
+        let resp = p.wait()?;
+        if resp.scores() != refs[i].as_slice() {
+            eprintln!("request {i}: served scores differ from single-request reference");
+            mismatches += 1;
+        }
+        argmaxes.push(resp.argmax(0) as u8);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = engine.stats();
+
+    println!(
+        "done: {n} requests in {:.1} ms ({:.1} req/s), {} batches ({:.2} rows/batch)",
+        wall * 1e3,
+        n as f64 / wall,
+        stats.batches,
+        stats.rows as f64 / stats.batches.max(1) as f64
+    );
+    println!("served={}", stats.requests);
+    println!("mismatches={mismatches}");
+    println!("batches={}", stats.batches);
+    println!("steady_repacks={}", stats.steady_repacks);
+    println!("argmax_hash={:#010x}", crc32(&argmaxes));
+
+    if mismatches > 0 {
+        anyhow::bail!("{mismatches} served responses mismatched the reference");
+    }
+    Ok(())
+}

@@ -1,0 +1,183 @@
+//! Bench: serving-engine latency and throughput — what the dynamic
+//! batcher buys over request-at-a-time inference, and the deterministic
+//! correctness flags the CI gate pins.
+//!
+//! Entries merge-updated into `BENCH_threads.json` under the `serving`
+//! key (see `metrics::bench_json`; `tools/check_bench.sh` gates them
+//! against `BENCH_baseline.json`):
+//!
+//! * `requests` — closed-loop requests issued (gated exact: the workload
+//!   itself is deterministic);
+//! * `responses_ok` — 1 iff every request got a response (gated exact);
+//! * `bitwise_match` — 1 iff every served response equals its
+//!   single-request reference forward bitwise, however the batcher
+//!   coalesced it (gated exactly at 1 — the serving acceptance pin);
+//! * `p50_us_b8` / `p95_us_b8` / `p99_us_b8` — enqueue-to-response
+//!   latency percentiles at max_batch=8 (p99 gated as a generous
+//!   ceiling; CI runners vary wildly);
+//! * `rps_b1` / `rps_b8` — closed-loop throughput at max_batch 1 vs 8
+//!   (rps_b8 gated as a floor);
+//! * `batch_speedup` — rps_b8 / rps_b1, the dispatch amortization the
+//!   batcher exists for (gated as a floor).
+//!
+//! `cargo bench --bench serving`
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use phast_caffe::metrics::bench_json;
+use phast_caffe::runtime::{Model, ModelRegistry, ServeConfig, ServeEngine, SubmitError};
+
+const SAMPLE_IN: usize = 28 * 28;
+const CLIENTS: usize = 8;
+const REQS_PER_CLIENT: usize = 16;
+
+fn sample(seed: u64) -> Vec<f32> {
+    let mut x = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+    (0..SAMPLE_IN)
+        .map(|_| {
+            x ^= x >> 30;
+            x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            x ^= x >> 27;
+            ((x >> 40) as f32) / ((1u64 << 24) as f32)
+        })
+        .collect()
+}
+
+struct RunResult {
+    rps: f64,
+    latencies_us: Vec<f64>,
+    all_ok: bool,
+    all_match: bool,
+}
+
+/// Closed-loop run: CLIENTS threads, each submitting REQS_PER_CLIENT
+/// requests back to back, every response checked bitwise against the
+/// precomputed single-request reference for its input.
+fn run(
+    max_batch: usize,
+    inputs: &Arc<Vec<Vec<f32>>>,
+    refs: &Arc<Vec<Vec<f32>>>,
+) -> anyhow::Result<RunResult> {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_fixed("lenet", Model::lenet(max_batch, 42)?);
+    let cfg = ServeConfig {
+        max_batch,
+        max_delay_us: 500,
+        queue_cap: 256,
+        threads: None,
+    };
+    let engine = Arc::new(ServeEngine::start(registry, "lenet", cfg)?);
+    // Warm-up batch: packs weights, so the timed run is steady state.
+    engine
+        .submit(inputs[0].clone())
+        .expect("warmup submit")
+        .wait()?;
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let engine = Arc::clone(&engine);
+        let inputs = Arc::clone(inputs);
+        let refs = Arc::clone(refs);
+        handles.push(std::thread::spawn(move || {
+            let mut lat = Vec::with_capacity(REQS_PER_CLIENT);
+            let mut ok = true;
+            let mut matched = true;
+            for i in 0..REQS_PER_CLIENT {
+                let k = (c * REQS_PER_CLIENT + i) % inputs.len();
+                // Backpressure surfaces as QueueFull: retry, it is part
+                // of the closed-loop cost.
+                let pending = loop {
+                    match engine.submit(inputs[k].clone()) {
+                        Ok(p) => break Some(p),
+                        Err(SubmitError::QueueFull) => std::thread::yield_now(),
+                        Err(_) => break None,
+                    }
+                };
+                match pending.map(|p| p.wait()) {
+                    Some(Ok(resp)) => {
+                        lat.push(resp.latency().as_secs_f64() * 1e6);
+                        matched &= resp.scores() == refs[k].as_slice();
+                    }
+                    _ => ok = false,
+                }
+            }
+            (lat, ok, matched)
+        }));
+    }
+    let mut latencies_us = Vec::new();
+    let mut all_ok = true;
+    let mut all_match = true;
+    for h in handles {
+        let (lat, ok, matched) = h.join().expect("client thread");
+        latencies_us.extend(lat);
+        all_ok &= ok;
+        all_match &= matched;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let rps = (CLIENTS * REQS_PER_CLIENT) as f64 / wall;
+    Ok(RunResult { rps, latencies_us, all_ok, all_match })
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+fn main() -> anyhow::Result<()> {
+    // Distinct inputs cycled by the clients, plus their single-request
+    // reference outputs (the bitwise yardstick for every batch shape).
+    let inputs: Arc<Vec<Vec<f32>>> = Arc::new((0..8).map(|i| sample(9000 + i)).collect());
+    let mut reference = Model::lenet(8, 42)?;
+    let width = reference.sample_out();
+    let refs: Arc<Vec<Vec<f32>>> = Arc::new(
+        inputs
+            .iter()
+            .map(|x| {
+                let out = reference.forward_batch(x, 1)?;
+                Ok(out.as_slice()[..width].to_vec())
+            })
+            .collect::<anyhow::Result<_>>()?,
+    );
+
+    let b1 = run(1, &inputs, &refs)?;
+    let b8 = run(8, &inputs, &refs)?;
+
+    let mut lat = b8.latencies_us.clone();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p95, p99) =
+        (percentile(&lat, 0.50), percentile(&lat, 0.95), percentile(&lat, 0.99));
+    let requests = CLIENTS * REQS_PER_CLIENT;
+    let responses_ok = usize::from(b1.all_ok && b8.all_ok);
+    let bitwise_match = usize::from(b1.all_match && b8.all_match);
+    let speedup = b8.rps / b1.rps;
+
+    println!("serving: LeNet-MNIST, {CLIENTS} clients x {REQS_PER_CLIENT} reqs, delay 500us");
+    println!("  max_batch=1: {:.1} req/s", b1.rps);
+    println!("  max_batch=8: {:.1} req/s ({speedup:.2}x)", b8.rps);
+    println!("  latency @8: p50 {p50:.0} us / p95 {p95:.0} us / p99 {p99:.0} us");
+    println!("  responses_ok={responses_ok} bitwise_match={bitwise_match}");
+
+    let mut entry = String::from("{\n");
+    let _ = writeln!(entry, "    \"net\": \"lenet-mnist\",");
+    let _ = writeln!(entry, "    \"clients\": {CLIENTS},");
+    let _ = writeln!(entry, "    \"requests\": {requests},");
+    let _ = writeln!(entry, "    \"responses_ok\": {responses_ok},");
+    let _ = writeln!(entry, "    \"bitwise_match\": {bitwise_match},");
+    let _ = writeln!(entry, "    \"p50_us_b8\": {p50:.1},");
+    let _ = writeln!(entry, "    \"p95_us_b8\": {p95:.1},");
+    let _ = writeln!(entry, "    \"p99_us_b8\": {p99:.1},");
+    let _ = writeln!(entry, "    \"rps_b1\": {:.2},", b1.rps);
+    let _ = writeln!(entry, "    \"rps_b8\": {:.2},", b8.rps);
+    let _ = writeln!(entry, "    \"batch_speedup\": {speedup:.3}");
+    entry.push_str("  }");
+
+    bench_json::merge_entries(std::path::Path::new("BENCH_threads.json"), &[("serving", entry)])?;
+    println!("\nmerged serving into BENCH_threads.json");
+    Ok(())
+}

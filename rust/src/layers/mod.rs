@@ -29,7 +29,11 @@ use crate::tensor::{Blob, Shape, Tensor};
 /// `bottoms`/`tops` are resolved by name in `net::Net`; in-place layers are
 /// not supported (the presets are written out-of-place), which keeps the
 /// blob store borrow-safe.
-pub trait Layer {
+///
+/// `Send` is a supertrait: layers hold only owned data (weights, scratch,
+/// iterator state), and nets must be movable into other threads — the
+/// serving engine's batcher owns its models from a spawned thread.
+pub trait Layer: Send {
     /// Static configuration (name, type, connectivity, hyper-parameters).
     fn config(&self) -> &LayerConfig;
 

@@ -71,6 +71,11 @@ pub struct Net {
     /// Shared scratch arena the planned backward carves fused-region
     /// worker windows from (one slot per `Plan::arena_slots`).
     arena: plan::ScratchArena,
+    /// Inference mode for the serving engine: while set, Data layers are
+    /// skipped in the forward sweep so externally-written input blobs
+    /// (the request batch) are not overwritten by the synthetic data
+    /// pipeline.  Toggled only inside [`Net::forward_infer`].
+    infer_skip_data: bool,
     pub metrics: Metrics,
 }
 
@@ -153,6 +158,7 @@ impl Net {
             plan,
             plan_on: plan_default(),
             arena,
+            infer_skip_data: false,
             metrics: Metrics::new(),
         })
     }
@@ -246,6 +252,13 @@ impl Net {
 
     /// Run one layer's native forward against the blob store.
     pub fn forward_layer(&mut self, li: usize) -> Result<()> {
+        // Inference mode (see `forward_infer`): the data pipeline is
+        // skipped wholesale so the request tensors written into its top
+        // blobs survive the sweep.  Data is never a fusion producer, so
+        // guarding this single funnel covers both executors.
+        if self.infer_skip_data && self.layers[li].ltype() == LayerType::Data {
+            return Ok(());
+        }
         // Move tops out to satisfy the borrow checker (no in-place layers).
         let tids = self.top_ids[li].clone();
         let mut tops: Vec<Tensor> = tids
@@ -346,6 +359,21 @@ impl Net {
             }
         }
         Ok(loss)
+    }
+
+    /// Serving forward: one full forward sweep with every Data layer
+    /// skipped, so input blobs written by the caller (the serving
+    /// engine's request batch) are the sweep's actual inputs.  Everything
+    /// else — executor choice, fusion, per-layer timing — is identical to
+    /// [`Net::forward`], which keeps served outputs bitwise-comparable to
+    /// training-time forwards over the same input blob contents.  Label
+    /// blobs keep whatever they hold (zeros at construction), so loss and
+    /// accuracy tops are well-defined but meaningless in this mode.
+    pub fn forward_infer(&mut self) -> Result<Option<f32>> {
+        self.infer_skip_data = true;
+        let result = self.forward();
+        self.infer_skip_data = false;
+        result
     }
 
     /// Planned forward: walk the plan's forward schedule.  A `FusedRelu`

@@ -1,16 +1,27 @@
-//! PJRT runtime: load the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and execute them through the `xla` crate's PJRT
-//! CPU client.  This is the only place the crate touches XLA; Python never
-//! runs here.
+//! Runtime layer: PJRT artifact execution and the native serving engine.
 //!
-//! Interchange is HLO *text* (see aot.py's module docs for why the
-//! serialized-proto path is a dead end with xla_extension 0.5.1).
+//! The PJRT half loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them through the `xla` crate's PJRT
+//! CPU client.  This is the only place the crate touches XLA; Python never
+//! runs here.  Interchange is HLO *text* (see aot.py's module docs for why
+//! the serialized-proto path is a dead end with xla_extension 0.5.1).
+//!
+//! The serving half ([`serve`], [`queue`]) is an async-style inference
+//! front end over the native stack: bounded intake queue, deadline-aware
+//! dynamic batching, snapshot-backed model registry with hot reload, and
+//! zero-copy response views.  See `docs/SERVING.md`.
 
 mod manifest;
 mod engine;
+pub mod queue;
+pub mod serve;
 
 pub use engine::{Engine, Value};
 pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use queue::{BoundedQueue, PopOutcome, PushError};
+pub use serve::{
+    Model, ModelRegistry, Pending, Response, ServeConfig, ServeEngine, ServeStats, SubmitError,
+};
 
 use std::path::PathBuf;
 

@@ -1,0 +1,219 @@
+//! Bounded MPSC intake queue for the serving engine.
+//!
+//! Producers are client threads calling [`crate::runtime::ServeEngine::submit`];
+//! the single consumer is the engine's batcher thread.  The queue is
+//! deliberately **non-blocking on the producer side**: when it is full,
+//! [`BoundedQueue::push`] returns the item back immediately
+//! ([`PushError::Full`]) so callers see backpressure as an error they can
+//! retry or shed, instead of stalling request threads behind a slow model
+//! (`PHAST_SERVE_QUEUE` sizes the buffer).  The consumer side blocks —
+//! that is where the deadline-aware batching happens
+//! ([`BoundedQueue::pop_if_before`]).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Why a [`BoundedQueue::push`] was rejected.  The item is handed back so
+/// the caller can retry or report it without cloning.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue holds `capacity` items: backpressure.
+    Full(T),
+    /// [`BoundedQueue::close`] was called; no further items are accepted.
+    Closed(T),
+}
+
+/// Outcome of a deadline-bounded consumer pop ([`BoundedQueue::pop_if_before`]).
+#[derive(Debug)]
+pub enum PopOutcome<T> {
+    /// The head item satisfied the fit predicate and was dequeued.
+    Item(T),
+    /// A head item exists but the fit predicate rejected it (e.g. it
+    /// would overflow the batch being assembled); it stays queued.
+    DoesNotFit,
+    /// The deadline passed with the queue empty.
+    Deadline,
+    /// The queue is closed and drained.
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer single-consumer queue (mutex + condvar; the
+/// crate is dependency-free by design, see `ops::par`).
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue holding at most `cap` items (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue without blocking.  Errors carry the item back.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Stop accepting items and wake the consumer so it can drain and exit.
+    /// Already-queued items remain poppable.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// Blocking pop: waits for an item without a deadline.  Returns `None`
+    /// only when the queue is closed **and** drained — the batcher's loop
+    /// condition.
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Deadline-bounded conditional pop, the batching primitive: dequeue
+    /// the head item iff `fits` accepts it, waiting until `deadline` for
+    /// one to arrive.  A head item that does not fit is **left queued**
+    /// ([`PopOutcome::DoesNotFit`]) so the batcher can flush the batch it
+    /// is assembling and pick the item up in the next round.
+    pub fn pop_if_before<F>(&self, deadline: Instant, fits: F) -> PopOutcome<T>
+    where
+        F: Fn(&T) -> bool,
+    {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(head) = g.items.front() {
+                if fits(head) {
+                    return PopOutcome::Item(g.items.pop_front().unwrap());
+                }
+                return PopOutcome::DoesNotFit;
+            }
+            if g.closed {
+                return PopOutcome::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopOutcome::Deadline;
+            }
+            let (guard, _timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn push_pop_fifo() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop_blocking(), Some(1));
+        assert_eq!(q.pop_blocking(), Some(2));
+    }
+
+    #[test]
+    fn full_queue_rejects_with_backpressure() {
+        let q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        match q.push(3) {
+            Err(PushError::Full(v)) => assert_eq!(v, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // Draining one slot re-opens the queue.
+        assert_eq!(q.pop_blocking(), Some(1));
+        q.push(3).unwrap();
+    }
+
+    #[test]
+    fn closed_queue_rejects_push_and_drains() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        match q.push(8) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 8),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        assert_eq!(q.pop_blocking(), Some(7));
+        assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn pop_if_before_times_out_when_empty() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        let deadline = Instant::now() + Duration::from_millis(5);
+        match q.pop_if_before(deadline, |_| true) {
+            PopOutcome::Deadline => {}
+            other => panic!("expected Deadline, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pop_if_before_leaves_unfitting_head_queued() {
+        let q = BoundedQueue::new(4);
+        q.push(10).unwrap();
+        let deadline = Instant::now() + Duration::from_millis(50);
+        match q.pop_if_before(deadline, |&v| v < 10) {
+            PopOutcome::DoesNotFit => {}
+            other => panic!("expected DoesNotFit, got {other:?}"),
+        }
+        assert_eq!(q.len(), 1, "rejected head must stay queued");
+        match q.pop_if_before(deadline, |&v| v >= 10) {
+            PopOutcome::Item(v) => assert_eq!(v, 10),
+            other => panic!("expected Item, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn min_capacity_is_one() {
+        let q = BoundedQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        q.push(1).unwrap();
+        assert!(matches!(q.push(2), Err(PushError::Full(2))));
+    }
+}

@@ -1,0 +1,672 @@
+//! Async-style inference engine: bounded intake queue, deadline-aware
+//! dynamic batching, forward-only planned nets over the shared persistent
+//! worker pool, and zero-copy response views into the batch output blob.
+//!
+//! The pipeline is `submit → [BoundedQueue] → batcher thread → planned
+//! forward → response views`.  Client threads enqueue [`Request`]s and
+//! block (if they choose) on a [`Pending`] handle; a single batcher
+//! thread coalesces queued requests until the batch is full
+//! (`PHAST_SERVE_BATCH`) or the oldest request has waited
+//! `PHAST_SERVE_DELAY_US`, runs **one** forward sweep for the whole
+//! batch, and hands each client a [`Response`] view into the shared
+//! output tensor — the batch output is never copied per request.
+//!
+//! Serving reuses the training stack unchanged: [`Model`] wraps a
+//! [`Solver`] so v2 `.pcss` checkpoints load through the exact
+//! crash-safety path (`find_latest_valid`), and the forward sweep is
+//! [`Net::forward_infer`] — the planned executor with the Data layers
+//! skipped.  Weights are frozen between reloads, so the GeMM engine's
+//! `PackedMat` caches stay valid across batches: after the first
+//! (warm-up) batch of each loaded model, serving performs **zero**
+//! repacks (`packs_per_forward == 0`, tracked by
+//! [`ServeStats::steady_repacks`] and pinned by the tests and the
+//! `serving` bench).
+//!
+//! Hot reload is batch-granular: [`ModelRegistry::reload`] loads the
+//! newest valid snapshot into a **fresh** net and atomically swaps the
+//! registry slot.  A batch in flight keeps the `Arc` it grabbed at batch
+//! start and finishes on the old weights; the next batch picks up the
+//! new model.  See `docs/SERVING.md` for the full walkthrough.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::queue::{BoundedQueue, PopOutcome, PushError};
+use crate::net::Net;
+use crate::ops::gemm;
+use crate::ops::par;
+use crate::proto::{presets, LayerType, NetConfig, SolverConfig};
+use crate::solver::{find_latest_valid, Solver};
+use crate::tensor::Tensor;
+
+/// Serving knobs, in the style of `solver::DriverConfig`: read from the
+/// environment once at [`ServeConfig::from_env`] (i.e. per engine
+/// construction, not per request).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Max samples coalesced into one forward sweep (`PHAST_SERVE_BATCH`,
+    /// default 8).  Clamped to the model's net batch dimension at
+    /// [`ServeEngine::start`].
+    pub max_batch: usize,
+    /// Max time the oldest queued request may wait before a partial
+    /// batch is flushed (`PHAST_SERVE_DELAY_US`, default 2000).  The
+    /// deadline is anchored at the request's *enqueue* time, so queue
+    /// backlog counts against it.
+    pub max_delay_us: u64,
+    /// Intake queue capacity in requests (`PHAST_SERVE_QUEUE`, default
+    /// 256).  A full queue rejects `submit` with
+    /// [`SubmitError::QueueFull`] — backpressure, never blocking.
+    pub queue_cap: usize,
+    /// Worker-pool width override for the batcher thread (tests and
+    /// benches pin widths with it; `None` inherits `PHAST_NUM_THREADS`).
+    /// Not an env knob.
+    pub threads: Option<usize>,
+}
+
+impl ServeConfig {
+    pub fn from_env() -> ServeConfig {
+        fn num(var: &str, default: usize) -> usize {
+            std::env::var(var).ok().and_then(|v| v.trim().parse().ok()).unwrap_or(default)
+        }
+        ServeConfig {
+            max_batch: num("PHAST_SERVE_BATCH", 8).max(1),
+            max_delay_us: num("PHAST_SERVE_DELAY_US", 2000) as u64,
+            queue_cap: num("PHAST_SERVE_QUEUE", 256).max(1),
+            threads: None,
+        }
+    }
+}
+
+/// A servable net: a [`Solver`]-wrapped forward-only net plus the blob
+/// names the engine reads and writes.  Wrapping the solver (rather than
+/// a bare net) is what lets registry entries load v2 `.pcss`
+/// checkpoints through the same validated path training resumes from.
+pub struct Model {
+    solver: Solver,
+    input: String,
+    output: String,
+    batch: usize,
+    sample_in: usize,
+    sample_out: usize,
+}
+
+impl Model {
+    /// Build a forward-only model from prototxt sources, with every Data
+    /// layer's `batch_size` overridden to `batch` (the serving batch is
+    /// a deployment choice, not a training-config one).
+    pub fn from_config_text(
+        net_text: &str,
+        solver_text: &str,
+        seed: u64,
+        batch: usize,
+        input: &str,
+        output: &str,
+    ) -> Result<Model> {
+        if batch == 0 {
+            bail!("serving batch must be >= 1");
+        }
+        let mut ncfg = NetConfig::from_text(net_text)?;
+        for l in &mut ncfg.layers {
+            if l.ltype == LayerType::Data {
+                l.batch_size = batch;
+            }
+        }
+        let net = Net::from_config(ncfg, seed)?;
+        let in_count = net
+            .blob(input)
+            .with_context(|| format!("serving input blob '{input}' not in net"))?
+            .count();
+        let out_count = net
+            .blob(output)
+            .with_context(|| format!("serving output blob '{output}' not in net"))?
+            .count();
+        if in_count % batch != 0 || out_count % batch != 0 {
+            bail!("blob counts ({in_count} in / {out_count} out) not divisible by batch {batch}");
+        }
+        let mut scfg = SolverConfig::from_text(solver_text)?;
+        scfg.display = 0;
+        Ok(Model {
+            solver: Solver::new(scfg, net),
+            input: input.to_string(),
+            output: output.to_string(),
+            batch,
+            sample_in: in_count / batch,
+            sample_out: out_count / batch,
+        })
+    }
+
+    /// LeNet-MNIST at the given serving batch: input blob `data`
+    /// (1×28×28 per sample), output blob `ip2` (10 logits per sample).
+    pub fn lenet(batch: usize, seed: u64) -> Result<Model> {
+        let (net, solver) = (presets::LENET_MNIST, presets::LENET_SOLVER);
+        Model::from_config_text(net, solver, seed, batch, "data", "ip2")
+    }
+
+    /// Load the newest **valid** snapshot in `dir` into this model
+    /// (weights, momentum, iteration, cursors — the full v2 image via
+    /// `solver::find_latest_valid`).  Returns the path loaded, `None`
+    /// when the directory holds no loadable snapshot.
+    pub fn load_latest(&mut self, dir: &Path) -> Result<Option<PathBuf>> {
+        find_latest_valid(&mut self.solver, dir)
+    }
+
+    /// Floats per request sample in the input blob.
+    pub fn sample_in(&self) -> usize {
+        self.sample_in
+    }
+
+    /// Floats per sample in the output blob (e.g. 10 LeNet logits).
+    pub fn sample_out(&self) -> usize {
+        self.sample_out
+    }
+
+    /// The net's batch dimension (upper bound for any served batch).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// The wrapped solver (weights, net, history) — the serving tests
+    /// use it to derive reference outputs and to author checkpoints.
+    pub fn solver_mut(&mut self) -> &mut Solver {
+        &mut self.solver
+    }
+
+    /// Run one forward-only sweep over `rows` samples (`samples` is their
+    /// concatenation), padding the rest of the batch with zeros, and
+    /// return the **whole** output tensor by moving it out of the blob
+    /// store (a fresh zero tensor takes its place, so the next sweep is
+    /// undisturbed).  Per-sample rows are arithmetic-independent in every
+    /// layer (per-sample conv/pool, per-row GeMM and softmax), so row `i`
+    /// of the result is bitwise the same whether the sample shares the
+    /// batch with others, with zero padding, or runs alone — the
+    /// property the serving acceptance tests pin.
+    pub fn forward_batch(&mut self, samples: &[f32], rows: usize) -> Result<Tensor> {
+        if rows == 0 || rows > self.batch {
+            bail!("forward_batch rows {} out of range 1..={}", rows, self.batch);
+        }
+        if samples.len() != rows * self.sample_in {
+            bail!(
+                "forward_batch got {} floats for {} rows of {}",
+                samples.len(),
+                rows,
+                self.sample_in
+            );
+        }
+        {
+            let blob = self
+                .solver
+                .net
+                .blob_mut(&self.input)
+                .with_context(|| format!("input blob '{}' vanished", self.input))?;
+            let data = blob.data_mut().as_mut_slice();
+            data[..samples.len()].copy_from_slice(samples);
+            data[samples.len()..].fill(0.0);
+        }
+        self.solver.net.forward_infer()?;
+        let blob = self
+            .solver
+            .net
+            .blob_mut(&self.output)
+            .with_context(|| format!("output blob '{}' vanished", self.output))?;
+        let shape = blob.shape().clone();
+        Ok(std::mem::replace(blob.data_mut(), Tensor::zeros(shape)))
+    }
+}
+
+type ModelFactory = Arc<dyn Fn() -> Result<Model> + Send + Sync>;
+
+struct RegEntry {
+    model: Arc<Mutex<Model>>,
+    /// Snapshot directory watched by [`ModelRegistry::reload`]; `None`
+    /// for fixed entries (reload is a no-op).
+    dir: Option<PathBuf>,
+    /// The snapshot file the live model was loaded from.
+    loaded: Option<PathBuf>,
+    factory: Option<ModelFactory>,
+}
+
+/// Registry of servable models keyed by name, each backed by a snapshot
+/// directory.  [`ModelRegistry::reload`] is the hot-reload path: it
+/// builds a **fresh** model (fresh net, fresh `PackedMat` caches), loads
+/// the newest valid `.pcss` into it, and atomically swaps the slot — an
+/// in-flight batch keeps the old `Arc` and finishes on the old weights.
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: Mutex<HashMap<String, RegEntry>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Register a snapshot-backed model: `factory` builds the net (and is
+    /// re-invoked on every reload), `dir` is scanned for the newest valid
+    /// checkpoint.  Returns the snapshot path loaded now, `None` when the
+    /// directory holds none yet (the model serves its seed weights).
+    pub fn register<F>(&self, name: &str, dir: &Path, factory: F) -> Result<Option<PathBuf>>
+    where
+        F: Fn() -> Result<Model> + Send + Sync + 'static,
+    {
+        let mut model = factory().with_context(|| format!("building model '{name}'"))?;
+        let loaded = model
+            .load_latest(dir)
+            .with_context(|| format!("loading '{name}' from {dir:?}"))?;
+        self.entries.lock().unwrap().insert(
+            name.to_string(),
+            RegEntry {
+                model: Arc::new(Mutex::new(model)),
+                dir: Some(dir.to_path_buf()),
+                loaded: loaded.clone(),
+                factory: Some(Arc::new(factory)),
+            },
+        );
+        Ok(loaded)
+    }
+
+    /// Register a model with no snapshot directory (seed or caller-set
+    /// weights; [`ModelRegistry::reload`] leaves it untouched).
+    pub fn register_fixed(&self, name: &str, model: Model) {
+        self.entries.lock().unwrap().insert(
+            name.to_string(),
+            RegEntry { model: Arc::new(Mutex::new(model)), dir: None, loaded: None, factory: None },
+        );
+    }
+
+    /// The live model for `name`.  The returned `Arc` stays valid across
+    /// reloads — that is exactly the in-flight-batch guarantee.
+    pub fn current(&self, name: &str) -> Option<Arc<Mutex<Model>>> {
+        self.entries.lock().unwrap().get(name).map(|e| Arc::clone(&e.model))
+    }
+
+    /// The snapshot file the live model was loaded from, if any.
+    pub fn loaded_snapshot(&self, name: &str) -> Option<PathBuf> {
+        self.entries.lock().unwrap().get(name).and_then(|e| e.loaded.clone())
+    }
+
+    /// Hot reload: rebuild the model via its factory, load the newest
+    /// valid snapshot from the watched directory, and — iff that snapshot
+    /// differs from the one currently serving — atomically swap the slot.
+    /// Returns the newly loaded path, or `None` when nothing changed (or
+    /// the entry is fixed).  The swap is the only mutation: readers that
+    /// already hold the old `Arc` are never disturbed.
+    pub fn reload(&self, name: &str) -> Result<Option<PathBuf>> {
+        // Build outside the registry lock: a fresh net + checkpoint load
+        // is milliseconds of work, and `current()` must not stall behind it.
+        let (dir, factory) = {
+            let entries = self.entries.lock().unwrap();
+            let e = entries.get(name).with_context(|| format!("no model '{name}'"))?;
+            match (&e.dir, &e.factory) {
+                (Some(d), Some(f)) => (d.clone(), Arc::clone(f)),
+                _ => return Ok(None),
+            }
+        };
+        let mut fresh = factory().with_context(|| format!("rebuilding model '{name}'"))?;
+        let loaded = fresh
+            .load_latest(&dir)
+            .with_context(|| format!("reloading '{name}' from {dir:?}"))?;
+        let mut entries = self.entries.lock().unwrap();
+        let e = entries.get_mut(name).with_context(|| format!("model '{name}' vanished"))?;
+        if loaded.is_none() || loaded == e.loaded {
+            return Ok(None);
+        }
+        e.model = Arc::new(Mutex::new(fresh));
+        e.loaded = loaded.clone();
+        Ok(loaded)
+    }
+}
+
+/// Why [`ServeEngine::submit`] rejected a request.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The intake queue is at `PHAST_SERVE_QUEUE` capacity: shed or retry.
+    QueueFull,
+    /// The engine is shutting down.
+    Closed,
+    /// The request carries more samples than `max_batch` — it could never
+    /// be scheduled, so it is rejected up front.
+    TooLarge { rows: usize, max_batch: usize },
+    /// The payload is not a positive whole number of input samples.
+    BadLength { len: usize, sample_in: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "serve queue full (PHAST_SERVE_QUEUE)"),
+            SubmitError::Closed => write!(f, "serve engine closed"),
+            SubmitError::TooLarge { rows, max_batch } => {
+                write!(f, "request of {rows} samples exceeds max_batch {max_batch}")
+            }
+            SubmitError::BadLength { len, sample_in } => {
+                write!(f, "payload of {len} floats is not a positive multiple of {sample_in}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One queued inference request (internal to the engine).
+struct Request {
+    samples: Vec<f32>,
+    rows: usize,
+    tx: mpsc::Sender<Result<Response, String>>,
+    enqueued: Instant,
+}
+
+/// Zero-copy view of one request's rows in a batch output tensor.  Every
+/// response of a batch shares the same `Arc<Tensor>` — dropping them all
+/// frees the batch output; none of them copies it.
+#[derive(Clone)]
+pub struct Response {
+    batch: Arc<Tensor>,
+    row0: usize,
+    rows: usize,
+    width: usize,
+    latency: Duration,
+}
+
+impl Response {
+    /// This request's output rows, contiguous in the shared batch tensor.
+    pub fn scores(&self) -> &[f32] {
+        &self.batch.as_slice()[self.row0 * self.width..(self.row0 + self.rows) * self.width]
+    }
+
+    /// Output row for sample `i` of the request.
+    pub fn sample_scores(&self, i: usize) -> &[f32] {
+        assert!(i < self.rows, "sample {i} out of {}", self.rows);
+        let start = (self.row0 + i) * self.width;
+        &self.batch.as_slice()[start..start + self.width]
+    }
+
+    /// Index of the max score of sample `i` (first-wins on ties, so the
+    /// result is a pure function of the scores).
+    pub fn argmax(&self, i: usize) -> usize {
+        let row = self.sample_scores(i);
+        let mut best = 0;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        best
+    }
+
+    /// Samples in this response.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Floats per sample row.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Enqueue-to-response wall time (queue wait + batching delay +
+    /// forward), the quantity the serving bench reports percentiles of.
+    pub fn latency(&self) -> Duration {
+        self.latency
+    }
+}
+
+/// Client-side handle for a submitted request.
+pub struct Pending {
+    rx: mpsc::Receiver<Result<Response, String>>,
+}
+
+impl Pending {
+    /// Block until the batch containing this request completes.
+    pub fn wait(self) -> Result<Response> {
+        match self.rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(msg)) => bail!("serve error: {msg}"),
+            Err(_) => bail!("serve engine dropped the request (shutdown)"),
+        }
+    }
+}
+
+#[derive(Default)]
+struct StatsInner {
+    batches: AtomicU64,
+    requests: AtomicU64,
+    rows: AtomicU64,
+    steady_repacks: AtomicU64,
+}
+
+/// Engine counters (monotonic since [`ServeEngine::start`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Forward sweeps run (one per flushed batch; an idle deadline never
+    /// counts — empty flushes do not exist).
+    pub batches: u64,
+    /// Requests answered (each may carry several sample rows).
+    pub requests: u64,
+    /// Sample rows served across all batches.
+    pub rows: u64,
+    /// `PackedMat` repacks observed in every batch **after** the first
+    /// one of each loaded model generation.  Frozen serving weights must
+    /// keep this at 0 — the serving face of `packs_per_forward == 0`.
+    pub steady_repacks: u64,
+}
+
+/// The engine: an intake queue plus one batcher thread driving a
+/// registry-resident model.  Dropping the engine closes the queue,
+/// drains in-flight work, and joins the thread.
+pub struct ServeEngine {
+    queue: Arc<BoundedQueue<Request>>,
+    batcher: Option<JoinHandle<()>>,
+    stats: Arc<StatsInner>,
+    max_batch: usize,
+    sample_in: usize,
+}
+
+impl ServeEngine {
+    /// Start serving `model` (a [`ModelRegistry`] key).  The effective
+    /// `max_batch` is `cfg.max_batch` clamped to the model's net batch.
+    pub fn start(
+        registry: Arc<ModelRegistry>,
+        model: &str,
+        cfg: ServeConfig,
+    ) -> Result<ServeEngine> {
+        let entry = registry.current(model).with_context(|| format!("no model '{model}'"))?;
+        let (sample_in, net_batch) = {
+            let m = entry.lock().unwrap();
+            (m.sample_in(), m.batch())
+        };
+        drop(entry);
+        let max_batch = cfg.max_batch.clamp(1, net_batch);
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
+        let stats = Arc::new(StatsInner::default());
+        let delay = Duration::from_micros(cfg.max_delay_us);
+        let threads = cfg.threads;
+        let batcher = {
+            let queue = Arc::clone(&queue);
+            let stats = Arc::clone(&stats);
+            let name = model.to_string();
+            std::thread::Builder::new()
+                .name("phast-serve".into())
+                .spawn(move || {
+                    let run = || batcher_loop(&queue, &registry, &name, max_batch, delay, &stats);
+                    match threads {
+                        // `with_threads` is thread-local: applying it here
+                        // pins the pool width for every forward this
+                        // batcher dispatches, without touching the process
+                        // default other clients see.
+                        Some(t) => par::with_threads(t, run),
+                        None => run(),
+                    }
+                })
+                .context("spawning the serve batcher thread")?
+        };
+        Ok(ServeEngine { queue, batcher: Some(batcher), stats, max_batch, sample_in })
+    }
+
+    /// Enqueue `samples` (one or more concatenated input rows) for the
+    /// next batch.  Returns immediately: the [`Pending`] resolves when
+    /// the batch containing the request completes.  Errors are the
+    /// admission checks — nothing is queued on `Err`.
+    pub fn submit(&self, samples: Vec<f32>) -> Result<Pending, SubmitError> {
+        if samples.is_empty() || samples.len() % self.sample_in != 0 {
+            return Err(SubmitError::BadLength { len: samples.len(), sample_in: self.sample_in });
+        }
+        let rows = samples.len() / self.sample_in;
+        if rows > self.max_batch {
+            return Err(SubmitError::TooLarge { rows, max_batch: self.max_batch });
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = Request { samples, rows, tx, enqueued: Instant::now() };
+        match self.queue.push(req) {
+            Ok(()) => Ok(Pending { rx }),
+            Err(PushError::Full(_)) => Err(SubmitError::QueueFull),
+            Err(PushError::Closed(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Effective max samples per batch (knob clamped to the net batch).
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Requests currently waiting in the intake queue (excludes the
+    /// batch being assembled or executed by the batcher).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Floats per input sample row the served model expects.
+    pub fn sample_in(&self) -> usize {
+        self.sample_in
+    }
+
+    /// Current engine counters.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            batches: self.stats.batches.load(Ordering::Relaxed),
+            requests: self.stats.requests.load(Ordering::Relaxed),
+            rows: self.stats.rows.load(Ordering::Relaxed),
+            steady_repacks: self.stats.steady_repacks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting requests, serve what is queued, and join the
+    /// batcher.  Idempotent; also invoked by `Drop`.
+    pub fn shutdown(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The batcher: block for the first request, coalesce until the batch is
+/// full or the first request's deadline passes, run one forward, fan the
+/// output views back out.  Exits when the queue is closed and drained.
+fn batcher_loop(
+    queue: &BoundedQueue<Request>,
+    registry: &ModelRegistry,
+    name: &str,
+    max_batch: usize,
+    delay: Duration,
+    stats: &StatsInner,
+) {
+    // The model generation whose warm-up batch (the one allowed to pack
+    // weights) already ran; repacks in later batches of the same
+    // generation count as steady-state violations.
+    let mut warmed: Option<*const Mutex<Model>> = None;
+    loop {
+        let first = match queue.pop_blocking() {
+            Some(r) => r,
+            None => return,
+        };
+        // Deadline anchored at the oldest request's enqueue time: if the
+        // queue is backed up past the delay already, flush immediately.
+        let deadline = first.enqueued + delay;
+        let mut rows = first.rows;
+        let mut reqs = vec![first];
+        while rows < max_batch {
+            match queue.pop_if_before(deadline, |r| rows + r.rows <= max_batch) {
+                PopOutcome::Item(r) => {
+                    rows += r.rows;
+                    reqs.push(r);
+                }
+                // DoesNotFit: the head request belongs to the next batch.
+                // Deadline/Closed: flush what we have.
+                _ => break,
+            }
+        }
+
+        // Batch-granular model resolution: this Arc is held for the whole
+        // batch, so a concurrent hot reload cannot change weights under a
+        // running forward.
+        let model = match registry.current(name) {
+            Some(m) => m,
+            None => {
+                for r in &reqs {
+                    let _ = r.tx.send(Err(format!("model '{name}' unregistered")));
+                }
+                continue;
+            }
+        };
+        let mut samples = Vec::with_capacity(reqs.iter().map(|r| r.samples.len()).sum());
+        for r in &reqs {
+            samples.extend_from_slice(&r.samples);
+        }
+        let (result, width) = {
+            let mut m = model.lock().unwrap();
+            // Packing happens on the dispatching thread (this one), so
+            // the thread-local repack counter isolates this batch's packs
+            // from any other pool client in the process.
+            let packs_before = gemm::repack_count();
+            let out = m.forward_batch(&samples, rows);
+            let packs = gemm::repack_count() - packs_before;
+            match warmed {
+                Some(p) if p == Arc::as_ptr(&model) => {
+                    stats.steady_repacks.fetch_add(packs, Ordering::Relaxed);
+                }
+                _ => warmed = Some(Arc::as_ptr(&model)),
+            }
+            (out, m.sample_out())
+        };
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        stats.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        match result {
+            Ok(out) => {
+                let batch = Arc::new(out);
+                let done = Instant::now();
+                let mut row0 = 0;
+                for r in &reqs {
+                    let resp = Response {
+                        batch: Arc::clone(&batch),
+                        row0,
+                        rows: r.rows,
+                        width,
+                        latency: done.duration_since(r.enqueued),
+                    };
+                    row0 += r.rows;
+                    // A client that dropped its Pending is not an error.
+                    let _ = r.tx.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in &reqs {
+                    let _ = r.tx.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}

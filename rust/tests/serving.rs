@@ -1,0 +1,315 @@
+//! Serving-engine acceptance suite: batched inference must be bitwise
+//! identical to single-request forwards at every supported pool width,
+//! frozen serving weights must never repack, the batcher's edge cases
+//! (idle deadlines, oversized requests, backpressure) must be explicit,
+//! and hot reload must swap models atomically at batch granularity.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use phast_caffe::ops::par;
+use phast_caffe::runtime::{Model, ModelRegistry, ServeConfig, ServeEngine, SubmitError};
+use phast_caffe::solver::save_checkpoint;
+
+const SAMPLE_IN: usize = 28 * 28;
+
+/// Deterministic pseudo-random input sample (splitmix64 over the seed).
+fn sample(seed: u64) -> Vec<f32> {
+    let mut x = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+    (0..SAMPLE_IN)
+        .map(|_| {
+            x ^= x >> 30;
+            x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            x ^= x >> 27;
+            ((x >> 40) as f32) / ((1u64 << 24) as f32)
+        })
+        .collect()
+}
+
+fn cfg(max_batch: usize, delay_us: u64, queue_cap: usize) -> ServeConfig {
+    ServeConfig { max_batch, max_delay_us: delay_us, queue_cap, threads: None }
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("phast_serving_{tag}_{}", std::process::id()));
+    // A recycled pid must not leak a previous run's checkpoints into
+    // the newest-snapshot assertions.
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The core acceptance pin, model-level: a multi-row batch (with zero
+/// padding) produces, row for row, bitwise the same outputs as running
+/// each sample alone — at pool widths 1/2/5/16.
+#[test]
+fn batched_rows_bitwise_match_single_rows_at_all_widths() {
+    for threads in [1usize, 2, 5, 16] {
+        par::with_threads(threads, || {
+            let mut batched = Model::lenet(4, 42).unwrap();
+            let mut single = Model::lenet(4, 42).unwrap();
+            let inputs: Vec<Vec<f32>> = (0..3).map(|i| sample(1000 + i)).collect();
+            let flat: Vec<f32> = inputs.concat();
+            let out = batched.forward_batch(&flat, 3).unwrap();
+            let width = batched.sample_out();
+            for (i, input) in inputs.iter().enumerate() {
+                let alone = single.forward_batch(input, 1).unwrap();
+                assert_eq!(
+                    &out.as_slice()[i * width..(i + 1) * width],
+                    &alone.as_slice()[..width],
+                    "row {i} diverged from its single-sample forward at {threads} threads"
+                );
+            }
+        });
+    }
+}
+
+/// End-to-end through the engine (queue, batcher thread, response
+/// views): every response must be bitwise the single-request reference,
+/// however the engine happened to coalesce the requests — again at pool
+/// widths 1/2/5/16 (the engine pins its batcher to `cfg.threads`).
+#[test]
+fn engine_responses_bitwise_match_single_request_reference_at_all_widths() {
+    for threads in [1usize, 2, 5, 16] {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register_fixed("lenet", Model::lenet(8, 42).unwrap());
+        let mut c = cfg(8, 500, 64);
+        c.threads = Some(threads);
+        let engine = ServeEngine::start(Arc::clone(&registry), "lenet", c).unwrap();
+
+        // Mix of single-row and multi-row requests, submitted together so
+        // the batcher is free to coalesce them however timing works out.
+        let singles: Vec<Vec<f32>> = (0..5).map(|i| sample(7000 + i)).collect();
+        let double: Vec<f32> = [sample(7100), sample(7101)].concat();
+        let mut pending = Vec::new();
+        for s in &singles {
+            pending.push(engine.submit(s.clone()).unwrap());
+        }
+        let pending_double = engine.submit(double.clone()).unwrap();
+
+        let mut reference = Model::lenet(8, 42).unwrap();
+        let width = reference.sample_out();
+        let refer = |m: &mut Model, input: &[f32]| -> Vec<f32> {
+            par::with_threads(threads, || m.forward_batch(input, 1).unwrap())
+                .as_slice()[..width]
+                .to_vec()
+        };
+
+        for (p, s) in pending.into_iter().zip(&singles) {
+            let resp = p.wait().unwrap();
+            assert_eq!(resp.rows(), 1);
+            assert_eq!(
+                resp.scores(),
+                refer(&mut reference, s).as_slice(),
+                "served response diverged from single forward at {threads} threads"
+            );
+        }
+        let resp = pending_double.wait().unwrap();
+        assert_eq!(resp.rows(), 2);
+        for i in 0..2 {
+            assert_eq!(
+                resp.sample_scores(i),
+                refer(&mut reference, &double[i * SAMPLE_IN..(i + 1) * SAMPLE_IN]).as_slice(),
+                "multi-row request sample {i} diverged at {threads} threads"
+            );
+        }
+    }
+}
+
+/// Frozen serving weights must never repack: after each model's warm-up
+/// batch, `PackedMat` cache hits keep the steady-state repack count at
+/// zero — the serving face of the `packs_per_forward == 0` pin.
+#[test]
+fn steady_state_serving_never_repacks() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_fixed("lenet", Model::lenet(4, 9).unwrap());
+    let engine = ServeEngine::start(registry, "lenet", cfg(4, 200, 16)).unwrap();
+    // Sequential submit+wait forces one batch per request: several
+    // steady-state batches after the warm-up one.
+    for i in 0..6 {
+        engine.submit(sample(100 + i)).unwrap().wait().unwrap();
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.requests, 6);
+    assert!(stats.batches >= 2, "need steady-state batches, got {}", stats.batches);
+    assert_eq!(
+        stats.steady_repacks, 0,
+        "serving repacked frozen weights after warm-up"
+    );
+}
+
+/// A deadline expiring with nothing queued must not flush an empty
+/// batch: no forward runs until a request actually arrives.
+#[test]
+fn idle_deadline_flushes_nothing() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_fixed("lenet", Model::lenet(4, 11).unwrap());
+    let engine = ServeEngine::start(registry, "lenet", cfg(4, 1000, 16)).unwrap();
+    // Many deadline periods pass with an empty queue.
+    std::thread::sleep(Duration::from_millis(30));
+    assert_eq!(engine.stats().batches, 0, "idle engine ran an empty batch");
+    assert_eq!(engine.stats().rows, 0);
+    // And the engine is still live afterwards.
+    let resp = engine.submit(sample(1)).unwrap().wait().unwrap();
+    assert_eq!(resp.rows(), 1);
+    assert_eq!(engine.stats().batches, 1);
+}
+
+/// A request carrying more samples than `max_batch` can never be
+/// scheduled: rejected at submit, before it occupies queue space.
+#[test]
+fn oversized_request_rejected_up_front() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_fixed("lenet", Model::lenet(4, 12).unwrap());
+    let engine = ServeEngine::start(registry, "lenet", cfg(2, 1000, 16)).unwrap();
+    let too_big: Vec<f32> = [sample(1), sample(2), sample(3)].concat();
+    assert_eq!(
+        engine.submit(too_big).unwrap_err(),
+        SubmitError::TooLarge { rows: 3, max_batch: 2 }
+    );
+    // Not a whole number of samples either.
+    assert_eq!(
+        engine.submit(vec![0.0; SAMPLE_IN + 1]).unwrap_err(),
+        SubmitError::BadLength { len: SAMPLE_IN + 1, sample_in: SAMPLE_IN }
+    );
+    assert_eq!(engine.queue_len(), 0, "rejected requests must not be queued");
+}
+
+/// Backpressure: when the intake queue is at `PHAST_SERVE_QUEUE`
+/// capacity, submit fails with `QueueFull` instead of blocking.  The
+/// batcher is deterministically wedged by holding the model's lock.
+#[test]
+fn full_queue_rejects_submit_with_backpressure() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_fixed("lenet", Model::lenet(4, 13).unwrap());
+    let model = registry.current("lenet").unwrap();
+    let engine = ServeEngine::start(Arc::clone(&registry), "lenet", cfg(1, 50, 2)).unwrap();
+
+    // Wedge the batcher: it will pop the first request, then block on
+    // the model lock held here.
+    let guard = model.lock().unwrap();
+    let p1 = engine.submit(sample(1)).unwrap();
+    while engine.queue_len() > 0 {
+        std::thread::yield_now();
+    }
+    // The queue (capacity 2) now fills behind the wedged batch.
+    let p2 = engine.submit(sample(2)).unwrap();
+    let p3 = engine.submit(sample(3)).unwrap();
+    assert_eq!(engine.submit(sample(4)).unwrap_err(), SubmitError::QueueFull);
+    drop(guard);
+
+    // Releasing the model drains everything that was admitted.
+    for p in [p1, p2, p3] {
+        p.wait().unwrap();
+    }
+    assert_eq!(engine.stats().requests, 3);
+}
+
+/// Hot reload at the registry level: the swap is atomic, and a handle
+/// grabbed before the reload (an in-flight batch) keeps producing the
+/// OLD weights' outputs while the registry already serves the new ones.
+#[test]
+fn hot_reload_swaps_atomically_and_old_handle_keeps_old_weights() {
+    let dir = tmp_dir("reload");
+    let probe = sample(500);
+
+    // Author checkpoint A (2 training steps), then the expected scores
+    // under A's weights via an independent reference load.
+    let mut author = Model::lenet(4, 21).unwrap();
+    author.solver_mut().step().unwrap();
+    author.solver_mut().step().unwrap();
+    let snap_a = save_checkpoint(author.solver_mut(), &dir, 0).unwrap();
+
+    let registry = ModelRegistry::new();
+    let loaded = registry.register("lenet", &dir, || Model::lenet(4, 77)).unwrap();
+    assert_eq!(loaded.as_deref(), Some(snap_a.as_path()), "registry must load newest snapshot");
+
+    let mut ref_a = Model::lenet(4, 88).unwrap();
+    ref_a.load_latest(&dir).unwrap();
+    let expect_a = ref_a.forward_batch(&probe, 1).unwrap();
+
+    // No newer snapshot yet: reload is a no-op and must NOT swap.
+    let old_handle = registry.current("lenet").unwrap();
+    assert!(registry.reload("lenet").unwrap().is_none());
+    assert!(
+        Arc::ptr_eq(&old_handle, &registry.current("lenet").unwrap()),
+        "reload without a newer snapshot must not swap the model"
+    );
+
+    // Author checkpoint B (2 more steps -> different weights, newer iter).
+    author.solver_mut().step().unwrap();
+    author.solver_mut().step().unwrap();
+    let snap_b = save_checkpoint(author.solver_mut(), &dir, 0).unwrap();
+    assert_ne!(snap_a, snap_b);
+    let mut ref_b = Model::lenet(4, 99).unwrap();
+    ref_b.load_latest(&dir).unwrap();
+    let expect_b = ref_b.forward_batch(&probe, 1).unwrap();
+    assert_ne!(
+        expect_a.as_slice(),
+        expect_b.as_slice(),
+        "checkpoints A and B must differ for this test to mean anything"
+    );
+
+    let swapped = registry.reload("lenet").unwrap();
+    assert_eq!(swapped.as_deref(), Some(snap_b.as_path()));
+    assert_eq!(registry.loaded_snapshot("lenet").as_deref(), Some(snap_b.as_path()));
+
+    // The old handle — an in-flight batch's view — still serves A.
+    let got_a = old_handle.lock().unwrap().forward_batch(&probe, 1).unwrap();
+    assert_eq!(got_a.as_slice(), expect_a.as_slice(), "old handle must keep old weights");
+    // The registry's current model serves B.
+    let new_handle = registry.current("lenet").unwrap();
+    assert!(!Arc::ptr_eq(&old_handle, &new_handle));
+    let got_b = new_handle.lock().unwrap().forward_batch(&probe, 1).unwrap();
+    assert_eq!(got_b.as_slice(), expect_b.as_slice(), "new handle must serve new weights");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Hot reload through a live engine: responses before the reload carry
+/// the old weights' scores, responses after it carry the new ones, and
+/// both match their single-request references bitwise.
+#[test]
+fn engine_serves_new_weights_after_reload() {
+    let dir = tmp_dir("engine_reload");
+    let probe = sample(600);
+
+    let mut author = Model::lenet(4, 31).unwrap();
+    author.solver_mut().step().unwrap();
+    save_checkpoint(author.solver_mut(), &dir, 0).unwrap();
+    let mut ref_a = Model::lenet(4, 1).unwrap();
+    ref_a.load_latest(&dir).unwrap();
+    let expect_a = ref_a.forward_batch(&probe, 1).unwrap();
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register("lenet", &dir, || Model::lenet(4, 2)).unwrap();
+    let engine = ServeEngine::start(Arc::clone(&registry), "lenet", cfg(4, 200, 16)).unwrap();
+
+    let before = engine.submit(probe.clone()).unwrap().wait().unwrap();
+    assert_eq!(before.scores(), &expect_a.as_slice()[..before.width()]);
+
+    // A newer checkpoint appears; the registry hot-reloads it.
+    author.solver_mut().step().unwrap();
+    author.solver_mut().step().unwrap();
+    save_checkpoint(author.solver_mut(), &dir, 0).unwrap();
+    let mut ref_b = Model::lenet(4, 3).unwrap();
+    ref_b.load_latest(&dir).unwrap();
+    let expect_b = ref_b.forward_batch(&probe, 1).unwrap();
+    assert!(registry.reload("lenet").unwrap().is_some());
+
+    let after = engine.submit(probe.clone()).unwrap().wait().unwrap();
+    assert_eq!(after.scores(), &expect_b.as_slice()[..after.width()]);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Shutdown closes the intake: a submit after shutdown reports Closed.
+#[test]
+fn shutdown_rejects_new_requests() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_fixed("lenet", Model::lenet(4, 15).unwrap());
+    let mut engine = ServeEngine::start(registry, "lenet", cfg(4, 200, 16)).unwrap();
+    engine.submit(sample(1)).unwrap().wait().unwrap();
+    engine.shutdown();
+    assert_eq!(engine.submit(sample(2)).unwrap_err(), SubmitError::Closed);
+}

@@ -2,9 +2,9 @@
 # CI perf-regression gate: compare the merged bench record
 # (rust/BENCH_threads.json, written by `cargo bench --bench
 # threads_scaling`, `cargo bench --bench fusion`, `cargo bench --bench
-# gemm`, and `cargo bench --bench snapshot`) against the checked-in
-# BENCH_baseline.json — and FAIL on regression instead of only uploading
-# artifacts.
+# gemm`, `cargo bench --bench snapshot`, and `cargo bench --bench
+# serving`) against the checked-in BENCH_baseline.json — and FAIL on
+# regression instead of only uploading artifacts.
 #
 # Gate design (see BENCH_baseline.json):
 #   * Region counts are deterministic (they depend only on the pass
@@ -34,6 +34,12 @@
 #     the solver bitwise) and gated exactly; snapshot_bytes is a size
 #     ceiling; the save/restore timings get the timing tolerance (fsync
 #     cost varies wildly across CI runners).
+#   * serving.requests / .responses_ok / .bitwise_match are deterministic
+#     (fixed closed-loop workload; every served response must equal its
+#     single-request reference bitwise however the batcher coalesced it)
+#     and gated exactly; p99 latency is a generous ceiling, throughput
+#     and the batch-8-over-batch-1 speedup are floors, all with the
+#     timing tolerance.
 #
 # Run from the repo root: bash tools/check_bench.sh
 set -u
@@ -44,7 +50,7 @@ BASELINE=BENCH_baseline.json
 
 for f in "$CURRENT" "$BASELINE"; do
   if [ ! -f "$f" ]; then
-    echo "MISSING FILE: $f (run the benches first: cargo bench --bench threads_scaling && cargo bench --bench fusion && cargo bench --bench gemm && cargo bench --bench snapshot)"
+    echo "MISSING FILE: $f (run the benches first: cargo bench --bench threads_scaling && cargo bench --bench fusion && cargo bench --bench gemm && cargo bench --bench snapshot && cargo bench --bench serving)"
     exit 1
   fi
 done
@@ -259,6 +265,43 @@ if None not in (snap_restore, snap_restore_base) and snap_restore > snap_restore
         f"{snap_restore_base} x{tol}"
     )
 
+# --- serving gates ------------------------------------------------------
+# Request count and the correctness flags are deterministic: the bench
+# issues a fixed closed-loop workload, and every served response must be
+# bitwise equal to its single-request reference however the batcher
+# coalesced it (the serving acceptance pin).  Latency/throughput are
+# machine-dependent: p99 is a generous ceiling, rps and the batch
+# speedup are floors, all with the timing tolerance.
+for key in ("requests", "responses_ok", "bitwise_match"):
+    sv = get(cur, "serving", key, "current")
+    sv_base = get(base, "serving", key, "baseline")
+    if None not in (sv, sv_base) and sv != sv_base:
+        failures.append(
+            f"serving.{key} {sv} != pinned {sv_base}: "
+            + ("the serving workload changed without a baseline update"
+               if key == "requests"
+               else "served responses diverged from the single-request reference")
+        )
+serve_p99 = get(cur, "serving", "p99_us_b8", "current")
+serve_p99_base = get(base, "serving", "p99_us_b8", "baseline")
+if None not in (serve_p99, serve_p99_base) and serve_p99 > serve_p99_base * tol:
+    failures.append(
+        f"serving.p99_us_b8 {serve_p99} above ceiling {serve_p99_base} x{tol}"
+    )
+serve_rps = get(cur, "serving", "rps_b8", "current")
+serve_rps_base = get(base, "serving", "rps_b8", "baseline")
+if None not in (serve_rps, serve_rps_base) and serve_rps < serve_rps_base / tol:
+    failures.append(
+        f"serving.rps_b8 {serve_rps} below floor {serve_rps_base}/{tol}"
+    )
+serve_speedup = get(cur, "serving", "batch_speedup", "current")
+serve_speedup_base = get(base, "serving", "batch_speedup", "baseline")
+if None not in (serve_speedup, serve_speedup_base) and serve_speedup < serve_speedup_base / tol:
+    failures.append(
+        f"serving.batch_speedup {serve_speedup} below floor "
+        f"{serve_speedup_base}/{tol}: batching no longer amortizes dispatch"
+    )
+
 if failures:
     print("bench gate FAILED:")
     for f in failures:
@@ -282,4 +325,7 @@ print(f"  gemm_packed: packed_over_naive {pon}, packs_per_forward {ppf}, "
 print(f"  snapshot: {snap_blobs} blobs, {snap_bytes} bytes, "
       f"save {snap_save} ms / restore {snap_restore} ms, "
       f"roundtrip_exact {snap_exact}")
+print(f"  serving: {serve_rps} req/s @ batch 8 (speedup {serve_speedup}), "
+      f"p99 {serve_p99} us, bitwise_match "
+      f"{cur['serving'].get('bitwise_match')}")
 PY
