@@ -1,0 +1,89 @@
+//! Elastic data-parallel training driver: LeNet / synthetic-MNIST
+//! across N worker processes under the [`runtime::dist`] coordinator —
+//! fixed-rank-order gradient all-reduce, shared crash-safe checkpoints,
+//! and rollback-all recovery when a worker dies
+//! (see `docs/FAULT_TOLERANCE.md`, "Multi-worker elasticity").
+//!
+//! ```sh
+//! cargo run --release --example train_dist -- --ranks 3 --iters 12
+//! ```
+//!
+//! Flags: `--ranks N` (default 2), `--iters N` (default 12),
+//! `--dir PATH` (checkpoint dir, default `target/dist-snapshots`),
+//! `--budget N` (worker losses absorbed before aborting, default 2).
+//! Chaos comes from the environment: `PHAST_FAULT=worker_exit@iter=7`
+//! makes the rank selected by `PHAST_DIST_FAULT_RANK` (default 1) kill
+//! itself mid-run, which is how the CI dist-chaos job exercises
+//! recovery.  `PHAST_DIST_ABORT_ITER=N` crashes the *coordinator*
+//! instead (exit 3); rerunning with the same `--dir` resumes.
+//!
+//! The run ends with machine-checkable lines:
+//!
+//! ```text
+//! ranks=3
+//! recoveries=1
+//! final_iter=12
+//! final_weights_hash=0x1a2b3c4d
+//! ```
+//!
+//! Training is bitwise deterministic at a fixed rank count and thread
+//! count, so a run that lost (and respawned) a worker must print the
+//! same `final_weights_hash` as an undisturbed one — the property the
+//! CI job asserts.
+
+use phast_caffe::runtime::dist::{self, DistConfig};
+
+const DEFAULT_ITERS: usize = 12;
+const DEFAULT_RANKS: usize = 2;
+
+fn main() -> anyhow::Result<()> {
+    // Worker role check before ANYTHING writes to stdout: a dist
+    // worker's stdout carries wire frames, not text.
+    dist::exec_worker_if_env();
+
+    let mut ranks = DEFAULT_RANKS;
+    let mut iters = DEFAULT_ITERS;
+    let mut budget = 2usize;
+    let mut dir = String::from("target/dist-snapshots");
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        let mut take = |name: &str| {
+            args.next().ok_or_else(|| anyhow::anyhow!("{name} needs a value"))
+        };
+        match arg.as_str() {
+            "--ranks" => ranks = take("--ranks")?.parse()?,
+            "--iters" => iters = take("--iters")?.parse()?,
+            "--budget" => budget = take("--budget")?.parse()?,
+            "--dir" => dir = take("--dir")?,
+            other => anyhow::bail!("unknown argument '{other}'"),
+        }
+    }
+
+    let exe = std::env::current_exe()?;
+    let mut cfg = DistConfig::new(exe, &dir);
+    cfg.ranks = ranks;
+    cfg.iters = iters;
+    cfg.recover_budget = budget;
+    println!(
+        "== dist training: LeNet / synthetic-MNIST, {} ranks x {} iters ==\n\
+         checkpoints: every {} iters, dir {:?}, recovery budget {}",
+        cfg.ranks, cfg.iters, cfg.snapshot_every, cfg.dir, cfg.recover_budget
+    );
+    if let Some(spec) = &cfg.fault_spec {
+        println!("fault plan (rank {}): {spec}", cfg.fault_rank.min(cfg.ranks - 1));
+    }
+
+    let summary = dist::train_dist(cfg)?;
+    if let Some(it) = summary.resumed_from {
+        println!("resumed from iter {it}");
+    }
+    println!(
+        "done: crc_nacks={} nacks_served={}",
+        summary.crc_nacks, summary.nacks_served
+    );
+    println!("ranks={}", summary.ranks);
+    println!("recoveries={}", summary.recoveries);
+    println!("final_iter={}", summary.final_iter);
+    println!("final_weights_hash={:#010x}", summary.weights_hash);
+    Ok(())
+}

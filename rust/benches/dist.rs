@@ -1,0 +1,88 @@
+//! Bench: elastic data-parallel training — what the dist coordinator
+//! charges per all-reduced step, and the recovery-exactness flags the
+//! CI gate pins.
+//!
+//! Entries merge-updated into `BENCH_threads.json` under the `dist` key
+//! (see `metrics::bench_json`; `tools/check_bench.sh` gates them
+//! against `BENCH_baseline.json`):
+//!
+//! * `ranks` / `iters` — deterministic workload shape (ranks gated
+//!   exact: the workload must not change without a baseline update);
+//! * `recoveries` — rollback-all recoveries in the chaos run (gated
+//!   exactly at 1: the injected `worker_exit` must cost exactly one);
+//! * `hash_match` — 1 iff the chaos run's final weights hash equals the
+//!   clean run's (gated exactly at 1 — the elasticity acceptance pin:
+//!   losing and respawning a worker is bitwise-invisible);
+//! * `us_per_step` — clean-run wall clock per all-reduced iteration,
+//!   including the pipe-framed gradient exchange (gated as a generous
+//!   ceiling; CI runners vary wildly).
+//!
+//! `cargo bench --bench dist`
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use phast_caffe::metrics::bench_json;
+use phast_caffe::runtime::dist::{self, DistConfig};
+
+const RANKS: usize = 2;
+const ITERS: usize = 8;
+const BATCH: usize = 16;
+
+fn cfg(tag: &str) -> anyhow::Result<DistConfig> {
+    let dir = std::env::temp_dir().join(format!("phast_dist_bench_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut c = DistConfig::new(std::env::current_exe()?, dir);
+    c.ranks = RANKS;
+    c.iters = ITERS;
+    c.batch = Some(BATCH);
+    c.snapshot_every = 4;
+    c.fault_spec = None; // the bench injects its own chaos below
+    c.worker_env = vec![("PHAST_NUM_THREADS".into(), "1".into())];
+    Ok(c)
+}
+
+fn main() -> anyhow::Result<()> {
+    // This bench binary doubles as the worker executable: a child
+    // spawned with PHAST_DIST_ROLE=worker never reaches the code below.
+    dist::exec_worker_if_env();
+
+    // Clean run: per-step cost of the coordinated loop (forward + fused
+    // backward on each rank's shard, pipe-framed all-reduce, SGD step).
+    let t0 = Instant::now();
+    let clean = dist::train_dist(cfg("clean")?)?;
+    let us_per_step = t0.elapsed().as_secs_f64() * 1e6 / ITERS as f64;
+
+    // Chaos run: same shape, but rank 1 kills itself at iteration 3
+    // (between the iter-0 and iter-4 checkpoints, so recovery replays
+    // real steps).  Exactness = the hashes agree.
+    let mut chaos_cfg = cfg("chaos")?;
+    chaos_cfg.fault_spec = Some("worker_exit@iter=3".into());
+    chaos_cfg.fault_rank = 1;
+    let chaos = dist::train_dist(chaos_cfg)?;
+    let hash_match = usize::from(chaos.weights_hash == clean.weights_hash);
+
+    println!("dist: LeNet-MNIST, {RANKS} ranks x {ITERS} iters, global batch {BATCH}");
+    println!("  clean: {us_per_step:.0} us/step (incl. pipe all-reduce)");
+    println!(
+        "  chaos (worker_exit@iter=3): recoveries={} hash_match={hash_match}",
+        chaos.recoveries
+    );
+    println!(
+        "  hashes: clean {:#010x} / chaos {:#010x}",
+        clean.weights_hash, chaos.weights_hash
+    );
+
+    let mut entry = String::from("{\n");
+    let _ = writeln!(entry, "    \"net\": \"lenet-mnist\",");
+    let _ = writeln!(entry, "    \"ranks\": {RANKS},");
+    let _ = writeln!(entry, "    \"iters\": {ITERS},");
+    let _ = writeln!(entry, "    \"recoveries\": {},", chaos.recoveries);
+    let _ = writeln!(entry, "    \"hash_match\": {hash_match},");
+    let _ = writeln!(entry, "    \"us_per_step\": {us_per_step:.1}");
+    entry.push_str("  }");
+
+    bench_json::merge_entries(std::path::Path::new("BENCH_threads.json"), &[("dist", entry)])?;
+    println!("\nmerged dist into BENCH_threads.json");
+    Ok(())
+}

@@ -67,6 +67,7 @@ fn run(
         max_delay_us: 500,
         queue_cap: 256,
         threads: None,
+        timeout_us: 0,
     };
     let engine = Arc::new(ServeEngine::start(registry, "lenet", cfg)?);
     // Warm-up batch: packs weights, so the timed run is steady state.

@@ -108,11 +108,34 @@ impl BatchIterator {
     /// labels in float blobs).  The per-sample image copies run parallel
     /// over contiguous sample blocks; no intermediate tensor is built.
     pub fn next_batch_into(&mut self, data: &mut [f32], labels: &mut [f32]) {
+        let batch = self.batch;
+        self.next_shard_into(data, labels, 0..batch);
+    }
+
+    /// [`next_batch_into`](Self::next_batch_into) for a data-parallel
+    /// rank: draw the **full** batch's index stream (the cursor advances
+    /// by `batch_size` — every rank sees identical global cursor
+    /// semantics, so snapshots stay interchangeable with single-process
+    /// runs) but materialize only the contiguous sample range `shard`
+    /// into `data`/`labels`.  `shard == 0..batch_size` is byte-identical
+    /// to `next_batch_into`.
+    pub fn next_shard_into(
+        &mut self,
+        data: &mut [f32],
+        labels: &mut [f32],
+        shard: std::ops::Range<usize>,
+    ) {
+        assert!(
+            shard.start <= shard.end && shard.end <= self.batch,
+            "shard {shard:?} out of bounds for batch {}",
+            self.batch
+        );
         let n = self.ds.sample_len();
-        assert_eq!(data.len(), self.batch * n, "data blob size");
-        assert_eq!(labels.len(), self.batch, "label blob size");
+        assert_eq!(data.len(), shard.len() * n, "data blob size");
+        assert_eq!(labels.len(), shard.len(), "label blob size");
         let picks = self.draw_indices();
-        for (dst, &idx) in labels.iter_mut().zip(&picks) {
+        let picks = &picks[shard];
+        for (dst, &idx) in labels.iter_mut().zip(picks) {
             *dst = self.ds.labels[idx] as f32;
         }
         let ds = &self.ds;
@@ -223,6 +246,38 @@ mod tests {
         let (xf, yf) = fresh.next_batch();
         assert_eq!(xa, xf);
         assert_eq!(ya, yf);
+    }
+
+    #[test]
+    fn shards_concatenate_to_the_full_batch_with_identical_cursors() {
+        let ds = Dataset::generate(SyntheticSpec::Mnist, 48, 3);
+        let mut full = BatchIterator::new(ds.clone(), 16, 9);
+        let (x, y) = full.next_batch();
+        let n = x.len() / 16;
+
+        // Three contiguous shards per ops::par partition rules
+        // (16 into 3 → 6, 5, 5), drawn by independent iterators.
+        let parts = crate::ops::par::partition(16, 3);
+        let mut got_x = Vec::new();
+        let mut got_y = Vec::new();
+        let mut cursors = Vec::new();
+        for r in parts {
+            let mut it = BatchIterator::new(ds.clone(), 16, 9);
+            let mut data = vec![0.0f32; r.len() * n];
+            let mut labels = vec![0.0f32; r.len()];
+            it.next_shard_into(&mut data, &mut labels, r);
+            got_x.extend_from_slice(&data);
+            got_y.extend_from_slice(&labels);
+            cursors.push(it.cursor());
+        }
+        assert_eq!(x.as_slice(), &got_x[..]);
+        for (want, got) in y.as_slice().iter().zip(&got_y) {
+            assert_eq!(*want as f32, *got);
+        }
+        // Every rank advanced by the FULL batch: global cursor semantics.
+        for c in cursors {
+            assert_eq!(c, full.cursor());
+        }
     }
 
     #[test]

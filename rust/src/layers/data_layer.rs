@@ -1,9 +1,12 @@
 //! Data layer: feeds (data, label) batches from the synthetic datasets (or
 //! a record file) — the LMDB DataLayer stand-in.
 
+use std::ops::Range;
+
 use anyhow::{bail, Context, Result};
 
 use crate::data::{BatchIterator, Dataset, SyntheticSpec};
+use crate::ops::par;
 use crate::proto::LayerConfig;
 use crate::tensor::{Shape, Tensor};
 
@@ -15,6 +18,26 @@ pub const DEFAULT_TRAIN_SIZE: usize = 2048;
 pub struct DataLayer {
     cfg: LayerConfig,
     iter: BatchIterator,
+    /// The contiguous slice of each batch this process materializes
+    /// (`cfg.shard`, default the whole batch).  The iterator's cursor
+    /// always advances by the full batch regardless.
+    shard: Range<usize>,
+}
+
+/// Resolve `cfg.shard` into the rank's contiguous sample range, per the
+/// `ops::par::partition` rules (`None` → the whole batch).
+fn shard_range(cfg: &LayerConfig) -> Result<Range<usize>> {
+    let (rank, ranks) = cfg.shard.unwrap_or((0, 1));
+    if ranks == 0 || rank >= ranks {
+        bail!("bad shard ({rank}, {ranks}): rank must be < ranks and ranks > 0");
+    }
+    if ranks > cfg.batch_size {
+        bail!(
+            "batch_size {} cannot shard across {ranks} ranks (every rank needs >= 1 sample)",
+            cfg.batch_size
+        );
+    }
+    Ok(par::partition(cfg.batch_size, ranks)[rank].clone())
 }
 
 impl DataLayer {
@@ -30,14 +53,16 @@ impl DataLayer {
         if cfg.tops.len() != 2 {
             bail!("Data layer needs two tops (data, label)");
         }
+        let shard = shard_range(&cfg)?;
         let iter = BatchIterator::new(ds, cfg.batch_size, seed ^ 0xF00D);
-        Ok(DataLayer { cfg, iter })
+        Ok(DataLayer { cfg, iter, shard })
     }
 
     /// Replace the dataset (used by tests and the eval path).
     pub fn with_dataset(cfg: LayerConfig, ds: Dataset, seed: u64) -> Result<Self> {
+        let shard = shard_range(&cfg)?;
         let iter = BatchIterator::new(ds, cfg.batch_size, seed ^ 0xF00D);
-        Ok(DataLayer { cfg, iter })
+        Ok(DataLayer { cfg, iter, shard })
     }
 
     pub fn epoch(&self) -> usize {
@@ -54,18 +79,27 @@ impl Layer for DataLayer {
         if !bottom_shapes.is_empty() {
             bail!("Data layer takes no bottoms");
         }
+        // Top shapes are the LOCAL shard: downstream layers (and the
+        // planner) size everything off the per-rank batch.
+        let full = self.iter.batch_shape();
+        let d = full.dims();
         Ok(vec![
-            self.iter.batch_shape(),
-            Shape::new(&[self.iter.batch_size()]),
+            Shape::nchw(self.shard.len(), d[1], d[2], d[3]),
+            Shape::new(&[self.shard.len()]),
         ])
     }
 
     fn forward(&mut self, _bottoms: &[&Tensor], tops: &mut [Tensor]) -> Result<()> {
         // Assemble straight into the top blobs: the gather is parallel
         // over samples and skips the intermediate batch tensor + copy
-        // the old `next_batch` path paid per iteration.
+        // the old `next_batch` path paid per iteration.  Only this
+        // rank's shard is materialized; the cursor advances globally.
         let (data_top, label_top) = tops.split_at_mut(1);
-        self.iter.next_batch_into(data_top[0].as_mut_slice(), label_top[0].as_mut_slice());
+        self.iter.next_shard_into(
+            data_top[0].as_mut_slice(),
+            label_top[0].as_mut_slice(),
+            self.shard.clone(),
+        );
         Ok(())
     }
 
@@ -123,6 +157,43 @@ mod tests {
     fn unknown_source_rejected() {
         let mut cfg = data_cfg();
         cfg.source = "lmdb://nope".into();
+        assert!(DataLayer::new(cfg, 1).is_err());
+    }
+
+    #[test]
+    fn sharded_layers_tile_the_full_batch() {
+        // Batch 8 across 3 ranks → local batches 3, 3, 2; the shards
+        // concatenate to the unsharded layer's batch, and every rank's
+        // cursor advances by the full batch.
+        let mut full = DataLayer::new(data_cfg(), 1).unwrap();
+        let shapes = full.setup(&[]).unwrap();
+        let mut tops = vec![Tensor::zeros(shapes[0].clone()), Tensor::zeros(shapes[1].clone())];
+        full.forward(&[], &mut tops).unwrap();
+
+        let mut got_data = Vec::new();
+        let mut got_labels = Vec::new();
+        for rank in 0..3 {
+            let mut cfg = data_cfg();
+            cfg.shard = Some((rank, 3));
+            let mut l = DataLayer::new(cfg, 1).unwrap();
+            let shapes = l.setup(&[]).unwrap();
+            let mut t = vec![Tensor::zeros(shapes[0].clone()), Tensor::zeros(shapes[1].clone())];
+            l.forward(&[], &mut t).unwrap();
+            got_data.extend_from_slice(t[0].as_slice());
+            got_labels.extend_from_slice(t[1].as_slice());
+            assert_eq!(l.data_cursor(), full.data_cursor());
+        }
+        assert_eq!(tops[0].as_slice(), &got_data[..]);
+        assert_eq!(tops[1].as_slice(), &got_labels[..]);
+    }
+
+    #[test]
+    fn oversharded_batch_rejected() {
+        let mut cfg = data_cfg();
+        cfg.shard = Some((0, 9)); // batch 8 cannot feed 9 ranks
+        assert!(DataLayer::new(cfg, 1).is_err());
+        let mut cfg = data_cfg();
+        cfg.shard = Some((3, 3)); // rank out of range
         assert!(DataLayer::new(cfg, 1).is_err());
     }
 }

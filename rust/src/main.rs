@@ -3,13 +3,18 @@
 //! Subcommands map one-to-one onto the paper's artifacts:
 //!
 //! ```text
-//! repro train     --net mnist --iters 300 --backend native|partial|fused
-//! repro time      --net mnist --reps 30            # per-layer timing
+//! repro train      --net mnist --iters 300 --backend native|partial|fused
+//! repro train_dist --net mnist --ranks 4 --iters 100   # elastic data-parallel
+//! repro time       --net mnist --reps 30           # per-layer timing
 //! repro table1                                     # conformance suite
-//! repro table2    --reps 30                        # fwd-bwd comparison
-//! repro transfers --net mnist --reps 5             # §4.3 crossing sweep
+//! repro table2     --reps 30                       # fwd-bwd comparison
+//! repro transfers  --net mnist --reps 5            # §4.3 crossing sweep
 //! repro info                                       # platform + catalog
 //! ```
+//!
+//! A process launched with `PHAST_DIST_ROLE=worker` in the environment
+//! becomes a dist training worker regardless of arguments (its stdout is
+//! the gradient transport — see `runtime::dist`).
 
 use std::collections::HashMap;
 
@@ -22,7 +27,7 @@ use phast_caffe::experiments::{
 };
 use phast_caffe::phast::{BoundaryOptions, FusedRunner, Placement, PortedNet, PortedSolver};
 use phast_caffe::proto::{presets, NetConfig, SolverConfig};
-use phast_caffe::runtime::Engine;
+use phast_caffe::runtime::{self, Engine};
 use phast_caffe::solver::Solver;
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -224,21 +229,60 @@ fn cmd_transfers(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_train_dist(flags: &HashMap<String, String>) -> Result<()> {
+    let exe = std::env::current_exe().context("locating current executable")?;
+    let dir = flag(flags, "dir", "target/dist-snapshots").to_string();
+    let mut cfg = runtime::dist::DistConfig::new(exe, dir);
+    cfg.ranks = usize_flag(flags, "ranks", 2);
+    cfg.iters = usize_flag(flags, "iters", 20);
+    cfg.net = flag(flags, "net", "mnist").to_string();
+    cfg.seed = usize_flag(flags, "seed", 42) as u64;
+    if let Some(b) = flags.get("batch") {
+        cfg.batch = Some(b.parse().context("--batch")?);
+    }
+    cfg.snapshot_every = usize_flag(flags, "every", 4);
+    cfg.keep = usize_flag(flags, "keep", cfg.keep);
+    cfg.recover_budget = usize_flag(flags, "budget", cfg.recover_budget);
+    println!(
+        "dist training {} for {} iterations across {} ranks (dir {:?})",
+        cfg.net, cfg.iters, cfg.ranks, cfg.dir
+    );
+    let summary = runtime::dist::train_dist(cfg)?;
+    if let Some(it) = summary.resumed_from {
+        println!("resumed from iter {it}");
+    }
+    println!("ranks={}", summary.ranks);
+    println!("recoveries={}", summary.recoveries);
+    println!("crc_nacks={} nacks_served={}", summary.crc_nacks, summary.nacks_served);
+    println!("final_iter={}", summary.final_iter);
+    println!("final_weights_hash={:#010x}", summary.weights_hash);
+    Ok(())
+}
+
 fn main() -> Result<()> {
+    // Worker role check before ANYTHING writes to stdout: a dist
+    // worker's stdout carries wire frames, not text.
+    runtime::dist::exec_worker_if_env();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let flags = parse_flags(&args[1.min(args.len())..]);
     match cmd {
         "info" => cmd_info(),
         "train" => cmd_train(&flags),
+        "train_dist" => cmd_train_dist(&flags),
+        "train_worker" => {
+            // Manual worker launch (normally selected via PHAST_DIST_ROLE).
+            phast_caffe::runtime::dist::worker_main()
+        }
         "time" => cmd_time(&flags),
         "table1" => cmd_table1(),
         "table2" => cmd_table2(&flags),
         "transfers" => cmd_transfers(&flags),
         _ => {
             println!(
-                "usage: repro <info|train|time|table1|table2|transfers> [--net mnist|cifar]\n\
-                 [--backend native|partial|phast|fused] [--iters N] [--reps N]"
+                "usage: repro <info|train|train_dist|time|table1|table2|transfers>\n\
+                 [--net mnist|cifar] [--backend native|partial|phast|fused] [--iters N]\n\
+                 [--reps N] [--ranks N] [--batch N] [--every N] [--budget N] [--dir PATH]"
             );
             Ok(())
         }

@@ -80,6 +80,31 @@ pub struct Net {
 }
 
 impl Net {
+    /// [`Net::from_config`] for data-parallel rank `rank` of `ranks`:
+    /// every Data layer materializes only its contiguous shard of each
+    /// batch (per the `ops::par::partition` rules) while drawing the
+    /// full batch's index stream, so all ranks share global cursor
+    /// semantics and snapshots stay interchangeable with single-process
+    /// runs.  Weight init is seed-driven and batch-independent, so all
+    /// ranks start from identical parameters.  `(0, 1)` is byte-identical
+    /// to [`Net::from_config`].
+    pub fn from_config_sharded(
+        mut config: NetConfig,
+        seed: u64,
+        rank: usize,
+        ranks: usize,
+    ) -> Result<Net> {
+        if ranks == 0 || rank >= ranks {
+            anyhow::bail!("bad shard ({rank}, {ranks}): rank must be < ranks and ranks > 0");
+        }
+        for cfg in &mut config.layers {
+            if cfg.ltype == crate::proto::LayerType::Data {
+                cfg.shard = Some((rank, ranks));
+            }
+        }
+        Net::from_config(config, seed)
+    }
+
     /// Build + setup from a parsed config.  `seed` drives weight init and
     /// the data pipeline.
     pub fn from_config(config: NetConfig, seed: u64) -> Result<Net> {

@@ -12,10 +12,15 @@
 //!
 //! * `kind` — what breaks: `worker_panic` (a pool worker panics inside a
 //!   parallel region), `io_error` (an injected `std::io` error), `nan`
-//!   (the value at the site is replaced with `NaN`).
+//!   (the value at the site is replaced with `NaN`), `worker_exit` (the
+//!   whole process dies, exit code 86 — dist workers only, see
+//!   [`allow_process_exit`]), `msg_drop` / `msg_corrupt` (a dist
+//!   transport message is lost / bit-flipped in flight).
 //! * `site` — where: `iter` (solver iterations; the event value is the
 //!   iteration number), `snapshot_save` / `snapshot_load` (snapshot IO
-//!   attempts), `loss` (the solver's per-step loss).
+//!   attempts), `loss` (the solver's per-step loss), `send` / `recv`
+//!   (dist transport messages, counted per occurrence on the worker
+//!   side).
 //! * `=N` — fire exactly once, the first time the site's event value
 //!   reaches `N` (for `iter` the value is the iteration number; for
 //!   counter sites it is the 1-based occurrence count).
@@ -23,8 +28,10 @@
 //!   (`iter`) or `<= K` (counter sites): "the first K attempts fail".
 //! * neither — fire on every occurrence.
 //!
-//! Examples (the ISSUE grammar): `worker_panic@iter=7`,
-//! `io_error@snapshot_save:2`, `nan@loss=12`.
+//! Examples: `worker_panic@iter=7`, `io_error@snapshot_save:2`,
+//! `nan@loss=12`, and composed chaos plans like
+//! `worker_exit@iter=7,io_error@snapshot_save` — rules are independent;
+//! a single-rule spec parses exactly as before.
 //!
 //! The plan is **off by default and zero-cost when disabled**: every
 //! check first reads one thread-local flag and returns immediately when
@@ -45,6 +52,15 @@ enum FaultKind {
     IoError,
     /// Replace the site's value with `f32::NAN`.
     Nan,
+    /// Hard-kill the whole process (`exit(86)`, no unwinding, no
+    /// cleanup) — a dist-training worker loss.  Only honored in
+    /// processes that opted in via [`allow_process_exit`].
+    WorkerExit,
+    /// Drop a transport message at the site (`send` / `recv`).
+    MsgDrop,
+    /// Corrupt a transport message's bytes at the site (`send` /
+    /// `recv`), to be caught by the frame CRC.
+    MsgCorrupt,
 }
 
 /// One parsed `kind@site[=N|:K]` rule with its firing state.
@@ -105,6 +121,9 @@ fn parse_rule(spec: &str) -> Result<Rule, String> {
         "worker_panic" => FaultKind::WorkerPanic,
         "io_error" => FaultKind::IoError,
         "nan" => FaultKind::Nan,
+        "worker_exit" => FaultKind::WorkerExit,
+        "msg_drop" => FaultKind::MsgDrop,
+        "msg_corrupt" => FaultKind::MsgCorrupt,
         other => return Err(format!("unknown fault kind '{other}'")),
     };
     let (site, at, first) = if let Some((s, n)) = rest.split_once('=') {
@@ -208,22 +227,102 @@ pub fn with_faults<R>(spec: &str, f: impl FnOnce() -> R) -> R {
     out
 }
 
+/// The exit code an injected `worker_exit` fault dies with — distinctive
+/// so a dist coordinator (and CI logs) can tell an injected kill from a
+/// genuine crash.
+pub const WORKER_EXIT_CODE: i32 = 86;
+
+/// Whether this process may honor `worker_exit` faults (see
+/// [`allow_process_exit`]).  Process-global on purpose: exiting is a
+/// process-level act, unlike the thread-local fault plans.
+static PROCESS_EXIT_ALLOWED: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
+/// Opt this process into `worker_exit@iter` faults.  Called by the dist
+/// worker entrypoint only — a solver running in a test harness or a
+/// coordinator must never have the whole process yanked out from under
+/// it by an inherited `PHAST_FAULT`.
+pub fn allow_process_exit() {
+    PROCESS_EXIT_ALLOWED.store(true, std::sync::atomic::Ordering::Relaxed);
+}
+
 /// Announce a solver iteration.  Arms a pending worker panic when a
 /// `worker_panic@iter` rule fires for `iter`; the panic is consumed by
-/// the next parallel region (see `ops::par`).  No-op when disabled.
+/// the next parallel region (see `ops::par`).  A `worker_exit@iter` rule
+/// firing here kills the process outright (exit code
+/// [`WORKER_EXIT_CODE`], no unwinding — the dist-training "kill -9"
+/// stand-in) when the process opted in via [`allow_process_exit`].
+/// No-op when disabled.
 pub fn begin_iter(iter: u64) {
     if !enabled() {
         return;
     }
-    let arm = with_plan(|rules| {
-        rules
-            .iter_mut()
-            .filter(|r| r.kind == FaultKind::WorkerPanic && r.site == "iter")
-            .any(|r| r.fire_at(iter, false))
+    let (arm, exit) = with_plan(|rules| {
+        let mut arm = false;
+        let mut exit = false;
+        for r in rules.iter_mut().filter(|r| r.site == "iter") {
+            match r.kind {
+                FaultKind::WorkerPanic => arm |= r.fire_at(iter, false),
+                FaultKind::WorkerExit => exit |= r.fire_at(iter, false),
+                _ => {}
+            }
+        }
+        (arm, exit)
     });
+    if exit {
+        if PROCESS_EXIT_ALLOWED.load(std::sync::atomic::Ordering::Relaxed) {
+            eprintln!("PHAST_FAULT: injected worker_exit at iter {iter}: killing process");
+            std::process::exit(WORKER_EXIT_CODE);
+        }
+        eprintln!(
+            "PHAST_FAULT: worker_exit@iter fired at iter {iter} but this process did not \
+             opt into process exits (dist workers only); ignoring"
+        );
+    }
     if arm {
         PANIC_ARMED.with(|c| c.set(true));
     }
+}
+
+/// What an injected transport fault does to the message at hand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgFault {
+    /// Deliver untouched.
+    None,
+    /// The message vanishes in flight.
+    Drop,
+    /// The message's bytes are flipped in flight (the frame CRC must
+    /// catch it).
+    Corrupt,
+}
+
+/// Fault check for a transport message site (`send` / `recv`): returns
+/// what to do with the current message when a `msg_drop@site` /
+/// `msg_corrupt@site` rule fires for this occurrence.  When both kinds
+/// fire at once, `Drop` wins.  No-op when disabled.
+pub fn check_msg(site: &str) -> MsgFault {
+    if !enabled() {
+        return MsgFault::None;
+    }
+    with_plan(|rules| {
+        let mut out = MsgFault::None;
+        for r in rules
+            .iter_mut()
+            .filter(|r| matches!(r.kind, FaultKind::MsgDrop | FaultKind::MsgCorrupt))
+            .filter(|r| r.site == site)
+        {
+            r.seen += 1;
+            let occurrence = r.seen;
+            if r.fire_at(occurrence, true) {
+                match r.kind {
+                    FaultKind::MsgDrop => out = MsgFault::Drop,
+                    FaultKind::MsgCorrupt if out == MsgFault::None => out = MsgFault::Corrupt,
+                    _ => {}
+                }
+            }
+        }
+        out
+    })
 }
 
 /// Consume a pending worker panic armed by [`begin_iter`].  Called by
@@ -355,6 +454,64 @@ mod tests {
             // only the well-formed always-fire rule survives
             assert!(check_io("snapshot_load").is_err());
             assert!(!take_worker_panic());
+        });
+    }
+
+    #[test]
+    fn comma_separated_plans_compose_independent_rules() {
+        // The ISSUE 9 grammar: several rules in one spec, each keeping
+        // its own site, trigger, and firing state.
+        with_faults("worker_panic@iter=2,io_error@snapshot_save:1,nan@loss=2", || {
+            begin_iter(0);
+            assert!(!take_worker_panic());
+            assert!(check_io("snapshot_save").is_err()); // :1 → first attempt
+            assert!(check_io("snapshot_save").is_ok());
+            assert_eq!(corrupt_value("loss", 0.5), 0.5);
+            begin_iter(2);
+            assert!(take_worker_panic());
+            assert!(corrupt_value("loss", 0.5).is_nan());
+            begin_iter(2); // =N rules stay fired after replay
+            assert!(!take_worker_panic());
+        });
+    }
+
+    #[test]
+    fn single_rule_spec_parses_as_before() {
+        // No commas: byte-compatible with the PR 6 single-spec grammar,
+        // including surrounding whitespace tolerance.
+        with_faults("  io_error@snapshot_load=2  ", || {
+            assert!(check_io("snapshot_load").is_ok());
+            assert!(check_io("snapshot_load").is_err());
+            assert!(check_io("snapshot_load").is_ok());
+        });
+    }
+
+    #[test]
+    fn worker_exit_is_ignored_without_process_opt_in() {
+        // This test process never calls allow_process_exit(), so the
+        // rule must warn and fall through instead of killing the whole
+        // test binary.
+        with_faults("worker_exit@iter=1", || {
+            begin_iter(1);
+            begin_iter(2);
+        });
+    }
+
+    #[test]
+    fn msg_faults_count_occurrences_per_site() {
+        with_faults("msg_corrupt@send=2,msg_drop@recv:1", || {
+            assert_eq!(check_msg("send"), MsgFault::None);
+            assert_eq!(check_msg("send"), MsgFault::Corrupt);
+            assert_eq!(check_msg("send"), MsgFault::None);
+            assert_eq!(check_msg("recv"), MsgFault::Drop);
+            assert_eq!(check_msg("recv"), MsgFault::None);
+        });
+    }
+
+    #[test]
+    fn msg_drop_wins_over_corrupt_on_the_same_message() {
+        with_faults("msg_corrupt@send,msg_drop@send", || {
+            assert_eq!(check_msg("send"), MsgFault::Drop);
         });
     }
 

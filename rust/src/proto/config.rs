@@ -78,6 +78,15 @@ pub struct LayerConfig {
     /// Data.
     pub batch_size: usize,
     pub source: String,
+    /// Data-parallel shard `(rank, ranks)`: the layer draws the full
+    /// `batch_size` index stream (global cursor semantics — snapshots
+    /// stay interchangeable with single-process runs) but materializes
+    /// only its own contiguous slice of each batch, per the
+    /// `ops::par::partition` rules.  `None` (the prototxt default —
+    /// there is no text syntax for it) means the whole batch;
+    /// `Some((0, 1))` is byte-identical to `None`.  Set by
+    /// `Net::from_config_sharded`.
+    pub shard: Option<(usize, usize)>,
 }
 
 impl Default for LayerConfig {
@@ -98,6 +107,7 @@ impl Default for LayerConfig {
             top_k: 1,
             batch_size: 64,
             source: String::new(),
+            shard: None,
         }
     }
 }

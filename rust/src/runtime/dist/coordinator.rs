@@ -1,0 +1,814 @@
+//! The dist coordinator: spawns one worker process per rank, collects
+//! per-rank gradients each iteration, reduces them in **fixed rank
+//! order** (bitwise-reproducible for a given rank count), broadcasts
+//! the reduced gradient, and supervises membership.
+//!
+//! # Elasticity
+//!
+//! Worker loss is detected three ways: the per-child reader thread
+//! hits EOF on the worker's stdout, a write to the worker's stdin
+//! breaks, or the heartbeat timer fires and `try_wait` reaps the
+//! child.  Recovery is **rollback-all**: survivors are told to reload
+//! the newest valid snapshot from the shared checkpoint directory, the
+//! lost rank is respawned (resuming from that same snapshot), and
+//! training re-runs from the snapshot's iteration.  Because every rank
+//! applies identical reduced gradients from identical state, the
+//! re-run is bitwise-equal to an undisturbed run — rolling back is
+//! re-execution, not approximation.  Each recovery consumes one unit
+//! of `recover_budget`; exhausting it aborts loudly with full context
+//! rather than looping forever against a persistent failure.
+//!
+//! Respawned workers never inherit `PHAST_FAULT` — an injected
+//! `worker_exit@iter=N` would otherwise re-fire on every replay of
+//! iteration `N` and recovery could never converge.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{BufReader, BufWriter, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::wire::{self, FrameIn, Msg};
+use super::{env_var, ENV_ROLE};
+
+/// Coordinator-side configuration for one dist training run.
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    /// Binary to re-exec for workers (usually `std::env::current_exe()`).
+    pub worker_exe: PathBuf,
+    /// Arguments passed to the worker binary (the role is selected via
+    /// `PHAST_DIST_ROLE`, so this is usually empty).
+    pub worker_args: Vec<String>,
+    /// Extra environment for workers (e.g. pinning `PHAST_NUM_THREADS`).
+    pub worker_env: Vec<(String, String)>,
+    /// Number of worker ranks.
+    pub ranks: usize,
+    /// Train through iteration `iters - 1`.
+    pub iters: usize,
+    /// Preset net name (`mnist`, `cifar`).
+    pub net: String,
+    pub seed: u64,
+    /// Global batch override (`None` = the preset's batch size).
+    pub batch: Option<usize>,
+    /// Shared checkpoint directory.
+    pub dir: PathBuf,
+    /// Checkpoint every N iterations (plus iteration 0 and the final
+    /// iteration; 0 = only those two).
+    pub snapshot_every: usize,
+    /// Snapshot retention (0 = keep all).
+    pub keep: usize,
+    /// Worker losses tolerated before aborting (`PHAST_DIST_BUDGET`).
+    pub recover_budget: usize,
+    /// Liveness-poll interval while waiting on worker frames
+    /// (`PHAST_DIST_HEARTBEAT_MS`).
+    pub heartbeat_ms: u64,
+    /// Rank that receives `PHAST_FAULT` on its **initial** spawn
+    /// (`PHAST_DIST_FAULT_RANK`, clamped to the rank count).  All other
+    /// ranks, and every respawn, get the variable scrubbed.
+    pub fault_rank: usize,
+    /// The fault plan for the fault rank (defaults to the coordinator's
+    /// own `PHAST_FAULT`, forwarding the CI chaos knob).
+    pub fault_spec: Option<String>,
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    env_var(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+impl DistConfig {
+    /// Defaults plus the coordinator-side `PHAST_DIST_*` env knobs.
+    pub fn new(worker_exe: impl Into<PathBuf>, dir: impl Into<PathBuf>) -> DistConfig {
+        DistConfig {
+            worker_exe: worker_exe.into(),
+            worker_args: Vec::new(),
+            worker_env: Vec::new(),
+            ranks: 2,
+            iters: 10,
+            net: "mnist".into(),
+            seed: 42,
+            batch: None,
+            dir: dir.into(),
+            snapshot_every: 4,
+            keep: 0,
+            recover_budget: env_u64(super::ENV_BUDGET, 2) as usize,
+            heartbeat_ms: env_u64(super::ENV_HEARTBEAT_MS, 5000),
+            fault_rank: env_u64(super::ENV_FAULT_RANK, 1) as usize,
+            fault_spec: env_var("PHAST_FAULT"),
+        }
+    }
+}
+
+/// What one coordinated run did, for logs / benches / assertions.
+#[derive(Clone, Debug)]
+pub struct DistSummary {
+    pub ranks: usize,
+    pub final_iter: u64,
+    /// CRC-32 of the final parameter bytes, cross-checked identical on
+    /// every rank.
+    pub weights_hash: u32,
+    /// Rollback-all recoveries performed (worker losses + watchdog).
+    pub recoveries: usize,
+    /// Nack frames the coordinator sent: CRC failures it detected plus
+    /// heartbeat retransmission requests for frames that never arrived.
+    pub crc_nacks: u64,
+    /// Retransmissions served in response to worker Nacks (their recv
+    /// side saw a corrupt or injected-dropped frame).
+    pub nacks_served: u64,
+    /// Iteration the run resumed from, when the checkpoint dir already
+    /// held a valid snapshot (the coordinator-restart path).
+    pub resumed_from: Option<u64>,
+}
+
+/// Events funneled from the per-child reader threads.  `gen` stamps
+/// which incarnation of the rank produced the event, so frames from a
+/// dead child can never be attributed to its replacement.
+enum Event {
+    Frame(usize, u64, FrameIn),
+    Eof(usize, u64),
+}
+
+/// One worker process slot (index in `Coordinator::slots` == rank).
+struct Slot {
+    gen: u64,
+    child: Child,
+    stdin: BufWriter<ChildStdin>,
+    /// Clean bytes of the last protocol frame sent to this rank, for
+    /// Nack-triggered retransmission.
+    last_sent: Vec<u8>,
+    alive: bool,
+}
+
+fn spawn_reader(rank: usize, gen: u64, stdout: std::process::ChildStdout, tx: Sender<Event>) {
+    std::thread::Builder::new()
+        .name(format!("dist-read-{rank}"))
+        .spawn(move || {
+            let mut r = BufReader::new(stdout);
+            loop {
+                match wire::read_frame(&mut r) {
+                    Ok(f) => {
+                        if tx.send(Event::Frame(rank, gen, f)).is_err() {
+                            return; // coordinator gone
+                        }
+                    }
+                    Err(_) => {
+                        // EOF or desync: either way this incarnation is
+                        // unusable — report and stop reading.
+                        let _ = tx.send(Event::Eof(rank, gen));
+                        return;
+                    }
+                }
+            }
+        })
+        .expect("spawning dist reader thread");
+}
+
+pub struct Coordinator {
+    cfg: DistConfig,
+    slots: Vec<Slot>,
+    tx: Sender<Event>,
+    rx: Receiver<Event>,
+    recoveries: usize,
+    crc_nacks: u64,
+    nacks_served: u64,
+}
+
+/// Run one elastic data-parallel training job to completion.
+pub fn train_dist(cfg: DistConfig) -> Result<DistSummary> {
+    Coordinator::launch(cfg)?.run()
+}
+
+impl Coordinator {
+    fn launch(cfg: DistConfig) -> Result<Coordinator> {
+        if cfg.ranks == 0 {
+            bail!("dist: ranks must be >= 1");
+        }
+        if cfg.iters == 0 {
+            bail!("dist: iters must be >= 1");
+        }
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating checkpoint dir {:?}", cfg.dir))?;
+        let (tx, rx) = channel();
+        let mut c = Coordinator {
+            cfg,
+            slots: Vec::new(),
+            tx,
+            rx,
+            recoveries: 0,
+            crc_nacks: 0,
+            nacks_served: 0,
+        };
+        let fault_rank = c.cfg.fault_rank.min(c.cfg.ranks - 1);
+        for rank in 0..c.cfg.ranks {
+            let with_fault = rank == fault_rank && c.cfg.fault_spec.is_some();
+            let slot = c.spawn_worker(rank, 0, with_fault)?;
+            c.slots.push(slot);
+        }
+        Ok(c)
+    }
+
+    fn spawn_worker(&self, rank: usize, gen: u64, with_fault: bool) -> Result<Slot> {
+        let mut cmd = Command::new(&self.cfg.worker_exe);
+        cmd.args(&self.cfg.worker_args)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped()) // stderr inherited: worker logs flow through
+            .env(ENV_ROLE, "worker")
+            .env(super::ENV_RANK, rank.to_string())
+            .env(super::ENV_RANKS, self.cfg.ranks.to_string())
+            .env(super::ENV_NET, &self.cfg.net)
+            .env(super::ENV_SEED, self.cfg.seed.to_string())
+            .env(super::ENV_ITERS, self.cfg.iters.to_string())
+            .env(super::ENV_DIR, &self.cfg.dir)
+            .env(super::ENV_EVERY, self.cfg.snapshot_every.to_string())
+            .env(super::ENV_KEEP, self.cfg.keep.to_string());
+        if let Some(b) = self.cfg.batch {
+            cmd.env(super::ENV_BATCH, b.to_string());
+        }
+        for (k, v) in &self.cfg.worker_env {
+            cmd.env(k, v);
+        }
+        match (&self.cfg.fault_spec, with_fault) {
+            (Some(spec), true) => {
+                cmd.env("PHAST_FAULT", spec);
+            }
+            _ => {
+                // Scrub inherited chaos: only the designated rank's
+                // initial incarnation runs the fault plan.
+                cmd.env_remove("PHAST_FAULT");
+            }
+        }
+        let mut child = cmd
+            .spawn()
+            .with_context(|| format!("spawning worker rank {rank} ({:?})", self.cfg.worker_exe))?;
+        let stdout = child.stdout.take().expect("piped stdout");
+        spawn_reader(rank, gen, stdout, self.tx.clone());
+        let stdin = BufWriter::new(child.stdin.take().expect("piped stdin"));
+        eprintln!("dist: spawned rank {rank} (gen {gen}, pid {})", child.id());
+        Ok(Slot { gen, child, stdin, last_sent: Vec::new(), alive: true })
+    }
+
+    fn live_ranks(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&r| self.slots[r].alive).collect()
+    }
+
+    /// Is (rank, gen) the current live incarnation?
+    fn is_current(&self, rank: usize, gen: u64) -> bool {
+        self.slots[rank].alive && self.slots[rank].gen == gen
+    }
+
+    /// Mark (rank, gen) dead; `true` if this is news (a live rank's
+    /// current incarnation just died).
+    fn mark_dead(&mut self, rank: usize, gen: u64) -> bool {
+        if self.is_current(rank, gen) {
+            self.slots[rank].alive = false;
+            eprintln!("dist: lost rank {rank} (gen {gen})");
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Send `msg` to `rank`, remembering it for retransmission.
+    /// `false` means the write broke — the rank is dead.
+    fn send_to(&mut self, rank: usize, msg: &Msg) -> bool {
+        let bytes = wire::encode(msg);
+        self.slots[rank].last_sent.clone_from(&bytes);
+        self.write_to(rank, &bytes)
+    }
+
+    /// Retransmit the last protocol frame sent to `rank` (Nack service).
+    fn resend_to(&mut self, rank: usize) -> bool {
+        self.nacks_served += 1;
+        let bytes = std::mem::take(&mut self.slots[rank].last_sent);
+        let ok = self.write_to(rank, &bytes);
+        self.slots[rank].last_sent = bytes;
+        ok
+    }
+
+    /// Nack `rank`: ask it to retransmit its last frame.  Raw write —
+    /// Nacks never replace `last_sent`.
+    fn nack(&mut self, rank: usize) -> bool {
+        self.crc_nacks += 1;
+        let bytes = wire::encode(&Msg::Nack);
+        self.write_to(rank, &bytes)
+    }
+
+    fn write_to(&mut self, rank: usize, bytes: &[u8]) -> bool {
+        let slot = &mut self.slots[rank];
+        if !slot.alive {
+            return false;
+        }
+        let ok = slot.stdin.write_all(bytes).and_then(|_| slot.stdin.flush()).is_ok();
+        if !ok {
+            slot.alive = false;
+            eprintln!("dist: lost rank {rank} (stdin broke)");
+        }
+        ok
+    }
+
+    /// Wait for the next reader-thread event.  `None` = heartbeat
+    /// expired with every child still running (the caller decides
+    /// whether to re-Nack laggards); a child reaped by the liveness
+    /// poll is synthesized into an `Eof`.
+    fn next_event(&mut self) -> Result<Option<Event>> {
+        match self.rx.recv_timeout(Duration::from_millis(self.cfg.heartbeat_ms)) {
+            Ok(e) => Ok(Some(e)),
+            Err(RecvTimeoutError::Timeout) => {
+                for rank in 0..self.slots.len() {
+                    let slot = &mut self.slots[rank];
+                    if slot.alive {
+                        if let Ok(Some(status)) = slot.child.try_wait() {
+                            eprintln!("dist: heartbeat found rank {rank} exited ({status})");
+                            return Ok(Some(Event::Eof(rank, slot.gen)));
+                        }
+                    }
+                }
+                Ok(None)
+            }
+            Err(RecvTimeoutError::Disconnected) => bail!("dist: all reader threads gone"),
+        }
+    }
+
+    fn kill_all(&mut self) {
+        for rank in 0..self.slots.len() {
+            let slot = &mut self.slots[rank];
+            let _ = slot.child.kill();
+            let _ = slot.child.wait();
+            slot.alive = false;
+        }
+    }
+
+    fn run(&mut self) -> Result<DistSummary> {
+        let abort_iter: Option<u64> = env_var(super::ENV_ABORT_ITER).and_then(|v| v.parse().ok());
+        let total = self.cfg.iters as u64;
+
+        // ---- handshake: collect Hello from every rank -------------------
+        let mut hello: HashMap<usize, (u64, bool)> = HashMap::new();
+        while hello.len() < self.cfg.ranks {
+            match self.next_event()? {
+                Some(Event::Frame(r, gen, f)) if self.is_current(r, gen) => match f {
+                    FrameIn::Msg(Msg::Hello { rank, resumed_iter, resumed }) => {
+                        if rank as usize != r {
+                            bail!("dist: rank {r} introduced itself as {rank}");
+                        }
+                        hello.insert(r, (resumed_iter, resumed));
+                    }
+                    FrameIn::Corrupt => {
+                        if !self.nack(r) {
+                            bail!("dist: rank {r} died during startup");
+                        }
+                    }
+                    FrameIn::Msg(m) => bail!("dist: unexpected {m:?} from rank {r} before Hello"),
+                },
+                Some(Event::Frame(..)) => {}
+                Some(Event::Eof(r, gen)) => {
+                    if self.mark_dead(r, gen) {
+                        self.kill_all();
+                        bail!(
+                            "dist: rank {r} died during startup (before training began); \
+                             check its stderr above"
+                        );
+                    }
+                }
+                None => {}
+            }
+        }
+        let (start_iter, resumed) = hello[&0];
+        for (&r, &(it, _)) in &hello {
+            if it != start_iter {
+                self.kill_all();
+                bail!(
+                    "dist: ranks disagree on resume point (rank 0 at {start_iter}, \
+                     rank {r} at {it}); checkpoint dir {:?} is inconsistent",
+                    self.cfg.dir
+                );
+            }
+        }
+        let resumed_from = if resumed { Some(start_iter) } else { None };
+        if let Some(it) = resumed_from {
+            eprintln!("dist: resuming all {} ranks from iter {it}", self.cfg.ranks);
+        }
+
+        // ---- Start: rank 0 owns the iteration-0 checkpoint on a fresh
+        // run, giving recovery its rollback floor before any step runs.
+        for r in 0..self.cfg.ranks {
+            if !self.send_to(r, &Msg::Start { ckpt0: r == 0 && !resumed }) {
+                self.kill_all();
+                bail!("dist: rank {r} died before Start");
+            }
+        }
+
+        // ---- training ---------------------------------------------------
+        let mut iter = start_iter;
+        let final_hash;
+        'run: loop {
+            while iter < total {
+                let grads = match self.collect_grads(iter)? {
+                    Some(g) => g,
+                    None => {
+                        iter = self.recover()?;
+                        continue;
+                    }
+                };
+                if abort_iter == Some(iter) {
+                    eprintln!(
+                        "dist: injected coordinator abort at iter {iter} ({})",
+                        super::ENV_ABORT_ITER
+                    );
+                    std::process::exit(3);
+                }
+
+                // Deterministic reduction: ascending rank order, each
+                // gradient scaled by its batch share.  At ranks=1 the
+                // share is exactly 1.0f32 and the multiply is an IEEE
+                // identity — single-rank dist is bitwise single-process.
+                let order: Vec<usize> = {
+                    let mut o: Vec<usize> = grads.keys().copied().collect();
+                    o.sort_unstable();
+                    o
+                };
+                let n = grads[&order[0]].grad.len();
+                for &r in &order {
+                    if grads[&r].grad.len() != n {
+                        self.kill_all();
+                        bail!(
+                            "dist: rank {r} sent {} gradient elements, rank {} sent {n}",
+                            grads[&r].grad.len(),
+                            order[0]
+                        );
+                    }
+                }
+                let mut reduced = vec![0.0f32; n];
+                let mut loss = 0.0f32;
+                for (k, &r) in order.iter().enumerate() {
+                    let g = &grads[&r];
+                    if k == 0 {
+                        for (out, &v) in reduced.iter_mut().zip(&g.grad) {
+                            *out = v * g.weight;
+                        }
+                        loss = g.loss * g.weight;
+                    } else {
+                        for (out, &v) in reduced.iter_mut().zip(&g.grad) {
+                            *out += v * g.weight;
+                        }
+                        loss += g.loss * g.weight;
+                    }
+                }
+
+                // Divergence watchdog (mirrors TrainDriver): a NaN loss
+                // is unrecoverable forward state — roll everyone back.
+                if !loss.is_finite() {
+                    eprintln!("dist: non-finite reduced loss at iter {iter}; rolling back");
+                    iter = self.recover()?;
+                    continue;
+                }
+
+                let done = iter + 1;
+                let every = self.cfg.snapshot_every as u64;
+                let ckpt = done == total || (every > 0 && done % every == 0);
+                // Exactly one rank persists each checkpoint: the lowest
+                // live rank (rank 0 unless it died this run).
+                let owner = *order.first().expect("nonempty order");
+                let mut lost = false;
+                for &r in &order {
+                    let msg = Msg::Reduced {
+                        iter,
+                        loss,
+                        ckpt: ckpt && r == owner,
+                        grad: reduced.clone(),
+                    };
+                    if !self.send_to(r, &msg) {
+                        lost = true;
+                    }
+                }
+                if lost {
+                    iter = self.recover()?;
+                    continue;
+                }
+                iter = done;
+            }
+
+            // ---- finalize: every rank reports its weights hash ----------
+            match self.collect_done(total)? {
+                Some(hashes) => {
+                    let h0 = hashes[&0];
+                    for (&r, &h) in &hashes {
+                        if h != h0 {
+                            self.kill_all();
+                            bail!(
+                                "dist: weights diverged — rank 0 hash {h0:#010x}, \
+                                 rank {r} hash {h:#010x}"
+                            );
+                        }
+                    }
+                    final_hash = h0;
+                    break 'run;
+                }
+                None => {
+                    iter = self.recover()?;
+                    continue 'run;
+                }
+            }
+        }
+
+        // ---- shutdown ---------------------------------------------------
+        for r in self.live_ranks() {
+            let _ = self.send_to(r, &Msg::Shutdown);
+        }
+        for slot in &mut self.slots {
+            let _ = slot.child.wait();
+            slot.alive = false;
+        }
+        Ok(DistSummary {
+            ranks: self.cfg.ranks,
+            final_iter: total,
+            weights_hash: final_hash,
+            recoveries: self.recoveries,
+            crc_nacks: self.crc_nacks,
+            nacks_served: self.nacks_served,
+            resumed_from,
+        })
+    }
+
+    /// Collect `Grad{iter}` from every live rank.  `None` = a rank died
+    /// (or a write broke) and the caller must recover.
+    fn collect_grads(&mut self, iter: u64) -> Result<Option<HashMap<usize, GradIn>>> {
+        let mut grads: HashMap<usize, GradIn> = HashMap::new();
+        loop {
+            let need: Vec<usize> =
+                self.live_ranks().into_iter().filter(|r| !grads.contains_key(r)).collect();
+            if need.is_empty() {
+                return Ok(Some(grads));
+            }
+            match self.next_event()? {
+                Some(Event::Frame(r, gen, f)) if self.is_current(r, gen) => match f {
+                    FrameIn::Corrupt => {
+                        if !self.nack(r) {
+                            return Ok(None);
+                        }
+                    }
+                    FrameIn::Msg(Msg::Grad { iter: gi, weight, loss, grad }) if gi == iter => {
+                        // Duplicates (heartbeat re-Nack racing a slow
+                        // frame) overwrite with identical bytes.
+                        grads.insert(r, GradIn { weight, loss, grad });
+                    }
+                    FrameIn::Msg(Msg::Grad { iter: gi, .. }) => {
+                        // A stale gradient from before a rollback; the
+                        // rank will re-send for the current iteration.
+                        eprintln!("dist: discarding stale Grad iter {gi} from rank {r}");
+                    }
+                    FrameIn::Msg(Msg::CkptDone { iter: ci }) => {
+                        eprintln!("dist: rank {r} checkpointed iter {ci}");
+                    }
+                    FrameIn::Msg(Msg::Nack) => {
+                        if !self.resend_to(r) {
+                            return Ok(None);
+                        }
+                    }
+                    FrameIn::Msg(m) => {
+                        self.kill_all();
+                        bail!("dist: unexpected {m:?} from rank {r} while collecting iter {iter}");
+                    }
+                },
+                Some(Event::Frame(..)) => {}
+                Some(Event::Eof(r, gen)) => {
+                    if self.mark_dead(r, gen) {
+                        return Ok(None);
+                    }
+                }
+                None => {
+                    // Heartbeat with every child alive but frames
+                    // missing: a frame may have been dropped in flight —
+                    // ask the laggards to retransmit.
+                    eprintln!("dist: heartbeat — re-Nacking ranks {need:?} for iter {iter}");
+                    for r in need {
+                        if !self.nack(r) {
+                            return Ok(None);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Collect `Done{total}` from every live rank.  `None` = recover.
+    fn collect_done(&mut self, total: u64) -> Result<Option<HashMap<usize, u32>>> {
+        let mut done: HashMap<usize, u32> = HashMap::new();
+        loop {
+            let need: Vec<usize> =
+                self.live_ranks().into_iter().filter(|r| !done.contains_key(r)).collect();
+            if need.is_empty() {
+                return Ok(Some(done));
+            }
+            match self.next_event()? {
+                Some(Event::Frame(r, gen, f)) if self.is_current(r, gen) => match f {
+                    FrameIn::Corrupt => {
+                        if !self.nack(r) {
+                            return Ok(None);
+                        }
+                    }
+                    FrameIn::Msg(Msg::Done { iter, weights_hash }) => {
+                        if iter != total {
+                            self.kill_all();
+                            bail!("dist: rank {r} finished at iter {iter}, expected {total}");
+                        }
+                        done.insert(r, weights_hash);
+                    }
+                    FrameIn::Msg(Msg::CkptDone { .. }) => {}
+                    FrameIn::Msg(Msg::Nack) => {
+                        if !self.resend_to(r) {
+                            return Ok(None);
+                        }
+                    }
+                    FrameIn::Msg(m) => {
+                        self.kill_all();
+                        bail!("dist: unexpected {m:?} from rank {r} during finalize");
+                    }
+                },
+                Some(Event::Frame(..)) => {}
+                Some(Event::Eof(r, gen)) => {
+                    if self.mark_dead(r, gen) {
+                        return Ok(None);
+                    }
+                }
+                None => {
+                    for r in need {
+                        if !self.nack(r) {
+                            return Ok(None);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Rollback-all recovery.  Returns the iteration training resumes
+    /// from.  Consumes recovery budget; additional losses *during*
+    /// recovery restart the attempt (each consuming budget), so a
+    /// persistently dying rank aborts instead of looping forever.
+    fn recover(&mut self) -> Result<u64> {
+        'attempt: loop {
+            self.recoveries += 1;
+            if self.recoveries > self.cfg.recover_budget {
+                let dead: Vec<usize> =
+                    (0..self.slots.len()).filter(|&r| !self.slots[r].alive).collect();
+                self.kill_all();
+                bail!(
+                    "dist: recovery budget exhausted ({} allowed): ranks {dead:?} kept \
+                     dying; snapshots in {:?}; raise {} or fix the underlying crash",
+                    self.cfg.recover_budget,
+                    self.cfg.dir,
+                    super::ENV_BUDGET
+                );
+            }
+            eprintln!(
+                "dist: recovery {}/{} — rolling back all ranks",
+                self.recoveries, self.cfg.recover_budget
+            );
+
+            // Absorb anything already in flight; more deaths just mark
+            // slots dead (they are respawned below either way).
+            while let Ok(e) = self.rx.try_recv() {
+                if let Event::Eof(r, gen) = e {
+                    self.mark_dead(r, gen);
+                }
+            }
+
+            // 1. Survivors reload the newest valid snapshot.
+            for r in self.live_ranks() {
+                if !self.send_to(r, &Msg::Rollback) {
+                    continue 'attempt;
+                }
+            }
+            let mut waiting: HashSet<usize> = self.live_ranks().into_iter().collect();
+            let mut target: Option<u64> = None;
+            while !waiting.is_empty() {
+                match self.next_event()? {
+                    Some(Event::Frame(r, gen, f)) if self.is_current(r, gen) => match f {
+                        FrameIn::Corrupt => {
+                            if !self.nack(r) {
+                                continue 'attempt;
+                            }
+                        }
+                        FrameIn::Msg(Msg::RolledBack { iter }) => {
+                            if let Some(t) = target {
+                                if t != iter {
+                                    self.kill_all();
+                                    bail!(
+                                        "dist: ranks rolled back to different iterations \
+                                         ({t} vs {iter}); checkpoint dir {:?} is inconsistent",
+                                        self.cfg.dir
+                                    );
+                                }
+                            }
+                            target = Some(iter);
+                            waiting.remove(&r);
+                        }
+                        FrameIn::Msg(Msg::Nack) => {
+                            if !self.resend_to(r) {
+                                continue 'attempt;
+                            }
+                        }
+                        // Grad/CkptDone/Done frames that crossed paths
+                        // with the Rollback: superseded, drop them.
+                        FrameIn::Msg(_) => {}
+                    },
+                    Some(Event::Frame(..)) => {}
+                    Some(Event::Eof(r, gen)) => {
+                        if self.mark_dead(r, gen) {
+                            continue 'attempt;
+                        }
+                    }
+                    None => {}
+                }
+            }
+
+            // 2. Respawn lost ranks (never with the fault plan).
+            let dead: Vec<usize> =
+                (0..self.slots.len()).filter(|&r| !self.slots[r].alive).collect();
+            for &r in &dead {
+                let _ = self.slots[r].child.kill();
+                let _ = self.slots[r].child.wait(); // reap the corpse
+                let gen = self.slots[r].gen + 1;
+                let slot = self.spawn_worker(r, gen, false)?;
+                self.slots[r] = slot;
+            }
+
+            // 3. Respawned ranks resume from the same snapshot.
+            let mut waiting: HashSet<usize> = dead.iter().copied().collect();
+            while !waiting.is_empty() {
+                match self.next_event()? {
+                    Some(Event::Frame(r, gen, f)) if self.is_current(r, gen) => match f {
+                        FrameIn::Corrupt => {
+                            if !self.nack(r) {
+                                continue 'attempt;
+                            }
+                        }
+                        FrameIn::Msg(Msg::Hello { resumed_iter, resumed, .. }) => {
+                            if !resumed {
+                                self.kill_all();
+                                bail!(
+                                    "dist: respawned rank {r} found no snapshot in {:?} — \
+                                     cannot rejoin deterministically",
+                                    self.cfg.dir
+                                );
+                            }
+                            match target {
+                                Some(t) if t != resumed_iter => {
+                                    self.kill_all();
+                                    bail!(
+                                        "dist: respawned rank {r} resumed at {resumed_iter} \
+                                         but survivors rolled back to {t}"
+                                    );
+                                }
+                                _ => target = Some(resumed_iter),
+                            }
+                            waiting.remove(&r);
+                        }
+                        FrameIn::Msg(Msg::Nack) => {
+                            if !self.resend_to(r) {
+                                continue 'attempt;
+                            }
+                        }
+                        FrameIn::Msg(_) => {}
+                    },
+                    Some(Event::Frame(..)) => {}
+                    Some(Event::Eof(r, gen)) => {
+                        if self.mark_dead(r, gen) {
+                            continue 'attempt;
+                        }
+                    }
+                    None => {}
+                }
+            }
+
+            // 4. Respawned ranks get their Start (no initial checkpoint:
+            // the rollback floor already exists).
+            for &r in &dead {
+                if !self.send_to(r, &Msg::Start { ckpt0: false }) {
+                    continue 'attempt;
+                }
+            }
+
+            let t = target.expect("at least one rank reported its rollback point");
+            eprintln!("dist: recovered — all ranks at iter {t}, resuming");
+            return Ok(t);
+        }
+    }
+}
+
+/// A rank's gradient contribution for one iteration.
+struct GradIn {
+    weight: f32,
+    loss: f32,
+    grad: Vec<f32>,
+}
+
+impl Drop for Coordinator {
+    /// Never leave orphan workers behind, whatever path run() exits by.
+    fn drop(&mut self) {
+        self.kill_all();
+    }
+}

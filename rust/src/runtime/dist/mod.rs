@@ -1,0 +1,197 @@
+//! `runtime::dist` — elastic data-parallel training on one host.
+//!
+//! A **coordinator** process spawns N **worker** processes (re-execs of
+//! the current binary, selected by `PHAST_DIST_ROLE=worker`).  Each
+//! worker trains the same net on its own deterministic contiguous shard
+//! of every batch (via [`Net::from_config_sharded`](crate::net::Net) —
+//! the [`ops::par::partition`](crate::ops::par::partition) split, so
+//! one rank is bitwise-identical to a single-process run).  Every
+//! iteration the workers' gradients are all-reduced through a
+//! [`Transport`](transport::Transport) — the first backend frames
+//! messages over the worker's stdin/stdout with CRC-32 detection and
+//! Nack-based retransmission — in **fixed rank order**, so the reduced
+//! gradient is bitwise-reproducible at a fixed rank count, and every
+//! rank applies the identical SGD step.
+//!
+//! **Elasticity**: the coordinator heartbeats its workers; when one
+//! dies (crash, `kill -9`, or `PHAST_FAULT=worker_exit@iter=N`), the
+//! survivors roll back to the newest valid snapshot in the shared
+//! checkpoint directory, the lost rank is respawned from it, and
+//! training re-runs — final weights bitwise-equal to an undisturbed
+//! run.  A bounded recovery budget turns persistent failure into a
+//! loud abort instead of an infinite heal loop.  See
+//! `docs/FAULT_TOLERANCE.md` for the membership protocol, the
+//! determinism contract, and the recovery state machine.
+//!
+//! # Environment knobs
+//!
+//! Coordinator-read: `PHAST_DIST_HEARTBEAT_MS`, `PHAST_DIST_BUDGET`,
+//! `PHAST_DIST_FAULT_RANK`, `PHAST_DIST_ABORT_ITER` (test-only injected
+//! coordinator crash).  Worker-read (set by the coordinator on spawn):
+//! `PHAST_DIST_ROLE`, `PHAST_DIST_RANK`, `PHAST_DIST_RANKS`,
+//! `PHAST_DIST_NET`, `PHAST_DIST_SEED`, `PHAST_DIST_ITERS`,
+//! `PHAST_DIST_BATCH`, `PHAST_DIST_DIR`, `PHAST_DIST_EVERY`,
+//! `PHAST_DIST_KEEP`.
+
+pub mod coordinator;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use coordinator::{train_dist, DistConfig, DistSummary};
+pub use transport::{PipeTransport, Transport};
+pub use wire::Msg;
+pub use worker::{worker_main, WorkerSpec};
+
+use anyhow::{bail, Result};
+
+use crate::solver::{crc32, Solver};
+
+/// Role selector: a process spawned with this set to `worker` is a dist
+/// worker whose stdout is the transport.
+pub const ENV_ROLE: &str = "PHAST_DIST_ROLE";
+pub const ENV_RANK: &str = "PHAST_DIST_RANK";
+pub const ENV_RANKS: &str = "PHAST_DIST_RANKS";
+pub const ENV_NET: &str = "PHAST_DIST_NET";
+pub const ENV_SEED: &str = "PHAST_DIST_SEED";
+pub const ENV_ITERS: &str = "PHAST_DIST_ITERS";
+pub const ENV_BATCH: &str = "PHAST_DIST_BATCH";
+pub const ENV_DIR: &str = "PHAST_DIST_DIR";
+pub const ENV_EVERY: &str = "PHAST_DIST_EVERY";
+pub const ENV_KEEP: &str = "PHAST_DIST_KEEP";
+/// Coordinator liveness-poll interval in milliseconds (default 5000).
+pub const ENV_HEARTBEAT_MS: &str = "PHAST_DIST_HEARTBEAT_MS";
+/// Worker losses tolerated before the coordinator aborts (default 2).
+pub const ENV_BUDGET: &str = "PHAST_DIST_BUDGET";
+/// Rank whose initial spawn inherits `PHAST_FAULT` (default 1).
+pub const ENV_FAULT_RANK: &str = "PHAST_DIST_FAULT_RANK";
+/// Test knob: the coordinator kills itself (exit 3) after collecting
+/// gradients for this iteration — the coordinator-restart chaos case.
+pub const ENV_ABORT_ITER: &str = "PHAST_DIST_ABORT_ITER";
+
+/// Non-empty environment variable, if set.
+pub(crate) fn env_var(name: &str) -> Option<String> {
+    match std::env::var(name) {
+        Ok(v) if !v.is_empty() => Some(v),
+        _ => None,
+    }
+}
+
+/// If this process was spawned as a dist worker
+/// (`PHAST_DIST_ROLE=worker`), run the worker loop and exit — never
+/// returns in that case.  Call first thing in `main` of any binary
+/// used as a `worker_exe` (the CLI, examples, benches, test binaries),
+/// **before** anything writes to stdout: the worker's stdout is the
+/// wire.
+pub fn exec_worker_if_env() {
+    if env_var(ENV_ROLE).as_deref() == Some("worker") {
+        match worker::worker_main() {
+            Ok(()) => std::process::exit(0),
+            Err(e) => {
+                eprintln!("dist worker failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// Flatten all parameter gradients into one contiguous vector, in
+/// `Net::params` order — the canonical reduction layout.
+pub fn flatten_diffs(solver: &Solver) -> Vec<f32> {
+    let params = solver.net.params();
+    let total: usize = params.iter().map(|p| p.count()).sum();
+    let mut out = Vec::with_capacity(total);
+    for p in params {
+        out.extend_from_slice(p.diff().as_slice());
+    }
+    out
+}
+
+/// Overwrite all parameter gradients from a flattened vector (the
+/// inverse of [`flatten_diffs`]).
+pub fn scatter_diffs(solver: &mut Solver, flat: &[f32]) -> Result<()> {
+    let mut params = solver.net.params_mut();
+    let total: usize = params.iter().map(|p| p.count()).sum();
+    if flat.len() != total {
+        bail!("reduced gradient has {} elements, net has {total} parameters", flat.len());
+    }
+    let mut off = 0;
+    for p in params.iter_mut() {
+        let n = p.count();
+        p.diff_mut().as_mut_slice().copy_from_slice(&flat[off..off + n]);
+        off += n;
+    }
+    Ok(())
+}
+
+/// CRC-32 over all parameter bytes (little-endian f32s, `Net::params`
+/// order) — the cross-rank weight-equality fingerprint.
+pub fn weights_hash(solver: &Solver) -> u32 {
+    let mut bytes = Vec::new();
+    for p in solver.net.params() {
+        for v in p.data().as_slice() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    crc32(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Net;
+    use crate::proto::{presets, NetConfig, SolverConfig};
+
+    fn tiny_solver() -> Solver {
+        let mut ncfg = NetConfig::from_text(presets::net_by_name("mnist").unwrap()).unwrap();
+        for l in &mut ncfg.layers {
+            if l.ltype == crate::proto::LayerType::Data {
+                l.batch_size = 4;
+            }
+        }
+        let net = Net::from_config(ncfg, 7).unwrap();
+        let mut scfg = SolverConfig::from_text(presets::solver_by_name("mnist").unwrap()).unwrap();
+        scfg.display = 0;
+        Solver::new(scfg, net)
+    }
+
+    #[test]
+    fn flatten_scatter_roundtrips_diffs() {
+        let mut s = tiny_solver();
+        crate::ops::par::with_threads(1, || s.forward_backward()).unwrap();
+        let flat = flatten_diffs(&s);
+        let total: usize = s.net.params().iter().map(|p| p.count()).sum();
+        assert_eq!(flat.len(), total);
+        assert!(flat.iter().any(|&v| v != 0.0), "backward produced gradients");
+
+        let doubled: Vec<f32> = flat.iter().map(|v| v * 2.0).collect();
+        scatter_diffs(&mut s, &doubled).unwrap();
+        let back = flatten_diffs(&s);
+        let want: Vec<u32> = doubled.iter().map(|v| v.to_bits()).collect();
+        let have: Vec<u32> = back.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(want, have);
+
+        assert!(scatter_diffs(&mut s, &flat[1..]).is_err(), "length mismatch rejected");
+    }
+
+    #[test]
+    fn weights_hash_tracks_parameter_changes() {
+        let mut s = tiny_solver();
+        let h0 = weights_hash(&s);
+        assert_eq!(h0, weights_hash(&s), "hash is stable");
+        crate::ops::par::with_threads(1, || s.step()).unwrap();
+        assert_ne!(h0, weights_hash(&s), "a step changes the weights");
+    }
+
+    #[test]
+    fn worker_spec_roundtrips_reduction_weights() {
+        // The weights every peer computes for a 3-rank split of batch 8
+        // sum to exactly 1.0 here (6/8 + ... no: 3/8 + 3/8 + 2/8) and
+        // match the partition the data layer shards by.
+        let parts = crate::ops::par::partition(8, 3);
+        let weights: Vec<f32> = parts.iter().map(|r| r.len() as f32 / 8.0).collect();
+        assert_eq!(weights, vec![3.0 / 8.0, 3.0 / 8.0, 2.0 / 8.0]);
+        // Single-rank weight is the exact IEEE identity multiplier.
+        assert_eq!(crate::ops::par::partition(8, 1)[0].len() as f32 / 8.0, 1.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! Message transport for `runtime::dist`: a [`Transport`] trait so the
+//! worker loop and tests are backend-agnostic, plus the first backend —
+//! [`PipeTransport`], CRC-framed messages over a byte stream pair
+//! (workers run it over their own stdin/stdout, which the coordinator
+//! holds the other ends of).
+//!
+//! Reliability model: each side keeps the encoded bytes of the last
+//! protocol frame it sent.  A receiver that sees a CRC failure answers
+//! [`Msg::Nack`]; the peer retransmits the stored frame verbatim.  Nack
+//! frames themselves are fire-and-forget (never stored, never faulted)
+//! so a corrupted Nack cannot livelock the link — the coordinator's
+//! heartbeat re-Nacks anything still missing.
+//!
+//! Fault injection (worker side only): `PHAST_FAULT=msg_drop@send`,
+//! `msg_corrupt@send`, `msg_drop@recv`, `msg_corrupt@recv` — see
+//! [`ops::fault`](crate::ops::fault).  A send-drop vanishes the frame,
+//! a send-corrupt flips a CRC bit on the wire; recv faults pretend the
+//! incoming frame failed its CRC.  All of them must be healed by the
+//! Nack path, never surface as wrong gradients.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+
+use anyhow::Result;
+
+use crate::ops::fault::{self, MsgFault};
+
+use super::wire::{self, FrameIn, Msg};
+
+/// A reliable, ordered message channel to the peer (coordinator from a
+/// worker's point of view).  Implementations must deliver messages
+/// intact and in order — [`PipeTransport`] gets there with CRC + Nack
+/// retransmission.
+pub trait Transport {
+    fn send(&mut self, msg: &Msg) -> Result<()>;
+    fn recv(&mut self) -> Result<Msg>;
+}
+
+/// [`Transport`] over a read/write byte-stream pair using the
+/// [`wire`] framing.
+pub struct PipeTransport<R: Read, W: Write> {
+    r: BufReader<R>,
+    w: BufWriter<W>,
+    /// Clean bytes of the last protocol frame sent; retransmitted
+    /// verbatim when the peer Nacks.
+    last_sent: Vec<u8>,
+    crc_nacks: u64,
+}
+
+impl<R: Read, W: Write> PipeTransport<R, W> {
+    pub fn new(r: R, w: W) -> Self {
+        PipeTransport {
+            r: BufReader::new(r),
+            w: BufWriter::new(w),
+            last_sent: Vec::new(),
+            crc_nacks: 0,
+        }
+    }
+
+    /// How many incoming frames failed their CRC (each one was Nacked).
+    pub fn crc_nacks(&self) -> u64 {
+        self.crc_nacks
+    }
+
+    fn write_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.w.write_all(bytes)?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+impl<R: Read, W: Write> Transport for PipeTransport<R, W> {
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        let bytes = wire::encode(msg);
+        // Store the CLEAN copy first: an injected drop/corrupt below is
+        // healed by the peer Nacking and us resending these bytes.
+        self.last_sent.clone_from(&bytes);
+        match fault::check_msg("send") {
+            MsgFault::Drop => {
+                eprintln!("[fault] dropping outbound frame ({} bytes)", bytes.len());
+                Ok(())
+            }
+            MsgFault::Corrupt => {
+                eprintln!("[fault] corrupting outbound frame ({} bytes)", bytes.len());
+                let mut evil = bytes;
+                wire::corrupt_frame(&mut evil);
+                self.write_raw(&evil)
+            }
+            MsgFault::None => self.write_raw(&bytes),
+        }
+    }
+
+    fn recv(&mut self) -> Result<Msg> {
+        loop {
+            let mut frame = wire::read_frame(&mut self.r)?;
+            if frame != FrameIn::Corrupt {
+                match fault::check_msg("recv") {
+                    MsgFault::None => {}
+                    MsgFault::Drop | MsgFault::Corrupt => {
+                        // Either way the frame is unusable; Nacking it
+                        // makes the drop deterministic to recover.
+                        eprintln!("[fault] rejecting inbound frame as corrupt");
+                        frame = FrameIn::Corrupt;
+                    }
+                }
+            }
+            match frame {
+                FrameIn::Corrupt => {
+                    self.crc_nacks += 1;
+                    // Raw write: Nacks are not protocol frames — they
+                    // never replace last_sent and skip the fault hooks.
+                    let nack = wire::encode(&Msg::Nack);
+                    self.write_raw(&nack)?;
+                }
+                FrameIn::Msg(Msg::Nack) => {
+                    let bytes = std::mem::take(&mut self.last_sent);
+                    self.write_raw(&bytes)?;
+                    self.last_sent = bytes;
+                }
+                FrameIn::Msg(m) => return Ok(m),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn stream(msgs: &[Msg]) -> Cursor<Vec<u8>> {
+        let mut bytes = Vec::new();
+        for m in msgs {
+            bytes.extend_from_slice(&wire::encode(m));
+        }
+        Cursor::new(bytes)
+    }
+
+    fn decode_all(bytes: &[u8]) -> Vec<FrameIn> {
+        let mut cur = Cursor::new(bytes.to_vec());
+        let mut out = Vec::new();
+        while (cur.position() as usize) < bytes.len() {
+            out.push(wire::read_frame(&mut cur).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn recv_returns_messages_in_order() {
+        let inbound = stream(&[Msg::Start { ckpt0: false }, Msg::Shutdown]);
+        let mut t = PipeTransport::new(inbound, Vec::new());
+        assert_eq!(t.recv().unwrap(), Msg::Start { ckpt0: false });
+        assert_eq!(t.recv().unwrap(), Msg::Shutdown);
+        assert_eq!(t.crc_nacks(), 0);
+    }
+
+    #[test]
+    fn corrupt_inbound_frame_is_nacked_and_skipped() {
+        let mut bytes = wire::encode(&Msg::CkptDone { iter: 3 });
+        wire::corrupt_frame(&mut bytes);
+        bytes.extend_from_slice(&wire::encode(&Msg::Shutdown));
+        let mut t = PipeTransport::new(Cursor::new(bytes), Vec::new());
+        // The corrupt frame is never surfaced; recv skips to the next
+        // good one after answering with a Nack.
+        assert_eq!(t.recv().unwrap(), Msg::Shutdown);
+        assert_eq!(t.crc_nacks(), 1);
+        assert_eq!(decode_all(t.w.get_ref()), vec![FrameIn::Msg(Msg::Nack)]);
+    }
+
+    #[test]
+    fn nack_triggers_verbatim_retransmission() {
+        let msg = Msg::Grad { iter: 7, weight: 0.5, loss: 1.25, grad: vec![1.0, 2.0, 3.0] };
+        let inbound = stream(&[Msg::Nack, Msg::Shutdown]);
+        let mut t = PipeTransport::new(inbound, Vec::new());
+        t.send(&msg).unwrap();
+        // Peer Nacks; recv services the retransmission transparently
+        // and returns the next real message.
+        assert_eq!(t.recv().unwrap(), Msg::Shutdown);
+        let written = decode_all(t.w.get_ref());
+        assert_eq!(written, vec![FrameIn::Msg(msg.clone()), FrameIn::Msg(msg)]);
+    }
+
+    #[test]
+    fn injected_send_corruption_is_on_the_wire_but_recoverable() {
+        let msg = Msg::Done { iter: 9, weights_hash: 42 };
+        crate::ops::fault::with_faults("msg_corrupt@send=1", || {
+            let inbound = stream(&[Msg::Nack, Msg::Shutdown]);
+            let mut t = PipeTransport::new(inbound, Vec::new());
+            t.send(&msg).unwrap();
+            assert_eq!(t.recv().unwrap(), Msg::Shutdown);
+            let written = decode_all(t.w.get_ref());
+            // First copy corrupted by the fault, retransmission clean.
+            assert_eq!(written, vec![FrameIn::Corrupt, FrameIn::Msg(msg.clone())]);
+        });
+    }
+
+    #[test]
+    fn injected_send_drop_leaves_retransmission_only() {
+        let msg = Msg::RolledBack { iter: 2 };
+        crate::ops::fault::with_faults("msg_drop@send=1", || {
+            let inbound = stream(&[Msg::Nack, Msg::Shutdown]);
+            let mut t = PipeTransport::new(inbound, Vec::new());
+            t.send(&msg).unwrap();
+            assert_eq!(t.recv().unwrap(), Msg::Shutdown);
+            assert_eq!(decode_all(t.w.get_ref()), vec![FrameIn::Msg(msg)]);
+        });
+    }
+
+    #[test]
+    fn injected_recv_fault_nacks_a_clean_frame() {
+        crate::ops::fault::with_faults("msg_corrupt@recv=1", || {
+            let inbound = stream(&[Msg::Rollback, Msg::Rollback]);
+            let mut t = PipeTransport::new(inbound, Vec::new());
+            // First copy rejected by the injected fault, second accepted.
+            assert_eq!(t.recv().unwrap(), Msg::Rollback);
+            assert_eq!(t.crc_nacks(), 1);
+            assert_eq!(decode_all(t.w.get_ref()), vec![FrameIn::Msg(Msg::Nack)]);
+        });
+    }
+}

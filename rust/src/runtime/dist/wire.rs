@@ -1,0 +1,366 @@
+//! Pipe-framed wire protocol for data-parallel training
+//! (`runtime::dist`): length-prefixed frames with a CRC-32 trailer, so
+//! a corrupted message is detected and retransmitted instead of
+//! silently applied to the model.
+//!
+//! # Frame layout (little-endian)
+//!
+//! ```text
+//! "PDW1" | kind: u32 | payload_len: u64 | payload | crc32(kind|len|payload)
+//! ```
+//!
+//! The CRC covers everything after the magic.  A frame whose CRC does
+//! not match decodes as [`FrameIn::Corrupt`] — the receiver answers
+//! with [`Msg::Nack`] and the sender retransmits its last frame (each
+//! side has at most one protocol frame in flight per direction, so
+//! "resend the last frame" is always the right recovery).  A corrupted
+//! *header* cannot be resynchronized over a byte stream; it surfaces as
+//! a bad magic and tears the connection down loudly, which the
+//! coordinator treats like a worker loss.
+
+use anyhow::{bail, Context, Result};
+
+use crate::solver::crc32;
+
+/// Frame magic: phast dist wire v1.
+pub const MAGIC: &[u8; 4] = b"PDW1";
+
+/// Hard ceiling on payload size (guards against reading gigabytes on a
+/// garbled length field that still passed the magic check).
+pub const MAX_PAYLOAD: usize = 1 << 31;
+
+/// One protocol message.  The gradient payloads are raw f32 slices —
+/// the flattened parameter diffs in `Net::params` order, which is also
+/// the deterministic reduction order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker → coordinator, once at startup: the rank came up and
+    /// holds solver state at `resumed_iter` (`resumed` says whether
+    /// that state came from a snapshot or fresh init).
+    Hello { rank: u32, resumed_iter: u64, resumed: bool },
+    /// Coordinator → worker: begin training.  `ckpt0` asks this rank
+    /// (the checkpoint owner on a fresh start) to persist the initial
+    /// state first, so recovery always has a rollback floor.
+    Start { ckpt0: bool },
+    /// Worker → coordinator: this rank's flattened parameter diffs for
+    /// `iter`, pre-weighted by nothing — `weight` is the rank's batch
+    /// share `local_batch / global_batch`, applied by the coordinator
+    /// in fixed rank order.
+    Grad { iter: u64, weight: f32, loss: f32, grad: Vec<f32> },
+    /// Coordinator → worker: the reduced gradient for `iter`; every
+    /// rank applies the identical SGD step from it.  `ckpt` asks this
+    /// rank (exactly one per checkpoint) to persist a snapshot after
+    /// applying.
+    Reduced { iter: u64, loss: f32, ckpt: bool, grad: Vec<f32> },
+    /// Worker → coordinator: the checkpoint requested via `Start` /
+    /// `Reduced` is durable, holding state at `iter`.
+    CkptDone { iter: u64 },
+    /// Coordinator → worker: discard in-flight work and reload the
+    /// newest valid snapshot (a rank was lost).
+    Rollback,
+    /// Worker → coordinator: rollback complete, now at `iter`.
+    RolledBack { iter: u64 },
+    /// Worker → coordinator: reached the final iteration; the CRC-32
+    /// of the parameter bytes is `weights_hash` (the coordinator
+    /// cross-checks all ranks).
+    Done { iter: u64, weights_hash: u32 },
+    /// Coordinator → worker: exit cleanly.
+    Shutdown,
+    /// Either direction: the last frame you sent arrived corrupted (or
+    /// never arrived) — retransmit it.
+    Nack,
+}
+
+/// What [`read_frame`] produced: a decoded message, or a frame whose
+/// CRC failed (recoverable via [`Msg::Nack`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FrameIn {
+    Msg(Msg),
+    Corrupt,
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    let start = out.len();
+    out.resize(start + xs.len() * 4, 0);
+    for (chunk, v) in out[start..].chunks_exact_mut(4).zip(xs) {
+        chunk.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn kind_of(msg: &Msg) -> u32 {
+    match msg {
+        Msg::Hello { .. } => 1,
+        Msg::Start { .. } => 2,
+        Msg::Grad { .. } => 3,
+        Msg::Reduced { .. } => 4,
+        Msg::CkptDone { .. } => 5,
+        Msg::Rollback => 6,
+        Msg::RolledBack { .. } => 7,
+        Msg::Done { .. } => 8,
+        Msg::Shutdown => 9,
+        Msg::Nack => 10,
+    }
+}
+
+fn encode_payload(msg: &Msg) -> Vec<u8> {
+    let mut p = Vec::new();
+    match msg {
+        Msg::Hello { rank, resumed_iter, resumed } => {
+            push_u32(&mut p, *rank);
+            push_u64(&mut p, *resumed_iter);
+            p.push(u8::from(*resumed));
+        }
+        Msg::Start { ckpt0 } => p.push(u8::from(*ckpt0)),
+        Msg::Grad { iter, weight, loss, grad } => {
+            push_u64(&mut p, *iter);
+            push_f32(&mut p, *weight);
+            push_f32(&mut p, *loss);
+            push_f32s(&mut p, grad);
+        }
+        Msg::Reduced { iter, loss, ckpt, grad } => {
+            push_u64(&mut p, *iter);
+            push_f32(&mut p, *loss);
+            p.push(u8::from(*ckpt));
+            push_f32s(&mut p, grad);
+        }
+        Msg::CkptDone { iter } | Msg::RolledBack { iter } => push_u64(&mut p, *iter),
+        Msg::Done { iter, weights_hash } => {
+            push_u64(&mut p, *iter);
+            push_u32(&mut p, *weights_hash);
+        }
+        Msg::Rollback | Msg::Shutdown | Msg::Nack => {}
+    }
+    p
+}
+
+/// Encode `msg` as one complete frame (magic + header + payload + CRC).
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let payload = encode_payload(msg);
+    let mut out = Vec::with_capacity(20 + payload.len());
+    out.extend_from_slice(MAGIC);
+    push_u32(&mut out, kind_of(msg));
+    push_u64(&mut out, payload.len() as u64);
+    out.extend_from_slice(&payload);
+    let crc = crc32(&out[4..]);
+    push_u32(&mut out, crc);
+    out
+}
+
+/// Flip one bit of a frame's CRC trailer in place — the fault
+/// injector's "corrupted in flight" transform.  Framing (magic, kind,
+/// length) is preserved, so the receiver stays synchronized and the
+/// corruption is guaranteed to surface as a CRC mismatch.
+pub fn corrupt_frame(frame: &mut [u8]) {
+    let last = frame.len() - 1;
+    frame[last] ^= 0x01;
+}
+
+/// Bounds-checked little-endian payload reader.
+struct Rd<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.b.len() - self.p {
+            bail!("truncated payload: wanted {n} bytes at offset {}, have {}", self.p, self.b.len());
+        }
+        let out = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// The rest of the payload as f32s (gradient tails).
+    fn rest_f32s(&mut self) -> Result<Vec<f32>> {
+        let b = &self.b[self.p..];
+        self.p = self.b.len();
+        if b.len() % 4 != 0 {
+            bail!("gradient tail length {} is not a multiple of 4", b.len());
+        }
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Decode a CRC-verified payload.  Errors here mean a protocol bug or
+/// version skew, not line noise — they are fatal, unlike CRC failures.
+fn decode_payload(kind: u32, payload: &[u8]) -> Result<Msg> {
+    let mut r = Rd { b: payload, p: 0 };
+    let msg = match kind {
+        1 => Msg::Hello {
+            rank: r.u32()?,
+            resumed_iter: r.u64()?,
+            resumed: r.u8()? != 0,
+        },
+        2 => Msg::Start { ckpt0: r.u8()? != 0 },
+        3 => Msg::Grad {
+            iter: r.u64()?,
+            weight: r.f32()?,
+            loss: r.f32()?,
+            grad: r.rest_f32s()?,
+        },
+        4 => Msg::Reduced {
+            iter: r.u64()?,
+            loss: r.f32()?,
+            ckpt: r.u8()? != 0,
+            grad: r.rest_f32s()?,
+        },
+        5 => Msg::CkptDone { iter: r.u64()? },
+        6 => Msg::Rollback,
+        7 => Msg::RolledBack { iter: r.u64()? },
+        8 => Msg::Done { iter: r.u64()?, weights_hash: r.u32()? },
+        9 => Msg::Shutdown,
+        10 => Msg::Nack,
+        k => bail!("unknown frame kind {k}"),
+    };
+    if r.p != payload.len() {
+        bail!("frame kind {kind} has {} trailing payload bytes", payload.len() - r.p);
+    }
+    Ok(msg)
+}
+
+/// Read one frame from `r`.  IO errors (including EOF — the peer went
+/// away) and desynchronization are `Err`; a frame that arrived but
+/// failed its CRC is `Ok(FrameIn::Corrupt)`.
+pub fn read_frame(r: &mut impl std::io::Read) -> Result<FrameIn> {
+    let mut head = [0u8; 16];
+    r.read_exact(&mut head).context("reading frame header (peer closed?)")?;
+    if &head[..4] != MAGIC {
+        bail!("transport desynchronized: bad frame magic {:?}", &head[..4]);
+    }
+    let kind = u32::from_le_bytes([head[4], head[5], head[6], head[7]]);
+    let len = u64::from_le_bytes([
+        head[8], head[9], head[10], head[11], head[12], head[13], head[14], head[15],
+    ]) as usize;
+    if len > MAX_PAYLOAD {
+        bail!("implausible frame payload length {len}");
+    }
+    // CRC input is kind|len|payload: reuse the header tail as its prefix.
+    let mut buf = vec![0u8; 12 + len];
+    buf[..12].copy_from_slice(&head[4..16]);
+    r.read_exact(&mut buf[12..]).context("reading frame payload")?;
+    let mut crcb = [0u8; 4];
+    r.read_exact(&mut crcb).context("reading frame CRC")?;
+    let want = u32::from_le_bytes(crcb);
+    if crc32(&buf) != want {
+        return Ok(FrameIn::Corrupt);
+    }
+    Ok(FrameIn::Msg(decode_payload(kind, &buf[12..])?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let frame = encode(&msg);
+        let mut cur = std::io::Cursor::new(frame);
+        match read_frame(&mut cur).unwrap() {
+            FrameIn::Msg(got) => assert_eq!(got, msg),
+            FrameIn::Corrupt => panic!("clean frame read as corrupt"),
+        }
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        roundtrip(Msg::Hello { rank: 3, resumed_iter: 17, resumed: true });
+        roundtrip(Msg::Start { ckpt0: true });
+        roundtrip(Msg::Grad { iter: 5, weight: 0.25, loss: 1.5, grad: vec![1.0, -2.5, 0.0] });
+        roundtrip(Msg::Reduced { iter: 5, loss: 0.75, ckpt: false, grad: vec![f32::MIN, f32::MAX] });
+        roundtrip(Msg::CkptDone { iter: 8 });
+        roundtrip(Msg::Rollback);
+        roundtrip(Msg::RolledBack { iter: 4 });
+        roundtrip(Msg::Done { iter: 12, weights_hash: 0xDEAD_BEEF });
+        roundtrip(Msg::Shutdown);
+        roundtrip(Msg::Nack);
+        roundtrip(Msg::Grad { iter: 0, weight: 1.0, loss: 0.0, grad: vec![] });
+    }
+
+    #[test]
+    fn gradient_bytes_survive_bitwise() {
+        // NaNs and signed zeros must cross the wire bit-exactly.
+        let grad = vec![f32::NAN, -0.0, 1.0e-45, f32::INFINITY];
+        let frame = encode(&Msg::Grad { iter: 1, weight: 0.5, loss: 0.0, grad: grad.clone() });
+        let mut cur = std::io::Cursor::new(frame);
+        let FrameIn::Msg(Msg::Grad { grad: got, .. }) = read_frame(&mut cur).unwrap() else {
+            panic!("bad decode");
+        };
+        let want: Vec<u32> = grad.iter().map(|v| v.to_bits()).collect();
+        let have: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(want, have);
+    }
+
+    #[test]
+    fn corrupt_frame_is_detected_not_decoded() {
+        let mut frame = encode(&Msg::Grad { iter: 2, weight: 1.0, loss: 3.0, grad: vec![9.0; 16] });
+        corrupt_frame(&mut frame);
+        let mut cur = std::io::Cursor::new(frame);
+        assert_eq!(read_frame(&mut cur).unwrap(), FrameIn::Corrupt);
+    }
+
+    #[test]
+    fn payload_corruption_is_detected_too() {
+        let mut frame = encode(&Msg::Grad { iter: 2, weight: 1.0, loss: 3.0, grad: vec![9.0; 16] });
+        let mid = 16 + (frame.len() - 20) / 2; // inside the payload
+        frame[mid] ^= 0x80;
+        let mut cur = std::io::Cursor::new(frame);
+        assert_eq!(read_frame(&mut cur).unwrap(), FrameIn::Corrupt);
+    }
+
+    #[test]
+    fn eof_and_bad_magic_are_fatal() {
+        let mut empty = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut empty).is_err());
+
+        let mut frame = encode(&Msg::Nack);
+        frame[0] = b'X';
+        let mut cur = std::io::Cursor::new(frame);
+        let err = read_frame(&mut cur).unwrap_err();
+        assert!(format!("{err:#}").contains("desynchronized"), "{err:#}");
+    }
+
+    #[test]
+    fn frames_parse_back_to_back_from_one_stream() {
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&encode(&Msg::Hello { rank: 0, resumed_iter: 0, resumed: false }));
+        stream.extend_from_slice(&encode(&Msg::Start { ckpt0: true }));
+        stream.extend_from_slice(&encode(&Msg::Shutdown));
+        let mut cur = std::io::Cursor::new(stream);
+        assert!(matches!(read_frame(&mut cur).unwrap(), FrameIn::Msg(Msg::Hello { .. })));
+        assert!(matches!(read_frame(&mut cur).unwrap(), FrameIn::Msg(Msg::Start { ckpt0: true })));
+        assert_eq!(read_frame(&mut cur).unwrap(), FrameIn::Msg(Msg::Shutdown));
+    }
+}

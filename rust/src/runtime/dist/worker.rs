@@ -1,0 +1,222 @@
+//! The dist worker: one training rank, spawned by the coordinator as a
+//! re-exec of the current binary with `PHAST_DIST_ROLE=worker`.
+//!
+//! The worker's **stdout is the transport** — every byte written there
+//! must be a wire frame, so all human-readable logging goes to stderr
+//! (which the child inherits from the coordinator).  The coordinator
+//! holds the other ends of the pipes; stdin EOF means the coordinator
+//! is gone and the worker exits.
+//!
+//! Per iteration the worker runs forward + fused backward on its own
+//! contiguous shard of the batch (`Net::from_config_sharded`), ships
+//! the flattened parameter diffs up as a `Grad`, waits for the
+//! `Reduced` gradient, and applies the identical SGD step every other
+//! rank applies.  On `Rollback` it reloads the newest valid snapshot
+//! from the shared checkpoint directory and reports where it landed;
+//! the coordinator guarantees all ranks land on the same iteration
+//! before training resumes.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::net::Net;
+use crate::ops::{fault, par};
+use crate::proto::{presets, LayerType, NetConfig, SolverConfig};
+use crate::solver::{find_latest_valid, save_checkpoint, Solver};
+
+use super::transport::{PipeTransport, Transport};
+use super::wire::Msg;
+use super::{env_var, flatten_diffs, scatter_diffs, weights_hash};
+
+/// Everything a worker needs, decoded from the `PHAST_DIST_*`
+/// environment the coordinator set on spawn.
+pub struct WorkerSpec {
+    pub rank: usize,
+    pub ranks: usize,
+    /// Preset net name (`mnist`, `cifar`, ...).
+    pub net: String,
+    pub seed: u64,
+    /// Train through iteration `iters - 1`.
+    pub iters: usize,
+    /// Global batch override (`None` = the preset's batch size).
+    pub batch: Option<usize>,
+    /// Shared checkpoint directory (all ranks, one host).
+    pub dir: PathBuf,
+    /// Checkpoint every N iterations (0 = only the initial + final).
+    pub every: usize,
+    /// Snapshot retention (0 = keep all).
+    pub keep: usize,
+}
+
+fn env_usize(name: &str) -> Result<usize> {
+    env_var(name)
+        .with_context(|| format!("dist worker: missing env {name}"))?
+        .parse()
+        .with_context(|| format!("dist worker: bad {name}"))
+}
+
+impl WorkerSpec {
+    /// Decode the spec from the environment the coordinator set.
+    pub fn from_env() -> Result<WorkerSpec> {
+        Ok(WorkerSpec {
+            rank: env_usize(super::ENV_RANK)?,
+            ranks: env_usize(super::ENV_RANKS)?,
+            net: env_var(super::ENV_NET).context("dist worker: missing net")?,
+            seed: env_usize(super::ENV_SEED)? as u64,
+            iters: env_usize(super::ENV_ITERS)?,
+            batch: match env_var(super::ENV_BATCH) {
+                Some(b) => Some(b.parse().context("dist worker: bad batch")?),
+                None => None,
+            },
+            dir: PathBuf::from(env_var(super::ENV_DIR).context("dist worker: missing dir")?),
+            every: env_usize(super::ENV_EVERY)?,
+            keep: env_usize(super::ENV_KEEP)?,
+        })
+    }
+}
+
+/// Build this rank's sharded solver.  Returns the solver plus the
+/// rank's reduction weight `local_batch / global_batch` — the exact
+/// f32 every peer computes for this rank, since the coordinator's
+/// fixed-order weighted sum must be reproducible.
+pub fn build_solver(spec: &WorkerSpec) -> Result<(Solver, f32)> {
+    let net_text = presets::net_by_name(&spec.net)
+        .ok_or_else(|| anyhow!("unknown preset net '{}'", spec.net))?;
+    let solver_text = presets::solver_by_name(&spec.net)
+        .ok_or_else(|| anyhow!("unknown preset solver '{}'", spec.net))?;
+    let mut ncfg = NetConfig::from_text(net_text)?;
+    if let Some(b) = spec.batch {
+        for l in &mut ncfg.layers {
+            if l.ltype == LayerType::Data {
+                l.batch_size = b;
+            }
+        }
+    }
+    let global_batch = ncfg
+        .layers
+        .iter()
+        .find(|l| l.ltype == LayerType::Data)
+        .map(|l| l.batch_size)
+        .context("preset net has no Data layer")?;
+    let net = Net::from_config_sharded(ncfg, spec.seed, spec.rank, spec.ranks)?;
+    let mut scfg = SolverConfig::from_text(solver_text)?;
+    scfg.display = 0; // per-iter prints belong to the coordinator
+    let local = par::partition(global_batch, spec.ranks)[spec.rank].len();
+    let weight = local as f32 / global_batch as f32;
+    Ok((Solver::new(scfg, net), weight))
+}
+
+/// Reload the newest valid snapshot and trim the stat log back to it.
+/// Bails when no snapshot exists — the coordinator always checkpoints
+/// iteration 0 before the first step, so this means the checkpoint
+/// directory itself is gone or fully corrupted.
+fn rollback(solver: &mut Solver, spec: &WorkerSpec) -> Result<u64> {
+    let path = find_latest_valid(solver, &spec.dir)?.ok_or_else(|| {
+        anyhow!(
+            "rank {}: rollback requested but no valid snapshot in {:?}",
+            spec.rank,
+            spec.dir
+        )
+    })?;
+    let it = solver.iter();
+    solver.log.retain(|e| e.iter < it);
+    eprintln!("dist rank {}: rolled back to {:?} (iter {})", spec.rank, path, it);
+    Ok(it as u64)
+}
+
+/// The worker entrypoint: handshake, train, checkpoint on request,
+/// roll back on request, report the final weights hash.  Every exit
+/// path other than `Shutdown`/EOF is an error the process dies loudly
+/// on — the coordinator treats the death as a rank loss.
+pub fn worker_main() -> Result<()> {
+    let spec = WorkerSpec::from_env()?;
+    // Only worker processes honor worker_exit faults: the coordinator
+    // (and any test harness) may carry the same PHAST_FAULT env.
+    fault::allow_process_exit();
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut t = PipeTransport::new(stdin.lock(), stdout.lock());
+    run(&spec, &mut t)
+}
+
+/// The worker protocol loop over an arbitrary [`Transport`] (split from
+/// [`worker_main`] so tests can drive it over in-memory channels).
+pub fn run(spec: &WorkerSpec, t: &mut impl Transport) -> Result<()> {
+    let (mut solver, weight) = build_solver(spec)?;
+    let resumed_path =
+        find_latest_valid(&mut solver, &spec.dir).context("scanning snapshots at startup")?;
+    if let Some(p) = &resumed_path {
+        eprintln!("dist rank {}: resumed from {:?} at iter {}", spec.rank, p, solver.iter());
+    }
+    t.send(&Msg::Hello {
+        rank: spec.rank as u32,
+        resumed_iter: solver.iter() as u64,
+        resumed: resumed_path.is_some(),
+    })?;
+    loop {
+        match t.recv().context("awaiting Start")? {
+            Msg::Start { ckpt0 } => {
+                if ckpt0 {
+                    save_checkpoint(&mut solver, &spec.dir, spec.keep)
+                        .context("initial checkpoint")?;
+                    t.send(&Msg::CkptDone { iter: solver.iter() as u64 })?;
+                }
+                break;
+            }
+            // A recovery that raced our spawn: comply and keep waiting.
+            Msg::Rollback => {
+                let at = rollback(&mut solver, spec)?;
+                t.send(&Msg::RolledBack { iter: at })?;
+            }
+            Msg::Shutdown => return Ok(()),
+            m => bail!("rank {}: unexpected {m:?} before Start", spec.rank),
+        }
+    }
+
+    let total = spec.iters as u64;
+    'training: loop {
+        while (solver.iter() as u64) < total {
+            let iter = solver.iter() as u64;
+            let loss = solver.forward_backward()?;
+            t.send(&Msg::Grad { iter, weight, loss, grad: flatten_diffs(&solver) })?;
+            let (rloss, ckpt, rgrad) = loop {
+                match t.recv().context("awaiting Reduced")? {
+                    Msg::Reduced { iter: ri, loss, ckpt, grad } if ri == iter => {
+                        break (loss, ckpt, grad)
+                    }
+                    Msg::Reduced { iter: ri, .. } => {
+                        bail!("rank {}: Reduced for iter {ri}, expected {iter}", spec.rank)
+                    }
+                    Msg::Rollback => {
+                        let at = rollback(&mut solver, spec)?;
+                        t.send(&Msg::RolledBack { iter: at })?;
+                        continue 'training;
+                    }
+                    Msg::Shutdown => return Ok(()),
+                    m => bail!("rank {}: unexpected {m:?} awaiting Reduced", spec.rank),
+                }
+            };
+            scatter_diffs(&mut solver, &rgrad)?;
+            solver.apply_step(rloss);
+            if ckpt {
+                save_checkpoint(&mut solver, &spec.dir, spec.keep).with_context(|| {
+                    format!("rank {} checkpoint at iter {}", spec.rank, solver.iter())
+                })?;
+                t.send(&Msg::CkptDone { iter: solver.iter() as u64 })?;
+            }
+        }
+        t.send(&Msg::Done { iter: solver.iter() as u64, weights_hash: weights_hash(&solver) })?;
+        // A peer loss after we finished still rolls us back: the
+        // coordinator re-runs the tail so every rank ends identical.
+        match t.recv().context("awaiting Shutdown")? {
+            Msg::Shutdown => return Ok(()),
+            Msg::Rollback => {
+                let at = rollback(&mut solver, spec)?;
+                t.send(&Msg::RolledBack { iter: at })?;
+                continue 'training;
+            }
+            m => bail!("rank {}: unexpected {m:?} after Done", spec.rank),
+        }
+    }
+}

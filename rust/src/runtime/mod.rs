@@ -10,17 +10,25 @@
 //! front end over the native stack: bounded intake queue, deadline-aware
 //! dynamic batching, snapshot-backed model registry with hot reload, and
 //! zero-copy response views.  See `docs/SERVING.md`.
+//!
+//! The training half ([`dist`]) is elastic data-parallel multi-process
+//! training: a coordinator all-reduces per-rank gradients in fixed rank
+//! order and self-heals worker losses by rolling every rank back to the
+//! newest shared snapshot.  See `docs/FAULT_TOLERANCE.md`.
 
 mod manifest;
 mod engine;
+pub mod dist;
 pub mod queue;
 pub mod serve;
 
+pub use dist::{train_dist, DistConfig, DistSummary, Transport};
 pub use engine::{Engine, Value};
 pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
 pub use queue::{BoundedQueue, PopOutcome, PushError};
 pub use serve::{
-    Model, ModelRegistry, Pending, Response, ServeConfig, ServeEngine, ServeStats, SubmitError,
+    Model, ModelRegistry, Pending, Response, ServeConfig, ServeEngine, ServeError, ServeStats,
+    SubmitError,
 };
 
 use std::path::PathBuf;

@@ -10,6 +10,10 @@
 //! `PHAST_SERVE_DELAY_US`, runs **one** forward sweep for the whole
 //! batch, and hands each client a [`Response`] view into the shared
 //! output tensor — the batch output is never copied per request.
+//! With `PHAST_SERVE_TIMEOUT_US` set, each request also carries a
+//! resolve-by deadline: a request the batcher cannot serve in time
+//! (queue backlog, or a model wedged behind a long lock hold) resolves
+//! to [`ServeError::Timeout`] instead of riding a late batch.
 //!
 //! Serving reuses the training stack unchanged: [`Model`] wraps a
 //! [`Solver`] so v2 `.pcss` checkpoints load through the exact
@@ -63,6 +67,12 @@ pub struct ServeConfig {
     /// 256).  A full queue rejects `submit` with
     /// [`SubmitError::QueueFull`] — backpressure, never blocking.
     pub queue_cap: usize,
+    /// Per-request deadline (`PHAST_SERVE_TIMEOUT_US`, default 0 =
+    /// disabled).  A request still unanswered this long after `submit`
+    /// resolves to [`ServeError::Timeout`] instead of riding a late
+    /// batch — the client has given up; burning a forward row on it (or
+    /// worse, delivering into a freed handle's void) helps nobody.
+    pub timeout_us: u64,
     /// Worker-pool width override for the batcher thread (tests and
     /// benches pin widths with it; `None` inherits `PHAST_NUM_THREADS`).
     /// Not an env knob.
@@ -78,6 +88,7 @@ impl ServeConfig {
             max_batch: num("PHAST_SERVE_BATCH", 8).max(1),
             max_delay_us: num("PHAST_SERVE_DELAY_US", 2000) as u64,
             queue_cap: num("PHAST_SERVE_QUEUE", 256).max(1),
+            timeout_us: num("PHAST_SERVE_TIMEOUT_US", 0) as u64,
             threads: None,
         }
     }
@@ -353,12 +364,41 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Why a **queued** request resolved without a [`Response`] (submission
+/// itself failed with [`SubmitError`] instead).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's `PHAST_SERVE_TIMEOUT_US` deadline passed before a
+    /// batch could serve it (queue backlog or a wedged model).
+    Timeout { waited_us: u64 },
+    /// The forward sweep (or model resolution) failed.
+    Engine(String),
+    /// The engine shut down with the request still queued.
+    Dropped,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Timeout { waited_us } => {
+                write!(f, "request timed out after {waited_us}us (PHAST_SERVE_TIMEOUT_US)")
+            }
+            ServeError::Engine(msg) => write!(f, "serve error: {msg}"),
+            ServeError::Dropped => write!(f, "serve engine dropped the request (shutdown)"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// One queued inference request (internal to the engine).
 struct Request {
     samples: Vec<f32>,
     rows: usize,
-    tx: mpsc::Sender<Result<Response, String>>,
+    tx: mpsc::Sender<Result<Response, ServeError>>,
     enqueued: Instant,
+    /// Resolve-by deadline (`None` = no timeout configured).
+    deadline: Option<Instant>,
 }
 
 /// Zero-copy view of one request's rows in a batch output tensor.  Every
@@ -418,16 +458,17 @@ impl Response {
 
 /// Client-side handle for a submitted request.
 pub struct Pending {
-    rx: mpsc::Receiver<Result<Response, String>>,
+    rx: mpsc::Receiver<Result<Response, ServeError>>,
 }
 
 impl Pending {
-    /// Block until the batch containing this request completes.
-    pub fn wait(self) -> Result<Response> {
+    /// Block until the batch containing this request completes (or its
+    /// deadline expires / the engine fails it — the typed [`ServeError`]
+    /// says which; `?` still converts to `anyhow::Error` at call sites).
+    pub fn wait(self) -> Result<Response, ServeError> {
         match self.rx.recv() {
-            Ok(Ok(resp)) => Ok(resp),
-            Ok(Err(msg)) => bail!("serve error: {msg}"),
-            Err(_) => bail!("serve engine dropped the request (shutdown)"),
+            Ok(r) => r,
+            Err(_) => Err(ServeError::Dropped),
         }
     }
 }
@@ -438,6 +479,7 @@ struct StatsInner {
     requests: AtomicU64,
     rows: AtomicU64,
     steady_repacks: AtomicU64,
+    timeouts: AtomicU64,
 }
 
 /// Engine counters (monotonic since [`ServeEngine::start`]).
@@ -454,6 +496,10 @@ pub struct ServeStats {
     /// one of each loaded model generation.  Frozen serving weights must
     /// keep this at 0 — the serving face of `packs_per_forward == 0`.
     pub steady_repacks: u64,
+    /// Requests rejected with [`ServeError::Timeout`] (deadline passed
+    /// in the queue or waiting on the model lock).  Disjoint from
+    /// `requests`, which counts answered requests only.
+    pub timeouts: u64,
 }
 
 /// The engine: an intake queue plus one batcher thread driving a
@@ -465,6 +511,8 @@ pub struct ServeEngine {
     stats: Arc<StatsInner>,
     max_batch: usize,
     sample_in: usize,
+    /// Per-request deadline span (`None` = timeouts disabled).
+    timeout: Option<Duration>,
 }
 
 impl ServeEngine {
@@ -485,6 +533,7 @@ impl ServeEngine {
         let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
         let stats = Arc::new(StatsInner::default());
         let delay = Duration::from_micros(cfg.max_delay_us);
+        let timeout = (cfg.timeout_us > 0).then(|| Duration::from_micros(cfg.timeout_us));
         let threads = cfg.threads;
         let batcher = {
             let queue = Arc::clone(&queue);
@@ -505,7 +554,7 @@ impl ServeEngine {
                 })
                 .context("spawning the serve batcher thread")?
         };
-        Ok(ServeEngine { queue, batcher: Some(batcher), stats, max_batch, sample_in })
+        Ok(ServeEngine { queue, batcher: Some(batcher), stats, max_batch, sample_in, timeout })
     }
 
     /// Enqueue `samples` (one or more concatenated input rows) for the
@@ -521,7 +570,14 @@ impl ServeEngine {
             return Err(SubmitError::TooLarge { rows, max_batch: self.max_batch });
         }
         let (tx, rx) = mpsc::channel();
-        let req = Request { samples, rows, tx, enqueued: Instant::now() };
+        let now = Instant::now();
+        let req = Request {
+            samples,
+            rows,
+            tx,
+            enqueued: now,
+            deadline: self.timeout.map(|t| now + t),
+        };
         match self.queue.push(req) {
             Ok(()) => Ok(Pending { rx }),
             Err(PushError::Full(_)) => Err(SubmitError::QueueFull),
@@ -552,6 +608,7 @@ impl ServeEngine {
             requests: self.stats.requests.load(Ordering::Relaxed),
             rows: self.stats.rows.load(Ordering::Relaxed),
             steady_repacks: self.stats.steady_repacks.load(Ordering::Relaxed),
+            timeouts: self.stats.timeouts.load(Ordering::Relaxed),
         }
     }
 
@@ -591,6 +648,18 @@ fn batcher_loop(
             Some(r) => r,
             None => return,
         };
+        // Already expired in the queue?  Reject without anchoring a
+        // batch on it (the post-lock sweep below would catch it too,
+        // but this path never touches the model).
+        if let Some(d) = first.deadline {
+            let now = Instant::now();
+            if d <= now {
+                stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                let waited_us = now.duration_since(first.enqueued).as_micros() as u64;
+                let _ = first.tx.send(Err(ServeError::Timeout { waited_us }));
+                continue;
+            }
+        }
         // Deadline anchored at the oldest request's enqueue time: if the
         // queue is backed up past the delay already, flush immediately.
         let deadline = first.enqueued + delay;
@@ -615,17 +684,38 @@ fn batcher_loop(
             Some(m) => m,
             None => {
                 for r in &reqs {
-                    let _ = r.tx.send(Err(format!("model '{name}' unregistered")));
+                    let _ = r.tx.send(Err(ServeError::Engine(format!(
+                        "model '{name}' unregistered"
+                    ))));
                 }
                 continue;
             }
         };
-        let mut samples = Vec::with_capacity(reqs.iter().map(|r| r.samples.len()).sum());
-        for r in &reqs {
-            samples.extend_from_slice(&r.samples);
-        }
-        let (result, width) = {
+        let (result, width, reqs, rows) = {
             let mut m = model.lock().unwrap();
+            // Expiry sweep AFTER the lock is ours: time spent blocked on
+            // a wedged model counts against each request's deadline, and
+            // an expired request must not ride the (now late) batch.
+            let now = Instant::now();
+            let mut live = Vec::with_capacity(reqs.len());
+            for r in reqs {
+                match r.deadline {
+                    Some(d) if d <= now => {
+                        stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                        let waited_us = now.duration_since(r.enqueued).as_micros() as u64;
+                        let _ = r.tx.send(Err(ServeError::Timeout { waited_us }));
+                    }
+                    _ => live.push(r),
+                }
+            }
+            if live.is_empty() {
+                continue; // whole batch expired; nothing to forward
+            }
+            let rows: usize = live.iter().map(|r| r.rows).sum();
+            let mut samples = Vec::with_capacity(live.iter().map(|r| r.samples.len()).sum());
+            for r in &live {
+                samples.extend_from_slice(&r.samples);
+            }
             // Packing happens on the dispatching thread (this one), so
             // the thread-local repack counter isolates this batch's packs
             // from any other pool client in the process.
@@ -638,7 +728,7 @@ fn batcher_loop(
                 }
                 _ => warmed = Some(Arc::as_ptr(&model)),
             }
-            (out, m.sample_out())
+            (out, m.sample_out(), live, rows)
         };
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
@@ -662,9 +752,9 @@ fn batcher_loop(
                 }
             }
             Err(e) => {
-                let msg = format!("{e:#}");
+                let err = ServeError::Engine(format!("{e:#}"));
                 for r in &reqs {
-                    let _ = r.tx.send(Err(msg.clone()));
+                    let _ = r.tx.send(Err(err.clone()));
                 }
             }
         }

@@ -137,16 +137,34 @@ impl Solver {
 
     /// One iteration: forward, backward, SGD update.  Returns the loss.
     pub fn step(&mut self) -> Result<f32> {
+        let loss = self.forward_backward()?;
+        self.apply_step(loss);
+        Ok(loss)
+    }
+
+    /// The gradient half of [`Solver::step`]: forward + backward at the
+    /// current iteration, leaving the parameter diffs populated and the
+    /// update **not yet applied**.  This is the seam data-parallel
+    /// training reduces across (`runtime::dist`): ranks exchange diffs
+    /// here, then each applies the identical [`Solver::apply_step`].
+    pub fn forward_backward(&mut self) -> Result<f32> {
         ops::fault::begin_iter(self.iter as u64);
         self.net.zero_param_diffs();
         let loss = self.net.forward()?.unwrap_or(0.0);
         let loss = ops::fault::corrupt_value("loss", loss);
         self.net.backward()?;
+        Ok(loss)
+    }
+
+    /// The update half of [`Solver::step`]: apply the SGD update from the
+    /// current parameter diffs, log `loss` for this iteration, and
+    /// advance the iteration counter.  `step()` is exactly
+    /// `forward_backward()` followed by `apply_step(loss)`.
+    pub fn apply_step(&mut self, loss: f32) {
         self.apply_update();
         let lr = self.lr();
         self.log.push(IterStat { iter: self.iter, loss, lr });
         self.iter += 1;
-        Ok(loss)
     }
 
     fn apply_update(&mut self) {

@@ -26,13 +26,17 @@
 //! # Durability
 //!
 //! [`save_snapshot`] writes a temp file in the target directory, flushes
-//! and fsyncs it, then atomically renames over the destination — a crash
-//! mid-save can never clobber the previous good snapshot.  Transient IO
-//! errors are retried with exponential backoff (`PHAST_SNAPSHOT_RETRY`
-//! attempts, default 3).  [`save_checkpoint`] layers rotation on top:
-//! `snap_<iter>.pcss` naming, a `LATEST` pointer file, and keep-last-K
-//! pruning.  [`find_latest_valid`] walks the directory newest-first and
-//! skips corrupt or truncated snapshots loudly.
+//! and fsyncs it, atomically renames over the destination, then fsyncs
+//! the **parent directory** — without the directory fsync the rename
+//! itself can be lost on power failure, resurrecting the old file.  A
+//! crash at any point leaves either the old snapshot or the new one,
+//! never a torn file.  Transient IO errors are retried with exponential
+//! backoff (`PHAST_SNAPSHOT_RETRY` attempts, default 3).
+//! [`save_checkpoint`] layers rotation on top: `snap_<iter>.pcss`
+//! naming, a `LATEST` pointer file (written through the same
+//! temp + fsync + rename + dir-fsync sequence), and keep-last-K pruning.
+//! [`find_latest_valid`] walks the directory newest-first and skips
+//! corrupt or truncated snapshots loudly.
 
 use std::fs::File;
 use std::io::Write;
@@ -137,9 +141,22 @@ fn snapshot_retries() -> usize {
         .unwrap_or(3)
 }
 
+/// Fsync the directory itself, so a rename that just landed in it
+/// survives power loss.  Fsyncing the renamed *file* is not enough: the
+/// new directory entry lives in the directory's own blocks, and until
+/// those reach disk the rename can silently roll back to the old file.
+fn sync_dir(dir: &Path) -> Result<()> {
+    if dir.as_os_str().is_empty() {
+        return Ok(());
+    }
+    let d = File::open(dir).with_context(|| format!("open dir {dir:?} for fsync"))?;
+    d.sync_all().with_context(|| format!("fsync dir {dir:?}"))
+}
+
 /// One crash-safe save attempt: temp file + flush + fsync + atomic
-/// rename.  A crash at any point leaves either the old snapshot or the
-/// new one — never a torn file at `path`.
+/// rename + parent-directory fsync.  A crash at any point leaves either
+/// the old snapshot or the new one — never a torn file at `path` — and
+/// once this returns the rename itself is durable.
 fn try_save(bytes: &[u8], path: &Path) -> Result<()> {
     fault::check_io("snapshot_save").context("snapshot save IO")?;
     if let Some(dir) = path.parent() {
@@ -155,6 +172,27 @@ fn try_save(bytes: &[u8], path: &Path) -> Result<()> {
         f.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
     }
     std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+    if let Some(dir) = path.parent() {
+        sync_dir(dir)?;
+    }
+    Ok(())
+}
+
+/// Durably replace `path` with `contents`: temp file + fsync + atomic
+/// rename + parent-directory fsync — the same sequence snapshots use,
+/// for small metadata files like the `LATEST` pointer.
+fn write_durable(path: &Path, contents: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        f.write_all(contents).with_context(|| format!("write {tmp:?}"))?;
+        f.flush()?;
+        f.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+    if let Some(dir) = path.parent() {
+        sync_dir(dir)?;
+    }
     Ok(())
 }
 
@@ -219,8 +257,11 @@ pub fn save_checkpoint(solver: &mut Solver, dir: &Path, keep: usize) -> Result<P
     let path = snapshot_path(dir, solver.iter());
     save_snapshot(solver, &path)?;
     let name = path.file_name().expect("snapshot path has a file name");
-    std::fs::write(dir.join("LATEST"), format!("{}\n", name.to_string_lossy()))
-        .with_context(|| format!("writing LATEST pointer in {dir:?}"))?;
+    write_durable(
+        &dir.join("LATEST"),
+        format!("{}\n", name.to_string_lossy()).as_bytes(),
+    )
+    .with_context(|| format!("writing LATEST pointer in {dir:?}"))?;
     if keep > 0 {
         let snaps = list_snapshots(dir);
         for old in snaps.iter().take(snaps.len().saturating_sub(keep)) {
@@ -725,6 +766,8 @@ mod tests {
         assert_eq!(names, ["snap_00000003.pcss", "snap_00000004.pcss", "snap_00000005.pcss"]);
         let latest = std::fs::read_to_string(dir.join("LATEST")).unwrap();
         assert_eq!(latest.trim(), "snap_00000005.pcss");
+        // The durable LATEST write leaves no temp litter behind.
+        assert!(!dir.join("LATEST.tmp").exists());
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! End-to-end chaos matrix for `runtime::dist` — real worker processes
+//! (re-execs of the `repro` binary), real pipes, real kills.
+//!
+//! The contract under test (docs/FAULT_TOLERANCE.md, "Multi-worker
+//! elasticity"):
+//!
+//! * **1-rank dist == single-process**: a one-rank coordinated run ends
+//!   bitwise-equal to stepping the same solver in this process.
+//! * **Elasticity is invisible in the weights**: at every rank count ×
+//!   thread count in the matrix, a run that loses a worker to an
+//!   injected `worker_exit` ends with the same final weights hash as an
+//!   undisturbed run of the same shape.
+//! * **Coordinator loss is a resume, not a restart**: killing the
+//!   coordinator mid-run (injected `exit(3)`) and re-running against
+//!   the same checkpoint directory converges to the clean run's hash.
+//! * **Transport faults never reach the gradients**: an injected frame
+//!   corruption is caught by CRC and healed by Nack retransmission —
+//!   zero recoveries, identical weights.
+
+use std::path::PathBuf;
+
+use phast_caffe::net::Net;
+use phast_caffe::ops::par;
+use phast_caffe::proto::{presets, LayerType, NetConfig, SolverConfig};
+use phast_caffe::runtime::dist::{self, DistConfig};
+use phast_caffe::solver::Solver;
+
+const NET: &str = "mnist";
+const SEED: u64 = 42;
+const BATCH: usize = 16;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("phast_dist_{tag}_{}", std::process::id()));
+    // A recycled pid must not leak a previous run's checkpoints into
+    // the resume/rollback assertions.
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A coordinator config against the real `repro` binary, with worker
+/// threads pinned (training is bitwise-deterministic per thread count,
+/// so every comparison pins it explicitly).
+fn cfg(dir: PathBuf, ranks: usize, iters: usize, threads: usize) -> DistConfig {
+    let mut c = DistConfig::new(env!("CARGO_BIN_EXE_repro"), dir);
+    c.ranks = ranks;
+    c.iters = iters;
+    c.net = NET.into();
+    c.seed = SEED;
+    c.batch = Some(BATCH);
+    c.snapshot_every = 4;
+    c.keep = 0;
+    // The test process's own environment must not leak chaos into
+    // nominally clean runs.
+    c.fault_spec = None;
+    c.worker_env = vec![("PHAST_NUM_THREADS".into(), threads.to_string())];
+    c
+}
+
+/// The single-process reference: the same preset net and solver the
+/// workers build, stepped in this process at a pinned thread count.
+fn single_process_hash(iters: usize, threads: usize) -> u32 {
+    let mut ncfg = NetConfig::from_text(presets::net_by_name(NET).unwrap()).unwrap();
+    for l in &mut ncfg.layers {
+        if l.ltype == LayerType::Data {
+            l.batch_size = BATCH;
+        }
+    }
+    let net = Net::from_config(ncfg, SEED).unwrap();
+    let mut scfg = SolverConfig::from_text(presets::solver_by_name(NET).unwrap()).unwrap();
+    scfg.display = 0;
+    let mut s = Solver::new(scfg, net);
+    par::with_threads(threads, || {
+        for _ in 0..iters {
+            s.step()?;
+        }
+        anyhow::Ok(())
+    })
+    .unwrap();
+    dist::weights_hash(&s)
+}
+
+#[test]
+fn one_rank_dist_is_bitwise_single_process() {
+    let summary = dist::train_dist(cfg(tmp_dir("one_rank"), 1, 5, 1)).unwrap();
+    assert_eq!(summary.ranks, 1);
+    assert_eq!(summary.final_iter, 5);
+    assert_eq!(summary.recoveries, 0);
+    assert_eq!(
+        summary.weights_hash,
+        single_process_hash(5, 1),
+        "one coordinated rank must replay the exact single-process trajectory"
+    );
+}
+
+/// The tentpole acceptance matrix: at ranks {1, 2, 4} × worker thread
+/// counts {1, 4}, losing one worker to an injected `worker_exit` mid-run
+/// must end bitwise-identical to the undisturbed run of the same shape.
+#[test]
+fn killed_worker_run_matches_clean_run_across_matrix() {
+    const ITERS: usize = 6;
+    for &ranks in &[1usize, 2, 4] {
+        for &threads in &[1usize, 4] {
+            let tag = format!("clean_r{ranks}_t{threads}");
+            let clean = dist::train_dist(cfg(tmp_dir(&tag), ranks, ITERS, threads)).unwrap();
+            assert_eq!(clean.recoveries, 0, "[{tag}] clean run must not recover");
+
+            let tag = format!("chaos_r{ranks}_t{threads}");
+            let mut chaos = cfg(tmp_dir(&tag), ranks, ITERS, threads);
+            // Kill one worker at iteration 3 (between the iter-0 and
+            // iter-4 checkpoints, so recovery really replays steps).
+            chaos.fault_spec = Some("worker_exit@iter=3".into());
+            chaos.fault_rank = 1; // clamped to rank 0 when ranks == 1
+            let chaos = dist::train_dist(chaos).unwrap();
+
+            assert_eq!(chaos.recoveries, 1, "[{tag}] exactly one rank loss absorbed");
+            assert_eq!(chaos.final_iter, ITERS as u64);
+            assert_eq!(
+                chaos.weights_hash, clean.weights_hash,
+                "[{tag}] recovery must be bitwise-invisible in the final weights"
+            );
+        }
+    }
+}
+
+/// A worker that keeps dying must exhaust the bounded recovery budget
+/// and abort loudly — not heal forever.
+#[test]
+fn recovery_budget_exhaustion_aborts_loudly() {
+    let mut c = cfg(tmp_dir("budget"), 2, 6, 1);
+    c.fault_spec = Some("worker_exit@iter=3".into());
+    c.recover_budget = 0;
+    let err = dist::train_dist(c).err().expect("budget 0 must turn the kill fatal");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("recovery budget exhausted"), "unexpected error: {msg}");
+}
+
+#[test]
+fn coordinator_kill_and_rerun_resumes_to_clean_hash() {
+    const ITERS: usize = 8;
+    let clean = dist::train_dist(cfg(tmp_dir("coord_clean"), 2, ITERS, 1)).unwrap();
+
+    // Crashed coordinator: a subprocess run of the CLI that exits(3)
+    // after collecting iteration 5's gradients (past the iter-4
+    // checkpoint), stranding its workers on pipe EOF.
+    let dir = tmp_dir("coord_crash");
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["train_dist", "--ranks", "2", "--iters", &ITERS.to_string()])
+        .args(["--batch", &BATCH.to_string(), "--every", "4"])
+        .arg("--dir")
+        .arg(&dir)
+        .env("PHAST_DIST_ABORT_ITER", "5")
+        .env("PHAST_NUM_THREADS", "1") // inherited by its workers
+        .env_remove("PHAST_FAULT")
+        .status()
+        .expect("launching the coordinator CLI");
+    assert_eq!(status.code(), Some(3), "injected coordinator abort exits 3");
+
+    // Re-running against the same checkpoint dir resumes from the
+    // newest shared snapshot and converges to the clean trajectory.
+    let resumed = dist::train_dist(cfg(dir, 2, ITERS, 1)).unwrap();
+    assert_eq!(resumed.resumed_from, Some(4), "resumes from the iter-4 checkpoint");
+    assert_eq!(resumed.final_iter, ITERS as u64);
+    assert_eq!(
+        resumed.weights_hash, clean.weights_hash,
+        "coordinator restart must converge to the undisturbed run"
+    );
+}
+
+/// Injected transport faults on a worker's pipes: a corrupted frame is
+/// caught by CRC and Nacked, a dropped one is re-requested — both heal
+/// without a recovery and without perturbing the weights.
+#[test]
+fn transport_faults_are_healed_by_crc_and_nack() {
+    const ITERS: usize = 6;
+    let clean = dist::train_dist(cfg(tmp_dir("wire_clean"), 2, ITERS, 1)).unwrap();
+
+    // Corrupt rank 1's second outbound frame (its first Grad): the
+    // coordinator must detect it via CRC, Nack, and get a clean copy.
+    let mut c = cfg(tmp_dir("wire_corrupt"), 2, ITERS, 1);
+    c.fault_spec = Some("msg_corrupt@send=2".into());
+    c.fault_rank = 1;
+    let corrupt = dist::train_dist(c).unwrap();
+    assert!(corrupt.crc_nacks >= 1, "coordinator must CRC-detect the corruption");
+    assert_eq!(corrupt.recoveries, 0, "a corrupt frame is not a rank loss");
+    assert_eq!(corrupt.weights_hash, clean.weights_hash);
+
+    // Drop rank 1's second inbound frame (its first Reduced): the
+    // worker Nacks and the coordinator serves a retransmission.
+    let mut c = cfg(tmp_dir("wire_drop"), 2, ITERS, 1);
+    c.fault_spec = Some("msg_drop@recv=2".into());
+    c.fault_rank = 1;
+    let drop = dist::train_dist(c).unwrap();
+    assert!(drop.nacks_served >= 1, "coordinator must serve the worker's Nack");
+    assert_eq!(drop.recoveries, 0);
+    assert_eq!(drop.weights_hash, clean.weights_hash);
+}

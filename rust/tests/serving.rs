@@ -8,7 +8,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use phast_caffe::ops::par;
-use phast_caffe::runtime::{Model, ModelRegistry, ServeConfig, ServeEngine, SubmitError};
+use phast_caffe::runtime::{Model, ModelRegistry, ServeConfig, ServeEngine, ServeError, SubmitError};
 use phast_caffe::solver::save_checkpoint;
 
 const SAMPLE_IN: usize = 28 * 28;
@@ -27,7 +27,7 @@ fn sample(seed: u64) -> Vec<f32> {
 }
 
 fn cfg(max_batch: usize, delay_us: u64, queue_cap: usize) -> ServeConfig {
-    ServeConfig { max_batch, max_delay_us: delay_us, queue_cap, threads: None }
+    ServeConfig { max_batch, max_delay_us: delay_us, queue_cap, timeout_us: 0, threads: None }
 }
 
 fn tmp_dir(tag: &str) -> std::path::PathBuf {
@@ -203,6 +203,48 @@ fn full_queue_rejects_submit_with_backpressure() {
         p.wait().unwrap();
     }
     assert_eq!(engine.stats().requests, 3);
+}
+
+/// Per-request timeout: a request stuck behind a wedged batcher past
+/// its `PHAST_SERVE_TIMEOUT_US` deadline resolves to `Timeout` instead
+/// of riding the late batch; requests submitted after the wedge clears
+/// are served normally.
+#[test]
+fn expired_requests_get_timeout_not_a_late_batch() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_fixed("lenet", Model::lenet(4, 17).unwrap());
+    let model = registry.current("lenet").unwrap();
+    let mut c = cfg(4, 200, 16);
+    c.timeout_us = 20_000; // 20ms deadline
+    let engine = ServeEngine::start(Arc::clone(&registry), "lenet", c).unwrap();
+
+    // Wedge the batcher: it pops the request, then blocks on the model
+    // lock held here while the request's deadline expires.
+    let guard = model.lock().unwrap();
+    let doomed = engine.submit(sample(1)).unwrap();
+    while engine.queue_len() > 0 {
+        std::thread::yield_now();
+    }
+    std::thread::sleep(Duration::from_millis(60)); // deadline long past
+    drop(guard);
+
+    let err = doomed.wait().err().expect("expired request must not be served");
+    match err {
+        ServeError::Timeout { waited_us } => {
+            assert!(waited_us >= 20_000, "reported wait {waited_us}us below the deadline");
+        }
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.timeouts, 1);
+    assert_eq!(stats.requests, 0, "a timed-out request must not count as served");
+    assert_eq!(stats.rows, 0, "no forward row may be burned on an expired request");
+
+    // The engine is healthy afterwards: a fresh request is served.
+    let resp = engine.submit(sample(2)).unwrap().wait().unwrap();
+    assert_eq!(resp.rows(), 1);
+    assert_eq!(engine.stats().timeouts, 1);
+    assert_eq!(engine.stats().requests, 1);
 }
 
 /// Hot reload at the registry level: the swap is atomic, and a handle

@@ -2,9 +2,10 @@
 # CI perf-regression gate: compare the merged bench record
 # (rust/BENCH_threads.json, written by `cargo bench --bench
 # threads_scaling`, `cargo bench --bench fusion`, `cargo bench --bench
-# gemm`, `cargo bench --bench snapshot`, and `cargo bench --bench
-# serving`) against the checked-in BENCH_baseline.json — and FAIL on
-# regression instead of only uploading artifacts.
+# gemm`, `cargo bench --bench snapshot`, `cargo bench --bench serving`,
+# and `cargo bench --bench dist`) against the checked-in
+# BENCH_baseline.json — and FAIL on regression instead of only
+# uploading artifacts.
 #
 # Gate design (see BENCH_baseline.json):
 #   * Region counts are deterministic (they depend only on the pass
@@ -40,6 +41,11 @@
 #     and gated exactly; p99 latency is a generous ceiling, throughput
 #     and the batch-8-over-batch-1 speedup are floors, all with the
 #     timing tolerance.
+#   * dist.ranks / .recoveries / .hash_match are deterministic (fixed
+#     2-rank workload with one injected worker_exit; recovery must cost
+#     exactly one rollback and end bitwise-equal to the clean run) and
+#     gated exactly; us_per_step is a generous ceiling with the timing
+#     tolerance (it includes process spawn + pipe all-reduce).
 #
 # Run from the repo root: bash tools/check_bench.sh
 set -u
@@ -50,7 +56,7 @@ BASELINE=BENCH_baseline.json
 
 for f in "$CURRENT" "$BASELINE"; do
   if [ ! -f "$f" ]; then
-    echo "MISSING FILE: $f (run the benches first: cargo bench --bench threads_scaling && cargo bench --bench fusion && cargo bench --bench gemm && cargo bench --bench snapshot && cargo bench --bench serving)"
+    echo "MISSING FILE: $f (run the benches first: cargo bench --bench threads_scaling && cargo bench --bench fusion && cargo bench --bench gemm && cargo bench --bench snapshot && cargo bench --bench serving && cargo bench --bench dist)"
     exit 1
   fi
 done
@@ -302,6 +308,29 @@ if None not in (serve_speedup, serve_speedup_base) and serve_speedup < serve_spe
         f"{serve_speedup_base}/{tol}: batching no longer amortizes dispatch"
     )
 
+# --- dist gates ---------------------------------------------------------
+# The chaos-run shape and its recovery exactness are deterministic: one
+# injected worker_exit must cost exactly one rollback-all recovery, and
+# the recovered run's final weights hash must equal the clean run's
+# (the elasticity acceptance pin).  Per-step wall clock is machine-
+# dependent: generous ceiling with the timing tolerance.
+for key in ("ranks", "recoveries", "hash_match"):
+    dv = get(cur, "dist", key, "current")
+    dv_base = get(base, "dist", key, "baseline")
+    if None not in (dv, dv_base) and dv != dv_base:
+        failures.append(
+            f"dist.{key} {dv} != pinned {dv_base}: "
+            + ("the dist workload changed without a baseline update"
+               if key == "ranks"
+               else "worker-loss recovery is no longer exact")
+        )
+dist_us = get(cur, "dist", "us_per_step", "current")
+dist_us_base = get(base, "dist", "us_per_step", "baseline")
+if None not in (dist_us, dist_us_base) and dist_us > dist_us_base * tol:
+    failures.append(
+        f"dist.us_per_step {dist_us} above ceiling {dist_us_base} x{tol}"
+    )
+
 if failures:
     print("bench gate FAILED:")
     for f in failures:
@@ -328,4 +357,7 @@ print(f"  snapshot: {snap_blobs} blobs, {snap_bytes} bytes, "
 print(f"  serving: {serve_rps} req/s @ batch 8 (speedup {serve_speedup}), "
       f"p99 {serve_p99} us, bitwise_match "
       f"{cur['serving'].get('bitwise_match')}")
+print(f"  dist: {cur['dist'].get('ranks')} ranks, {dist_us} us/step, "
+      f"recoveries {cur['dist'].get('recoveries')}, hash_match "
+      f"{cur['dist'].get('hash_match')}")
 PY
