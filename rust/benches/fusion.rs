@@ -26,6 +26,13 @@
 //!   region and reports the plan's analytic scratch-arena peak
 //!   (`peak_scratch_bytes`); planned region count and the scratch
 //!   ceiling gated exactly.
+//! * **`check_overhead`** — the access sanitizer (`PHAST_CHECK`) priced
+//!   on the fused LeNet backward at the same pinned width: a reference
+//!   pass and an "off" pass (sanitizer forced off) establish the
+//!   zero-cost-off claim (`regions_delta` pinned exactly 0,
+//!   `off_over_ref` gated at <= 1.05x), and an "on" pass reports what
+//!   checked mode actually costs (informational — checked runs are a
+//!   debugging tool, not a production mode).
 //!
 //! `cargo bench --bench fusion`
 
@@ -115,6 +122,25 @@ fn measure_planned(net: &mut phast_caffe::net::Net, plan: bool, iters: usize) ->
         let ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
         (regions, ms)
     })
+}
+
+/// Min-of-`reps` fused-backward timing (plus the region count of the
+/// last rep, identical across reps).  Min damps scheduler noise so the
+/// off/reference ratio in the `check_overhead` entry can carry a tight
+/// 1.05x gate even on loaded CI runners.
+fn measure_backward_min(
+    net: &mut phast_caffe::net::Net,
+    iters: usize,
+    reps: usize,
+) -> (u64, f64) {
+    let mut best = f64::INFINITY;
+    let mut regions = 0u64;
+    for _ in 0..reps {
+        let (r, ms) = measure_backward(net, true, iters);
+        regions = r;
+        best = best.min(ms);
+    }
+    (regions, best)
 }
 
 /// Regions issued and mean ms per forward sweep with layer fusion on/off.
@@ -228,6 +254,35 @@ fn main() -> anyhow::Result<()> {
          -> ~{barrier_us:.2} us per barrier"
     );
 
+    // Sanitizer overhead (ISSUE 10): the access sanitizer must be
+    // zero-cost when off — its only off-path work is one relaxed atomic
+    // load per region dispatch plus a suspended-TLS check per
+    // FusedSlice view.  Price the fused LeNet backward three ways in
+    // one run: a reference pass and an "off" pass, both with the
+    // sanitizer forced off (so off_over_ref compares byte-identical
+    // code on the same machine — any spread is pure noise), then an
+    // "on" pass for the informational checked-mode cost.  regions_delta
+    // (off minus reference) is deterministic and pinned at exactly 0;
+    // checked mode must not change the dispatch structure either, so
+    // regions_on is pinned to regions_off by the gate too.
+    let mut lenet_chk = preset_net("mnist", 37)?;
+    let chk_iters = 8usize;
+    let chk_reps = 3usize;
+    par::check::set_override(Some(false));
+    let (chk_ref_regions, chk_ref_ms) = measure_backward_min(&mut lenet_chk, chk_iters, chk_reps);
+    let (chk_off_regions, chk_off_ms) = measure_backward_min(&mut lenet_chk, chk_iters, chk_reps);
+    par::check::set_override(Some(true));
+    let (chk_on_regions, chk_on_ms) = measure_backward_min(&mut lenet_chk, chk_iters, chk_reps);
+    par::check::set_override(None);
+    let chk_regions_delta = chk_off_regions as i64 - chk_ref_regions as i64;
+    let off_over_ref = chk_off_ms / chk_ref_ms.max(1e-9);
+    let on_over_off = chk_on_ms / chk_off_ms.max(1e-9);
+    println!(
+        "  check overhead (4 threads): off {chk_off_ms:.3} ms vs reference {chk_ref_ms:.3} ms \
+         (x{off_over_ref:.3}, regions delta {chk_regions_delta}); checked {chk_on_ms:.3} ms \
+         (x{on_over_off:.2} over off, {chk_on_regions} regions)"
+    );
+
     let mut sgd = String::from("{\n");
     let _ = writeln!(sgd, "    \"param_blobs\": {nblobs},");
     let _ = writeln!(sgd, "    \"iters\": {iters},");
@@ -273,6 +328,22 @@ fn main() -> anyhow::Result<()> {
     let _ = writeln!(layers, "    \"fused_ms_per_fwd\": {fwd_fused_ms:.3}");
     layers.push_str("  }");
 
+    let mut check = String::from("{\n");
+    let _ = writeln!(check, "    \"net\": \"lenet-mnist\",");
+    let _ = writeln!(check, "    \"threads\": 4,");
+    let _ = writeln!(check, "    \"iters\": {chk_iters},");
+    let _ = writeln!(check, "    \"reps\": {chk_reps},");
+    let _ = writeln!(check, "    \"regions_reference\": {chk_ref_regions},");
+    let _ = writeln!(check, "    \"regions_off\": {chk_off_regions},");
+    let _ = writeln!(check, "    \"regions_delta\": {chk_regions_delta},");
+    let _ = writeln!(check, "    \"regions_on\": {chk_on_regions},");
+    let _ = writeln!(check, "    \"ref_ms_per_bwd\": {chk_ref_ms:.3},");
+    let _ = writeln!(check, "    \"off_ms_per_bwd\": {chk_off_ms:.3},");
+    let _ = writeln!(check, "    \"on_ms_per_bwd\": {chk_on_ms:.3},");
+    let _ = writeln!(check, "    \"off_over_ref\": {off_over_ref:.4},");
+    let _ = writeln!(check, "    \"on_over_off\": {on_over_off:.4}");
+    check.push_str("  }");
+
     let mut barrier = String::from("{\n");
     let _ = writeln!(barrier, "    \"workers\": {workers},");
     let _ = writeln!(barrier, "    \"iters\": {bar_iters},");
@@ -294,11 +365,12 @@ fn main() -> anyhow::Result<()> {
             ("fused_layers", layers),
             ("fused_backward", bwd),
             ("planned_backward", planned),
+            ("check_overhead", check),
             ("stage_barrier", barrier),
         ],
     )?;
     println!(
-        "\nmerged fused_sgd_step + fused_layers + fused_backward + planned_backward + stage_barrier into BENCH_threads.json"
+        "\nmerged fused_sgd_step + fused_layers + fused_backward + planned_backward + check_overhead + stage_barrier into BENCH_threads.json"
     );
     Ok(())
 }

@@ -1,0 +1,166 @@
+//! `phast_lint` — the repo's PHAST-specific source lint (rules L1–L4).
+//!
+//! A deliberately dependency-free line scanner enforcing the contracts
+//! that `clippy` cannot see (documented in `docs/CHECKING.md`):
+//!
+//! - **L1 `safety-comment`** — every `unsafe {` block and `unsafe impl`
+//!   carries a `// SAFETY:` comment within the few lines above it.
+//!   Scope: `src`, `tests`, `benches`, `../examples`.
+//! - **L2 `thread-spawn`** — no `std::thread` spawns outside
+//!   `src/ops/par.rs` (the PHAST pool owns threading) unless annotated
+//!   `// LINT-ALLOW: thread-spawn`.  Scope: `src`.
+//! - **L3 `env-read`** — `PHAST_*` environment variables are read only
+//!   through the one-shot knob idiom (`get_or_init`) or under an
+//!   explicit `// LINT-ALLOW: env-read`.  Scope: `src`.
+//! - **L4 `kernel-time`** — no `Instant::now`/`SystemTime::now` inside
+//!   `src/ops` (kernels must be time-independent so checked and
+//!   unchecked runs stay bitwise identical).  No allow marker.
+//!
+//! Exit status is the violation count (0 = clean); `tools/lint.sh`
+//! wires it into the CI lint job.
+
+use std::path::{Path, PathBuf};
+
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+/// Lines searched upward for a `SAFETY:` / `LINT-ALLOW:` marker.
+const LOOKBACK: usize = 6;
+
+fn is_comment(line: &str) -> bool {
+    let t = line.trim_start();
+    t.starts_with("//") || t.starts_with("*")
+}
+
+/// True when any of the `LOOKBACK` lines above index `i` contains `needle`.
+fn marker_above(lines: &[&str], i: usize, needle: &str) -> bool {
+    lines[i.saturating_sub(LOOKBACK)..i].iter().any(|l| l.contains(needle))
+}
+
+fn lint_file(root: &Path, path: &Path, out: &mut Vec<Violation>) {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return;
+    };
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let rel_s = rel.to_string_lossy().replace('\\', "/");
+    let in_src = rel_s.starts_with("src/");
+    let in_ops = rel_s.starts_with("src/ops");
+    let is_pool = rel_s == "src/ops/par.rs";
+    let lines: Vec<&str> = text.lines().collect();
+
+    for (i, raw) in lines.iter().enumerate() {
+        if is_comment(raw) {
+            continue;
+        }
+        let n = i + 1;
+
+        // L1: unsafe blocks / impls need a SAFETY comment above.
+        if (raw.contains("unsafe {") || raw.contains("unsafe impl "))
+            && !raw.contains("SAFETY")
+            && !marker_above(&lines, i, "SAFETY:")
+        {
+            out.push(Violation {
+                file: rel_s.clone(),
+                line: n,
+                rule: "L1 safety-comment",
+                msg: "unsafe block without a `// SAFETY:` comment above it".into(),
+            });
+        }
+
+        // L2: thread spawns live in the PHAST pool only.
+        if in_src
+            && !is_pool
+            && (raw.contains("thread::spawn") || raw.contains("thread::Builder"))
+            && !marker_above(&lines, i, "LINT-ALLOW: thread-spawn")
+        {
+            out.push(Violation {
+                file: rel_s.clone(),
+                line: n,
+                rule: "L2 thread-spawn",
+                msg: "thread spawn outside ops::par without `// LINT-ALLOW: thread-spawn`"
+                    .into(),
+            });
+        }
+
+        // L3: PHAST_* knob reads use the one-shot idiom.
+        if in_src && raw.contains("env::var(\"PHAST_") {
+            let one_shot = raw.contains("get_or_init")
+                || lines[i.saturating_sub(3)..i].iter().any(|l| l.contains("get_or_init"));
+            if !one_shot && !marker_above(&lines, i, "LINT-ALLOW: env-read") {
+                out.push(Violation {
+                    file: rel_s.clone(),
+                    line: n,
+                    rule: "L3 env-read",
+                    msg: "PHAST_* env read outside the knob surface (use OnceLock \
+                          get_or_init or `// LINT-ALLOW: env-read`)"
+                        .into(),
+                });
+            }
+        }
+
+        // L4: kernels are time-independent.
+        if in_ops && (raw.contains("Instant::now") || raw.contains("SystemTime::now")) {
+            out.push(Violation {
+                file: rel_s.clone(),
+                line: n,
+                rule: "L4 kernel-time",
+                msg: "time-dependent call inside src/ops (kernels must be deterministic)"
+                    .into(),
+            });
+        }
+    }
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn main() {
+    // Run from the crate root (tools/lint.sh does `cd rust`); fall back
+    // to a `rust/` child so a repo-root invocation also works.
+    let root = if Path::new("src").is_dir() {
+        PathBuf::from(".")
+    } else {
+        PathBuf::from("rust")
+    };
+    let me = root.join("src/bin/phast_lint.rs");
+    let mut files = Vec::new();
+    for sub in ["src", "tests", "benches", "../examples"] {
+        walk(&root.join(sub), &mut files);
+    }
+    files.sort();
+
+    let mut violations = Vec::new();
+    for f in &files {
+        if f.canonicalize().ok() == me.canonicalize().ok() {
+            continue; // the rule patterns above are not violations
+        }
+        lint_file(&root, f, &mut violations);
+    }
+
+    for v in &violations {
+        println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+    }
+    println!(
+        "phast_lint: {} file(s) scanned, {} violation(s)",
+        files.len(),
+        violations.len()
+    );
+    if !violations.is_empty() {
+        std::process::exit(1);
+    }
+}

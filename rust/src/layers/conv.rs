@@ -465,6 +465,7 @@ impl ConvLayer {
             let dwv = par::FusedSlice::new(dw);
             let dbv = par::FusedSlice::new(db);
             let region_tune = par::Tuning { threads: workers, grain: 1 };
+            par::check::label_region(|| format!("{}.bwd+pool", self.cfg.name));
             par::parallel_regions(workers, 3, region_tune, |stage, wr| {
                 for wi in wr {
                     match stage {
@@ -492,22 +493,26 @@ impl ConvLayer {
                             }
                         }
                         1 => {
-                            // SAFETY: worker wi exclusively owns partial
-                            // slot wi, its scratch windows, and the dX
-                            // planes of its samples; reads of mid planes
-                            // written by other workers in stage 0 are
-                            // ordered by the region barrier.
+                            // SAFETY: worker wi exclusively owns partial slot wi.
                             let dw_loc = unsafe { dwpv.slice_mut(wi * dwlen..(wi + 1) * dwlen) };
+                            // SAFETY: worker wi exclusively owns partial slot wi.
                             let db_loc = unsafe { dbpv.slice_mut(wi * cout..(wi + 1) * cout) };
                             dw_loc.fill(0.0);
                             db_loc.fill(0.0);
+                            // SAFETY: worker wi exclusively owns its scratch window.
                             let dcols =
                                 unsafe { dcolsv.slice_mut(wi * ckk * ohw..(wi + 1) * ckk * ohw) };
+                            // SAFETY: worker wi exclusively owns its scratch window.
                             let cols =
                                 unsafe { colsv.slice_mut(wi * ckk * ohw..(wi + 1) * ckk * ohw) };
                             for s in sample_ranges[wi].clone() {
+                                // SAFETY: mid planes were written in stage 0; the
+                                // region barrier orders those writes before this
+                                // read, and no stage-1 worker writes mid.
                                 let dys =
                                     unsafe { midv.slice(s * cout * ohw..(s + 1) * cout * ohw) };
+                                // SAFETY: sample s belongs to exactly one worker,
+                                // so its dX plane has exactly one writer.
                                 let dx_plane =
                                     unsafe { dxv.slice_mut(s * sample..(s + 1) * sample) };
                                 backward_sample(
@@ -536,6 +541,7 @@ impl ConvLayer {
                             } else {
                                 0..0
                             };
+                            // SAFETY: merge ranges are disjoint per worker.
                             let dwm = unsafe { dwv.slice_mut(r.clone()) };
                             for (off, d) in dwm.iter_mut().enumerate() {
                                 let i = r.start + off;
@@ -546,8 +552,13 @@ impl ConvLayer {
                                 *d = acc;
                             }
                             if wi == 0 {
+                                // SAFETY: worker 0 is db's only writer in
+                                // this stage.
                                 let dbm = unsafe { dbv.slice_mut(0..cout) };
                                 for p in 0..workers {
+                                    // SAFETY: stage-1 writes of the db
+                                    // partials are ordered by the barrier;
+                                    // nobody writes them in this stage.
                                     let part = unsafe { dbpv.slice(p * cout..(p + 1) * cout) };
                                     for (d, s) in dbm.iter_mut().zip(part) {
                                         *d += s;
@@ -859,12 +870,13 @@ impl Layer for ConvLayer {
                 let dwv = par::FusedSlice::new(dw);
                 let dbv = par::FusedSlice::new(db);
                 let region_tune = par::Tuning { threads: workers, grain: 1 };
+                par::check::label_region(|| format!("{}.bwd", self.cfg.name));
                 par::parallel_regions(workers, 2, region_tune, |stage, wr| {
                     for wi in wr {
                         if stage == 0 {
-                            // SAFETY: worker wi exclusively owns partial
-                            // slot wi and the dX planes of its samples.
+                            // SAFETY: worker wi exclusively owns partial slot wi.
                             let dw_loc = unsafe { dwpv.slice_mut(wi * dwlen..(wi + 1) * dwlen) };
+                            // SAFETY: worker wi exclusively owns partial slot wi.
                             let db_loc = unsafe { dbpv.slice_mut(wi * cout..(wi + 1) * cout) };
                             // The scratch persists across calls: clear our
                             // slot before accumulating into it.
@@ -875,6 +887,8 @@ impl Layer for ConvLayer {
                             let mut dcols = vec![0.0f32; ckk * ohw];
                             for s in sample_ranges[wi].clone() {
                                 let dys = &dys_all[s * cout * ohw..(s + 1) * cout * ohw];
+                                // SAFETY: sample s belongs to exactly one worker,
+                                // so its dX plane has exactly one writer.
                                 let dx_plane =
                                     unsafe { dxv.slice_mut(s * sample..(s + 1) * sample) };
                                 backward_sample(
@@ -902,6 +916,7 @@ impl Layer for ConvLayer {
                             } else {
                                 0..0
                             };
+                            // SAFETY: merge ranges are disjoint per worker.
                             let dwm = unsafe { dwv.slice_mut(r.clone()) };
                             for (off, d) in dwm.iter_mut().enumerate() {
                                 let i = r.start + off;
@@ -912,8 +927,13 @@ impl Layer for ConvLayer {
                                 *d = acc;
                             }
                             if wi == 0 {
+                                // SAFETY: worker 0 is db's only writer in
+                                // this stage.
                                 let dbm = unsafe { dbv.slice_mut(0..cout) };
                                 for p in 0..workers {
+                                    // SAFETY: stage-0 writes of the db
+                                    // partials are ordered by the barrier;
+                                    // nobody writes them in this stage.
                                     let part = unsafe { dbpv.slice(p * cout..(p + 1) * cout) };
                                     for (d, s) in dbm.iter_mut().zip(part) {
                                         *d += s;

@@ -229,6 +229,27 @@ fn cmd_transfers(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_verify_plan(flags: &HashMap<String, String>) -> Result<()> {
+    // Static plan verification (`net::plan::Plan::verify`) over the
+    // named preset(s).  `Net::from_config` already refuses to build a
+    // violating plan, so this prints the full per-check report for a
+    // healthy net — CI and the golden files in `tests/check.rs` pin it.
+    let which = flag(flags, "net", "both");
+    let names: Vec<&str> =
+        if which == "both" { vec!["mnist", "cifar"] } else { vec![which] };
+    let mut total = 0usize;
+    for name in names {
+        let net = preset_net(name, 1)?;
+        let report = net.plan().verify(net.config());
+        print!("{}", report.render());
+        total += report.violations.len();
+    }
+    if total > 0 {
+        bail!("{total} plan-contract violation(s)");
+    }
+    Ok(())
+}
+
 fn cmd_train_dist(flags: &HashMap<String, String>) -> Result<()> {
     let exe = std::env::current_exe().context("locating current executable")?;
     let dir = flag(flags, "dir", "target/dist-snapshots").to_string();
@@ -278,10 +299,11 @@ fn main() -> Result<()> {
         "table1" => cmd_table1(),
         "table2" => cmd_table2(&flags),
         "transfers" => cmd_transfers(&flags),
+        "verify-plan" => cmd_verify_plan(&flags),
         _ => {
             println!(
-                "usage: repro <info|train|train_dist|time|table1|table2|transfers>\n\
-                 [--net mnist|cifar] [--backend native|partial|phast|fused] [--iters N]\n\
+                "usage: repro <info|train|train_dist|time|table1|table2|transfers|verify-plan>\n\
+                 [--net mnist|cifar|both] [--backend native|partial|phast|fused] [--iters N]\n\
                  [--reps N] [--ranks N] [--batch N] [--every N] [--budget N] [--dir PATH]"
             );
             Ok(())

@@ -166,6 +166,16 @@ impl Net {
         // The `fused_relu` table is derived from the plan so the legacy
         // executor (`PHAST_PLAN=off`) follows the identical pairing.
         let plan = plan::Plan::build(&config, &layers, &blobs, &bottom_ids, &top_ids);
+        // Static plan verification (`plan::Plan::verify`): a plan that
+        // violates its own contracts — arena interval coloring, the R3
+        // fan-out gate, barrier sufficiency, schedule order, skip-node
+        // consistency — refuses to construct, so a planner bug surfaces
+        // as a build error with the full report, never as a race or a
+        // corrupted schedule at execution time.
+        let verify = plan.verify(&config);
+        if !verify.is_clean() {
+            bail!("plan verification failed for net '{}':\n{}", config.name, verify.render());
+        }
         let mut fused_relu: Vec<Option<usize>> = vec![None; layers.len()];
         for (li, ri) in plan.fused_relu_pairs() {
             fused_relu[li] = Some(ri);
@@ -191,6 +201,14 @@ impl Net {
     /// The region-graph execution plan built at construction time.
     pub fn plan(&self) -> &plan::Plan {
         &self.plan
+    }
+
+    /// Mutable access to the plan — the seeded-violation seam
+    /// `rust/tests/check.rs` uses to corrupt a verified plan (e.g.
+    /// double-book an arena slot) and assert `plan::Plan::verify`
+    /// reports the exact site.  Executors never mutate the plan.
+    pub fn plan_mut(&mut self) -> &mut plan::Plan {
+        &mut self.plan
     }
 
     /// Select between the planned executors and the pre-planner

@@ -648,6 +648,375 @@ impl Plan {
     fn layer_count(&self) -> usize {
         self.nodes[..self.fwd_nodes].iter().map(|n| n.layers.len()).sum()
     }
+
+    /// Statically verify the plan against the invariants the executors
+    /// rely on (see the module docs and `docs/CHECKING.md`):
+    ///
+    /// * **P1 arena-disjoint** — no two arena scratch requests sharing a
+    ///   slot have overlapping live ranges (the interval coloring's
+    ///   correctness condition), and every slot id is in range.
+    /// * **P2 fanout-gate** — rule R3 recomputed from the config: every
+    ///   fused pair is adjacent, shape-compatible, and fuses across a
+    ///   blob with exactly one consumer.
+    /// * **P3 barrier-sufficiency** — every staged node declares exactly
+    ///   one barrier per cross-worker producer→consumer stage boundary
+    ///   (`FusedPoolConv`'s scatter→grad and grad→merge edges; all other
+    ///   node kinds have no cross-worker stage edge).
+    /// * **P4 schedule-order** — every blob a node reads was produced by
+    ///   an earlier node on the same sweep (gradients seeded at the loss
+    ///   layers' tops).
+    /// * **P5 skip-consistency** — backward skip nodes are exactly the
+    ///   no-backward layers (Data/Accuracy), with zero regions and empty
+    ///   io; and every layer appears once per sweep (coverage).
+    ///
+    /// `config` is required because the plan does not retain the blob
+    /// fan-out counts rule R3 was decided from; the verifier recomputes
+    /// them from the same source.  Run at `Net::from_config` time (a
+    /// violating plan refuses to construct) and by `repro verify-plan`.
+    pub fn verify(&self, config: &NetConfig) -> VerifyReport {
+        let mut report = VerifyReport { net: self.net.clone(), checks: vec![], violations: vec![] };
+        self.verify_arena(&mut report);
+        self.verify_fanout(config, &mut report);
+        self.verify_barriers(&mut report);
+        self.verify_schedule_order(config, &mut report);
+        self.verify_skip_and_coverage(config, &mut report);
+        report
+    }
+
+    fn verify_arena(&self, report: &mut VerifyReport) {
+        let mut viol = Vec::new();
+        let arena: Vec<&ScratchReq> = self.scratch.iter().filter(|r| !r.resident).collect();
+        for r in &arena {
+            if r.slot >= self.arena_slots {
+                viol.push(Violation {
+                    check: "arena-disjoint",
+                    site: r.key.clone(),
+                    detail: format!(
+                        "slot a{} out of range (arena has {} slot(s))",
+                        r.slot, self.arena_slots
+                    ),
+                });
+            }
+        }
+        for (i, a) in arena.iter().enumerate() {
+            for b in arena.iter().skip(i + 1) {
+                if a.slot == b.slot && a.live.0 <= b.live.1 && b.live.0 <= a.live.1 {
+                    viol.push(Violation {
+                        check: "arena-disjoint",
+                        site: format!("{}+{}", a.key, b.key),
+                        detail: format!(
+                            "both live on slot a{} with overlapping ranges {}..{} and {}..{}",
+                            a.slot,
+                            self.pos_id(a.live.0),
+                            self.pos_id(a.live.1),
+                            self.pos_id(b.live.0),
+                            self.pos_id(b.live.1)
+                        ),
+                    });
+                }
+            }
+        }
+        let residents = self.scratch.len() - arena.len();
+        report.push(
+            "arena-disjoint",
+            format!(
+                "{} arena request(s) on {} slot(s), {} resident",
+                arena.len(),
+                self.arena_slots,
+                residents
+            ),
+            viol,
+        );
+    }
+
+    fn verify_fanout(&self, config: &NetConfig, report: &mut VerifyReport) {
+        let mut viol = Vec::new();
+        // Rule R3's input, recomputed from the same source `build` used.
+        let mut consumers: HashMap<&str, usize> = HashMap::new();
+        for lc in &config.layers {
+            for b in &lc.bottoms {
+                *consumers.entry(b.as_str()).or_insert(0) += 1;
+            }
+        }
+        let mut pairs = 0usize;
+        for n in &self.nodes {
+            let (prod, cons) = match n.kind {
+                NodeKind::FusedRelu => (n.layers[0], n.layers[1]),
+                // Backward pool+conv node lists [pool, conv]; the fused
+                // edge is the conv's top feeding the pool.
+                NodeKind::FusedPoolConv => (n.layers[1], n.layers[0]),
+                _ => continue,
+            };
+            pairs += 1;
+            let (pc, cc) = (&config.layers[prod], &config.layers[cons]);
+            if cons != prod + 1 {
+                viol.push(Violation {
+                    check: "fanout-gate",
+                    site: n.id.clone(),
+                    detail: format!(
+                        "fused pair {}+{} is not adjacent (layers {} and {})",
+                        pc.name, cc.name, prod, cons
+                    ),
+                });
+                continue;
+            }
+            if pc.tops.len() != 1 || cc.bottoms.len() != 1 || cc.bottoms[0] != pc.tops[0] {
+                viol.push(Violation {
+                    check: "fanout-gate",
+                    site: n.id.clone(),
+                    detail: format!(
+                        "fused pair {}+{} does not cross a single producer-top edge",
+                        pc.name, cc.name
+                    ),
+                });
+                continue;
+            }
+            let fan = consumers.get(pc.tops[0].as_str()).copied().unwrap_or(0);
+            if fan != 1 {
+                viol.push(Violation {
+                    check: "fanout-gate",
+                    site: n.id.clone(),
+                    detail: format!(
+                        "blob {} has {} consumers but is fused across (rule R3 requires 1)",
+                        pc.tops[0], fan
+                    ),
+                });
+            }
+        }
+        report.push("fanout-gate", format!("{pairs} fused pair(s)"), viol);
+    }
+
+    fn verify_barriers(&self, report: &mut VerifyReport) {
+        let mut viol = Vec::new();
+        let mut staged = 0usize;
+        for n in &self.nodes {
+            if !n.stages.is_empty() {
+                staged += 1;
+            }
+            // Cross-worker producer→consumer stage boundaries by node
+            // kind: FusedPoolConv's scatter fills planes the
+            // sample-partitioned gradient stage reads, and its per-worker
+            // partials are read across workers by the merge — every
+            // consecutive pair needs a barrier.  FusedRelu stage lists
+            // are same-partition chains (worker w's bias+relu rows are
+            // exactly the rows its gemm stage wrote), and plain nodes
+            // keep their structure layer-internal: no cross-worker edge.
+            let required = match n.kind {
+                NodeKind::FusedPoolConv => n.stages.len().saturating_sub(1),
+                _ => 0,
+            };
+            if n.barriers != required {
+                viol.push(Violation {
+                    check: "barrier-sufficiency",
+                    site: n.id.clone(),
+                    detail: format!(
+                        "{} node {} declares {} barrier(s) over stages [{}], \
+                         cross-worker boundaries require exactly {}",
+                        kind_str(n.kind),
+                        n.label,
+                        n.barriers,
+                        n.stages.join("|"),
+                        required
+                    ),
+                });
+            }
+            if n.kind == NodeKind::FusedPoolConv && n.stages.len() != 3 {
+                viol.push(Violation {
+                    check: "barrier-sufficiency",
+                    site: n.id.clone(),
+                    detail: format!(
+                        "fused pool→conv backward must be the 3-stage \
+                         scatter|grad|merge region, found [{}]",
+                        n.stages.join("|")
+                    ),
+                });
+            }
+        }
+        report.push("barrier-sufficiency", format!("{staged} staged node(s)"), viol);
+    }
+
+    fn verify_schedule_order(&self, config: &NetConfig, report: &mut VerifyReport) {
+        let mut viol = Vec::new();
+        // Forward sweep: every input must be some earlier node's output.
+        let mut produced: std::collections::HashSet<&str> = std::collections::HashSet::new();
+        for n in &self.nodes[..self.fwd_nodes] {
+            for i in &n.inputs {
+                if !produced.contains(i.as_str()) {
+                    viol.push(Violation {
+                        check: "schedule-order",
+                        site: n.id.clone(),
+                        detail: format!("{} reads blob {} before any node produces it", n.label, i),
+                    });
+                }
+            }
+            produced.extend(n.outputs.iter().map(String::as_str));
+        }
+        let fwd_blobs = produced.len();
+        // Backward sweep: gradient flow is seeded at the loss layers'
+        // tops (the solver writes those diffs before the sweep starts).
+        let seeds: Vec<String> = config
+            .layers
+            .iter()
+            .filter(|lc| lc.ltype == LayerType::SoftMaxWithLoss)
+            .flat_map(|lc| lc.tops.iter().map(|t| format!("d:{t}")))
+            .collect();
+        let mut produced: std::collections::HashSet<&str> =
+            seeds.iter().map(String::as_str).collect();
+        for n in &self.nodes[self.fwd_nodes..] {
+            for i in &n.inputs {
+                if !produced.contains(i.as_str()) {
+                    viol.push(Violation {
+                        check: "schedule-order",
+                        site: n.id.clone(),
+                        detail: format!(
+                            "{} reads gradient {} before any node produces it",
+                            n.label, i
+                        ),
+                    });
+                }
+            }
+            produced.extend(n.outputs.iter().map(String::as_str));
+        }
+        let bwd_blobs = produced.len();
+        report.push(
+            "schedule-order",
+            format!("{fwd_blobs} forward blob(s), {bwd_blobs} gradient blob(s)"),
+            viol,
+        );
+    }
+
+    fn verify_skip_and_coverage(&self, config: &NetConfig, report: &mut VerifyReport) {
+        let mut viol = Vec::new();
+        let mut skips = 0usize;
+        for n in &self.nodes[self.fwd_nodes..] {
+            let no_bwd = n.layers.len() == 1
+                && matches!(
+                    config.layers[n.layers[0]].ltype,
+                    LayerType::Data | LayerType::Accuracy
+                );
+            if n.kind == NodeKind::Skip {
+                skips += 1;
+                if !no_bwd {
+                    viol.push(Violation {
+                        check: "skip-consistency",
+                        site: n.id.clone(),
+                        detail: format!("{} is a skip node but its layer has a real backward", n.label),
+                    });
+                }
+                if n.regions != Some(0) || !n.inputs.is_empty() || !n.outputs.is_empty() {
+                    viol.push(Violation {
+                        check: "skip-consistency",
+                        site: n.id.clone(),
+                        detail: format!(
+                            "skip node {} must have zero regions and empty io \
+                             (regions={:?}, {} input(s), {} output(s))",
+                            n.label,
+                            n.regions,
+                            n.inputs.len(),
+                            n.outputs.len()
+                        ),
+                    });
+                }
+            } else if no_bwd {
+                viol.push(Violation {
+                    check: "skip-consistency",
+                    site: n.id.clone(),
+                    detail: format!(
+                        "{} has no backward (type {:?}) but is not a skip node",
+                        n.label,
+                        config.layers[n.layers[0]].ltype
+                    ),
+                });
+            }
+        }
+        // Coverage: every layer exactly once per sweep.
+        for (sweep, nodes) in
+            [("forward", &self.nodes[..self.fwd_nodes]), ("backward", &self.nodes[self.fwd_nodes..])]
+        {
+            let mut seen = vec![0usize; config.layers.len()];
+            for n in nodes {
+                for &li in &n.layers {
+                    if li < seen.len() {
+                        seen[li] += 1;
+                    } else {
+                        viol.push(Violation {
+                            check: "skip-consistency",
+                            site: n.id.clone(),
+                            detail: format!("{sweep} node references unknown layer index {li}"),
+                        });
+                    }
+                }
+            }
+            for (li, &count) in seen.iter().enumerate() {
+                if count != 1 {
+                    viol.push(Violation {
+                        check: "skip-consistency",
+                        site: config.layers[li].name.clone(),
+                        detail: format!(
+                            "layer appears {count} time(s) in the {sweep} sweep (expected 1)"
+                        ),
+                    });
+                }
+            }
+        }
+        report.push(
+            "skip-consistency",
+            format!("{} skip node(s), {} layer(s) covered", skips, config.layers.len()),
+            viol,
+        );
+    }
+}
+
+/// One static plan-contract violation, reported by [`Plan::verify`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    /// Check class: `arena-disjoint`, `fanout-gate`,
+    /// `barrier-sufficiency`, `schedule-order` or `skip-consistency`.
+    pub check: &'static str,
+    /// Node id / scratch key / layer name the violation anchors to.
+    pub site: String,
+    pub detail: String,
+}
+
+/// Machine-readable result of [`Plan::verify`]: one line per check plus
+/// one line per violation, rendered in a stable format pinned by the
+/// golden files in `tests/check.rs` and printed by `repro verify-plan`.
+pub struct VerifyReport {
+    pub net: String,
+    /// `(check name, summary, violations in this check)` in run order.
+    pub checks: Vec<(&'static str, String, usize)>,
+    pub violations: Vec<Violation>,
+}
+
+impl VerifyReport {
+    fn push(&mut self, check: &'static str, summary: String, viol: Vec<Violation>) {
+        self.checks.push((check, summary, viol.len()));
+        self.violations.extend(viol);
+    }
+
+    /// True when every check passed.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Stable text rendering (one `check` line per pass, one `violation`
+    /// line per finding, a final count).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "verify net={} checks={}", self.net, self.checks.len());
+        for (check, summary, viol) in &self.checks {
+            if *viol == 0 {
+                let _ = writeln!(s, "check {check}: ok ({summary})");
+            } else {
+                let _ = writeln!(s, "check {check}: {viol} violation(s) ({summary})");
+            }
+        }
+        for v in &self.violations {
+            let _ = writeln!(s, "violation {} site={}: {}", v.check, v.site, v.detail);
+        }
+        let _ = writeln!(s, "violations: {}", self.violations.len());
+        s
+    }
 }
 
 fn kind_str(k: NodeKind) -> &'static str {

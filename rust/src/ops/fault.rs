@@ -178,6 +178,8 @@ fn ensure_init() {
         return;
     }
     INITIALIZED.with(|c| c.set(true));
+    // LINT-ALLOW: env-read — per-thread fault plan install; cached in
+    // thread-locals above rather than a process-wide OnceLock.
     if let Ok(spec) = std::env::var("PHAST_FAULT") {
         let rules = parse_plan(&spec);
         ACTIVE.with(|c| c.set(!rules.is_empty()));

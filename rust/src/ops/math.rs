@@ -151,6 +151,7 @@ fn sgd_update_fused_impl(
             decay,
         );
     };
+    par::check::label_region(|| "sgd.update".to_string());
     if unsync {
         par::parallel_regions_unsynced(n, 3, tune, body);
     } else {
@@ -238,6 +239,7 @@ fn sgd_update_fused_flat_impl(
             }
         }
     };
+    par::check::label_region(|| "sgd.step.flat".to_string());
     if unsync {
         par::parallel_regions_unsynced(total, 3, tune, body);
     } else {

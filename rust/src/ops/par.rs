@@ -69,6 +69,12 @@
 //! See `docs/PARALLEL_RUNTIME.md` for the architecture write-up, the full
 //! knob table, and a tuning walkthrough.
 
+/// The `PHAST_CHECK` access sanitizer: records `FusedSlice` accesses per
+/// worker/stage in checked mode and validates the fused-region contracts
+/// after each region (see `docs/CHECKING.md`).
+#[path = "par_check.rs"]
+pub mod check;
+
 use std::any::Any;
 use std::cell::{Cell, RefCell};
 use std::marker::PhantomData;
@@ -397,6 +403,7 @@ fn worker_loop(rx: Receiver<Job>) {
         // SAFETY: see `Job` — the dispatcher is parked in `Latch::wait`
         // until we arrive below, keeping both pointees alive.
         let latch = unsafe { &*job.latch };
+        // SAFETY: same argument — `data` stays valid until we arrive.
         let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, job.index) }));
         latch.arrive(result.err());
     }
@@ -614,13 +621,23 @@ pub fn parallel_for(n: usize, tune: Tuning, f: impl Fn(Range<usize>) + Sync) {
     note_region();
     let workers = tune.workers(n);
     if workers <= 1 {
+        check::consume_label();
         if n > 0 {
+            // Serial fallback (possibly nested inside a checked region):
+            // one thread, sequential — nothing to race; keep any enclosing
+            // region's log free of this region's internal accesses.
+            let _quiet = check::suspend();
             f(0..n);
         }
         return;
     }
     let ranges = partition(n, workers);
-    run_workers(ranges.len(), |w| f(ranges[w].clone()));
+    let ctx = check::begin(check::RegionMode::Synced, 1, n, &ranges);
+    run_workers(ranges.len(), |w| {
+        let _rec = check::enter_worker(ctx.as_ref(), w);
+        f(ranges[w].clone())
+    });
+    check::validate(ctx);
 }
 
 /// Map disjoint ranges of `0..n` through `map` and fold the per-worker
@@ -828,6 +845,7 @@ impl<'a, T> FusedSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice_mut(&self, range: Range<usize>) -> &mut [T] {
         debug_assert!(range.start <= range.end && range.end <= self.len);
+        check::record(self.ptr as usize, self.len, &range, true);
         std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.len())
     }
 
@@ -842,6 +860,7 @@ impl<'a, T> FusedSlice<'a, T> {
     /// within `0..self.len()`.
     pub unsafe fn slice(&self, range: Range<usize>) -> &[T] {
         debug_assert!(range.start <= range.end && range.end <= self.len);
+        check::record(self.ptr as usize, self.len, &range, false);
         std::slice::from_raw_parts(self.ptr.add(range.start), range.len())
     }
 }
@@ -943,23 +962,32 @@ pub fn parallel_regions(
     }
     let workers = tune.workers(n);
     if workers <= 1 {
+        check::consume_label();
+        // Serial fallback: one thread runs the stages in order — nothing
+        // to race; suspend any enclosing region's recording (see
+        // `parallel_for`).
+        let _quiet = check::suspend();
         for s in 0..stages {
             f(s, 0..n);
         }
         return;
     }
     let ranges = partition(n, workers);
+    let ctx = check::begin(check::RegionMode::Synced, stages, n, &ranges);
     let barrier = StageBarrier::new(ranges.len());
     run_workers(ranges.len(), |w| {
+        let _rec = check::enter_worker(ctx.as_ref(), w);
         let guard = PoisonOnUnwind(&barrier);
         for s in 0..stages {
             if s > 0 && !barrier.wait() {
                 break;
             }
+            check::set_stage(s);
             f(s, ranges[w].clone());
         }
         std::mem::forget(guard);
     });
+    check::validate(ctx);
 }
 
 /// [`parallel_regions`] **without** the inter-stage barrier: worker `w`
@@ -994,17 +1022,24 @@ pub fn parallel_regions_unsynced(
     }
     let workers = tune.workers(n);
     if workers <= 1 {
+        check::consume_label();
+        // Serial fallback: see `parallel_for`.
+        let _quiet = check::suspend();
         for s in 0..stages {
             f(s, 0..n);
         }
         return;
     }
     let ranges = partition(n, workers);
+    let ctx = check::begin(check::RegionMode::Unsynced, stages, n, &ranges);
     run_workers(ranges.len(), |w| {
+        let _rec = check::enter_worker(ctx.as_ref(), w);
         for s in 0..stages {
+            check::set_stage(s);
             f(s, ranges[w].clone());
         }
     });
+    check::validate(ctx);
 }
 
 /// Builder over [`parallel_regions`] for call sites whose stages are
@@ -1278,6 +1313,9 @@ mod tests {
             let av = FusedSlice::new(&mut a);
             let bv = FusedSlice::new(&mut b);
             with_threads(5, || {
+                // SAFETY: stage 0 writes only the worker's own `a` range;
+                // stage 1 writes its own `b` range and reads `a` across the
+                // stage barrier — exactly the FusedSlice contract.
                 parallel_regions(n, 2, Tuning::new(1), |stage, r| unsafe {
                     match stage {
                         0 => {
@@ -1314,6 +1352,8 @@ mod tests {
         with_threads(5, || {
             {
                 let v = FusedSlice::new(&mut barrier);
+                // SAFETY: pointwise — every stage touches only the
+                // worker's own range.
                 parallel_regions(n, 3, Tuning::new(1), |s, r| unsafe {
                     let b = v.slice_mut(r);
                     match s {
@@ -1326,6 +1366,8 @@ mod tests {
             let before = region_count();
             {
                 let v = FusedSlice::new(&mut unsync);
+                // SAFETY: pointwise — every stage touches only the
+                // worker's own range, so no barrier is needed.
                 parallel_regions_unsynced(n, 3, Tuning::new(1), |s, r| unsafe {
                     let b = v.slice_mut(r);
                     match s {
@@ -1383,9 +1425,11 @@ mod tests {
             let view = FusedSlice::new(&mut data);
             with_threads(4, || {
                 FusedRegion::new(100, Tuning::new(1))
+                    // SAFETY: pointwise — each stage writes only its own range.
                     .stage(|r| unsafe {
                         view.slice_mut(r).iter_mut().for_each(|v| *v += 2.0);
                     })
+                    // SAFETY: pointwise — each stage writes only its own range.
                     .stage(|r| unsafe {
                         view.slice_mut(r).iter_mut().for_each(|v| *v *= 10.0);
                     })
@@ -1406,9 +1450,11 @@ mod tests {
             with_threads(4, || {
                 let before = region_count();
                 FusedRegion::new(100, Tuning::new(1))
+                    // SAFETY: pointwise — each stage writes only its own range.
                     .stage(|r| unsafe {
                         view.slice_mut(r).iter_mut().for_each(|v| *v += 2.0);
                     })
+                    // SAFETY: pointwise — each stage writes only its own range.
                     .stage(|r| unsafe {
                         view.slice_mut(r).iter_mut().for_each(|v| *v *= 10.0);
                     })

@@ -1,0 +1,438 @@
+//! `ops::par::check` — the fused-region access sanitizer (`PHAST_CHECK`).
+//!
+//! The fused-region model in [`ops::par`](super) rests on contracts the
+//! type system cannot see: [`FusedSlice`](super::FusedSlice) erases a
+//! `&mut [T]` into a raw pointer that stage closures re-slice, and the
+//! comments on `slice`/`slice_mut` (plus the pointwise-chain rule on
+//! [`parallel_regions_unsynced`](super::parallel_regions_unsynced)) are
+//! all that separates the fused kernels from a data race.  This module
+//! turns those comments into machine-checked assertions:
+//!
+//! * In **checked mode** (`PHAST_CHECK=1`, or a process-local
+//!   [`set_override`]), every region dispatched by
+//!   [`parallel_for`](super::parallel_for),
+//!   [`parallel_regions`](super::parallel_regions) or
+//!   [`parallel_regions_unsynced`](super::parallel_regions_unsynced)
+//!   installs a per-worker access log; `FusedSlice::slice`/`slice_mut`
+//!   record `(worker, stage, range, read|write)` events into the log of
+//!   the worker that issued them.
+//! * After the region joins, a validator asserts the documented
+//!   contracts and **panics with full region/stage/range context** on
+//!   the first violation:
+//!   - **C1 (synced regions)** — within one stage, ranges written by
+//!     concurrently executing workers must be disjoint, and no worker
+//!     may read a range another worker writes in the same stage.
+//!     Cross-*stage* overlap is legal: the stage barrier provides the
+//!     happens-before edge (`FusedSlice::slice`'s cross-range rule).
+//!   - **C2 (unsynced regions)** — no barrier exists, so the whole
+//!     region is one conflict class: any cross-worker overlap involving
+//!     a write, in *any* pair of stages, is a violation.  This subsumes
+//!     the pointwise-chain rule ("touch only your own range") while
+//!     still admitting contracts like the flat SGD step, whose
+//!     segment-local ranges are disjoint across workers without being
+//!     the worker's literal partition range.
+//!
+//! Callers may name the next region via [`label_region`] so violations
+//! point at the layer/kernel that issued the region, not just a buffer
+//! address.
+//!
+//! **Zero-cost when off**: with checking disabled no context is ever
+//! installed, so the per-access hook is a single thread-local null
+//! check, and the per-region hook is one cached-knob load.  The
+//! `check_overhead` entry in `benches/fusion.rs` gates this (region
+//! delta exactly 0, off-mode timing within noise of the unchecked
+//! reference).
+//!
+//! The checker detects *overlap between recorded ranges*, not memory
+//! errors in general: accesses that bypass `FusedSlice` (plain
+//! `split_at_mut` chunking, GeMM-internal slices) are already safe by
+//! construction and are not logged.  See `docs/CHECKING.md` for the
+//! contract catalogue and violation taxonomy.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// How the region synchronizes its stages — decides the conflict class
+/// granularity (per stage vs whole region).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegionMode {
+    /// Stage barriers between consecutive stages ([`super::parallel_for`]
+    /// counts as a single-stage synced region).
+    Synced,
+    /// No inter-stage barriers ([`super::parallel_regions_unsynced`]).
+    Unsynced,
+}
+
+impl RegionMode {
+    fn as_str(self) -> &'static str {
+        match self {
+            RegionMode::Synced => "synced",
+            RegionMode::Unsynced => "unsynced",
+        }
+    }
+}
+
+/// Process-local override of the `PHAST_CHECK` knob: 0 = follow the
+/// environment, 1 = forced on, 2 = forced off.  The test suite and the
+/// `check_overhead` bench flip this at runtime; the environment knob
+/// itself is read once.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+fn env_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| match std::env::var("PHAST_CHECK") {
+        Ok(v) => !matches!(v.trim(), "" | "0" | "off"),
+        Err(_) => false,
+    })
+}
+
+/// Whether checked mode is active: [`set_override`] wins, else the
+/// `PHAST_CHECK` environment knob (parsed once; `1`/anything truthy
+/// enables, `0`/`off`/empty disables).
+pub fn enabled() -> bool {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => env_enabled(),
+    }
+}
+
+/// Force checked mode on (`Some(true)`), off (`Some(false)`), or back to
+/// the environment knob (`None`) for the whole process.  Used by the
+/// seeded-violation tests and the overhead bench; production code uses
+/// the `PHAST_CHECK` environment knob.
+pub fn set_override(on: Option<bool>) {
+    OVERRIDE.store(
+        match on {
+            Some(true) => 1,
+            Some(false) => 2,
+            None => 0,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// One recorded `FusedSlice` access.
+#[derive(Clone, Copy, Debug)]
+struct Access {
+    /// Buffer identity: the view's base pointer.
+    buf: usize,
+    /// Buffer length in elements (diagnostics only).
+    buf_len: usize,
+    stage: usize,
+    start: usize,
+    end: usize,
+    write: bool,
+}
+
+/// The per-region recording context, created by the dispatcher before
+/// the workers run and validated after they join.  Lives on the
+/// dispatching frame; workers hold a raw pointer to it only while the
+/// dispatcher is parked in the region's latch (the same soundness
+/// argument as `par::Job`).
+pub(super) struct RegionCtx {
+    label: String,
+    mode: RegionMode,
+    stages: usize,
+    n: usize,
+    ranges: Vec<Range<usize>>,
+    /// One log per worker; each slot is touched by exactly one worker
+    /// thread during the region, so the mutexes are uncontended.
+    logs: Vec<Mutex<Vec<Access>>>,
+}
+
+thread_local! {
+    /// The region context this thread currently records into (null when
+    /// not inside a checked region) — the per-access fast-path gate.
+    static ACTIVE: Cell<*const RegionCtx> = const { Cell::new(std::ptr::null()) };
+    /// Logical worker index of this thread within the active region.
+    static WORKER: Cell<usize> = const { Cell::new(0) };
+    /// Stage the active region is currently executing on this thread.
+    static STAGE: Cell<usize> = const { Cell::new(0) };
+    /// Label armed by [`label_region`] for the next region entry.
+    static NEXT_LABEL: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// Name the next parallel region issued from this thread, so a contract
+/// violation reports the issuing kernel (e.g. `conv2.bwd+pool`) instead
+/// of only a buffer address.  The closure runs only in checked mode, so
+/// unlabelled production paths pay one cached-knob load.
+pub fn label_region(label: impl FnOnce() -> String) {
+    if !enabled() {
+        return;
+    }
+    NEXT_LABEL.with(|l| *l.borrow_mut() = Some(label()));
+}
+
+/// Open a recording context for a region about to dispatch `ranges`
+/// (one per worker).  Returns `None` when checking is off — the entire
+/// checked path hangs off this one test.
+pub(super) fn begin(
+    mode: RegionMode,
+    stages: usize,
+    n: usize,
+    ranges: &[Range<usize>],
+) -> Option<RegionCtx> {
+    if !enabled() {
+        return None;
+    }
+    let label = NEXT_LABEL
+        .with(|l| l.borrow_mut().take())
+        .unwrap_or_else(|| "<unlabelled>".to_string());
+    Some(RegionCtx {
+        label,
+        mode,
+        stages,
+        n,
+        ranges: ranges.to_vec(),
+        logs: ranges.iter().map(|_| Mutex::new(Vec::new())).collect(),
+    })
+}
+
+/// Drop a pending label without opening a context — the serial fallback
+/// (one worker: no concurrency, nothing to check) still consumes its
+/// label so it cannot leak onto an unrelated later region.
+pub(super) fn consume_label() {
+    if !enabled() {
+        return;
+    }
+    NEXT_LABEL.with(|l| l.borrow_mut().take());
+}
+
+/// Restores this thread's recording state when a worker leaves a region
+/// (normally or by unwinding — pool workers are reused, so a stale
+/// context pointer must never survive the region).
+pub(super) struct WorkerGuard {
+    prev: *const RegionCtx,
+    prev_worker: usize,
+    prev_stage: usize,
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        ACTIVE.with(|c| c.set(self.prev));
+        WORKER.with(|c| c.set(self.prev_worker));
+        STAGE.with(|c| c.set(self.prev_stage));
+    }
+}
+
+/// Install `ctx` as this thread's recording target for worker `w`.
+/// No-op (and no guard) when the region is unchecked.
+pub(super) fn enter_worker(ctx: Option<&RegionCtx>, w: usize) -> Option<WorkerGuard> {
+    let ctx = ctx?;
+    let guard = WorkerGuard {
+        prev: ACTIVE.with(Cell::get),
+        prev_worker: WORKER.with(Cell::get),
+        prev_stage: STAGE.with(Cell::get),
+    };
+    ACTIVE.with(|c| c.set(ctx as *const RegionCtx));
+    WORKER.with(|c| c.set(w));
+    STAGE.with(|c| c.set(0));
+    Some(guard)
+}
+
+/// Mark the stage this thread is about to execute (events recorded
+/// after this call carry stage `s`).  Cheap no-op outside a checked
+/// region.
+pub(super) fn set_stage(s: usize) {
+    if ACTIVE.with(Cell::get).is_null() {
+        return;
+    }
+    STAGE.with(|c| c.set(s));
+}
+
+/// Suspends recording on this thread for the guard's lifetime — used by
+/// the serial fallbacks of nested regions, whose accesses belong to the
+/// nested (serial, race-free) region and would otherwise be
+/// misattributed to the enclosing checked region's current stage.
+pub(super) struct SuspendGuard {
+    prev: *const RegionCtx,
+}
+
+impl Drop for SuspendGuard {
+    fn drop(&mut self) {
+        ACTIVE.with(|c| c.set(self.prev));
+    }
+}
+
+pub(super) fn suspend() -> Option<SuspendGuard> {
+    let prev = ACTIVE.with(Cell::get);
+    if prev.is_null() {
+        return None;
+    }
+    ACTIVE.with(|c| c.set(std::ptr::null()));
+    Some(SuspendGuard { prev })
+}
+
+/// Record one `FusedSlice` access issued by the calling worker.  The
+/// fast path (checking off, or thread outside a checked region) is a
+/// single thread-local null check.
+pub(super) fn record(buf: usize, buf_len: usize, range: &Range<usize>, write: bool) {
+    let ctx = ACTIVE.with(Cell::get);
+    if ctx.is_null() {
+        return;
+    }
+    if range.start >= range.end {
+        return; // empty access: nothing to race on
+    }
+    // SAFETY: a non-null ACTIVE pointer is installed only between
+    // `enter_worker` and its guard's drop, both of which happen while
+    // the dispatching frame that owns the context is parked in the
+    // region's latch — so the pointee outlives every recording call.
+    let ctx = unsafe { &*ctx };
+    let w = WORKER.with(Cell::get);
+    let s = STAGE.with(Cell::get);
+    ctx.logs[w].lock().unwrap().push(Access {
+        buf,
+        buf_len,
+        stage: s,
+        start: range.start,
+        end: range.end,
+        write,
+    });
+}
+
+/// Per-worker access lists for one `(buffer, conflict class)` group,
+/// sorted by start offset for the linear sweep in [`intersect`].
+#[derive(Default)]
+struct WorkerAccesses {
+    writes: Vec<Access>,
+    reads: Vec<Access>,
+}
+
+/// First overlapping pair between two start-sorted interval lists
+/// (classic two-pointer sweep — linear, not quadratic, in the event
+/// count; conv backward logs hundreds of windows per stage).
+fn intersect(a: &[Access], b: &[Access]) -> Option<(Access, Access)> {
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        if x.start < y.end && y.start < x.end {
+            return Some((x, y));
+        }
+        if x.end <= y.end {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    None
+}
+
+fn access_str(a: &Access) -> String {
+    format!(
+        "{} {}..{} in stage {}",
+        if a.write { "wrote" } else { "read" },
+        a.start,
+        a.end,
+        a.stage
+    )
+}
+
+/// Validate a completed region's access log and panic with full
+/// region/stage/range context on the first contract violation.  No-op
+/// for `None` (unchecked region).
+pub(super) fn validate(ctx: Option<RegionCtx>) {
+    let Some(ctx) = ctx else { return };
+    let workers = ctx.logs.len();
+    // Group events by (buffer, conflict class): per stage for synced
+    // regions (the barrier orders cross-stage accesses), the whole
+    // region for unsynced ones (no barrier, no ordering).
+    let mut groups: HashMap<(usize, usize), Vec<WorkerAccesses>> = HashMap::new();
+    for (w, log) in ctx.logs.iter().enumerate() {
+        for a in log.lock().unwrap().iter() {
+            let class = match ctx.mode {
+                RegionMode::Synced => a.stage,
+                RegionMode::Unsynced => 0,
+            };
+            let group = groups
+                .entry((a.buf, class))
+                .or_insert_with(|| (0..workers).map(|_| WorkerAccesses::default()).collect());
+            if a.write {
+                group[w].writes.push(*a);
+            } else {
+                group[w].reads.push(*a);
+            }
+        }
+    }
+    for ((buf, class), group) in &mut groups {
+        for wa in group.iter_mut() {
+            wa.writes.sort_by_key(|a| a.start);
+            wa.reads.sort_by_key(|a| a.start);
+        }
+        for w1 in 0..workers {
+            for w2 in (w1 + 1)..workers {
+                // write/write, then each direction of write/read.
+                let conflict = intersect(&group[w1].writes, &group[w2].writes)
+                    .or_else(|| intersect(&group[w1].writes, &group[w2].reads))
+                    .or_else(|| {
+                        intersect(&group[w2].writes, &group[w1].reads).map(|(b, a)| (a, b))
+                    });
+                if let Some((a, b)) = conflict {
+                    let rule = match ctx.mode {
+                        RegionMode::Synced => {
+                            "synced-region contract: concurrent same-stage accesses with a \
+                             write must be disjoint (cross-range reads need a stage barrier)"
+                        }
+                        RegionMode::Unsynced => {
+                            "unsynced-region contract: a barrier-free chain must be \
+                             race-free across workers (pointwise: touch only your own range)"
+                        }
+                    };
+                    panic!(
+                        "PHAST_CHECK violation in region '{}' ({}, {} stage(s), n={}): \
+                         buffer {:#x} (len {}), conflict class {}: worker {} {} overlapping \
+                         worker {} ({}); worker {} owns {:?}, worker {} owns {:?}; {}",
+                        ctx.label,
+                        ctx.mode.as_str(),
+                        ctx.stages,
+                        ctx.n,
+                        buf,
+                        a.buf_len,
+                        class,
+                        w1,
+                        access_str(&a),
+                        w2,
+                        access_str(&b),
+                        w1,
+                        ctx.ranges.get(w1).cloned().unwrap_or(0..0),
+                        w2,
+                        ctx.ranges.get(w2).cloned().unwrap_or(0..0),
+                        rule,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acc(start: usize, end: usize, write: bool) -> Access {
+        Access { buf: 0, buf_len: 100, stage: 0, start, end, write }
+    }
+
+    #[test]
+    fn intersect_finds_first_overlap() {
+        let a = vec![acc(0, 4, true), acc(10, 14, true)];
+        let b = vec![acc(4, 10, true), acc(12, 13, true)];
+        let hit = intersect(&a, &b).expect("overlap");
+        assert_eq!((hit.0.start, hit.1.start), (10, 12));
+        assert!(intersect(&a, &[acc(4, 10, true), acc(14, 20, true)]).is_none());
+        assert!(intersect(&[], &b).is_none());
+    }
+
+    #[test]
+    fn override_wins_over_env() {
+        set_override(Some(true));
+        assert!(enabled());
+        set_override(Some(false));
+        assert!(!enabled());
+        set_override(None);
+    }
+}

@@ -142,6 +142,8 @@ struct Slot {
 }
 
 fn spawn_reader(rank: usize, gen: u64, stdout: std::process::ChildStdout, tx: Sender<Event>) {
+    // LINT-ALLOW: thread-spawn — blocking pipe reader per worker rank;
+    // not region work, so it must not occupy a PHAST pool worker.
     std::thread::Builder::new()
         .name(format!("dist-read-{rank}"))
         .spawn(move || {
@@ -228,6 +230,11 @@ impl Coordinator {
         }
         for (k, v) in &self.cfg.worker_env {
             cmd.env(k, v);
+        }
+        if crate::ops::par::check::enabled() {
+            // A checked coordinator runs checked workers: the sanitizer
+            // must see the whole distributed step, not just this process.
+            cmd.env("PHAST_CHECK", "1");
         }
         match (&self.cfg.fault_spec, with_fault) {
             (Some(spec), true) => {

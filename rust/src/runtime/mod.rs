@@ -36,6 +36,8 @@ use std::path::PathBuf;
 /// Default artifacts directory, relative to the crate root (overridable via
 /// the `PHAST_ARTIFACTS` environment variable).
 pub fn artifacts_dir() -> PathBuf {
+    // LINT-ALLOW: env-read — path lookup, re-read per call so tests
+    // can repoint the artifacts dir; not a cached tuning knob.
     if let Ok(p) = std::env::var("PHAST_ARTIFACTS") {
         return PathBuf::from(p);
     }

@@ -539,6 +539,8 @@ impl ServeEngine {
             let queue = Arc::clone(&queue);
             let stats = Arc::clone(&stats);
             let name = model.to_string();
+            // LINT-ALLOW: thread-spawn — long-lived batcher loop; the
+            // PHAST pool only runs bounded region jobs.
             std::thread::Builder::new()
                 .name("phast-serve".into())
                 .spawn(move || {

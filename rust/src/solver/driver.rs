@@ -52,6 +52,8 @@ impl DriverConfig {
                 .and_then(|v| v.trim().parse().ok())
                 .unwrap_or(default)
         }
+        // LINT-ALLOW: env-read — driver config is sampled once per
+        // `from_env` call so restarted drivers see updated values.
         let dir = std::env::var("PHAST_SNAPSHOT_DIR").unwrap_or_else(|_| default_dir.to_string());
         DriverConfig {
             snapshot_every: num("PHAST_SNAPSHOT_EVERY", 50),

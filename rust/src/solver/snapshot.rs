@@ -134,6 +134,7 @@ fn serialize_v2(solver: &mut Solver) -> Vec<u8> {
 /// (default 3, minimum 1).  Read per call so tests and long-running
 /// drivers see updates.
 fn snapshot_retries() -> usize {
+    // LINT-ALLOW: env-read — deliberately re-read per call (see above).
     std::env::var("PHAST_SNAPSHOT_RETRY")
         .ok()
         .and_then(|v| v.trim().parse::<usize>().ok())

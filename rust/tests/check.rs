@@ -1,0 +1,328 @@
+//! Region-contract checker acceptance suite (`docs/CHECKING.md`):
+//!
+//! * **Golden verify reports** — `Plan::verify` renders a stable,
+//!   machine-readable report for both presets, pinned like the plan
+//!   dumps (regenerate with `PHAST_UPDATE_GOLDEN=1 cargo test --test
+//!   check` after an intentional verifier change).
+//! * **Seeded violations** — each contract class the checker exists for
+//!   is deliberately violated once, and the diagnostic must name the
+//!   exact site: the region label, the workers, the ranges, the slot.
+//!   (C1 overlapping same-stage writes, C2 barrier-free cross-range
+//!   read, P1 double-booked arena slot.)
+//! * **Checked == unchecked, bitwise** — the sanitizer observes, never
+//!   perturbs: a LeNet training run, a planned backward, a serving
+//!   batch and a 2-rank distributed step must produce bit-identical
+//!   results with checking forced on and forced off.
+//!
+//! The checked-mode override is process-global, so every test touching
+//! it serializes on [`check_lock`].
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use phast_caffe::net::Net;
+use phast_caffe::ops::par::{self, check};
+use phast_caffe::proto::{presets, LayerType, NetConfig, SolverConfig};
+use phast_caffe::runtime::dist::{self, DistConfig};
+use phast_caffe::runtime::{Model, ModelRegistry, ServeConfig, ServeEngine};
+use phast_caffe::solver::Solver;
+
+/// Serializes every test that flips the process-global checked-mode
+/// override (a poisoned lock only means an earlier test failed an
+/// assertion — the override itself is always restored).
+fn check_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Run `f` with checking forced on/off, restoring the environment knob
+/// afterwards even if `f` fails an assertion.
+fn with_check<R>(on: bool, f: impl FnOnce() -> R) -> R {
+    let _g = check_lock();
+    check::set_override(Some(on));
+    let out = catch_unwind(AssertUnwindSafe(f));
+    check::set_override(None);
+    match out {
+        Ok(v) => v,
+        Err(e) => std::panic::resume_unwind(e),
+    }
+}
+
+fn panic_msg(e: Box<dyn std::any::Any + Send>) -> String {
+    e.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic payload>".to_string())
+}
+
+fn preset(src: &str, seed: u64) -> Net {
+    Net::from_config(NetConfig::from_text(src).unwrap(), seed).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Golden verify reports (static plan verifier over the healthy presets)
+// ---------------------------------------------------------------------------
+
+fn check_verify_golden(src: &str, name: &str, golden: &str) {
+    let net = preset(src, 1);
+    let report = net.plan().verify(net.config());
+    assert!(report.is_clean(), "preset '{name}' must verify clean:\n{}", report.render());
+    let got = report.render();
+    if std::env::var("PHAST_UPDATE_GOLDEN").is_ok() {
+        std::fs::write(format!("tests/golden/verify_{name}.txt"), &got).unwrap();
+        return;
+    }
+    assert_eq!(
+        got, golden,
+        "verify report for '{name}' diverged from its golden dump — if the \
+         verifier change is intentional, regenerate with PHAST_UPDATE_GOLDEN=1 \
+         and review the diff"
+    );
+}
+
+#[test]
+fn golden_verify_lenet() {
+    check_verify_golden(
+        presets::LENET_MNIST,
+        "lenet-mnist",
+        include_str!("golden/verify_lenet-mnist.txt"),
+    );
+}
+
+#[test]
+fn golden_verify_cifar() {
+    check_verify_golden(
+        presets::CIFAR10_QUICK,
+        "cifar10-quick",
+        include_str!("golden/verify_cifar10-quick.txt"),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Seeded violations — each must be caught with a site-precise diagnostic
+// ---------------------------------------------------------------------------
+
+/// C1: two workers of a synced region record overlapping writes in the
+/// same stage.  (The *recorded* windows overlap; the elements actually
+/// touched stay disjoint, so the test itself is race-free.)
+#[test]
+fn seeded_overlapping_stage_writes_are_caught() {
+    let msg = with_check(true, || {
+        let n = 64;
+        let mut buf = vec![0.0f32; n];
+        let view = par::FusedSlice::new(&mut buf);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            par::with_threads(2, || {
+                check::label_region(|| "seeded.overlap".to_string());
+                par::parallel_regions(n, 2, par::Tuning::new(1), |stage, r| {
+                    if stage == 0 {
+                        // SAFETY: the recorded window deliberately spans the
+                        // whole buffer (the violation under test), but each
+                        // worker only touches its own element `r.start`.
+                        let b = unsafe { view.slice_mut(0..n) };
+                        b[r.start] += 1.0;
+                    }
+                });
+            });
+        }))
+        .expect_err("overlapping same-stage writes must panic the dispatcher");
+        panic_msg(err)
+    });
+    assert!(msg.contains("PHAST_CHECK violation"), "{msg}");
+    assert!(msg.contains("region 'seeded.overlap'"), "label missing: {msg}");
+    assert!(msg.contains("synced"), "mode missing: {msg}");
+    assert!(msg.contains("wrote 0..64 in stage 0"), "access detail missing: {msg}");
+    assert!(msg.contains("worker 0 owns 0..32"), "partition context missing: {msg}");
+    assert!(msg.contains("worker 1 owns 32..64"), "partition context missing: {msg}");
+}
+
+/// C2: a barrier-free (unsynced) chain where one worker reads a window
+/// another worker wrote in a different stage — legal with a barrier,
+/// a race without one.
+#[test]
+fn seeded_unsynced_cross_range_read_is_caught() {
+    let msg = with_check(true, || {
+        let n = 64;
+        let mut buf = vec![0.0f32; n];
+        let view = par::FusedSlice::new(&mut buf);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            par::with_threads(2, || {
+                check::label_region(|| "seeded.unsynced-read".to_string());
+                par::parallel_regions_unsynced(n, 2, par::Tuning::new(1), |stage, r| {
+                    if stage == 0 && r.start == 0 {
+                        // SAFETY: the recorded window spans the buffer (the
+                        // violation under test); only element 0 is written,
+                        // and the reader below only touches element n-1.
+                        let b = unsafe { view.slice_mut(0..n) };
+                        b[0] = 1.0;
+                    } else if stage == 1 && r.start != 0 {
+                        // SAFETY: see above — reads element n-1 only.
+                        let s = unsafe { view.slice(0..n) };
+                        let _ = s[n - 1];
+                    }
+                });
+            });
+        }))
+        .expect_err("cross-worker overlap in a barrier-free chain must panic");
+        panic_msg(err)
+    });
+    assert!(msg.contains("PHAST_CHECK violation"), "{msg}");
+    assert!(msg.contains("region 'seeded.unsynced-read'"), "label missing: {msg}");
+    assert!(msg.contains("unsynced"), "mode missing: {msg}");
+    assert!(msg.contains("race-free"), "contract rule missing: {msg}");
+    assert!(
+        msg.contains("wrote 0..64 in stage 0") && msg.contains("read 0..64 in stage 1"),
+        "conflicting accesses missing: {msg}"
+    );
+}
+
+/// P1: corrupt a built plan so two scratch bundles double-book one arena
+/// slot with overlapping lifetimes — the verifier must name both keys,
+/// the slot, and the live ranges.
+#[test]
+fn seeded_double_booked_arena_slot_is_reported() {
+    let mut net = preset(presets::LENET_MNIST, 1);
+    let cfg = net.config().clone();
+    let plan = net.plan_mut();
+    let live = plan
+        .scratch
+        .iter()
+        .find(|r| r.key == "conv2.bwd")
+        .expect("LeNet plans a conv2.bwd arena bundle")
+        .live;
+    plan.scratch
+        .iter_mut()
+        .find(|r| r.key == "conv1.bwd")
+        .expect("LeNet plans a conv1.bwd arena bundle")
+        .live = live;
+
+    let report = net.plan().verify(&cfg);
+    assert!(!report.is_clean(), "double-booked slot must not verify clean");
+    let v = report
+        .violations
+        .iter()
+        .find(|v| v.check == "arena-disjoint")
+        .expect("violation must be classed arena-disjoint");
+    assert_eq!(v.site, "conv1.bwd+conv2.bwd", "site must name both bundles");
+    assert!(v.detail.contains("slot a0"), "slot missing: {}", v.detail);
+    assert!(v.detail.contains("B5"), "live range missing: {}", v.detail);
+    assert!(
+        report.render().contains("check arena-disjoint: 1 violation(s)"),
+        "render must count the violation:\n{}",
+        report.render()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Checked == unchecked, bitwise (the sanitizer observes, never perturbs)
+// ---------------------------------------------------------------------------
+
+/// LeNet with a small batch for the e2e comparisons.
+fn small_lenet(seed: u64) -> Net {
+    let mut cfg = NetConfig::from_text(presets::LENET_MNIST).unwrap();
+    for l in &mut cfg.layers {
+        if l.ltype == LayerType::Data {
+            l.batch_size = 8;
+        }
+    }
+    Net::from_config(cfg, seed).unwrap()
+}
+
+fn train_weights(iters: usize, threads: usize) -> Vec<f32> {
+    let net = small_lenet(7);
+    let mut scfg = SolverConfig::from_text(presets::solver_by_name("mnist").unwrap()).unwrap();
+    scfg.display = 0;
+    let mut s = Solver::new(scfg, net);
+    par::with_threads(threads, || {
+        for _ in 0..iters {
+            s.step().unwrap();
+        }
+    });
+    s.net.params().into_iter().flat_map(|p| p.data().as_slice().to_vec()).collect()
+}
+
+#[test]
+fn checked_training_is_bitwise_unchecked() {
+    let on = with_check(true, || train_weights(2, 4));
+    let off = with_check(false, || train_weights(2, 4));
+    assert_eq!(on, off, "PHAST_CHECK=1 perturbed a LeNet training run");
+}
+
+fn planned_backward_diffs(threads: usize) -> Vec<f32> {
+    let mut net = small_lenet(11);
+    par::with_threads(threads, || {
+        net.zero_param_diffs();
+        net.forward().unwrap();
+        net.backward().unwrap();
+    });
+    net.params().into_iter().flat_map(|p| p.diff().as_slice().to_vec()).collect()
+}
+
+#[test]
+fn checked_planned_backward_is_bitwise_unchecked() {
+    let on = with_check(true, || planned_backward_diffs(4));
+    let off = with_check(false, || planned_backward_diffs(4));
+    assert_eq!(on, off, "PHAST_CHECK=1 perturbed the planned backward's gradients");
+}
+
+fn serve_batch_scores() -> Vec<f32> {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_fixed("lenet", Model::lenet(4, 42).unwrap());
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_delay_us: 500,
+        queue_cap: 16,
+        timeout_us: 0,
+        threads: Some(2),
+    };
+    let engine = ServeEngine::start(Arc::clone(&registry), "lenet", cfg).unwrap();
+    let sample_in = engine.sample_in();
+    let pending: Vec<_> = (0..3)
+        .map(|i| {
+            let x: Vec<f32> = (0..sample_in).map(|j| ((i * 131 + j) % 97) as f32 / 97.0).collect();
+            engine.submit(x).unwrap()
+        })
+        .collect();
+    pending.into_iter().flat_map(|p| p.wait().unwrap().scores().to_vec()).collect()
+}
+
+#[test]
+fn checked_serving_batch_is_bitwise_unchecked() {
+    let on = with_check(true, serve_batch_scores);
+    let off = with_check(false, serve_batch_scores);
+    assert_eq!(on, off, "PHAST_CHECK=1 perturbed served batch outputs");
+}
+
+fn dist_cfg(tag: &str, ranks: usize, iters: usize) -> DistConfig {
+    let dir = std::env::temp_dir().join(format!("phast_check_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut c = DistConfig::new(env!("CARGO_BIN_EXE_repro"), dir);
+    c.ranks = ranks;
+    c.iters = iters;
+    c.net = "mnist".into();
+    c.seed = 42;
+    c.batch = Some(16);
+    c.snapshot_every = 4;
+    c.keep = 0;
+    c.fault_spec = None;
+    c.worker_env = vec![("PHAST_NUM_THREADS".into(), "2".into())];
+    c
+}
+
+/// A coordinated 2-rank step with the coordinator in checked mode (which
+/// propagates `PHAST_CHECK=1` into the worker processes) must converge
+/// to the same weights hash as the unchecked run.
+#[test]
+fn checked_dist_step_is_bitwise_unchecked() {
+    let on = with_check(true, || dist::train_dist(dist_cfg("on", 2, 2)).unwrap());
+    let off = with_check(false, || dist::train_dist(dist_cfg("off", 2, 2)).unwrap());
+    assert_eq!(on.final_iter, off.final_iter);
+    assert_eq!(
+        on.weights_hash, off.weights_hash,
+        "PHAST_CHECK=1 perturbed a 2-rank distributed step"
+    );
+}

@@ -52,6 +52,7 @@ fn assert_pool_dispatches_correctly(threads: usize) {
     {
         let view = par::FusedSlice::new(&mut got);
         par::with_threads(threads, || {
+            // SAFETY: pointwise — each stage writes only the worker's own range.
             par::parallel_regions(n, 2, par::Tuning::new(1), |stage, r| unsafe {
                 let block = view.slice_mut(r.clone());
                 match stage {

@@ -24,6 +24,12 @@
 #     must come with a baseline update), it must stay strictly below the
 #     unplanned count from the same run, and the plan's analytic
 #     scratch-arena peak is a hard byte ceiling.
+#   * check_overhead pins the access sanitizer's zero-cost-off contract
+#     (PHAST_CHECK): regions_delta between the off arm and a reference
+#     arm of byte-identical code is gated at exactly 0, off_over_ref at
+#     a HARD 1.05x (no tolerance multiplier — both arms run in the same
+#     process on the same machine, min-of-reps), and checked mode may
+#     never add dispatches (regions_on == regions_off).
 #   * Wall-clock-derived metrics are gated with a generous tolerance
 #     (baseline "tolerance", 1.5x) and, where possible, as within-run
 #     ratios (fused vs unfused, packed vs unpacked on the same machine)
@@ -173,6 +179,38 @@ if None not in (plan_ms, unplan_ms) and plan_ms > unplan_ms * tol:
     failures.append(
         f"planned_backward slower than unplanned beyond tolerance: "
         f"planned {plan_ms} ms vs unplanned {unplan_ms} ms (x{tol})"
+    )
+
+# --- sanitizer zero-cost-off gates --------------------------------------
+# check_overhead compares two passes of byte-identical code (sanitizer
+# forced OFF in both the reference and the "off" arm, min-of-reps), so
+# both gates are hard — no tolerance multiplier:
+#   * regions_delta (off - reference) pinned at exactly 0: the checked
+#     mode plumbing must not change the dispatch structure when off;
+#   * off_over_ref <= 1.05: the off path (one relaxed atomic load per
+#     dispatch) may not cost measurable wall clock;
+#   * regions_on pinned to regions_off within the run: checked mode
+#     validates on the dispatcher, it never adds dispatches.
+chk_delta = get(cur, "check_overhead", "regions_delta", "current")
+chk_delta_base = get(base, "check_overhead", "regions_delta", "baseline")
+if None not in (chk_delta, chk_delta_base) and chk_delta != chk_delta_base:
+    failures.append(
+        f"check_overhead.regions_delta {chk_delta} != pinned {chk_delta_base}: "
+        "the sanitizer changes the region structure when OFF"
+    )
+chk_ratio = get(cur, "check_overhead", "off_over_ref", "current")
+chk_ratio_base = get(base, "check_overhead", "off_over_ref", "baseline")
+if None not in (chk_ratio, chk_ratio_base) and chk_ratio > chk_ratio_base:
+    failures.append(
+        f"check_overhead.off_over_ref {chk_ratio} above hard ceiling "
+        f"{chk_ratio_base}: PHAST_CHECK=0 is no longer zero-cost"
+    )
+chk_on = get(cur, "check_overhead", "regions_on", "current")
+chk_off = get(cur, "check_overhead", "regions_off", "current")
+if None not in (chk_on, chk_off) and chk_on != chk_off:
+    failures.append(
+        f"check_overhead.regions_on {chk_on} != regions_off {chk_off}: "
+        "checked mode altered the dispatch structure"
     )
 
 # --- timing gates (within-run ratios, 1.5x tolerance) -------------------
@@ -347,6 +385,8 @@ print(f"  fused_backward: reference {bwd_ref} / fused {bwd_fused} regions/backwa
       f"({bwd_ref_ms} -> {bwd_fused_ms} ms)")
 print(f"  planned_backward: unplanned {plan_off} -> planned {plan_on} regions/backward "
       f"({unplan_ms} -> {plan_ms} ms), scratch peak {peak} bytes")
+print(f"  check_overhead: regions_delta {chk_delta}, off_over_ref {chk_ratio} "
+      f"(on {cur['check_overhead'].get('on_over_off')}x over off)")
 print(f"  small_op_dispatch.spawn_over_pool: {sop}")
 print(f"  scaling.max_speedup: {ms}")
 print(f"  gemm_packed: packed_over_naive {pon}, packs_per_forward {ppf}, "

@@ -41,10 +41,11 @@ done
 # checkpoint policy knobs) + the PHAST_PLAN graph-level planner switch
 # + the PHAST_SERVE_* serving-engine knobs + the PHAST_DIST_* elastic
 # data-parallel training surface + PHAST_ARTIFACTS (the PJRT artifact
-# directory).  Prose placeholders like PHAST_*_GRAIN, PHAST_SERVE_* or
-# PHAST_DIST_* don't match the character class, so they are ignored
-# naturally.
-knob_re='PHAST_(([A-Z0-9]+_)*(GRAIN|THREADS|PACK)|FUSE_[A-Z0-9]+|GEMM_(MC|KC|NC)|FAULT|PLAN|SNAPSHOT_[A-Z0-9]+|SERVE_[A-Z0-9_]*[A-Z0-9]|DIST_[A-Z0-9_]*[A-Z0-9]|ARTIFACTS)'
+# directory) + PHAST_CHECK (the region-contract access sanitizer, see
+# docs/CHECKING.md).  Prose placeholders like PHAST_*_GRAIN,
+# PHAST_SERVE_* or PHAST_DIST_* don't match the character class, so
+# they are ignored naturally.
+knob_re='PHAST_(([A-Z0-9]+_)*(GRAIN|THREADS|PACK)|FUSE_[A-Z0-9]+|GEMM_(MC|KC|NC)|FAULT|PLAN|SNAPSHOT_[A-Z0-9]+|SERVE_[A-Z0-9_]*[A-Z0-9]|DIST_[A-Z0-9_]*[A-Z0-9]|ARTIFACTS|CHECK)'
 docs_knobs=$(grep -ohE "$knob_re" README.md docs/*.md | sort -u)
 code_knobs=$(grep -rhoE '"PHAST_[A-Z0-9_]+"' rust/src | tr -d '"' | sort -u)
 

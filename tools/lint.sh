@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# PHAST lint gate: repo-specific source rules L1-L4 (see docs/CHECKING.md).
+#
+#   L1 safety-comment  every `unsafe` block carries `// SAFETY:` above it
+#   L2 thread-spawn    no std::thread spawns outside ops::par
+#   L3 env-read        PHAST_* env reads stay on the knob surface
+#   L4 kernel-time     no Instant/SystemTime calls inside src/ops
+#
+# Runs the dependency-free scanner in rust/src/bin/phast_lint.rs; CI's
+# lint job calls this after clippy (which separately enforces
+# `clippy::undocumented_unsafe_blocks` on new code).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+cargo run -q --bin phast_lint
